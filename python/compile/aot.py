@@ -1,0 +1,191 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+Run once by ``make artifacts``.  Python never executes on the Rust request
+path; this script is the entire compile-time bridge.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Each artifact is one (entry point, shape bucket) pair.  Buckets are chosen
+to cover the paper's sweeps (n in 4..128 processors, L/n in {10, 50, 100}):
+a round of a BCM on n nodes has at most n/2 concurrent matchings (batch B)
+and each matching rebalances at most ~2·(L/n)·mobility balls (padded to the
+next power of two, axis M).  The Rust runtime picks the smallest bucket
+that fits and zero-pads.
+
+Output layout::
+
+    artifacts/
+      manifest.json                  # entry -> file, shapes, dtypes
+      balance_two_bin_b64_m256.hlo.txt
+      ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (entry_name, fn, [(arg_name, shape, dtype), ...]) buckets.
+F32 = "f32"
+I32 = "i32"
+
+# Shape buckets for the BCM hot path.  B = max concurrent matchings per
+# round (power of two), M = padded ball count per matching.
+TWO_BIN_BUCKETS = [
+    (8, 64),
+    (8, 256),
+    (16, 256),
+    (32, 256),
+    (64, 64),
+    (64, 256),
+    (64, 512),
+]
+NBIN_BUCKETS = [
+    # (B, M, N): offline Appendix-C experiments (Figs. 4-5).
+    (8, 1024, 2),
+    (8, 1024, 8),
+    (8, 4096, 2),
+]
+CONTINUOUS_BUCKETS = [
+    # (B, N): batch of load vectors x network size.
+    (8, 128),
+]
+
+
+def _dt(s: str):
+    return {"f32": jnp.float32, "i32": jnp.int32}[s]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs_of(args):
+    return [jax.ShapeDtypeStruct(shape, _dt(dt)) for (_, shape, dt) in args]
+
+
+def build_catalog():
+    """The full artifact catalog: name -> (fn, arg specs, output specs)."""
+    catalog = []
+    for b, m in TWO_BIN_BUCKETS:
+        catalog.append(
+            dict(
+                name=f"balance_two_bin_b{b}_m{m}",
+                entry="balance_two_bin",
+                fn=model.balance_two_bin,
+                args=[("weights", (b, m), F32), ("base", (b, 2), F32)],
+                outputs=[
+                    ("sorted_w", (b, m), F32),
+                    ("perm", (b, m), I32),
+                    ("assign", (b, m), F32),
+                    ("sums", (b, 2), F32),
+                ],
+            )
+        )
+        catalog.append(
+            dict(
+                name=f"greedy_two_bin_b{b}_m{m}",
+                entry="greedy_two_bin",
+                fn=model.greedy_two_bin,
+                args=[("weights", (b, m), F32), ("base", (b, 2), F32)],
+                outputs=[
+                    ("assign", (b, m), F32),
+                    ("sums", (b, 2), F32),
+                ],
+            )
+        )
+    for b, m, n in NBIN_BUCKETS:
+        catalog.append(
+            dict(
+                name=f"offline_nbin_b{b}_m{m}_n{n}",
+                entry="offline_nbin",
+                fn=model.offline_nbin,
+                args=[("weights", (b, m), F32), ("base", (b, n), F32)],
+                outputs=[
+                    ("sorted_w", (b, m), F32),
+                    ("perm", (b, m), I32),
+                    ("assign", (b, m), I32),
+                    ("sums", (b, n), F32),
+                ],
+            )
+        )
+    for b, n in CONTINUOUS_BUCKETS:
+        catalog.append(
+            dict(
+                name=f"continuous_round_b{b}_n{n}",
+                entry="continuous_round",
+                fn=model.continuous_round,
+                args=[("x", (b, n), F32), ("m", (n, n), F32)],
+                outputs=[("x_next", (b, n), F32)],
+            )
+        )
+    return catalog
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact-name substrings to (re)build",
+    )
+    opts = ap.parse_args()
+
+    os.makedirs(opts.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": []}
+
+    for item in build_catalog():
+        fname = f"{item['name']}.hlo.txt"
+        manifest["artifacts"].append(
+            dict(
+                name=item["name"],
+                entry=item["entry"],
+                file=fname,
+                inputs=[
+                    dict(name=n, shape=list(s), dtype=dt)
+                    for (n, s, dt) in item["args"]
+                ],
+                outputs=[
+                    dict(name=n, shape=list(s), dtype=dt)
+                    for (n, s, dt) in item["outputs"]
+                ],
+            )
+        )
+        if opts.only and not any(
+            key in item["name"] for key in opts.only.split(",")
+        ):
+            continue
+        lowered = jax.jit(item["fn"]).lower(*specs_of(item["args"]))
+        text = to_hlo_text(lowered)
+        path = os.path.join(opts.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    mpath = os.path.join(opts.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: batched descending bitonic sort with permutation.
+
+SortedGreedy (paper §4.1) first sorts the balls by descending weight.  The
+paper uses MATLAB quicksort and discusses O(m) distribution sorts
+(bucketsort / Proxmap / flashsort); on a TPU-shaped target the natural
+analogue is a *sorting network*: branch-free, oblivious to the data
+distribution, O(log^2 M) compare-exchange sweeps, each sweep a fully
+vectorized VPU op over all (B, M) lanes.
+
+Inputs
+------
+weights : f32[B, M]  unordered non-negative ball weights, zero-padded; M
+                     must be a power of two (padding guarantees this).
+
+Outputs
+-------
+sorted_w : f32[B, M]  weights per row in descending order (padding zeros
+                      sink to the right since weights are non-negative).
+perm     : i32[B, M]  original index of each sorted element, so the
+                      coordinator can map bin assignments back to load ids.
+
+The network is the standard XOR-partner bitonic sort with every comparator
+direction flipped to produce a descending order.  Ties keep both elements
+in place, so ``perm`` is always a valid permutation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_kernel(w_ref, out_w_ref, out_idx_ref, *, m: int):
+    w = w_ref[...]  # [Bb, M]
+    pos = jax.lax.broadcasted_iota(jnp.int32, w.shape, dimension=1)
+    idx = pos
+
+    # The (k, j) stage schedule — k = 2,4,..,M with j = k/2,..,1 inside —
+    # is expressed as a single while_loop whose body is traced ONCE
+    # (log2(M)^2/2 iterations at run time).  Unrolling the stages instead
+    # multiplies the HLO size by the stage count and blows XLA compile
+    # time up ~40x for M=512 (see EXPERIMENTS.md §Perf experiment D).
+    def cond(carry):
+        k, _j, _w, _idx = carry
+        return k <= m
+
+    def body(carry):
+        k, j, w, idx = carry
+        partner = pos ^ j
+        pw = jnp.take_along_axis(w, partner, axis=1)
+        pidx = jnp.take_along_axis(idx, partner, axis=1)
+        # Ascending network: take_max = ((pos & k) != 0) ^ (pos > partner).
+        # Flipping the block-direction term reverses every comparator,
+        # yielding a descending sort.
+        take_max = ((pos & k) == 0) ^ (pos > partner)
+        pick_partner = jnp.where(take_max, pw > w, pw < w)
+        w = jnp.where(pick_partner, pw, w)
+        idx = jnp.where(pick_partner, pidx, idx)
+        j_next = j // 2
+        done_k = j_next < 1
+        k_next = jnp.where(done_k, k * 2, k)
+        j_next = jnp.where(done_k, k_next // 2, j_next)
+        return k_next, j_next, w, idx
+
+    if m >= 2:
+        _, _, w, idx = jax.lax.while_loop(
+            cond, body, (jnp.int32(2), jnp.int32(1), w, idx)
+        )
+    out_w_ref[...] = w
+    out_idx_ref[...] = idx
+
+
+def bitonic_sort_desc(weights, *, block_b: int | None = None):
+    """Sort each row of ``weights`` in descending order.
+
+    Returns ``(sorted_w[B, M], perm[B, M])``; M must be a power of two.
+    """
+    b, m = weights.shape
+    if m & (m - 1) != 0 or m == 0:
+        raise ValueError(f"M must be a power of two, got {m}")
+    if block_b is None:
+        block_b = min(b, 8)
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+
+    kernel = functools.partial(_bitonic_kernel, m=m)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, m), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), weights.dtype),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+        ],
+        interpret=True,
+    )(weights)

@@ -1,0 +1,52 @@
+"""Layer-1 Pallas kernel: round-matrix application (continuous oracle).
+
+The continuous (arbitrarily divisible) case evolves the load vector as a
+linear system xi^(t) = xi^(t-1) . M (paper §3, Appendix A Lemma 3).  The
+theory module compares the indivisible trajectories against this oracle, so
+the coordinator needs a fast batched matvec  X <- X @ M  where M is the
+n x n round matrix (doubly stochastic, symmetric for BCM matchings).
+
+This is the one MXU-shaped kernel in the stack: a classic tiled matmul with
+the K axis kept whole (n <= a few hundred for the paper's networks) and the
+output tiled over (B, N) blocks.
+
+Inputs:  x f32[B, N], m f32[N, N].   Output: f32[B, N] = x @ m.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, m_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], m_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def diffusion_step(x, m, *, block_b: int | None = None, block_n: int | None = None):
+    """One continuous-case BCM round for a batch of load vectors."""
+    b, n = x.shape
+    if m.shape != (n, n):
+        raise ValueError(f"round matrix must be [{n}, {n}], got {m.shape}")
+    if block_b is None:
+        block_b = min(b, 8)
+    if block_n is None:
+        block_n = n  # K and N whole: paper networks are n <= 128
+    if b % block_b != 0 or n % block_n != 0:
+        raise ValueError("block sizes must divide array dims")
+
+    grid = (b // block_b, n // block_n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, m)

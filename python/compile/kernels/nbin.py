@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernel: batched n-bin greedy placement (offline solver).
+
+The Appendix-C experiments (paper Figs. 4 and 5) study the offline weighted
+balls-into-bins problem with n >= 2 bins.  This kernel generalizes
+two_bin.py: the scan carry is the full [B, N] bin-sum matrix and each step
+places the next ball into the bin with the least current sum (first index
+wins ties — the same convention as the Rust reference implementation).
+
+Inputs
+------
+weights : f32[B, M]  descending-sorted, zero-padded ball weights.
+base    : f32[B, N]  initial bin sums (zeros for the classical problem).
+
+Outputs
+-------
+assign  : i32[B, M]  bin index of each ball.
+sums    : f32[B, N]  final bin sums.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nbin_kernel(w_ref, base_ref, assign_ref, sums_ref, *, m: int, nbins: int):
+    w = w_ref[...]  # [Bb, M]
+    sums0 = base_ref[...]  # [Bb, N]
+    assign0 = jnp.zeros(w.shape, jnp.int32)
+
+    def body(i, carry):
+        sums, assign = carry
+        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=1)  # [Bb, 1]
+        light = jnp.argmin(sums, axis=1)  # [Bb], ties -> lowest index
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, sums.shape, dimension=1)
+            == light[:, None]
+        ).astype(sums.dtype)
+        sums = sums + wi * onehot
+        assign = jax.lax.dynamic_update_slice_in_dim(
+            assign, light[:, None].astype(jnp.int32), i, axis=1
+        )
+        return (sums, assign)
+
+    sums, assign = jax.lax.fori_loop(0, m, body, (sums0, assign0))
+    assign_ref[...] = assign
+    sums_ref[...] = sums
+
+
+def nbin_greedy(weights, base, *, block_b: int | None = None):
+    """Batched greedy n-bin placement of descending-sorted weights.
+
+    Returns ``(assign[B, M] i32, sums[B, N] f32)``.
+    """
+    b, m = weights.shape
+    b2, nbins = base.shape
+    if b2 != b:
+        raise ValueError(f"batch mismatch: weights {b} vs base {b2}")
+    if block_b is None:
+        block_b = min(b, 8)
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+
+    kernel = functools.partial(_nbin_kernel, m=m, nbins=nbins)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, nbins), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, nbins), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, nbins), weights.dtype),
+        ],
+        interpret=True,
+    )(weights, base)

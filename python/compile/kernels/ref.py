@@ -1,0 +1,63 @@
+"""Pure-numpy/jnp oracles for every Layer-1 kernel.
+
+These are the build-time correctness ground truth: python/tests/ asserts
+allclose between each Pallas kernel and its oracle over hypothesis-driven
+shape/value sweeps.  They intentionally mirror the *paper's* scalar
+formulation (sequential loops), not the kernels' vectorized one.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def ref_two_bin(weights: np.ndarray, base: np.ndarray):
+    """Sequential greedy two-bin placement (paper Alg. 4.2 with n=2).
+
+    weights[B, M] assumed sorted descending; base[B, 2] initial sums.
+    Returns (assign[B, M] f32, sums[B, 2] f32); tie -> bin 0.
+    """
+    weights = np.asarray(weights, np.float32)
+    b, m = weights.shape
+    assign = np.zeros((b, m), np.float32)
+    sums = np.array(base, np.float32).copy()
+    for r in range(b):
+        for i in range(m):
+            k = 1 if sums[r, 1] < sums[r, 0] else 0
+            assign[r, i] = float(k)
+            sums[r, k] += weights[r, i]
+    return assign, sums
+
+
+def ref_nbin(weights: np.ndarray, base: np.ndarray):
+    """Sequential greedy n-bin placement (paper Alg. 4.2); tie -> lowest idx."""
+    weights = np.asarray(weights, np.float32)
+    b, m = weights.shape
+    sums = np.array(base, np.float32).copy()
+    assign = np.zeros((b, m), np.int32)
+    for r in range(b):
+        for i in range(m):
+            k = int(np.argmin(sums[r]))
+            assign[r, i] = k
+            sums[r, k] += weights[r, i]
+    return assign, sums
+
+
+def ref_sort_desc(weights: np.ndarray):
+    """Descending sort + a valid permutation (stable on ties)."""
+    weights = np.asarray(weights, np.float32)
+    # np.argsort is stable with kind="stable"; negate for descending.
+    perm = np.argsort(-weights, axis=1, kind="stable").astype(np.int32)
+    sorted_w = np.take_along_axis(weights, perm, axis=1)
+    return sorted_w, perm
+
+
+def ref_diffusion(x: np.ndarray, m: np.ndarray):
+    """Continuous-case round: x @ m in float32."""
+    return np.asarray(x, np.float32) @ np.asarray(m, np.float32)
+
+
+def discrepancy(sums: np.ndarray):
+    """Per-row discrepancy max_k U_k - min_k U_k (paper Eq. 12)."""
+    s = np.asarray(sums)
+    return s.max(axis=-1) - s.min(axis=-1)

@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: batched two-bin greedy placement.
+
+Each BCM matching [u:v] reduces to an offline weighted balls-into-bins
+problem with two bins (paper §4): the union of the mobile loads of u and v
+must be split across the two nodes as evenly as possible.  All matchings of
+one BCM round are independent, so the coordinator batches them on a leading
+axis B and this kernel solves all of them in one launch.
+
+Inputs
+------
+weights : f32[B, M]   per-matching ball weights, sorted in DESCENDING order
+                      (the SortedGreedy precondition; see bitonic.py),
+                      zero-padded on the right.  Zero-weight padding balls
+                      are placed like any other ball but change no bin sum,
+                      so they are harmless; the coordinator ignores their
+                      assignments.
+base    : f32[B, 2]   initial bin sums.  Full mobility => zeros; partial
+                      mobility => the pre-summed weights of the pinned
+                      (immobile) loads on each side (paper §6.1).
+
+Outputs
+-------
+assign  : f32[B, M]   0.0 => ball i goes to bin 0 (node u), 1.0 => bin 1.
+sums    : f32[B, 2]   final bin sums (base + placed weights).
+
+Placement rule: ball i goes to the *strictly lighter* bin; ties go to bin 0.
+The paper requires the first ball to be placed uniformly at random for the
+zero-expected-error condition (§3 cond. 3, Appendix A req. 3); the kernel is
+deterministic and the Rust coordinator restores the symmetry by randomly
+orienting each matched edge (swapping the roles of u and v) per round.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the scan over M is inherently
+sequential (each decision depends on the running bin sums), so parallelism
+comes from the batch axis: B is tiled into VMEM-resident blocks by the
+BlockSpec, and every scan step is a VPU-vectorized op over the block's
+lanes.  VMEM footprint per block is block_b*(2*M+4)*4 bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _two_bin_kernel(w_ref, base_ref, assign_ref, sums_ref, *, m: int):
+    w = w_ref[...]  # [Bb, M]
+    base = base_ref[...]  # [Bb, 2]
+    s0 = base[:, 0]
+    s1 = base[:, 1]
+    assign0 = jnp.zeros_like(w)
+
+    def body(i, carry):
+        s0, s1, assign = carry
+        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=1)[:, 0]  # [Bb]
+        go1 = s1 < s0  # strictly lighter bin wins; tie -> bin 0
+        a = go1.astype(w.dtype)
+        assign = jax.lax.dynamic_update_slice_in_dim(
+            assign, a[:, None], i, axis=1
+        )
+        s0 = s0 + jnp.where(go1, jnp.zeros_like(wi), wi)
+        s1 = s1 + jnp.where(go1, wi, jnp.zeros_like(wi))
+        return (s0, s1, assign)
+
+    s0, s1, assign = jax.lax.fori_loop(0, m, body, (s0, s1, assign0))
+    assign_ref[...] = assign
+    sums_ref[...] = jnp.stack([s0, s1], axis=1)
+
+
+def two_bin_greedy(weights, base, *, block_b: int | None = None):
+    """Batched greedy two-bin placement of descending-sorted weights.
+
+    Returns ``(assign[B, M], sums[B, 2])``.  See module docstring.
+    """
+    b, m = weights.shape
+    if base.shape != (b, 2):
+        raise ValueError(f"base must be [{b}, 2], got {base.shape}")
+    if block_b is None:
+        block_b = min(b, 8)
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+
+    kernel = functools.partial(_two_bin_kernel, m=m)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), weights.dtype),
+            jax.ShapeDtypeStruct((b, 2), weights.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(weights, base)

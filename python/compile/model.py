@@ -1,0 +1,59 @@
+"""Layer 2: the JAX compute graph the Rust coordinator executes.
+
+Each entry point composes Layer-1 Pallas kernels into one jit-able function
+that python/compile/aot.py lowers ONCE to HLO text per shape bucket.  Rust
+loads the artifacts via PJRT at startup; Python never runs on the request
+path.
+
+Entry points
+------------
+balance_two_bin(weights, base)
+    The BCM hot path: all concurrent matchings of one round, batched.
+    SortedGreedy = bitonic_sort_desc -> two_bin_greedy, fused into a single
+    HLO module so the sorted weights never leave the device.
+    Returns (sorted_w, perm, assign, sums).
+
+offline_nbin(weights, base)
+    Appendix-C offline solver: sort + n-bin greedy placement.
+    Returns (sorted_w, perm, assign, sums).
+
+continuous_round(x, m)
+    Continuous-case oracle step x <- x @ M (round matrix application).
+
+greedy_two_bin(weights, base)
+    The *unsorted* Greedy baseline on the same batched layout (no sort
+    stage) — used by benches to run the paper's baseline through the
+    identical device path.
+"""
+
+from __future__ import annotations
+
+from .kernels.bitonic import bitonic_sort_desc
+from .kernels.diffusion import diffusion_step
+from .kernels.nbin import nbin_greedy
+from .kernels.two_bin import two_bin_greedy
+
+
+def balance_two_bin(weights, base):
+    """SortedGreedy over a batch of two-bin matchings: sort, then place."""
+    sorted_w, perm = bitonic_sort_desc(weights)
+    assign, sums = two_bin_greedy(sorted_w, base)
+    return sorted_w, perm, assign, sums
+
+
+def greedy_two_bin(weights, base):
+    """Greedy baseline: place in arrival order, no sorting stage."""
+    assign, sums = two_bin_greedy(weights, base)
+    return assign, sums
+
+
+def offline_nbin(weights, base):
+    """Offline weighted balls-into-bins with N bins (SortedGreedy)."""
+    sorted_w, perm = bitonic_sort_desc(weights)
+    assign, sums = nbin_greedy(sorted_w, base)
+    return sorted_w, perm, assign, sums
+
+
+def continuous_round(x, m):
+    """One continuous-case BCM round for a batch of load vectors."""
+    return (diffusion_step(x, m),)

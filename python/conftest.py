@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile` (the python/compile package) importable regardless of the
+# pytest invocation directory.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

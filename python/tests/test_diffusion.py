@@ -1,0 +1,91 @@
+"""diffusion_step Pallas kernel vs numpy matmul oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.diffusion import diffusion_step
+from compile.kernels import ref
+
+
+def matching_round_matrix(n, pairs):
+    """Build a BCM matching matrix M^(t) from disjoint (u, v) pairs."""
+    m = np.eye(n, dtype=np.float32)
+    for u, v in pairs:
+        m[u, u] = m[v, v] = m[u, v] = m[v, u] = 0.5
+    return m
+
+
+def test_identity_matrix_is_noop():
+    x = np.arange(32, dtype=np.float32).reshape(2, 16)
+    out = diffusion_step(jnp.asarray(x), jnp.eye(16, dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(out), x)
+
+
+def test_single_matching_averages_pair():
+    n = 8
+    m = matching_round_matrix(n, [(0, 1)])
+    x = np.zeros((1, n), np.float32)
+    x[0, 0] = 10.0
+    out = np.asarray(diffusion_step(jnp.asarray(x), jnp.asarray(m)))
+    assert out[0, 0] == pytest.approx(5.0)
+    assert out[0, 1] == pytest.approx(5.0)
+    assert out[0, 2:].sum() == 0.0
+
+
+def test_mass_conserved_by_doubly_stochastic():
+    rng = np.random.default_rng(1)
+    n = 16
+    m = matching_round_matrix(n, [(0, 3), (1, 2), (4, 5)])
+    x = rng.uniform(0, 100, (4, n)).astype(np.float32)
+    out = np.asarray(diffusion_step(jnp.asarray(x), jnp.asarray(m)))
+    np.testing.assert_allclose(out.sum(axis=1), x.sum(axis=1), rtol=1e-5)
+
+
+def test_blocked_grid_matches_whole():
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0, 1, (8, 32)).astype(np.float32)
+    m = rng.uniform(0, 1, (32, 32)).astype(np.float32)
+    whole = np.asarray(diffusion_step(jnp.asarray(x), jnp.asarray(m)))
+    tiled = np.asarray(
+        diffusion_step(jnp.asarray(x), jnp.asarray(m), block_b=2, block_n=8)
+    )
+    np.testing.assert_allclose(whole, tiled, rtol=1e-5)
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        diffusion_step(jnp.zeros((2, 8)), jnp.zeros((4, 4)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    n=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_matches_numpy(b, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 10, (b, n)).astype(np.float32)
+    m = rng.uniform(0, 1, (n, n)).astype(np.float32)
+    out = np.asarray(diffusion_step(jnp.asarray(x), jnp.asarray(m)))
+    np.testing.assert_allclose(out, ref.ref_diffusion(x, m), rtol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_repeated_rounds_converge(seed):
+    """Ergodic round matrix: repeated application converges to the mean
+    (continuous-case convergence, paper §3)."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    m1 = matching_round_matrix(n, [(i, i + 1) for i in range(0, n, 2)])
+    m2 = matching_round_matrix(n, [(i, i + 1) for i in range(1, n - 1, 2)] + [(0, n - 1)])
+    m = (m1 @ m2).astype(np.float32)
+    x = rng.uniform(0, 100, (1, n)).astype(np.float32)
+    y = jnp.asarray(x)
+    for _ in range(200):
+        y = diffusion_step(y, jnp.asarray(m))
+    y = np.asarray(y)
+    np.testing.assert_allclose(y, x.mean(), rtol=1e-3)

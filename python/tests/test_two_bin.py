@@ -1,0 +1,111 @@
+"""two_bin_greedy Pallas kernel vs the sequential oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.two_bin import two_bin_greedy
+from compile.kernels import ref
+
+
+def run_both(w, base, **kw):
+    a, s = two_bin_greedy(jnp.asarray(w), jnp.asarray(base), **kw)
+    ra, rs = ref.ref_two_bin(w, base)
+    return np.asarray(a), np.asarray(s), ra, rs
+
+
+def test_simple_descending():
+    w = np.array([[5.0, 4.0, 3.0, 2.0]], np.float32)
+    base = np.zeros((1, 2), np.float32)
+    a, s, ra, rs = run_both(w, base)
+    # 5->bin0, 4->bin1, 3->bin1 (4<5), 2->bin0? sums (5,4): 4<5 -> bin1
+    np.testing.assert_allclose(a, ra)
+    np.testing.assert_allclose(s, rs, rtol=1e-6)
+    assert s[0].sum() == pytest.approx(w.sum())
+
+
+def test_tie_goes_to_bin_zero():
+    w = np.array([[1.0, 1.0]], np.float32)
+    base = np.zeros((1, 2), np.float32)
+    a, s, ra, rs = run_both(w, base)
+    assert a[0, 0] == 0.0  # tie at (0, 0) -> bin 0
+    assert a[0, 1] == 1.0  # now bin1 lighter
+    np.testing.assert_allclose(a, ra)
+
+
+def test_base_offsets_respected():
+    """Partial mobility: pinned loads pre-summed into the base."""
+    w = np.array([[3.0, 1.0]], np.float32)
+    base = np.array([[10.0, 0.0]], np.float32)
+    a, s, ra, rs = run_both(w, base)
+    # everything should flow to bin 1 until it catches up
+    assert a[0, 0] == 1.0 and a[0, 1] == 1.0
+    np.testing.assert_allclose(s, rs, rtol=1e-6)
+
+
+def test_zero_padding_harmless():
+    w = np.array([[2.0, 1.0, 0.0, 0.0]], np.float32)
+    base = np.zeros((1, 2), np.float32)
+    _, s, _, _ = run_both(w, base)
+    np.testing.assert_allclose(sorted(s[0]), [1.0, 2.0])
+
+
+def test_mass_conservation_batch():
+    rng = np.random.default_rng(7)
+    w = -np.sort(-rng.uniform(0, 100, (16, 32)).astype(np.float32), axis=1)
+    base = rng.uniform(0, 10, (16, 2)).astype(np.float32)
+    a, s, ra, rs = run_both(w, base)
+    np.testing.assert_allclose(
+        s.sum(axis=1), w.sum(axis=1) + base.sum(axis=1), rtol=1e-5
+    )
+    np.testing.assert_allclose(a, ra)
+
+
+def test_block_b_variants_agree():
+    rng = np.random.default_rng(3)
+    w = -np.sort(-rng.uniform(0, 1, (8, 16)).astype(np.float32), axis=1)
+    base = np.zeros((8, 2), np.float32)
+    a1, s1 = two_bin_greedy(jnp.asarray(w), jnp.asarray(base), block_b=8)
+    a2, s2 = two_bin_greedy(jnp.asarray(w), jnp.asarray(base), block_b=2)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2))
+
+
+def test_rejects_bad_base_shape():
+    with pytest.raises(ValueError):
+        two_bin_greedy(jnp.zeros((4, 8)), jnp.zeros((4, 3)))
+
+
+def test_rejects_indivisible_block():
+    with pytest.raises(ValueError):
+        two_bin_greedy(jnp.zeros((6, 8)), jnp.zeros((6, 2)), block_b=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    m=st.sampled_from([1, 2, 3, 8, 17, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1.0, 100.0]),
+)
+def test_hypothesis_matches_oracle(b, m, seed, scale):
+    rng = np.random.default_rng(seed)
+    w = -np.sort(-rng.uniform(0, scale, (b, m)).astype(np.float32), axis=1)
+    base = rng.uniform(0, scale, (b, 2)).astype(np.float32)
+    a, s, ra, rs = run_both(w, base, block_b=1)
+    np.testing.assert_allclose(a, ra)
+    np.testing.assert_allclose(s, rs, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_discrepancy_bounded_by_lmax(seed):
+    """Lemma 5: |d_max| <= l_1 / 2 . 2 = l_1: final two-bin discrepancy
+    never exceeds the largest ball when base sums are equal."""
+    rng = np.random.default_rng(seed)
+    w = -np.sort(-rng.uniform(0, 1, (4, 64)).astype(np.float32), axis=1)
+    base = np.zeros((4, 2), np.float32)
+    _, s, _, _ = run_both(w, base)
+    disc = ref.discrepancy(s)
+    assert (disc <= w[:, 0] + 1e-5).all()

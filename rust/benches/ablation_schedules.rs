@@ -1,0 +1,125 @@
+//! Ablation: protocol-family comparison at matched communication budget.
+//!
+//! DESIGN.md calls out two design choices the paper takes as given:
+//! (1) deterministic BCM schedule (vs the random matching model §2.1
+//! mentions) and (2) the matching model itself (vs diffusion, §1).
+//! This bench runs all three on identical networks and load draws,
+//! normalizing by rounds, and reports final discrepancy + movements.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{run, run_rmm, Diffusion, Schedule, StopRule};
+use bcm_dlb::graph::Topology;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::util::stats::Welford;
+use bcm_dlb::util::table::{f, Table};
+
+fn main() {
+    let quick = std::env::var("BCM_DLB_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps = if quick { 5 } else { 20 };
+    let sweeps = 12;
+    let start = std::time::Instant::now();
+
+    for topo in [Topology::RandomConnected, Topology::Torus2d, Topology::RandomRegular { d: 4 }] {
+        let mut t = Table::new(
+            &format!(
+                "ablation {} n=32 L/n=50 ({} reps, {} sweeps-equivalent rounds)",
+                topo.name(),
+                reps,
+                sweeps
+            ),
+            &["protocol", "final_disc", "disc_reduction", "movements", "moves/edge"],
+        );
+        let mut rows: Vec<(String, Welford, Welford, Welford, Welford)> = [
+            "BCM + SortedGreedy",
+            "BCM + Greedy (pooled)",
+            "BCM + Greedy (incremental)",
+            "RMM + SortedGreedy",
+            "FOS diffusion",
+        ]
+        .iter()
+        .map(|s| (s.to_string(), Welford::new(), Welford::new(), Welford::new(), Welford::new()))
+        .collect();
+
+        for rep in 0..reps {
+            let mut rng = Pcg64::new(4000 + rep);
+            let g = topo.build(32, &mut rng);
+            let schedule = Schedule::from_graph(&g);
+            let rounds = sweeps * schedule.period();
+            let state0 = LoadState::init_uniform_counts(
+                32,
+                50,
+                &WeightDistribution::paper_section6(),
+                Mobility::Full,
+                &mut rng,
+            );
+            let traces = vec![
+                {
+                    let mut s = state0.clone();
+                    let mut r = Pcg64::new(1 + rep);
+                    run(
+                        &mut s,
+                        &schedule,
+                        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+                        StopRule::sweeps(sweeps),
+                        &mut r,
+                    )
+                },
+                {
+                    let mut s = state0.clone();
+                    let mut r = Pcg64::new(2 + rep);
+                    run(&mut s, &schedule, PairAlgorithm::Greedy, StopRule::sweeps(sweeps), &mut r)
+                },
+                {
+                    let mut s = state0.clone();
+                    let mut r = Pcg64::new(3 + rep);
+                    run(
+                        &mut s,
+                        &schedule,
+                        PairAlgorithm::GreedyIncremental,
+                        StopRule::sweeps(sweeps),
+                        &mut r,
+                    )
+                },
+                {
+                    let mut s = state0.clone();
+                    let mut r = Pcg64::new(4 + rep);
+                    run_rmm(
+                        &mut s,
+                        &g,
+                        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+                        rounds,
+                        &mut r,
+                    )
+                },
+                {
+                    let mut s = state0.clone();
+                    let mut r = Pcg64::new(5 + rep);
+                    Diffusion::default().run(&mut s, &g, rounds, &mut r)
+                },
+            ];
+            for ((_, fd, dr, mv, me), trace) in rows.iter_mut().zip(&traces) {
+                fd.push(trace.final_discrepancy());
+                dr.push(trace.discrepancy_reduction().min(1e9));
+                mv.push(trace.total_movements() as f64);
+                me.push(trace.movements_per_edge());
+            }
+        }
+        for (name, fd, dr, mv, me) in rows {
+            t.row(vec![
+                name,
+                f(fd.mean(), 2),
+                format!("{}x", f(dr.mean(), 1)),
+                f(mv.mean(), 0),
+                f(me.mean(), 2),
+            ]);
+        }
+        println!("{}", t.render());
+        t.write_csv(std::path::Path::new(&format!(
+            "results/ablation_{}.csv",
+            topo.name().replace(':', "_")
+        )))
+        .ok();
+    }
+    eprintln!("ablation completed in {:.1}s", start.elapsed().as_secs_f64());
+}

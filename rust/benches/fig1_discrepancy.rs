@@ -1,0 +1,21 @@
+//! E1 — regenerates paper Fig. 1 (a)–(i): final discrepancy vs network
+//! size for SortedGreedy/Greedy × full/partial mobility, L/n ∈ {10,50,100}.
+//!
+//! `BCM_DLB_QUICK=1 cargo bench --bench fig1_discrepancy` derates the
+//! sweep for CI.  CSVs land in results/.
+
+use bcm_dlb::experiments::{figures, SweepParams};
+use std::path::Path;
+
+fn main() {
+    let params = SweepParams::from_env();
+    eprintln!(
+        "fig1: n in {:?}, L/n in {:?}, {} reps, {} sweeps",
+        params.network_sizes, params.loads_per_node, params.reps, params.sweeps
+    );
+    let start = std::time::Instant::now();
+    for t in figures::fig1(&params, Path::new("results")) {
+        println!("{}", t.render());
+    }
+    eprintln!("fig1 completed in {:.1}s", start.elapsed().as_secs_f64());
+}

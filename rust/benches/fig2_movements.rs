@@ -1,0 +1,14 @@
+//! E2 — regenerates paper Fig. 2: the ratio of average load movements per
+//! edge (alpha_SortedGreedy / alpha_Greedy) for full and partial mobility.
+
+use bcm_dlb::experiments::{figures, SweepParams};
+use std::path::Path;
+
+fn main() {
+    let params = SweepParams::from_env();
+    let start = std::time::Instant::now();
+    for t in figures::fig2(&params, Path::new("results")) {
+        println!("{}", t.render());
+    }
+    eprintln!("fig2 completed in {:.1}s", start.elapsed().as_secs_f64());
+}

@@ -1,0 +1,15 @@
+//! E3 + E7 — regenerates paper Fig. 3 (relative figure of merit S_rel,
+//! Eq. 6) and the §6.1/§7 headline scalars (discrepancy ratio, movement
+//! ratio, S_rel averages) with the paper's numbers side by side.
+
+use bcm_dlb::experiments::{figures, SweepParams};
+use std::path::Path;
+
+fn main() {
+    let params = SweepParams::from_env();
+    let start = std::time::Instant::now();
+    for t in figures::fig3(&params, Path::new("results")) {
+        println!("{}", t.render());
+    }
+    eprintln!("fig3 completed in {:.1}s", start.elapsed().as_secs_f64());
+}

@@ -1,0 +1,19 @@
+//! E5 — regenerates paper Fig. 5 (Appendix C): offline balls-into-bins
+//! discrepancy vs number of bins n, for m = 1024 and m = 3027 balls.
+//!
+//! Shape expectations: Greedy rises quickly then saturates; SortedGreedy
+//! rises much more slowly (consistent with Talwar & Wieder's dependence
+//! on both the distribution and n).
+
+use bcm_dlb::experiments::figures;
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("BCM_DLB_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps = if quick { 100 } else { 1000 };
+    let start = std::time::Instant::now();
+    for t in figures::fig5(reps, 2013, Path::new("results")) {
+        println!("{}", t.render());
+    }
+    eprintln!("fig5 completed in {:.1}s", start.elapsed().as_secs_f64());
+}

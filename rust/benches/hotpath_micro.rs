@@ -1,0 +1,157 @@
+//! Hot-path microbenchmarks (the §Perf deliverable's measurement tool).
+//!
+//! Measures, on the end-to-end BCM round hot path:
+//!   1. pure-Rust pairwise rebalance throughput (edges/s, balls/s)
+//!   2. device-path (PJRT) batched round latency per bucket
+//!   3. the sequential engine's full-round throughput
+//!   4. the distributed cluster's round latency
+//!
+//! Results feed EXPERIMENTS.md §Perf.
+
+use bcm_dlb::balancer::{balance_pair, PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{balance_round, Schedule};
+use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
+use bcm_dlb::graph::Topology;
+use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
+use bcm_dlb::runtime::{solve_batch, DeviceAlgo, EdgeProblem, Runtime};
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::util::table::{f, Table};
+use std::time::Instant;
+
+fn bench<T>(iters: usize, mut body: impl FnMut() -> T) -> f64 {
+    // one warmup
+    std::hint::black_box(body());
+    let start = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(body());
+    }
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let mut t = Table::new(
+        "hot-path microbenchmarks",
+        &["benchmark", "time/op", "throughput"],
+    );
+
+    // 1. pairwise rebalance (the innermost hot path)
+    for (label, algo) in [
+        ("balance_pair greedy, 2x50 balls", PairAlgorithm::Greedy),
+        (
+            "balance_pair sorted:quick, 2x50 balls",
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        ),
+        (
+            "balance_pair sorted:std, 2x50 balls",
+            PairAlgorithm::SortedGreedy(SortAlgo::Std),
+        ),
+    ] {
+        let mut rng = Pcg64::new(1);
+        let u: Vec<Load> = (0..50).map(|i| Load::new(i, rng.uniform(0.0, 100.0))).collect();
+        let v: Vec<Load> = (0..50)
+            .map(|i| Load::new(100 + i, rng.uniform(0.0, 100.0)))
+            .collect();
+        let s = bench(2000, || balance_pair(&u, &v, algo, &mut rng));
+        t.row(vec![
+            label.into(),
+            format!("{:.2} us", s * 1e6),
+            format!("{:.2} Mballs/s", 100.0 / s / 1e6),
+        ]);
+    }
+
+    // 2. one full sequential-engine round on the paper's largest setting
+    {
+        let mut rng = Pcg64::new(2);
+        let g = Topology::RandomConnected.build(128, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let state = LoadState::init_uniform_counts(
+            128,
+            100,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let pairs = schedule.matching(0).to_vec();
+        // reset the state every iteration so the measured work is stable
+        // (a balanced state has different pool sizes than the initial one)
+        let s = bench(200, || {
+            let mut st = state.clone();
+            balance_round(&mut st, &pairs, DeviceAlgo::SortedGreedy, None, &mut rng).unwrap()
+        });
+        t.row(vec![
+            format!("engine round n=128 L/n=100 ({} edges), rust path", pairs.len()),
+            format!("{:.1} us", s * 1e6),
+            format!("{:.2} Medges/s", pairs.len() as f64 / s / 1e6),
+        ]);
+    }
+
+    // 3. PJRT device path (if artifacts are built)
+    let dir = bcm_dlb::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::new(&dir).expect("runtime");
+        rt.warm_entry("balance_two_bin").expect("warm");
+        for (b, m) in [(64usize, 100usize), (64, 200), (8, 500)] {
+            let mut rng = Pcg64::new(3);
+            let problems: Vec<EdgeProblem> = (0..b)
+                .map(|_| EdgeProblem {
+                    weights: (0..m).map(|_| rng.uniform(0.0, 100.0)).collect(),
+                    hosts: (0..m).map(|_| rng.below(2) as u8).collect(),
+                    base: [0.0, 0.0],
+                })
+                .collect();
+            let s_dev = bench(20, || {
+                solve_batch(Some(&mut rt), DeviceAlgo::SortedGreedy, &problems).unwrap()
+            });
+            let s_fb = bench(50, || {
+                solve_batch(None, DeviceAlgo::SortedGreedy, &problems).unwrap()
+            });
+            t.row(vec![
+                format!("device batch {b} edges x {m} balls (PJRT)"),
+                format!("{:.2} ms", s_dev * 1e3),
+                format!("{:.0} kball/s", b as f64 * m as f64 / s_dev / 1e3),
+            ]);
+            t.row(vec![
+                format!("same batch, rust fallback"),
+                format!("{:.3} ms", s_fb * 1e3),
+                format!(
+                    "{:.0} kball/s (device/fallback = {:.0}x)",
+                    b as f64 * m as f64 / s_fb / 1e3,
+                    s_dev / s_fb
+                ),
+            ]);
+        }
+    } else {
+        eprintln!("artifacts/ absent — skipping PJRT microbenches");
+    }
+
+    // 4. distributed cluster round latency (n=64)
+    {
+        let mut rng = Pcg64::new(4);
+        let g = Topology::RandomConnected.build(64, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let state = LoadState::init_uniform_counts(
+            64,
+            100,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
+        let mut round = 0usize;
+        let s = bench(50, || {
+            let st = cluster.run_single_round(&schedule, round, &mut rng);
+            round += 1;
+            st
+        });
+        cluster.shutdown();
+        t.row(vec![
+            "cluster round n=64 L/n=100 (threads+channels)".into(),
+            format!("{:.2} ms", s * 1e3),
+            format!("{:.0} rounds/s", 1.0 / s),
+        ]);
+    }
+
+    println!("{}", t.render());
+    t.write_csv(std::path::Path::new("results/hotpath_micro.csv")).ok();
+    let _ = f(0.0, 0); // keep table::f linked for formatting parity
+}

@@ -1,0 +1,15 @@
+//! E6 — regenerates the §11.3 timing table: Greedy vs SortedGreedy wall
+//! time on the two-bin problem with m = 2^13 balls, 100 repetitions.
+//!
+//! The paper's claim: sorting adds ~0.02% overhead (MATLAB quicksort).
+//! We report every sorting backend (quick / merge / flash / std) so the
+//! distribution-sort discussion of §4.1 is covered too.
+
+use bcm_dlb::experiments::figures;
+use std::path::Path;
+
+fn main() {
+    let start = std::time::Instant::now();
+    println!("{}", figures::timings(100, 2013, Path::new("results")).render());
+    eprintln!("timings completed in {:.1}s", start.elapsed().as_secs_f64());
+}

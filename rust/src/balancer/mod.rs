@@ -1,0 +1,12 @@
+//! Local load-balancing algorithms (paper §4): the offline weighted
+//! balls-into-bins solvers and the pairwise rebalance used in each BCM
+//! matching.
+
+pub mod offline;
+pub mod pair;
+pub mod refine;
+pub mod sorting;
+
+pub use offline::{greedy, lightest_bin, random_place, sorted_greedy, Placement};
+pub use pair::{balance_pair, PairAlgorithm, PairOutcome};
+pub use sorting::SortAlgo;

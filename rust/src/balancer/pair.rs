@@ -1,0 +1,336 @@
+//! Pairwise (two-bin) rebalancing — the per-matching step of the BCM.
+//!
+//! In every matching [u:v], the union of the two nodes' *mobile* loads is
+//! redistributed across the pair as evenly as possible, with the pinned
+//! loads contributing fixed base sums (paper §4, §6.1).  This is exactly
+//! the offline weighted balls-into-bins problem with two bins.
+
+use super::sorting::SortAlgo;
+use crate::load::Load;
+use crate::util::rng::Pcg64;
+
+/// Result of rebalancing one matched edge.
+#[derive(Clone, Debug)]
+pub struct PairOutcome {
+    /// New mobile loads of u / of v (pinned loads are not included; they
+    /// never move).
+    pub to_u: Vec<Load>,
+    pub to_v: Vec<Load>,
+    /// Number of loads whose host changed (the paper's communication-cost
+    /// metric alpha, §6.2).
+    pub movements: usize,
+    /// |weight(u) − weight(v)| after the rebalance, counting pinned loads.
+    pub local_discrepancy: f64,
+}
+
+/// Which local (per-matching) algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairAlgorithm {
+    /// Paper Alg. 4.2 applied to the pooled mobile loads: place balls in
+    /// arrival order into the lighter bin, rebuilding both bins from
+    /// scratch.  This is the Appendix-C offline Greedy; in the *protocol*
+    /// it moves ~m/2 loads per matching (every re-split reshuffles hosts).
+    Greedy,
+    /// Movement-frugal protocol Greedy: keep every load on its current
+    /// host and relocate a load (arrival order) only when its host is
+    /// heavier by more than the load's weight, i.e. when the move
+    /// strictly shrinks the pair imbalance.  This is the reading of the
+    /// paper's §5 "Greedy" DLB strategy consistent with Fig. 2 (Greedy
+    /// moves 14-30x fewer loads than SortedGreedy) and with §6.1 (Greedy
+    /// reduces the discrepancy at most ~4.5x): pooled Alg-4.2 Greedy
+    /// would show movement *parity* with SortedGreedy.  See DESIGN.md
+    /// §Substitutions.
+    GreedyIncremental,
+    /// Paper Alg. 4.1: sort descending, then pooled Greedy.
+    SortedGreedy(SortAlgo),
+    /// Baseline: each mobile load to a uniformly random side.
+    Random,
+}
+
+impl PairAlgorithm {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "greedy" => Some(PairAlgorithm::Greedy),
+            "greedy-inc" | "incremental" => Some(PairAlgorithm::GreedyIncremental),
+            "sorted" | "sorted-greedy" | "sortedgreedy" => {
+                Some(PairAlgorithm::SortedGreedy(SortAlgo::Quick))
+            }
+            "random" => Some(PairAlgorithm::Random),
+            s if s.starts_with("sorted:") => {
+                SortAlgo::parse(&s[7..]).map(PairAlgorithm::SortedGreedy)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PairAlgorithm::Greedy => "greedy".into(),
+            PairAlgorithm::GreedyIncremental => "greedy-inc".into(),
+            PairAlgorithm::SortedGreedy(a) => format!("sorted:{}", a.name()),
+            PairAlgorithm::Random => "random".into(),
+        }
+    }
+}
+
+/// Rebalance a matched edge.
+///
+/// `u_loads` / `v_loads` are each node's full load lists (mobile +
+/// pinned).  The zero-expected-error condition (paper §3 cond. 3,
+/// Appendix A req. 3) requires the symmetric tie-breaking of the first
+/// ball; we realize it by randomly orienting the pair: with probability
+/// 1/2 the roles of the two bins are swapped before the deterministic
+/// placement.
+pub fn balance_pair(
+    u_loads: &[Load],
+    v_loads: &[Load],
+    algo: PairAlgorithm,
+    rng: &mut Pcg64,
+) -> PairOutcome {
+    // Mobile pool keeps arrival order (u's loads then v's) — this is the
+    // Greedy baseline's input order.  Track the original host of each.
+    let mut pool: Vec<(Load, u8)> = Vec::with_capacity(u_loads.len() + v_loads.len());
+    let mut base = [0.0f64; 2];
+    for l in u_loads {
+        if l.mobile {
+            pool.push((*l, 0));
+        } else {
+            base[0] += l.weight;
+        }
+    }
+    for l in v_loads {
+        if l.mobile {
+            pool.push((*l, 1));
+        } else {
+            base[1] += l.weight;
+        }
+    }
+
+    // Random orientation: swap bin labels with probability 1/2.
+    let flip = rng.coin();
+    if flip {
+        base.swap(0, 1);
+        for (_, h) in pool.iter_mut() {
+            *h ^= 1;
+        }
+    }
+
+    if let PairAlgorithm::SortedGreedy(sort) = algo {
+        sort.sort_desc_pairs(&mut pool);
+    }
+
+    let mut sums = base;
+    let mut to: [Vec<Load>; 2] = [Vec::new(), Vec::new()];
+    let mut movements = 0usize;
+    if algo == PairAlgorithm::GreedyIncremental {
+        // Bins start at the status quo; one arrival-order pass relocates
+        // a load only when that strictly shrinks the imbalance.
+        for (l, h) in &pool {
+            sums[*h as usize] += l.weight;
+        }
+        for (load, host) in pool {
+            let h = host as usize;
+            let o = 1 - h;
+            let k = if sums[h] - sums[o] > load.weight {
+                sums[h] -= load.weight;
+                sums[o] += load.weight;
+                movements += 1;
+                o
+            } else {
+                h
+            };
+            to[k].push(load);
+        }
+    } else {
+        for (load, host) in pool {
+            let k = match algo {
+                PairAlgorithm::Random => rng.below(2),
+                _ => usize::from(sums[1] < sums[0]),
+            };
+            sums[k] += load.weight;
+            if k != host as usize {
+                movements += 1;
+            }
+            to[k].push(load);
+        }
+    }
+
+    let [mut bin0, mut bin1] = to;
+    if flip {
+        std::mem::swap(&mut bin0, &mut bin1);
+        sums.swap(0, 1);
+    }
+    PairOutcome {
+        to_u: bin0,
+        to_v: bin1,
+        movements,
+        local_discrepancy: (sums[0] - sums[1]).abs(),
+    }
+}
+
+impl super::sorting::Keyed for (Load, u8) {
+    #[inline]
+    fn key(&self) -> f64 {
+        self.0.weight
+    }
+}
+
+impl SortAlgo {
+    /// Sort (Load, host) pairs descending by load weight, in place.
+    fn sort_desc_pairs(&self, pool: &mut [(Load, u8)]) {
+        self.sort_desc(pool);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(ws: &[f64], start_id: u64) -> Vec<Load> {
+        ws.iter()
+            .enumerate()
+            .map(|(i, &w)| Load::new(start_id + i as u64, w))
+            .collect()
+    }
+
+    fn total(out: &PairOutcome) -> f64 {
+        out.to_u.iter().chain(&out.to_v).map(|l| l.weight).sum()
+    }
+
+    #[test]
+    fn conserves_loads_and_mass() {
+        let mut rng = Pcg64::new(1);
+        let u = loads(&[5.0, 1.0, 2.0], 0);
+        let v = loads(&[9.0, 0.5], 100);
+        let out = balance_pair(&u, &v, PairAlgorithm::SortedGreedy(SortAlgo::Quick), &mut rng);
+        assert_eq!(out.to_u.len() + out.to_v.len(), 5);
+        assert!((total(&out) - 17.5).abs() < 1e-12);
+        let mut ids: Vec<u64> = out.to_u.iter().chain(&out.to_v).map(|l| l.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 100, 101]);
+    }
+
+    #[test]
+    fn sorted_greedy_beats_greedy_on_average() {
+        let mut rng = Pcg64::new(2);
+        let mut d_greedy = 0.0;
+        let mut d_sorted = 0.0;
+        for rep in 0..200 {
+            let mut r2 = Pcg64::new(1000 + rep);
+            let u: Vec<Load> = (0..20)
+                .map(|i| Load::new(i, r2.uniform(0.0, 1.0)))
+                .collect();
+            let v: Vec<Load> = (0..20)
+                .map(|i| Load::new(100 + i, r2.uniform(0.0, 1.0)))
+                .collect();
+            d_greedy += balance_pair(&u, &v, PairAlgorithm::Greedy, &mut rng).local_discrepancy;
+            d_sorted += balance_pair(
+                &u,
+                &v,
+                PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+                &mut rng,
+            )
+            .local_discrepancy;
+        }
+        assert!(
+            d_sorted < d_greedy / 5.0,
+            "sorted {d_sorted} vs greedy {d_greedy}"
+        );
+    }
+
+    #[test]
+    fn pinned_loads_never_move() {
+        let mut rng = Pcg64::new(3);
+        let u = vec![Load::pinned(0, 100.0), Load::new(1, 1.0)];
+        let v = vec![Load::new(2, 1.0)];
+        for algo in [
+            PairAlgorithm::Greedy,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            PairAlgorithm::Random,
+        ] {
+            let out = balance_pair(&u, &v, algo, &mut rng);
+            // pinned id 0 is not in either output list
+            assert!(out.to_u.iter().chain(&out.to_v).all(|l| l.id != 0));
+            // but its weight is counted in the discrepancy
+            assert!(out.local_discrepancy > 90.0, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn pinned_base_steers_placement() {
+        let mut rng = Pcg64::new(4);
+        // u has a heavy pinned load; all mobile weight should flow to v.
+        let u = vec![Load::pinned(0, 50.0)];
+        let v = vec![Load::new(1, 5.0), Load::new(2, 5.0)];
+        let out = balance_pair(&u, &v, PairAlgorithm::SortedGreedy(SortAlgo::Quick), &mut rng);
+        assert!(out.to_u.is_empty());
+        assert_eq!(out.to_v.len(), 2);
+        assert_eq!(out.movements, 0); // both stayed on v
+    }
+
+    #[test]
+    fn movements_counted_against_original_host() {
+        let mut rng = Pcg64::new(5);
+        // Everything starts on u; roughly half must move to v.
+        let u = loads(&[1.0; 10], 0);
+        let out = balance_pair(&u, &[], PairAlgorithm::SortedGreedy(SortAlgo::Quick), &mut rng);
+        assert_eq!(out.movements, 5);
+        assert_eq!(out.to_u.len(), 5);
+        assert_eq!(out.to_v.len(), 5);
+    }
+
+    #[test]
+    fn equal_weights_perfectly_split() {
+        let mut rng = Pcg64::new(6);
+        let u = loads(&[2.0; 8], 0);
+        let v = loads(&[2.0; 8], 100);
+        let out = balance_pair(&u, &v, PairAlgorithm::SortedGreedy(SortAlgo::Quick), &mut rng);
+        assert_eq!(out.local_discrepancy, 0.0);
+    }
+
+    #[test]
+    fn empty_inputs_ok() {
+        let mut rng = Pcg64::new(7);
+        let out = balance_pair(&[], &[], PairAlgorithm::Greedy, &mut rng);
+        assert!(out.to_u.is_empty() && out.to_v.is_empty());
+        assert_eq!(out.movements, 0);
+        assert_eq!(out.local_discrepancy, 0.0);
+    }
+
+    #[test]
+    fn orientation_randomization_is_symmetric() {
+        // With a single ball and empty bins, the ball should land on u
+        // about half the time (E[e] = 0 condition).
+        let mut rng = Pcg64::new(8);
+        let u = vec![Load::new(0, 1.0)];
+        let mut u_wins = 0;
+        for _ in 0..2000 {
+            let out = balance_pair(&u, &[], PairAlgorithm::SortedGreedy(SortAlgo::Quick), &mut rng);
+            if !out.to_u.is_empty() {
+                u_wins += 1;
+            }
+        }
+        assert!(
+            (800..1200).contains(&u_wins),
+            "orientation biased: {u_wins}/2000"
+        );
+    }
+
+    #[test]
+    fn random_baseline_places_everything() {
+        let mut rng = Pcg64::new(9);
+        let u = loads(&[1.0; 30], 0);
+        let out = balance_pair(&u, &[], PairAlgorithm::Random, &mut rng);
+        assert_eq!(out.to_u.len() + out.to_v.len(), 30);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["greedy", "sorted:quick", "sorted:flash", "random"] {
+            let a = PairAlgorithm::parse(s).unwrap();
+            assert_eq!(PairAlgorithm::parse(&a.name()), Some(a));
+        }
+        assert_eq!(PairAlgorithm::parse("sorted"), Some(PairAlgorithm::SortedGreedy(SortAlgo::Quick)));
+        assert_eq!(PairAlgorithm::parse("zzz"), None);
+    }
+}

@@ -1,0 +1,307 @@
+//! Sorting substrate for SortedGreedy (paper §4.1).
+//!
+//! The paper uses MATLAB's intrinsic quicksort and discusses
+//! distribution-based O(m) sorts (bucketsort, Proxmap-sort, flashsort) for
+//! uniform weights, falling back to comparison sorts (quicksort,
+//! mergesort) for arbitrary distributions.  We implement all of them so
+//! the timing table (§11.3) and the sorting-overhead claim can be
+//! reproduced with each variant.
+//!
+//! All sorts order *descending* by key (the SortedGreedy precondition).
+
+/// Anything sortable by a non-negative f64 key.
+pub trait Keyed {
+    fn key(&self) -> f64;
+}
+
+impl Keyed for f64 {
+    #[inline]
+    fn key(&self) -> f64 {
+        *self
+    }
+}
+
+impl Keyed for crate::load::Load {
+    #[inline]
+    fn key(&self) -> f64 {
+        self.weight
+    }
+}
+
+/// Which sort SortedGreedy uses (configurable; timings table compares).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SortAlgo {
+    /// Median-of-three quicksort with insertion-sort cutoff.
+    Quick,
+    /// Top-down mergesort (stable).
+    Merge,
+    /// Flashsort-style distribution sort with k = 0.42 m classes
+    /// (Neubert 1998), falling back to insertion within classes.
+    Flash,
+    /// The standard library's pdqsort (unstable) as the reference.
+    Std,
+}
+
+impl SortAlgo {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "quick" | "quicksort" => Some(SortAlgo::Quick),
+            "merge" | "mergesort" => Some(SortAlgo::Merge),
+            "flash" | "flashsort" => Some(SortAlgo::Flash),
+            "std" => Some(SortAlgo::Std),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SortAlgo::Quick => "quick",
+            SortAlgo::Merge => "merge",
+            SortAlgo::Flash => "flash",
+            SortAlgo::Std => "std",
+        }
+    }
+
+    /// Sort `xs` descending by key.
+    pub fn sort_desc<T: Keyed + Clone>(&self, xs: &mut [T]) {
+        match self {
+            SortAlgo::Quick => quicksort_desc(xs),
+            SortAlgo::Merge => mergesort_desc(xs),
+            SortAlgo::Flash => flashsort_desc(xs),
+            SortAlgo::Std => {
+                xs.sort_by(|a, b| b.key().partial_cmp(&a.key()).unwrap())
+            }
+        }
+    }
+}
+
+const INSERTION_CUTOFF: usize = 16;
+
+fn insertion_desc<T: Keyed + Clone>(xs: &mut [T]) {
+    for i in 1..xs.len() {
+        let mut j = i;
+        while j > 0 && xs[j - 1].key() < xs[j].key() {
+            xs.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+}
+
+/// Median-of-three quicksort, descending.
+///
+/// Iterative on the larger half (recursion only into the smaller half)
+/// so stack depth is O(log m) even on adversarial inputs.
+pub fn quicksort_desc<T: Keyed + Clone>(xs: &mut [T]) {
+    let mut xs = xs;
+    loop {
+        if xs.len() <= INSERTION_CUTOFF {
+            insertion_desc(xs);
+            return;
+        }
+        let (lo, mid, hi) = (0, xs.len() / 2, xs.len() - 1);
+        // median-of-three pivot selection: order the three, take the middle
+        if xs[lo].key() < xs[mid].key() {
+            xs.swap(lo, mid);
+        }
+        if xs[lo].key() < xs[hi].key() {
+            xs.swap(lo, hi);
+        }
+        if xs[mid].key() < xs[hi].key() {
+            xs.swap(mid, hi);
+        }
+        let pivot = xs[mid].key();
+        // Hoare partition, descending: left >= pivot, right <= pivot.
+        let mut i = 0usize;
+        let mut j = xs.len() - 1;
+        loop {
+            while xs[i].key() > pivot {
+                i += 1;
+            }
+            while xs[j].key() < pivot {
+                j -= 1;
+            }
+            if i >= j {
+                break;
+            }
+            xs.swap(i, j);
+            i += 1;
+            j -= 1;
+        }
+        let split = j + 1;
+        let (left, right) = xs.split_at_mut(split);
+        if left.len() < right.len() {
+            quicksort_desc(left);
+            xs = right;
+        } else {
+            quicksort_desc(right);
+            xs = left;
+        }
+    }
+}
+
+/// Top-down stable mergesort, descending.
+pub fn mergesort_desc<T: Keyed + Clone>(xs: &mut [T]) {
+    let n = xs.len();
+    if n <= INSERTION_CUTOFF {
+        insertion_desc(xs);
+        return;
+    }
+    let mid = n / 2;
+    mergesort_desc(&mut xs[..mid]);
+    mergesort_desc(&mut xs[mid..]);
+    let mut merged = Vec::with_capacity(n);
+    let (mut i, mut j) = (0, mid);
+    while i < mid && j < n {
+        if xs[i].key() >= xs[j].key() {
+            merged.push(xs[i].clone());
+            i += 1;
+        } else {
+            merged.push(xs[j].clone());
+            j += 1;
+        }
+    }
+    merged.extend_from_slice(&xs[i..mid]);
+    merged.extend_from_slice(&xs[j..n]);
+    xs.clone_from_slice(&merged);
+}
+
+/// Flashsort-style distribution sort, descending.
+///
+/// Classifies elements into k = max(1, 0.42 m) classes by linear
+/// interpolation between min and max key, concatenates classes from
+/// heaviest to lightest, then insertion-sorts within the result (classes
+/// are nearly sorted).  O(m) average for near-uniform keys; worst case
+/// O(m^2) like the paper notes (§4.1).
+pub fn flashsort_desc<T: Keyed + Clone>(xs: &mut [T]) {
+    let m = xs.len();
+    if m <= INSERTION_CUTOFF {
+        insertion_desc(xs);
+        return;
+    }
+    let lo = xs.iter().map(|x| x.key()).fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().map(|x| x.key()).fold(f64::NEG_INFINITY, f64::max);
+    if hi == lo {
+        return; // all equal
+    }
+    let k = ((0.42 * m as f64) as usize).max(1);
+    let scale = (k - 1) as f64 / (hi - lo);
+    // class of x: heavier -> lower class index (descending output)
+    let class = |x: &T| -> usize { (k - 1) - ((x.key() - lo) * scale) as usize };
+    let mut counts = vec![0usize; k + 1];
+    for x in xs.iter() {
+        counts[class(x) + 1] += 1;
+    }
+    for c in 1..=k {
+        counts[c] += counts[c - 1];
+    }
+    let mut out: Vec<Option<T>> = vec![None; m];
+    let mut cursor = counts.clone();
+    for x in xs.iter() {
+        let c = class(x);
+        out[cursor[c]] = Some(x.clone());
+        cursor[c] += 1;
+    }
+    for (slot, val) in xs.iter_mut().zip(out.into_iter()) {
+        *slot = val.unwrap();
+    }
+    // classes are internally unsorted: finish with insertion sort (cheap,
+    // each class is short for near-uniform keys)
+    insertion_desc(xs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn is_desc(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[0] >= w[1])
+    }
+
+    fn check_algo(algo: SortAlgo, seed: u64, n: usize) {
+        let mut rng = Pcg64::new(seed);
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let mut want = xs.clone();
+        want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        algo.sort_desc(&mut xs);
+        assert!(is_desc(&xs), "{algo:?} not descending");
+        assert_eq!(xs, want, "{algo:?} wrong permutation");
+    }
+
+    #[test]
+    fn all_algos_random_inputs() {
+        for algo in [SortAlgo::Quick, SortAlgo::Merge, SortAlgo::Flash, SortAlgo::Std] {
+            for (seed, n) in [(1, 0), (2, 1), (3, 2), (4, 17), (5, 100), (6, 1000)] {
+                check_algo(algo, seed, n);
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_and_reversed_inputs() {
+        for algo in [SortAlgo::Quick, SortAlgo::Merge, SortAlgo::Flash] {
+            let mut asc: Vec<f64> = (0..200).map(|i| i as f64).collect();
+            algo.sort_desc(&mut asc);
+            assert!(is_desc(&asc));
+            let mut desc: Vec<f64> = (0..200).rev().map(|i| i as f64).collect();
+            algo.sort_desc(&mut desc);
+            assert!(is_desc(&desc));
+        }
+    }
+
+    #[test]
+    fn all_equal_input() {
+        for algo in [SortAlgo::Quick, SortAlgo::Merge, SortAlgo::Flash] {
+            let mut xs = vec![3.25f64; 500];
+            algo.sort_desc(&mut xs);
+            assert!(xs.iter().all(|&x| x == 3.25));
+        }
+    }
+
+    #[test]
+    fn many_duplicates() {
+        let mut rng = Pcg64::new(9);
+        for algo in [SortAlgo::Quick, SortAlgo::Merge, SortAlgo::Flash] {
+            let mut xs: Vec<f64> = (0..500).map(|_| rng.below(5) as f64).collect();
+            let mut want = xs.clone();
+            want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            algo.sort_desc(&mut xs);
+            assert_eq!(xs, want, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn sorts_loads_by_weight() {
+        use crate::load::Load;
+        let mut loads = vec![
+            Load::new(0, 1.0),
+            Load::new(1, 5.0),
+            Load::new(2, 3.0),
+        ];
+        SortAlgo::Quick.sort_desc(&mut loads);
+        let ids: Vec<u64> = loads.iter().map(|l| l.id).collect();
+        assert_eq!(ids, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn mergesort_stable_on_ties() {
+        use crate::load::Load;
+        let mut loads: Vec<Load> = (0..50).map(|i| Load::new(i, (i % 3) as f64)).collect();
+        SortAlgo::Merge.sort_desc(&mut loads);
+        // stability: equal keys keep id order
+        for w in loads.windows(2) {
+            if w[0].weight == w[1].weight {
+                assert!(w[0].id < w[1].id);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["quick", "merge", "flash", "std"] {
+            let a = SortAlgo::parse(s).unwrap();
+            assert_eq!(SortAlgo::parse(a.name()), Some(a));
+        }
+        assert_eq!(SortAlgo::parse("bogo"), None);
+    }
+}

@@ -1,0 +1,272 @@
+//! The sequential BCM engine — the reference implementation of the
+//! paper's §5 DLB protocol.
+//!
+//! Per round, one color class (a matching) is applied: every matched pair
+//! pools its mobile loads and rebalances them with the configured local
+//! algorithm.  Edges within a class are vertex-disjoint, so sequential
+//! application is observationally identical to the concurrent execution
+//! the distributed coordinator performs.
+
+use super::schedule::Schedule;
+use super::trace::{RoundStats, RunTrace};
+use crate::balancer::{balance_pair, PairAlgorithm};
+use crate::load::LoadState;
+use crate::util::rng::Pcg64;
+
+/// Stop conditions for a protocol run.
+#[derive(Clone, Copy, Debug)]
+pub struct StopRule {
+    /// Hard cap on sweeps (one sweep = all d colors once).
+    pub max_sweeps: usize,
+    /// Early-exit when the discrepancy improves by less than `rel_tol`
+    /// (relatively) over a full sweep.  Disabled when <= 0.
+    pub rel_tol: f64,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        Self {
+            max_sweeps: 30,
+            rel_tol: 1e-4,
+        }
+    }
+}
+
+impl StopRule {
+    pub fn sweeps(max_sweeps: usize) -> Self {
+        Self {
+            max_sweeps,
+            rel_tol: 0.0,
+        }
+    }
+}
+
+/// Run the BCM protocol on `state`, mutating it in place.
+pub fn run(
+    state: &mut LoadState,
+    schedule: &Schedule,
+    algo: PairAlgorithm,
+    stop: StopRule,
+    rng: &mut Pcg64,
+) -> RunTrace {
+    assert_eq!(state.n(), schedule.n(), "state/schedule size mismatch");
+    let mut trace = RunTrace {
+        initial_discrepancy: state.discrepancy(),
+        rounds: Vec::new(),
+    };
+    let d = schedule.period();
+    let mut round = 0usize;
+    let mut last_sweep_disc = trace.initial_discrepancy;
+    for _sweep in 0..stop.max_sweeps {
+        for color in 0..d {
+            let mut movements = 0usize;
+            let pairs = schedule.matching(round).to_vec();
+            for &(u, v) in &pairs {
+                movements += balance_edge(state, u as usize, v as usize, algo, rng);
+            }
+            trace.rounds.push(RoundStats {
+                round,
+                color,
+                discrepancy: state.discrepancy(),
+                movements,
+                edges: pairs.len(),
+            });
+            round += 1;
+        }
+        let disc = state.discrepancy();
+        if stop.rel_tol > 0.0 {
+            let improved = (last_sweep_disc - disc).max(0.0);
+            if improved <= stop.rel_tol * last_sweep_disc.max(1e-300) {
+                break;
+            }
+        }
+        last_sweep_disc = disc;
+    }
+    trace
+}
+
+/// Rebalance one matched edge in place; returns the movement count.
+pub fn balance_edge(
+    state: &mut LoadState,
+    u: usize,
+    v: usize,
+    algo: PairAlgorithm,
+    rng: &mut Pcg64,
+) -> usize {
+    let out = balance_pair(state.node(u), state.node(v), algo, rng);
+    // replace the mobile loads on both sides (pinned loads stay put)
+    let _ = state.take_mobile(u);
+    let _ = state.take_mobile(v);
+    let movements = out.movements;
+    state.give(u, out.to_u);
+    state.give(v, out.to_v);
+    movements
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::SortAlgo;
+    use crate::graph::Graph;
+    use crate::load::{Load, Mobility, WeightDistribution};
+
+    fn setup(n: usize, per_node: usize, mobility: Mobility, seed: u64) -> (LoadState, Schedule, Pcg64) {
+        let mut rng = Pcg64::new(seed);
+        let g = Graph::random_connected(n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let state = LoadState::init_uniform_counts(
+            n,
+            per_node,
+            &WeightDistribution::paper_section6(),
+            mobility,
+            &mut rng,
+        );
+        (state, schedule, rng)
+    }
+
+    #[test]
+    fn discrepancy_drops_sorted_greedy() {
+        let (mut state, schedule, mut rng) = setup(16, 50, Mobility::Full, 1);
+        let initial = state.discrepancy();
+        let trace = run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(10),
+            &mut rng,
+        );
+        assert_eq!(trace.initial_discrepancy, initial);
+        assert!(
+            trace.final_discrepancy() < initial / 20.0,
+            "init {initial} final {}",
+            trace.final_discrepancy()
+        );
+    }
+
+    #[test]
+    fn greedy_also_improves_but_less() {
+        let (mut s1, sched, mut rng) = setup(16, 50, Mobility::Full, 2);
+        let mut s2 = s1.clone();
+        let t_sorted = run(
+            &mut s1,
+            &sched,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(8),
+            &mut rng,
+        );
+        let t_greedy = run(
+            &mut s2,
+            &sched,
+            PairAlgorithm::Greedy,
+            StopRule::sweeps(8),
+            &mut rng,
+        );
+        assert!(t_greedy.final_discrepancy() < t_greedy.initial_discrepancy);
+        assert!(t_sorted.final_discrepancy() < t_greedy.final_discrepancy());
+    }
+
+    #[test]
+    fn conservation_of_loads_and_mass() {
+        let (mut state, schedule, mut rng) = setup(12, 20, Mobility::Partial, 3);
+        let ids_before = state.all_ids();
+        let mass_before = state.total_weight();
+        run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(5),
+            &mut rng,
+        );
+        assert_eq!(state.all_ids(), ids_before);
+        assert!((state.total_weight() - mass_before).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pinned_loads_stay_home() {
+        let mut rng = Pcg64::new(4);
+        let g = Graph::ring(4);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::empty(4);
+        state.push(0, Load::pinned(0, 100.0));
+        state.push(0, Load::new(1, 1.0));
+        state.push(2, Load::new(2, 1.0));
+        run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(5),
+            &mut rng,
+        );
+        assert!(state.node(0).iter().any(|l| l.id == 0), "pinned load moved");
+    }
+
+    #[test]
+    fn partial_mobility_cannot_beat_pinned_imbalance() {
+        // All weight pinned on node 0: discrepancy cannot drop below the
+        // pinned imbalance no matter how long we run.
+        let mut rng = Pcg64::new(5);
+        let g = Graph::ring(4);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::empty(4);
+        state.push(0, Load::pinned(0, 50.0));
+        for i in 0..8 {
+            state.push((i % 4) as usize, Load::new(1 + i, 1.0));
+        }
+        let trace = run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(20),
+            &mut rng,
+        );
+        assert!(trace.final_discrepancy() >= 50.0 - 8.0);
+    }
+
+    #[test]
+    fn early_stop_on_plateau() {
+        let (mut state, schedule, mut rng) = setup(8, 10, Mobility::Full, 6);
+        let trace = run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule {
+                max_sweeps: 1000,
+                rel_tol: 1e-3,
+            },
+            &mut rng,
+        );
+        // plateau detection must kick in long before 1000 sweeps
+        assert!(trace.rounds.len() < 200 * schedule.period());
+    }
+
+    #[test]
+    fn max_never_increases_min_never_decreases_network_extremes() {
+        // Paper §3 condition 1 at the network level: the heaviest node
+        // can only lose weight, the lightest only gain (per round).
+        let (mut state, schedule, mut rng) = setup(10, 30, Mobility::Full, 7);
+        let mut prev_max = state.load_vector().iter().cloned().fold(f64::MIN, f64::max);
+        let mut prev_min = state.load_vector().iter().cloned().fold(f64::MAX, f64::min);
+        for round in 0..20 {
+            let pairs = schedule.matching(round).to_vec();
+            for &(u, v) in &pairs {
+                balance_edge(
+                    &mut state,
+                    u as usize,
+                    v as usize,
+                    PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+                    &mut rng,
+                );
+            }
+            let x = state.load_vector();
+            let max = x.iter().cloned().fold(f64::MIN, f64::max);
+            let min = x.iter().cloned().fold(f64::MAX, f64::min);
+            // Local balancing can overshoot by at most the largest single
+            // load; the monotone statement holds up to that quantum.
+            let lmax = state.max_load_weight();
+            assert!(max <= prev_max + lmax + 1e-9);
+            assert!(min >= prev_min - lmax - 1e-9);
+            prev_max = max;
+            prev_min = min;
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The balancing circuit model protocol (paper §2.1, §5).
+
+pub mod device_engine;
+pub mod diffusion;
+pub mod engine;
+pub mod random_matching;
+pub mod schedule;
+pub mod trace;
+
+pub use device_engine::{balance_round, run_device};
+pub use diffusion::Diffusion;
+pub use engine::{balance_edge, run, StopRule};
+pub use random_matching::{random_maximal_matching, run_rmm};
+pub use schedule::Schedule;
+pub use trace::{RoundStats, RunTrace};

@@ -1,0 +1,154 @@
+//! The random matching model (RMM) — paper §2.1: "The results we show
+//! here for BCM can be extended to the random matching model, where the
+//! matching matrices are realizations of a stochastic process."
+//!
+//! Each round draws a fresh random maximal matching of the graph instead
+//! of cycling a fixed coloring.  The standard generator: every edge
+//! proposes in random order; an edge joins the matching if both endpoints
+//! are still free.  This is the model of Ghosh & Muthukrishnan's seminal
+//! analysis and the ablation bench compares its convergence against the
+//! deterministic BCM schedule.
+
+use super::trace::{RoundStats, RunTrace};
+use crate::balancer::PairAlgorithm;
+use crate::bcm::engine::balance_edge;
+use crate::graph::Graph;
+use crate::load::LoadState;
+use crate::util::rng::Pcg64;
+
+/// Draw a uniformly-ordered greedy maximal matching.
+pub fn random_maximal_matching(g: &Graph, rng: &mut Pcg64) -> Vec<(u32, u32)> {
+    let mut edges: Vec<(u32, u32)> = g.edges().to_vec();
+    rng.shuffle(&mut edges);
+    let mut used = vec![false; g.n()];
+    let mut matching = Vec::new();
+    for (u, v) in edges {
+        if !used[u as usize] && !used[v as usize] {
+            used[u as usize] = true;
+            used[v as usize] = true;
+            matching.push((u, v));
+        }
+    }
+    matching
+}
+
+/// Run `rounds` rounds of the random matching model protocol.
+pub fn run_rmm(
+    state: &mut LoadState,
+    g: &Graph,
+    algo: PairAlgorithm,
+    rounds: usize,
+    rng: &mut Pcg64,
+) -> RunTrace {
+    assert_eq!(state.n(), g.n());
+    let mut trace = RunTrace {
+        initial_discrepancy: state.discrepancy(),
+        rounds: Vec::new(),
+    };
+    for round in 0..rounds {
+        let pairs = random_maximal_matching(g, rng);
+        let mut movements = 0usize;
+        for &(u, v) in &pairs {
+            movements += balance_edge(state, u as usize, v as usize, algo, rng);
+        }
+        trace.rounds.push(RoundStats {
+            round,
+            color: 0, // RMM has no colors
+            discrepancy: state.discrepancy(),
+            movements,
+            edges: pairs.len(),
+        });
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::SortAlgo;
+    use crate::load::{Mobility, WeightDistribution};
+
+    #[test]
+    fn matching_is_valid_and_maximal() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let g = Graph::random_connected(24, &mut rng);
+            let m = random_maximal_matching(&g, &mut rng);
+            let mut used = vec![false; g.n()];
+            for &(u, v) in &m {
+                assert!(!used[u as usize] && !used[v as usize]);
+                used[u as usize] = true;
+                used[v as usize] = true;
+            }
+            // maximality: no remaining edge has both endpoints free
+            for &(u, v) in g.edges() {
+                assert!(
+                    used[u as usize] || used[v as usize],
+                    "edge ({u},{v}) could still be matched"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matchings_vary_between_rounds() {
+        let mut rng = Pcg64::new(2);
+        let g = Graph::random_connected(16, &mut rng);
+        let a = random_maximal_matching(&g, &mut rng);
+        let b = random_maximal_matching(&g, &mut rng);
+        let c = random_maximal_matching(&g, &mut rng);
+        assert!(a != b || b != c, "three identical random matchings");
+    }
+
+    #[test]
+    fn rmm_converges_like_bcm() {
+        let mut rng = Pcg64::new(3);
+        let g = Graph::random_connected(16, &mut rng);
+        let mut state = LoadState::init_uniform_counts(
+            16,
+            50,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let init = state.discrepancy();
+        let trace = run_rmm(
+            &mut state,
+            &g,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            80,
+            &mut rng,
+        );
+        assert!(
+            trace.final_discrepancy() < init / 20.0,
+            "init {init} final {}",
+            trace.final_discrepancy()
+        );
+    }
+
+    #[test]
+    fn rmm_conserves_loads() {
+        let mut rng = Pcg64::new(4);
+        let g = Graph::ring(8);
+        let mut state = LoadState::init_uniform_counts(
+            8,
+            20,
+            &WeightDistribution::paper_section6(),
+            Mobility::Partial,
+            &mut rng,
+        );
+        let ids = state.all_ids();
+        run_rmm(&mut state, &g, PairAlgorithm::Greedy, 30, &mut rng);
+        assert_eq!(state.all_ids(), ids);
+    }
+
+    #[test]
+    fn star_matching_single_edge() {
+        // A star's maximal matchings have exactly one edge.
+        let mut rng = Pcg64::new(5);
+        let g = Graph::star(8);
+        for _ in 0..10 {
+            assert_eq!(random_maximal_matching(&g, &mut rng).len(), 1);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! The BCM matching schedule: a periodic sequence of matchings derived
+//! from an edge coloring, applied round-robin (paper §2.1, §5).
+
+use crate::graph::{EdgeColoring, Graph};
+
+/// A fixed, periodic sequence of d matchings covering every edge.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    matchings: Vec<Vec<(u32, u32)>>,
+    n: usize,
+}
+
+impl Schedule {
+    /// Build the schedule from a graph via greedy edge coloring.
+    pub fn from_graph(g: &Graph) -> Self {
+        let coloring = EdgeColoring::greedy(g);
+        debug_assert!(coloring.validate(g).is_ok());
+        Self {
+            matchings: coloring.classes().to_vec(),
+            n: g.n(),
+        }
+    }
+
+    pub fn from_classes(n: usize, classes: Vec<Vec<(u32, u32)>>) -> Self {
+        Self {
+            matchings: classes,
+            n,
+        }
+    }
+
+    /// d — the period (number of matchings per sweep).
+    pub fn period(&self) -> usize {
+        self.matchings.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Matching applied in round `t` (round-robin over the colors).
+    pub fn matching(&self, t: usize) -> &[(u32, u32)] {
+        &self.matchings[t % self.matchings.len()]
+    }
+
+    pub fn matchings(&self) -> &[Vec<(u32, u32)>] {
+        &self.matchings
+    }
+
+    /// Largest matching size (the batch dimension the runtime must fit).
+    pub fn max_matching_size(&self) -> usize {
+        self.matchings.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn ring_schedule() {
+        let g = Graph::ring(8);
+        let s = Schedule::from_graph(&g);
+        assert_eq!(s.period(), 2);
+        assert_eq!(s.n(), 8);
+        let total: usize = s.matchings().iter().map(|m| m.len()).sum();
+        assert_eq!(total, 8);
+        assert_eq!(s.max_matching_size(), 4);
+    }
+
+    #[test]
+    fn round_robin_wraps() {
+        let g = Graph::ring(6);
+        let s = Schedule::from_graph(&g);
+        assert_eq!(s.matching(0), s.matching(s.period()));
+        assert_eq!(s.matching(1), s.matching(s.period() + 1));
+    }
+
+    #[test]
+    fn covers_all_edges_random_graph() {
+        let mut rng = Pcg64::new(2);
+        let g = Graph::random_connected(24, &mut rng);
+        let s = Schedule::from_graph(&g);
+        let mut covered: Vec<(u32, u32)> = s.matchings().iter().flatten().cloned().collect();
+        covered.sort_unstable();
+        let mut expected = g.edges().to_vec();
+        expected.sort_unstable();
+        assert_eq!(covered, expected);
+    }
+}

@@ -1,0 +1,139 @@
+//! Time series recorded while a BCM protocol runs.
+
+/// Statistics of one BCM round (one matching = one color class applied).
+#[derive(Clone, Debug)]
+pub struct RoundStats {
+    /// Index of the round (0-based, counts color classes applied).
+    pub round: usize,
+    /// Color class index within the schedule.
+    pub color: usize,
+    /// Global discrepancy after the round.
+    pub discrepancy: f64,
+    /// Loads that changed host in this round.
+    pub movements: usize,
+    /// Matched edges balanced in this round.
+    pub edges: usize,
+}
+
+/// Full trace of a protocol run.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    pub initial_discrepancy: f64,
+    pub rounds: Vec<RoundStats>,
+}
+
+impl RunTrace {
+    pub fn final_discrepancy(&self) -> f64 {
+        self.rounds
+            .last()
+            .map(|r| r.discrepancy)
+            .unwrap_or(self.initial_discrepancy)
+    }
+
+    pub fn total_movements(&self) -> usize {
+        self.rounds.iter().map(|r| r.movements).sum()
+    }
+
+    pub fn total_edges_balanced(&self) -> usize {
+        self.rounds.iter().map(|r| r.edges).sum()
+    }
+
+    /// Average number of load movements per balanced edge (the paper's
+    /// communication-cost metric alpha, §6.2).
+    pub fn movements_per_edge(&self) -> f64 {
+        let edges = self.total_edges_balanced();
+        if edges == 0 {
+            0.0
+        } else {
+            self.total_movements() as f64 / edges as f64
+        }
+    }
+
+    /// Discrepancy reduction ratio disc = G_initial / G_final (paper §7).
+    pub fn discrepancy_reduction(&self) -> f64 {
+        let fin = self.final_discrepancy();
+        if fin <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.initial_discrepancy / fin
+        }
+    }
+
+    /// Figure of merit S = p * disc / alpha (paper Eq. 5); `p` cancels in
+    /// the relative comparison, so we report S with p = 1 and alpha = the
+    /// total number of movements.
+    pub fn figure_of_merit(&self) -> f64 {
+        let alpha = self.total_movements();
+        if alpha == 0 {
+            f64::INFINITY
+        } else {
+            self.discrepancy_reduction() / alpha as f64
+        }
+    }
+
+    /// First round index whose discrepancy is <= `target`, if reached.
+    pub fn rounds_to_reach(&self, target: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .position(|r| r.discrepancy <= target)
+            .map(|i| i + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rounds: &[(f64, usize, usize)]) -> RunTrace {
+        RunTrace {
+            initial_discrepancy: 100.0,
+            rounds: rounds
+                .iter()
+                .enumerate()
+                .map(|(i, &(d, m, e))| RoundStats {
+                    round: i,
+                    color: i % 3,
+                    discrepancy: d,
+                    movements: m,
+                    edges: e,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let t = mk(&[(50.0, 10, 4), (20.0, 6, 4), (10.0, 2, 4)]);
+        assert_eq!(t.final_discrepancy(), 10.0);
+        assert_eq!(t.total_movements(), 18);
+        assert_eq!(t.total_edges_balanced(), 12);
+        assert!((t.movements_per_edge() - 1.5).abs() < 1e-12);
+        assert!((t.discrepancy_reduction() - 10.0).abs() < 1e-12);
+        assert!((t.figure_of_merit() - 10.0 / 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounds_to_reach() {
+        let t = mk(&[(50.0, 1, 1), (20.0, 1, 1), (10.0, 1, 1)]);
+        assert_eq!(t.rounds_to_reach(25.0), Some(2));
+        assert_eq!(t.rounds_to_reach(5.0), None);
+        assert_eq!(t.rounds_to_reach(60.0), Some(1));
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = RunTrace {
+            initial_discrepancy: 7.0,
+            rounds: vec![],
+        };
+        assert_eq!(t.final_discrepancy(), 7.0);
+        assert_eq!(t.movements_per_edge(), 0.0);
+        assert!(t.figure_of_merit().is_infinite());
+    }
+
+    #[test]
+    fn perfect_balance_infinite_reduction() {
+        let t = mk(&[(0.0, 5, 2)]);
+        assert!(t.discrepancy_reduction().is_infinite());
+    }
+}

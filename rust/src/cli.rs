@@ -1,0 +1,137 @@
+//! Minimal CLI argument parsing (clap is not vendored offline).
+//!
+//! Grammar: `bcm-dlb <command> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with("--") {
+                return Err(format!("expected a command, got flag '{cmd}'"));
+            }
+            args.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        args.flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => args.switches.push(name.to_string()),
+                }
+            } else {
+                return Err(format!("unexpected positional argument '{tok}'"));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub const USAGE: &str = "\
+bcm-dlb — balancing indivisible real-valued loads in arbitrary networks
+(Demirel & Sbalzarini 2013, three-layer Rust+JAX+Pallas reproduction)
+
+USAGE: bcm-dlb <command> [flags]
+
+COMMANDS
+  run            run one BCM experiment
+                 --config FILE | --n N --loads L --algo A --mobility M
+                 --topology T --sweeps S --seed X [--device] [--cluster]
+                 [--trace-out FILE.csv]  per-round time series (rep 0)
+  sweep          the paper's full §6 sweep (Figs. 1-3 data)
+                 [--quick]
+  fig1..fig5     regenerate one figure's table(s)   [--quick]
+  timings        §11.3 timing table                 [--reps R]
+  particle-mesh  E9 end-to-end PPM-style driver
+                 [--procs P] [--steps S] [--particles N]
+  spectral       round-matrix analysis + theory bounds
+                 --topology T --n N [--seed X]
+  validate       E8: measured rounds/discrepancy vs theory bounds
+                 [--n N] [--topology T]
+  artifacts      check + compile every AOT artifact through PJRT
+  help           this message
+
+FLAGS (run)
+  --algo     greedy | sorted | sorted:SORT | random     (SORT: quick/merge/flash/std)
+  --mobility full | partial
+  --topology random | ring | path | complete | star | grid2d | torus2d |
+             hypercube | er:P
+  --device   execute matchings through the PJRT artifacts
+  --cluster  run on the multi-threaded leader/worker coordinator
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse(&["run", "--n", "32", "--device", "--algo", "sorted"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("n"), Some("32"));
+        assert_eq!(a.get("algo"), Some("sorted"));
+        assert!(a.has("device"));
+        assert!(!a.has("cluster"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["run", "--n", "32"]);
+        assert_eq!(a.get_usize("n", 8).unwrap(), 32);
+        assert_eq!(a.get_usize("missing", 8).unwrap(), 8);
+        let bad = parse(&["run", "--n", "abc"]);
+        assert!(bad.get_usize("n", 8).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["sweep", "--quick"]);
+        assert!(a.has("quick"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&["--oops".to_string()]).is_err());
+        assert!(Args::parse(&["run".to_string(), "stray".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Experiment configuration: JSON files <-> typed config.
+//!
+//! Used by the CLI launcher (`bcm-dlb run --config exp.json`) so paper
+//! sweeps and ad-hoc experiments share one schema.
+
+use crate::balancer::PairAlgorithm;
+use crate::graph::Topology;
+use crate::load::{Mobility, WeightDistribution};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// One protocol experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub topology: Topology,
+    pub n: usize,
+    pub loads_per_node: usize,
+    pub distribution: WeightDistribution,
+    pub mobility: Mobility,
+    pub algorithm: PairAlgorithm,
+    pub sweeps: usize,
+    pub reps: usize,
+    pub seed: u64,
+    /// Use the PJRT device path when artifacts are available.
+    pub use_device: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            topology: Topology::RandomConnected,
+            n: 32,
+            loads_per_node: 50,
+            distribution: WeightDistribution::paper_section6(),
+            mobility: Mobility::Full,
+            algorithm: PairAlgorithm::SortedGreedy(crate::balancer::SortAlgo::Quick),
+            sweeps: 15,
+            reps: 10,
+            seed: 2013,
+            use_device: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let mut cfg = Self::default();
+        if let Some(s) = v.get("topology").as_str() {
+            cfg.topology =
+                Topology::parse(s).ok_or_else(|| anyhow!("bad topology '{s}'"))?;
+        }
+        if let Some(n) = v.get("n").as_usize() {
+            cfg.n = n;
+        }
+        if let Some(x) = v.get("loads_per_node").as_usize() {
+            cfg.loads_per_node = x;
+        }
+        if let Some(s) = v.get("distribution").as_str() {
+            cfg.distribution = WeightDistribution::parse(s)
+                .ok_or_else(|| anyhow!("bad distribution '{s}'"))?;
+        }
+        if let Some(s) = v.get("mobility").as_str() {
+            cfg.mobility = Mobility::parse(s).ok_or_else(|| anyhow!("bad mobility '{s}'"))?;
+        }
+        if let Some(s) = v.get("algorithm").as_str() {
+            cfg.algorithm =
+                PairAlgorithm::parse(s).ok_or_else(|| anyhow!("bad algorithm '{s}'"))?;
+        }
+        if let Some(x) = v.get("sweeps").as_usize() {
+            cfg.sweeps = x;
+        }
+        if let Some(x) = v.get("reps").as_usize() {
+            cfg.reps = x;
+        }
+        if let Some(x) = v.get("seed").as_u64() {
+            cfg.seed = x;
+        }
+        if let Some(b) = v.get("use_device").as_bool() {
+            cfg.use_device = b;
+        }
+        if cfg.n < 2 {
+            return Err(anyhow!("config: n must be >= 2"));
+        }
+        if cfg.loads_per_node == 0 {
+            return Err(anyhow!("config: loads_per_node must be >= 1"));
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("topology", self.topology.name().into()),
+            ("n", self.n.into()),
+            ("loads_per_node", self.loads_per_node.into()),
+            ("distribution", self.distribution.name().into()),
+            ("mobility", self.mobility.name().into()),
+            ("algorithm", self.algorithm.name().into()),
+            ("sweeps", self.sweeps.into()),
+            ("reps", self.reps.into()),
+            ("seed", (self.seed as usize).into()),
+            ("use_device", self.use_device.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.n, cfg.n);
+        assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.algorithm, cfg.algorithm);
+        assert_eq!(back.mobility, cfg.mobility);
+        assert_eq!(back.seed, cfg.seed);
+    }
+
+    #[test]
+    fn partial_overrides() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"n": 64, "algorithm": "greedy", "mobility": "partial"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.n, 64);
+        assert_eq!(cfg.algorithm, PairAlgorithm::Greedy);
+        assert_eq!(cfg.mobility, Mobility::Partial);
+        assert_eq!(cfg.loads_per_node, 50); // default preserved
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_json_str(r#"{"topology": "moebius"}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"n": 1}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"loads_per_node": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn topology_variants_parse() {
+        for t in ["ring", "torus2d", "hypercube", "er:0.3"] {
+            let cfg =
+                ExperimentConfig::from_json_str(&format!(r#"{{"topology": "{t}", "n": 16}}"#))
+                    .unwrap();
+            assert_eq!(cfg.topology.name(), t);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The leader: spawns one worker thread per processor, drives the BCM
+//! schedule round by round, aggregates metrics, and tears the cluster
+//! down into a final `LoadState`.
+//!
+//! This is the deployment shape the paper assumes (§1): local one-to-one
+//! communication only; the leader is pure control plane (schedule +
+//! metrics) — load payloads only ever travel between matched workers.
+
+use super::messages::{Ctl, Peer, Report};
+use super::worker::{Worker, WorkerAlgo};
+use crate::bcm::{RoundStats, RunTrace, Schedule};
+use crate::load::LoadState;
+use crate::util::rng::Pcg64;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+pub struct Cluster {
+    n: usize,
+    ctl_tx: Vec<Sender<Ctl>>,
+    report_rx: Receiver<Report>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn `n` workers seeded with `state`'s loads.
+    pub fn spawn(state: LoadState, algo: WorkerAlgo) -> Cluster {
+        let n = state.n();
+        let (report_tx, report_rx) = channel::<Report>();
+        let mut ctl_tx = Vec::with_capacity(n);
+        let mut ctl_rx = Vec::with_capacity(n);
+        let mut peer_tx: Vec<Sender<Peer>> = Vec::with_capacity(n);
+        let mut peer_rx = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (ct, cr) = channel::<Ctl>();
+            ctl_tx.push(ct);
+            ctl_rx.push(Some(cr));
+            let (pt, pr) = channel::<Peer>();
+            peer_tx.push(pt);
+            peer_rx.push(Some(pr));
+        }
+        let mut handles = Vec::with_capacity(n);
+        for (v, loads) in (0..n).zip((0..n).map(|v| state.node(v).to_vec())) {
+            let worker = Worker {
+                id: v as u32,
+                loads,
+                algo,
+                ctl_rx: ctl_rx[v].take().unwrap(),
+                peer_rx: peer_rx[v].take().unwrap(),
+                peer_tx: peer_tx.clone(),
+                report_tx: report_tx.clone(),
+            };
+            handles.push(std::thread::spawn(move || worker.run()));
+        }
+        Cluster {
+            n,
+            ctl_tx,
+            report_rx,
+            handles,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Drive `sweeps` full sweeps of the schedule.  Records per-round
+    /// stats (discrepancy is polled from the workers after each round).
+    pub fn run(&mut self, schedule: &Schedule, sweeps: usize, rng: &mut Pcg64) -> RunTrace {
+        assert_eq!(schedule.n(), self.n);
+        let mut trace = RunTrace {
+            initial_discrepancy: self.poll_discrepancy(),
+            rounds: Vec::new(),
+        };
+        let d = schedule.period();
+        for round in 0..sweeps * d {
+            let stats = self.run_single_round(schedule, round, rng);
+            trace.rounds.push(stats);
+        }
+        trace
+    }
+
+    /// Execute one round (matching `round % d` of the schedule) and poll
+    /// the resulting global discrepancy.
+    pub fn run_single_round(
+        &mut self,
+        schedule: &Schedule,
+        round: usize,
+        rng: &mut Pcg64,
+    ) -> RoundStats {
+        let pairs = schedule.matching(round).to_vec();
+        let movements = self.run_round(&pairs, rng);
+        RoundStats {
+            round,
+            color: round % schedule.period(),
+            discrepancy: self.poll_discrepancy(),
+            movements,
+            edges: pairs.len(),
+        }
+    }
+
+    /// Execute one matching; returns total movements.
+    fn run_round(&mut self, pairs: &[(u32, u32)], rng: &mut Pcg64) -> usize {
+        let mut matched = vec![false; self.n];
+        for &(u, v) in pairs {
+            let flip = rng.coin();
+            matched[u as usize] = true;
+            matched[v as usize] = true;
+            // lower id is the edge master
+            self.ctl_tx[u as usize]
+                .send(Ctl::Balance {
+                    peer: v,
+                    master: true,
+                    flip,
+                })
+                .expect("worker died");
+            self.ctl_tx[v as usize]
+                .send(Ctl::Balance {
+                    peer: u,
+                    master: false,
+                    flip,
+                })
+                .expect("worker died");
+        }
+        for (v, m) in matched.iter().enumerate() {
+            if !m {
+                self.ctl_tx[v].send(Ctl::Idle).expect("worker died");
+            }
+        }
+        // Collect n RoundAcks + one EdgeDone per pair.
+        let mut acks = 0usize;
+        let mut movements = 0usize;
+        let mut edges_done = 0usize;
+        while acks < self.n || edges_done < pairs.len() {
+            match self.report_rx.recv().expect("cluster wedged") {
+                Report::RoundAck { .. } => acks += 1,
+                Report::EdgeDone {
+                    movements: m_edge, ..
+                } => {
+                    movements += m_edge;
+                    edges_done += 1;
+                }
+                _ => {}
+            }
+        }
+        movements
+    }
+
+    /// Poll every worker's weight and compute the global discrepancy.
+    pub fn poll_discrepancy(&mut self) -> f64 {
+        let w = self.poll_weights();
+        let max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+        max - min
+    }
+
+    pub fn poll_weights(&mut self) -> Vec<f64> {
+        for tx in &self.ctl_tx {
+            tx.send(Ctl::Report).expect("worker died");
+        }
+        let mut w = vec![0.0; self.n];
+        let mut got = 0;
+        while got < self.n {
+            if let Report::Weight { node, weight } = self.report_rx.recv().expect("wedged") {
+                w[node as usize] = weight;
+                got += 1;
+            }
+        }
+        w
+    }
+
+    /// Shut the cluster down and collect the final load state.
+    pub fn shutdown(self) -> LoadState {
+        for tx in &self.ctl_tx {
+            let _ = tx.send(Ctl::Shutdown);
+        }
+        let mut state = LoadState::empty(self.n);
+        let mut got = 0;
+        while got < self.n {
+            if let Ok(Report::Final { node, loads }) = self.report_rx.recv() {
+                for l in loads {
+                    state.push(node as usize, l);
+                }
+                got += 1;
+            }
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+        state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::load::{Mobility, WeightDistribution};
+
+    fn init(n: usize, per_node: usize, mobility: Mobility, seed: u64) -> (LoadState, Schedule, Pcg64) {
+        let mut rng = Pcg64::new(seed);
+        let g = Graph::random_connected(n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let state = LoadState::init_uniform_counts(
+            n,
+            per_node,
+            &WeightDistribution::paper_section6(),
+            mobility,
+            &mut rng,
+        );
+        (state, schedule, rng)
+    }
+
+    #[test]
+    fn cluster_balances_and_conserves() {
+        let (state, schedule, mut rng) = init(8, 30, Mobility::Full, 1);
+        let ids = state.all_ids();
+        let mass = state.total_weight();
+        let init_disc = state.discrepancy();
+        let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
+        let trace = cluster.run(&schedule, 8, &mut rng);
+        let final_state = cluster.shutdown();
+        assert_eq!(final_state.all_ids(), ids);
+        assert!((final_state.total_weight() - mass).abs() < 1e-6);
+        assert!(
+            trace.final_discrepancy() < init_disc / 10.0,
+            "init {init_disc} final {}",
+            trace.final_discrepancy()
+        );
+        // the trace's own view agrees with the final state
+        assert!((final_state.discrepancy() - trace.final_discrepancy()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_greedy_runs() {
+        let (state, schedule, mut rng) = init(6, 20, Mobility::Partial, 2);
+        let mut cluster = Cluster::spawn(state, WorkerAlgo::Greedy);
+        let trace = cluster.run(&schedule, 4, &mut rng);
+        assert!(trace.final_discrepancy() <= trace.initial_discrepancy);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn cluster_matches_sequential_engine_statistically() {
+        let (state, schedule, mut rng) = init(8, 40, Mobility::Full, 3);
+        let mut seq_state = state.clone();
+        let mut seq_rng = Pcg64::new(77);
+        let t_seq = crate::bcm::run(
+            &mut seq_state,
+            &schedule,
+            crate::balancer::PairAlgorithm::SortedGreedy(crate::balancer::SortAlgo::Quick),
+            crate::bcm::StopRule::sweeps(6),
+            &mut seq_rng,
+        );
+        let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
+        let t_par = cluster.run(&schedule, 6, &mut rng);
+        cluster.shutdown();
+        // Both runs should converge to a tiny discrepancy.
+        assert!(t_seq.final_discrepancy() < t_seq.initial_discrepancy / 10.0);
+        assert!(t_par.final_discrepancy() < t_par.initial_discrepancy / 10.0);
+    }
+
+    #[test]
+    fn pinned_loads_survive_distributed_run() {
+        let mut rng = Pcg64::new(4);
+        let g = Graph::ring(4);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::empty(4);
+        state.push(1, crate::load::Load::pinned(0, 42.0));
+        state.push(0, crate::load::Load::new(1, 1.0));
+        state.push(2, crate::load::Load::new(2, 2.0));
+        let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
+        cluster.run(&schedule, 3, &mut rng);
+        let fin = cluster.shutdown();
+        assert!(fin.node(1).iter().any(|l| l.id == 0 && !l.mobile));
+        assert_eq!(fin.total_loads(), 3);
+    }
+}

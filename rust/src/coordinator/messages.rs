@@ -1,0 +1,51 @@
+//! Message types of the distributed BCM protocol.
+//!
+//! The communication structure mirrors the matching model the paper
+//! assumes (§1, §2): in each round a node talks to *at most one* neighbor.
+//! Per matched edge the lower-id endpoint acts as the edge master: the
+//! slave ships its mobile loads over, the master solves the two-bin
+//! problem locally and ships the slave's new loads back.  The leader only
+//! orchestrates rounds and aggregates metrics — it never touches loads.
+
+use crate::load::Load;
+
+/// Leader -> worker control messages.
+#[derive(Debug)]
+pub enum Ctl {
+    /// Balance with `peer` this round; `master` says which endpoint runs
+    /// the placement; `flip` is the leader-drawn orientation bit (the
+    /// E[e]=0 symmetry of paper §3 cond. 3).
+    Balance { peer: u32, master: bool, flip: bool },
+    /// Sit this round out (unmatched).
+    Idle,
+    /// Report current total weight to the leader.
+    Report,
+    /// Terminate and return the final load set.
+    Shutdown,
+}
+
+/// Worker -> worker payloads (peer channel).
+#[derive(Debug)]
+pub enum Peer {
+    /// Slave -> master: my mobile loads and my pinned weight.
+    Offer { loads: Vec<Load>, pinned: f64 },
+    /// Master -> slave: your new mobile loads.
+    Settle { loads: Vec<Load> },
+}
+
+/// Worker -> leader reports.
+#[derive(Debug)]
+pub enum Report {
+    /// Edge done (sent by the master only).
+    EdgeDone {
+        edge: (u32, u32),
+        movements: usize,
+        local_discrepancy: f64,
+    },
+    /// Round acknowledged (sent by every worker every round).
+    RoundAck { node: u32 },
+    /// Current node weight (in response to `Ctl::Report`).
+    Weight { node: u32, weight: f64 },
+    /// Final load set (in response to `Ctl::Shutdown`).
+    Final { node: u32, loads: Vec<Load> },
+}

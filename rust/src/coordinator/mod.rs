@@ -1,0 +1,10 @@
+//! Distributed BCM runtime: a leader thread orchestrating one worker
+//! thread per processor, communicating over channels in the matching
+//! model (one-to-one per round).
+
+pub mod cluster;
+pub mod messages;
+pub mod worker;
+
+pub use cluster::Cluster;
+pub use worker::{Worker, WorkerAlgo};

@@ -1,0 +1,149 @@
+//! A worker thread = one processor of the network.
+//!
+//! Owns its load set exclusively; all interaction is via channels.  The
+//! per-edge protocol is one-to-one (matching model): slave offers its
+//! mobile loads, master solves the two-bin problem with the configured
+//! local algorithm and settles the slave's share back.
+
+use super::messages::{Ctl, Peer, Report};
+use crate::balancer::{PairAlgorithm, SortAlgo};
+use crate::load::Load;
+use crate::runtime::{fallback, DeviceAlgo, EdgeProblem};
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Algorithm a worker runs on its matched edges.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkerAlgo {
+    Greedy,
+    SortedGreedy,
+}
+
+impl WorkerAlgo {
+    fn device(self) -> DeviceAlgo {
+        match self {
+            WorkerAlgo::Greedy => DeviceAlgo::Greedy,
+            WorkerAlgo::SortedGreedy => DeviceAlgo::SortedGreedy,
+        }
+    }
+
+    pub fn pair(self) -> PairAlgorithm {
+        match self {
+            WorkerAlgo::Greedy => PairAlgorithm::Greedy,
+            WorkerAlgo::SortedGreedy => PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        }
+    }
+}
+
+pub struct Worker {
+    pub id: u32,
+    pub loads: Vec<Load>,
+    pub algo: WorkerAlgo,
+    pub ctl_rx: Receiver<Ctl>,
+    pub peer_rx: Receiver<Peer>,
+    pub peer_tx: Vec<Sender<Peer>>,
+    pub report_tx: Sender<Report>,
+}
+
+impl Worker {
+    /// Event loop; returns when `Ctl::Shutdown` arrives.
+    pub fn run(mut self) {
+        while let Ok(msg) = self.ctl_rx.recv() {
+            match msg {
+                Ctl::Idle => {
+                    let _ = self.report_tx.send(Report::RoundAck { node: self.id });
+                }
+                Ctl::Balance { peer, master, flip } => {
+                    if master {
+                        self.run_master(peer, flip);
+                    } else {
+                        self.run_slave(peer);
+                    }
+                    let _ = self.report_tx.send(Report::RoundAck { node: self.id });
+                }
+                Ctl::Report => {
+                    let weight = self.loads.iter().map(|l| l.weight).sum();
+                    let _ = self.report_tx.send(Report::Weight {
+                        node: self.id,
+                        weight,
+                    });
+                }
+                Ctl::Shutdown => {
+                    let _ = self.report_tx.send(Report::Final {
+                        node: self.id,
+                        loads: std::mem::take(&mut self.loads),
+                    });
+                    return;
+                }
+            }
+        }
+    }
+
+    fn run_master(&mut self, peer: u32, flip: bool) {
+        let (their_loads, their_pinned) = match self.peer_rx.recv() {
+            Ok(Peer::Offer { loads, pinned }) => (loads, pinned),
+            _ => return, // peer died; drop the edge
+        };
+        let (mine_mobile, mine_pinned): (Vec<Load>, Vec<Load>) =
+            std::mem::take(&mut self.loads).into_iter().partition(|l| l.mobile);
+        let my_pinned_w: f64 = mine_pinned.iter().map(|l| l.weight).sum();
+
+        // Pool: master's loads then slave's (arrival order), matching the
+        // sequential engine's semantics.
+        let mut pool: Vec<Load> = mine_mobile;
+        let my_count = pool.len();
+        pool.extend(their_loads);
+        let mut hosts: Vec<u8> = (0..pool.len())
+            .map(|i| u8::from(i >= my_count))
+            .collect();
+        let mut base = [my_pinned_w, their_pinned];
+        if flip {
+            base.swap(0, 1);
+            for h in hosts.iter_mut() {
+                *h ^= 1;
+            }
+        }
+        let problem = EdgeProblem {
+            weights: pool.iter().map(|l| l.weight).collect(),
+            hosts,
+            base,
+        };
+        let sol = fallback::solve(&problem, self.algo.device());
+
+        let mut mine: Vec<Load> = mine_pinned;
+        let mut theirs: Vec<Load> = Vec::new();
+        for (load, &side) in pool.into_iter().zip(&sol.assign) {
+            let to_master = (side == 0) != flip;
+            if to_master {
+                mine.push(load);
+            } else {
+                theirs.push(load);
+            }
+        }
+        let _ = self.peer_tx[peer as usize].send(Peer::Settle { loads: theirs });
+        self.loads = mine;
+        let edge = if self.id < peer {
+            (self.id, peer)
+        } else {
+            (peer, self.id)
+        };
+        let _ = self.report_tx.send(Report::EdgeDone {
+            edge,
+            movements: sol.movements,
+            local_discrepancy: (sol.sums[0] - sol.sums[1]).abs(),
+        });
+    }
+
+    fn run_slave(&mut self, peer: u32) {
+        let (mobile, pinned): (Vec<Load>, Vec<Load>) =
+            std::mem::take(&mut self.loads).into_iter().partition(|l| l.mobile);
+        let pinned_w: f64 = pinned.iter().map(|l| l.weight).sum();
+        let _ = self.peer_tx[peer as usize].send(Peer::Offer {
+            loads: mobile,
+            pinned: pinned_w,
+        });
+        self.loads = pinned;
+        if let Ok(Peer::Settle { loads }) = self.peer_rx.recv() {
+            self.loads.extend(loads);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Shared drivers for the paper's evaluation sweeps (§6).
+//!
+//! The same random graphs and initial load distributions are reused for
+//! every algorithm/mobility variant within a repetition, exactly as the
+//! paper does ("The same graphs and initial load distributions are used
+//! for both SortedGreedy and Greedy").
+
+use crate::balancer::{PairAlgorithm, SortAlgo};
+use crate::bcm::{run, Schedule, StopRule};
+use crate::graph::Graph;
+use crate::load::{LoadState, Mobility, WeightDistribution};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Welford;
+
+/// The four protocol variants of Fig. 1–3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    SortedFull,
+    SortedPartial,
+    GreedyFull,
+    GreedyPartial,
+    /// The movement-frugal incremental Greedy reading (see
+    /// `PairAlgorithm::GreedyIncremental`), reported alongside the pooled
+    /// Alg-4.2 Greedy because the paper's Fig. 2 movement ratios are only
+    /// consistent with an incremental implementation.
+    GreedyIncFull,
+    GreedyIncPartial,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 6] = [
+        Variant::SortedFull,
+        Variant::SortedPartial,
+        Variant::GreedyFull,
+        Variant::GreedyPartial,
+        Variant::GreedyIncFull,
+        Variant::GreedyIncPartial,
+    ];
+
+    pub fn algo(&self) -> PairAlgorithm {
+        match self {
+            Variant::SortedFull | Variant::SortedPartial => {
+                PairAlgorithm::SortedGreedy(SortAlgo::Quick)
+            }
+            Variant::GreedyFull | Variant::GreedyPartial => PairAlgorithm::Greedy,
+            Variant::GreedyIncFull | Variant::GreedyIncPartial => {
+                PairAlgorithm::GreedyIncremental
+            }
+        }
+    }
+
+    pub fn mobility(&self) -> Mobility {
+        match self {
+            Variant::SortedFull | Variant::GreedyFull | Variant::GreedyIncFull => {
+                Mobility::Full
+            }
+            Variant::SortedPartial | Variant::GreedyPartial | Variant::GreedyIncPartial => {
+                Mobility::Partial
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::SortedFull => "SortedGreedy/full",
+            Variant::SortedPartial => "SortedGreedy/partial",
+            Variant::GreedyFull => "Greedy/full",
+            Variant::GreedyPartial => "Greedy/partial",
+            Variant::GreedyIncFull => "GreedyInc/full",
+            Variant::GreedyIncPartial => "GreedyInc/partial",
+        }
+    }
+}
+
+/// Aggregated result of one (n, L/n, variant) sweep cell.
+#[derive(Clone, Debug)]
+pub struct CellStats {
+    pub variant: Variant,
+    pub n: usize,
+    pub loads_per_node: usize,
+    pub initial_disc: Welford,
+    pub final_disc: Welford,
+    pub disc_reduction: Welford,
+    pub movements_per_edge: Welford,
+    pub total_movements: Welford,
+    pub merit: Welford,
+}
+
+impl CellStats {
+    fn new(variant: Variant, n: usize, loads_per_node: usize) -> Self {
+        Self {
+            variant,
+            n,
+            loads_per_node,
+            initial_disc: Welford::new(),
+            final_disc: Welford::new(),
+            disc_reduction: Welford::new(),
+            movements_per_edge: Welford::new(),
+            total_movements: Welford::new(),
+            merit: Welford::new(),
+        }
+    }
+}
+
+/// Sweep parameters; `quick()` derates repetitions for CI runs.
+#[derive(Clone, Debug)]
+pub struct SweepParams {
+    pub network_sizes: Vec<usize>,
+    pub loads_per_node: Vec<usize>,
+    pub reps: usize,
+    pub sweeps: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepParams {
+    fn default() -> Self {
+        Self {
+            // paper §6: n from 4 to 128, L/n in {10, 50, 100}, 50 reps
+            network_sizes: vec![4, 8, 16, 32, 64, 128],
+            loads_per_node: vec![10, 50, 100],
+            reps: 50,
+            sweeps: 15,
+            seed: 2013,
+        }
+    }
+}
+
+impl SweepParams {
+    /// Environment-controlled derating: `BCM_DLB_QUICK=1` shrinks the
+    /// sweep so `cargo bench` finishes in minutes on 1 core.
+    pub fn from_env() -> Self {
+        let mut p = Self::default();
+        if std::env::var("BCM_DLB_QUICK").map(|v| v == "1").unwrap_or(false) {
+            p.network_sizes = vec![4, 8, 16, 32, 64];
+            p.reps = 10;
+            p.sweeps = 10;
+        }
+        p
+    }
+}
+
+/// Run every variant over one sweep cell (n, loads_per_node).
+pub fn run_cell(n: usize, loads_per_node: usize, params: &SweepParams) -> Vec<CellStats> {
+    let mut cells: Vec<CellStats> = Variant::ALL
+        .iter()
+        .map(|&v| CellStats::new(v, n, loads_per_node))
+        .collect();
+    for rep in 0..params.reps {
+        // One graph + one weight draw per repetition, shared by all
+        // variants; partial mobility additionally pins (same pins for
+        // both algorithms).
+        let cell_seed = params
+            .seed
+            .wrapping_mul(1_000_003)
+            .wrapping_add((n * 131 + loads_per_node * 17 + rep) as u64);
+        let mut rng = Pcg64::new(cell_seed);
+        let g = Graph::random_connected(n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let base_state = LoadState::init_uniform_counts(
+            n,
+            loads_per_node,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let mut partial_state = base_state.clone();
+        partial_state.pin_random(&mut rng);
+
+        for cell in cells.iter_mut() {
+            let mut state = match cell.variant.mobility() {
+                Mobility::Full => base_state.clone(),
+                Mobility::Partial => partial_state.clone(),
+            };
+            let mut run_rng = Pcg64::new(cell_seed ^ 0xDEAD_BEEF);
+            let trace = run(
+                &mut state,
+                &schedule,
+                cell.variant.algo(),
+                StopRule::sweeps(params.sweeps),
+                &mut run_rng,
+            );
+            cell.initial_disc.push(trace.initial_discrepancy);
+            cell.final_disc.push(trace.final_discrepancy());
+            cell.disc_reduction
+                .push(trace.discrepancy_reduction().min(1e12));
+            cell.movements_per_edge.push(trace.movements_per_edge());
+            cell.total_movements.push(trace.total_movements() as f64);
+            cell.merit.push(trace.figure_of_merit().min(1e12));
+        }
+    }
+    cells
+}
+
+/// Full sweep over all (n, L/n) cells.
+pub fn run_sweep(params: &SweepParams) -> Vec<CellStats> {
+    let mut out = Vec::new();
+    for &per in &params.loads_per_node {
+        for &n in &params.network_sizes {
+            out.extend(run_cell(n, per, params));
+        }
+    }
+    out
+}
+
+/// Find a cell in sweep output.
+pub fn find<'a>(
+    cells: &'a [CellStats],
+    variant: Variant,
+    n: usize,
+    per: usize,
+) -> Option<&'a CellStats> {
+    cells
+        .iter()
+        .find(|c| c.variant == variant && c.n == n && c.loads_per_node == per)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepParams {
+        SweepParams {
+            network_sizes: vec![8],
+            loads_per_node: vec![10],
+            reps: 3,
+            sweeps: 8,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn run_cell_produces_all_variants() {
+        let cells = run_cell(8, 10, &tiny());
+        assert_eq!(cells.len(), 6);
+        for c in &cells {
+            assert_eq!(c.initial_disc.count(), 3);
+            assert!(c.final_disc.mean() <= c.initial_disc.mean());
+        }
+    }
+
+    #[test]
+    fn sorted_beats_greedy_in_cell() {
+        let mut p = tiny();
+        p.reps = 5;
+        p.loads_per_node = vec![50];
+        let cells = run_cell(8, 50, &p);
+        let sf = find(&cells, Variant::SortedFull, 8, 50).unwrap();
+        let gf = find(&cells, Variant::GreedyFull, 8, 50).unwrap();
+        assert!(
+            sf.final_disc.mean() < gf.final_disc.mean(),
+            "sorted {} vs greedy {}",
+            sf.final_disc.mean(),
+            gf.final_disc.mean()
+        );
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let mut p = tiny();
+        p.network_sizes = vec![4, 8];
+        p.loads_per_node = vec![10, 50];
+        p.reps = 1;
+        let cells = run_sweep(&p);
+        assert_eq!(cells.len(), 2 * 2 * 6);
+        assert!(find(&cells, Variant::GreedyPartial, 4, 50).is_some());
+    }
+}

@@ -1,0 +1,7 @@
+//! Paper experiment drivers (E1–E8): shared by the CLI and the benches.
+
+pub mod common;
+pub mod figures;
+pub mod validate;
+
+pub use common::{find, run_cell, run_sweep, CellStats, SweepParams, Variant};

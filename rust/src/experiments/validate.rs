@@ -1,0 +1,137 @@
+//! E8: check measured protocol behaviour against the §3 theory bounds.
+
+use crate::balancer::{PairAlgorithm, SortAlgo};
+use crate::bcm::{run, Schedule, StopRule};
+use crate::graph::{round_matrix, spectral, Topology};
+use crate::load::{LoadState, Mobility, WeightDistribution};
+use crate::theory;
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+
+/// Result of one theory-vs-measurement check.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub n: usize,
+    pub d: usize,
+    pub lambda: f64,
+    pub tau_bound_rounds: f64,
+    pub measured_rounds: Option<usize>,
+    pub discrete_bound: f64,
+    pub measured_final_disc: f64,
+    pub l_max: f64,
+    /// measured_final_disc <= discrete_bound (the Theorem-1 check)
+    pub within_bound: bool,
+}
+
+/// Run the SortedGreedy BCM and compare against the theory envelope.
+pub fn validate(topology: &Topology, n: usize, loads_per_node: usize, seed: u64) -> ValidationReport {
+    let mut rng = Pcg64::new(seed);
+    let g = topology.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let d = schedule.period();
+    let m = round_matrix(n, schedule.matchings());
+    let lambda = spectral::contraction_factor(&m, 400, seed ^ 0x5eed);
+
+    let mut state = LoadState::init_uniform_counts(
+        n,
+        loads_per_node,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let k = state.discrepancy();
+    let l_max = state.max_load_weight();
+    let discrete_bound = theory::discrete_discrepancy_bound(n.max(2), l_max);
+    // Number of ROUNDS (matchings) the continuous process needs to reach
+    // the bound's epsilon; measured process should reach the discrete
+    // bound in the same order of rounds.
+    let tau = theory::tau_cont(k.max(1e-9), l_max.max(1e-9), n, d, lambda.min(0.999_999));
+
+    let trace = run(
+        &mut state,
+        &schedule,
+        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        StopRule::sweeps(200),
+        &mut rng,
+    );
+    let measured_rounds = trace.rounds_to_reach(discrete_bound);
+    let final_disc = trace.final_discrepancy();
+
+    ValidationReport {
+        n,
+        d,
+        lambda,
+        tau_bound_rounds: tau,
+        measured_rounds,
+        discrete_bound,
+        measured_final_disc: final_disc,
+        l_max,
+        within_bound: final_disc <= discrete_bound,
+    }
+}
+
+/// Render a batch of validations as a table.
+pub fn validation_table(reports: &[ValidationReport]) -> Table {
+    let mut t = Table::new(
+        "E8: theory bounds vs measured (SortedGreedy, full mobility)",
+        &[
+            "n",
+            "d",
+            "lambda",
+            "tau_cont(K,lmax)",
+            "rounds_to_bound",
+            "bound=sqrt(12 ln n)+1 x lmax",
+            "final_disc",
+            "within",
+        ],
+    );
+    for r in reports {
+        t.row(vec![
+            r.n.to_string(),
+            r.d.to_string(),
+            f(r.lambda, 4),
+            f(r.tau_bound_rounds, 0),
+            r.measured_rounds
+                .map(|x| x.to_string())
+                .unwrap_or_else(|| "-".into()),
+            f(r.discrete_bound, 1),
+            f(r.measured_final_disc, 2),
+            r.within_bound.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_validates_within_bound() {
+        let r = validate(&Topology::Ring, 16, 50, 11);
+        assert!(r.lambda < 1.0, "ring BCM must be ergodic");
+        assert!(r.within_bound, "final {} > bound {}", r.measured_final_disc, r.discrete_bound);
+        assert!(r.measured_rounds.is_some());
+        // the measured rounds should not exceed the continuous bound's
+        // order (tau is conservative)
+        let measured = r.measured_rounds.unwrap() as f64;
+        assert!(
+            measured <= r.tau_bound_rounds.max(1.0) * 4.0,
+            "measured {measured} vs tau {}",
+            r.tau_bound_rounds
+        );
+    }
+
+    #[test]
+    fn random_graph_validates() {
+        let r = validate(&Topology::RandomConnected, 32, 20, 5);
+        assert!(r.within_bound);
+    }
+
+    #[test]
+    fn table_renders() {
+        let r = validate(&Topology::Ring, 8, 10, 3);
+        let t = validation_table(&[r]);
+        assert!(t.render().contains("E8"));
+    }
+}

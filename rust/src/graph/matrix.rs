@@ -1,0 +1,247 @@
+//! Dense row-major f64 matrices for the BCM round-matrix analysis.
+//!
+//! Networks in the paper are n <= 128, so dense O(n^2) storage and O(n^3)
+//! products are perfectly adequate for the *analysis* path (the protocol
+//! itself never materializes matrices).
+
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            n,
+            data: vec![0.0; n * n],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `self * other` (row-major ikj loop).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Matrix::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self.data[i * n + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let row_k = &other.data[k * n..(k + 1) * n];
+                let row_o = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    row_o[j] += a * row_k[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `x * self` for a row vector x (the load-vector evolution
+    /// xi^(t) = xi^(t-1) M, paper Appendix A Eq. 7).
+    pub fn apply_left(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let n = self.n;
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                out[j] += xi * row[j];
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let n = self.n;
+        let mut out = Matrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        let n = self.n;
+        for i in 0..n {
+            let rs: f64 = (0..n).map(|j| self[(i, j)]).sum();
+            let cs: f64 = (0..n).map(|j| self[(j, i)]).sum();
+            if (rs - 1.0).abs() > tol || (cs - 1.0).abs() > tol {
+                return false;
+            }
+        }
+        self.data.iter().all(|&x| x >= -tol)
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        let n = self.n;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.n + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.n + j]
+    }
+}
+
+/// Matching matrix M^(t) (paper §2): identity except each matched pair
+/// (u, v) has the 2x2 averaging block [[1/2, 1/2], [1/2, 1/2]].
+pub fn matching_matrix(n: usize, pairs: &[(u32, u32)]) -> Matrix {
+    let mut m = Matrix::identity(n);
+    let mut matched = vec![false; n];
+    for &(u, v) in pairs {
+        let (u, v) = (u as usize, v as usize);
+        assert!(u != v && u < n && v < n, "bad pair ({u},{v})");
+        assert!(!matched[u] && !matched[v], "vertex reused in matching");
+        matched[u] = true;
+        matched[v] = true;
+        m[(u, u)] = 0.5;
+        m[(v, v)] = 0.5;
+        m[(u, v)] = 0.5;
+        m[(v, u)] = 0.5;
+    }
+    m
+}
+
+/// Round matrix M = prod_s M^(s) (paper §2.1).
+pub fn round_matrix(n: usize, matchings: &[Vec<(u32, u32)>]) -> Matrix {
+    let mut m = Matrix::identity(n);
+    for pairs in matchings {
+        // x^(t) = x^(t-1) M^(t): accumulate on the right.
+        m = m.matmul(&matching_matrix(n, pairs));
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let i = Matrix::identity(4);
+        let m = matching_matrix(4, &[(0, 2)]);
+        assert_eq!(i.matmul(&m), m);
+        assert_eq!(m.matmul(&i), m);
+    }
+
+    #[test]
+    fn matching_matrix_structure() {
+        let m = matching_matrix(3, &[(0, 1)]);
+        assert_eq!(m[(0, 0)], 0.5);
+        assert_eq!(m[(0, 1)], 0.5);
+        assert_eq!(m[(1, 0)], 0.5);
+        assert_eq!(m[(2, 2)], 1.0);
+        assert_eq!(m[(2, 0)], 0.0);
+        assert!(m.is_symmetric(0.0));
+        assert!(m.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    #[should_panic(expected = "vertex reused")]
+    fn matching_matrix_rejects_overlap() {
+        matching_matrix(4, &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn apply_left_averages_pair() {
+        let m = matching_matrix(4, &[(1, 3)]);
+        let x = vec![1.0, 10.0, 2.0, 0.0];
+        let y = m.apply_left(&x);
+        assert_eq!(y, vec![1.0, 5.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn round_matrix_is_doubly_stochastic() {
+        let m = round_matrix(4, &[vec![(0, 1), (2, 3)], vec![(1, 2)], vec![(0, 3)]]);
+        assert!(m.is_doubly_stochastic(1e-12));
+        // products of symmetric matrices need not be symmetric
+    }
+
+    #[test]
+    fn round_matrix_order_matters() {
+        let a = round_matrix(3, &[vec![(0, 1)], vec![(1, 2)]]);
+        let b = round_matrix(3, &[vec![(1, 2)], vec![(0, 1)]]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn apply_left_equals_matmul_row() {
+        let m = round_matrix(4, &[vec![(0, 1)], vec![(2, 3)], vec![(1, 2)]]);
+        let x = vec![4.0, 3.0, 2.0, 1.0];
+        let y = m.apply_left(&x);
+        // compare against explicit row-vector multiply
+        let mut want = vec![0.0; 4];
+        for j in 0..4 {
+            for i in 0..4 {
+                want[j] += x[i] * m[(i, j)];
+            }
+        }
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = round_matrix(4, &[vec![(0, 1)], vec![(1, 2)]]);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn mass_conservation() {
+        let m = round_matrix(5, &[vec![(0, 4), (1, 3)], vec![(2, 3)]]);
+        let x = vec![5.0, 1.0, 7.0, 2.0, 9.0];
+        let y = m.apply_left(&x);
+        let sx: f64 = x.iter().sum();
+        let sy: f64 = y.iter().sum();
+        assert!((sx - sy).abs() < 1e-12);
+    }
+}

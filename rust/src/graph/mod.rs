@@ -1,0 +1,11 @@
+//! Network substrate: topologies, edge coloring, matching/round matrices,
+//! spectral analysis (paper §2).
+
+pub mod coloring;
+pub mod matrix;
+pub mod spectral;
+pub mod topology;
+
+pub use coloring::EdgeColoring;
+pub use matrix::{matching_matrix, round_matrix, Matrix};
+pub use topology::{Graph, Topology};

@@ -1,0 +1,228 @@
+//! Spectral analysis of the round matrix.
+//!
+//! The BCM convergence time depends on the spectral gap 1 − λ(M) where
+//! λ(M) = max{|λ₂(M)|, |λ_n(M)|} (paper §2.1, §3).  Individual matching
+//! matrices are symmetric, but their product M is generally not, so we
+//! report the *contraction factor* σ₂(M): the largest singular value of M
+//! restricted to the subspace orthogonal to the all-ones vector.  For
+//! symmetric M, σ₂ = λ(M) exactly; in general σ₂ ≥ |λ₂| and the bound
+//! τ_cont computed from σ₂ is conservative (an upper bound on rounds).
+//!
+//! Implementation: power iteration on A = M Mᵀ with the 1-direction
+//! deflated each step, plus a full cyclic-Jacobi eigensolver for symmetric
+//! matrices (used to validate the power iteration and to analyze single
+//! matchings / diffusion matrices).
+
+use super::matrix::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Largest singular value of M on the subspace orthogonal to 1.
+///
+/// This is the per-round contraction factor of the continuous-case load
+/// evolution and the quantity driving the τ_cont bound.
+pub fn contraction_factor(m: &Matrix, iters: usize, seed: u64) -> f64 {
+    let n = m.n();
+    assert!(n >= 2);
+    let mt = m.transpose();
+    let mut rng = Pcg64::new(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    deflate_ones(&mut v);
+    normalize(&mut v);
+    let mut sigma2 = 0.0;
+    for _ in 0..iters {
+        // w = (M Mᵀ) v, computed as row-vector products:
+        // v * M * Mᵀ = apply_left twice.
+        let w1 = m.apply_left(&v);
+        let mut w = mt.apply_left(&w1);
+        deflate_ones(&mut w);
+        let norm = normalize(&mut w);
+        sigma2 = norm; // Rayleigh estimate of λ_max(MMᵀ|⊥1) = σ₂²
+        v = w;
+    }
+    sigma2.max(0.0).sqrt()
+}
+
+fn deflate_ones(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+/// All eigenvalues of a *symmetric* matrix by cyclic Jacobi rotations,
+/// sorted descending.
+pub fn jacobi_eigenvalues(m: &Matrix, tol: f64, max_sweeps: usize) -> Vec<f64> {
+    assert!(m.is_symmetric(1e-9), "jacobi requires a symmetric matrix");
+    let n = m.n();
+    let mut a = m.clone();
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = 0.5 * (aqq - app).atan2(2.0 * apq) * -1.0;
+                // Standard Jacobi rotation that zeroes a[(p,q)].
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                let _ = theta;
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eig
+}
+
+/// λ(M) := max{|λ₂|, |λ_n|} for a symmetric round matrix (paper §2.1).
+pub fn lambda_symmetric(m: &Matrix) -> f64 {
+    let eig = jacobi_eigenvalues(m, 1e-12, 100);
+    // eig[0] should be 1 (doubly stochastic); λ = max(|eig[1]|, |eig[n-1]|)
+    let n = eig.len();
+    eig[1].abs().max(eig[n - 1].abs())
+}
+
+/// Ergodicity check: the Markov chain with transition matrix M must have
+/// contraction factor < 1 on ⊥1 (paper §2.1 requires λ(M) < 1).
+pub fn is_ergodic(m: &Matrix, seed: u64) -> bool {
+    contraction_factor(m, 200, seed) < 1.0 - 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::coloring::EdgeColoring;
+    use crate::graph::matrix::{matching_matrix, round_matrix};
+    use crate::graph::topology::Graph;
+
+    #[test]
+    fn jacobi_diagonal() {
+        let mut m = Matrix::zeros(3);
+        m[(0, 0)] = 3.0;
+        m[(1, 1)] = 1.0;
+        m[(2, 2)] = 2.0;
+        let eig = jacobi_eigenvalues(&m, 1e-12, 50);
+        assert!((eig[0] - 3.0).abs() < 1e-10);
+        assert!((eig[1] - 2.0).abs() < 1e-10);
+        assert!((eig[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2, 1], [1, 2]] -> eigenvalues 3 and 1
+        let mut m = Matrix::zeros(2);
+        m[(0, 0)] = 2.0;
+        m[(0, 1)] = 1.0;
+        m[(1, 0)] = 1.0;
+        m[(1, 1)] = 2.0;
+        let eig = jacobi_eigenvalues(&m, 1e-12, 50);
+        assert!((eig[0] - 3.0).abs() < 1e-10, "{eig:?}");
+        assert!((eig[1] - 1.0).abs() < 1e-10, "{eig:?}");
+    }
+
+    #[test]
+    fn matching_matrix_eigenvalues() {
+        // Single matching on (0,1) in n=2: eigenvalues {1, 0}.
+        let m = matching_matrix(2, &[(0, 1)]);
+        let eig = jacobi_eigenvalues(&m, 1e-12, 50);
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!(eig[1].abs() < 1e-10);
+    }
+
+    #[test]
+    fn contraction_matches_jacobi_for_symmetric() {
+        // A single matching matrix is symmetric: σ₂ == λ(M).
+        let m = matching_matrix(4, &[(0, 1)]);
+        let sigma = contraction_factor(&m, 300, 7);
+        let lambda = lambda_symmetric(&m);
+        assert!(
+            (sigma - lambda).abs() < 1e-6,
+            "sigma={sigma} lambda={lambda}"
+        );
+    }
+
+    #[test]
+    fn round_matrix_of_ring_is_ergodic() {
+        let g = Graph::ring(8);
+        let coloring = EdgeColoring::greedy(&g);
+        let m = round_matrix(g.n(), coloring.classes());
+        assert!(is_ergodic(&m, 3));
+        let sigma = contraction_factor(&m, 400, 3);
+        assert!(sigma > 0.0 && sigma < 1.0, "sigma={sigma}");
+    }
+
+    #[test]
+    fn complete_graph_contracts_fast() {
+        let g = Graph::complete(8);
+        let coloring = EdgeColoring::greedy(&g);
+        let m = round_matrix(g.n(), coloring.classes());
+        let sigma_complete = contraction_factor(&m, 400, 5);
+        let g2 = Graph::ring(8);
+        let c2 = EdgeColoring::greedy(&g2);
+        let m2 = round_matrix(g2.n(), c2.classes());
+        let sigma_ring = contraction_factor(&m2, 400, 5);
+        assert!(
+            sigma_complete < sigma_ring,
+            "complete {sigma_complete} vs ring {sigma_ring}"
+        );
+    }
+
+    #[test]
+    fn disconnected_round_matrix_not_ergodic() {
+        // Two disjoint pairs balanced forever never mix across components.
+        let m = round_matrix(4, &[vec![(0, 1), (2, 3)]]);
+        assert!(!is_ergodic(&m, 11));
+    }
+
+    #[test]
+    fn contraction_in_unit_interval_random_graphs() {
+        let mut rng = crate::util::rng::Pcg64::new(31);
+        for n in [4, 16, 32] {
+            let g = Graph::random_connected(n, &mut rng);
+            let coloring = EdgeColoring::greedy(&g);
+            let m = round_matrix(n, coloring.classes());
+            let sigma = contraction_factor(&m, 300, 13);
+            assert!(sigma < 1.0 && sigma >= 0.0, "n={n} sigma={sigma}");
+        }
+    }
+}

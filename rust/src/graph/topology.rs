@@ -1,0 +1,587 @@
+//! Network topologies (the *processor view* of the DLB problem).
+//!
+//! Vertices are processors, edges are direct communication links.  The
+//! paper's experiments use random connected graphs ("edges are randomly
+//! drawn until the graph is connected", §6); the named topologies are the
+//! standard testbeds the theory section's bounds are usually evaluated on
+//! and are used by the extension benches.
+
+use crate::util::rng::Pcg64;
+
+/// An undirected, simple, connected-by-construction graph.
+///
+/// Edges are stored canonically as `(u, v)` with `u < v` (paper notation
+/// `[u:v]`).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+    adj: Vec<Vec<u32>>,
+}
+
+impl Graph {
+    /// Build from an explicit edge list; dedups and canonicalizes.
+    pub fn from_edges(n: usize, raw: &[(u32, u32)]) -> Self {
+        let mut edges: Vec<(u32, u32)> = raw
+            .iter()
+            .filter(|(u, v)| u != v)
+            .map(|&(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in &edges {
+            assert!((v as usize) < n, "edge ({u},{v}) out of range for n={n}");
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        Self { n, edges, adj }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.adj[v as usize]
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.adj[v as usize].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|v| self.adj[v].len()).max().unwrap_or(0)
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &w in self.neighbors(v) {
+                if !seen[w as usize] {
+                    seen[w as usize] = true;
+                    count += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// The paper's §6 network: draw uniform random edges until connected.
+    pub fn random_connected(n: usize, rng: &mut Pcg64) -> Self {
+        assert!(n >= 2);
+        let mut uf = UnionFind::new(n);
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut present = std::collections::HashSet::new();
+        let mut components = n;
+        while components > 1 {
+            let u = rng.below(n) as u32;
+            let v = rng.below(n) as u32;
+            if u == v {
+                continue;
+            }
+            let key = if u < v { (u, v) } else { (v, u) };
+            if present.insert(key) {
+                edges.push(key);
+                if uf.union(u as usize, v as usize) {
+                    components -= 1;
+                }
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Erdős–Rényi G(n, p), resampled until connected (bounded retries).
+    pub fn erdos_renyi_connected(n: usize, p: f64, rng: &mut Pcg64) -> Self {
+        assert!(n >= 2);
+        for _ in 0..1000 {
+            let mut edges = Vec::new();
+            for u in 0..n as u32 {
+                for v in (u + 1)..n as u32 {
+                    if rng.next_f64() < p {
+                        edges.push((u, v));
+                    }
+                }
+            }
+            let g = Self::from_edges(n, &edges);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("erdos_renyi_connected: p={p} too small for n={n}");
+    }
+
+    /// Cycle 0-1-2-…-(n-1)-0.
+    pub fn ring(n: usize) -> Self {
+        assert!(n >= 3);
+        let edges: Vec<(u32, u32)> = (0..n as u32)
+            .map(|i| (i, (i + 1) % n as u32))
+            .collect();
+        Self::from_edges(n, &edges)
+    }
+
+    /// Path 0-1-…-(n-1).
+    pub fn path(n: usize) -> Self {
+        assert!(n >= 2);
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        Self::from_edges(n, &edges)
+    }
+
+    /// Complete graph K_n.
+    pub fn complete(n: usize) -> Self {
+        assert!(n >= 2);
+        let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                edges.push((u, v));
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Star with center 0.
+    pub fn star(n: usize) -> Self {
+        assert!(n >= 2);
+        let edges: Vec<(u32, u32)> = (1..n as u32).map(|v| (0, v)).collect();
+        Self::from_edges(n, &edges)
+    }
+
+    /// `rows x cols` 2-D mesh (no wraparound).
+    pub fn grid2d(rows: usize, cols: usize) -> Self {
+        assert!(rows * cols >= 2);
+        let id = |r: usize, c: usize| (r * cols + c) as u32;
+        let mut edges = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if c + 1 < cols {
+                    edges.push((id(r, c), id(r, c + 1)));
+                }
+                if r + 1 < rows {
+                    edges.push((id(r, c), id(r + 1, c)));
+                }
+            }
+        }
+        Self::from_edges(rows * cols, &edges)
+    }
+
+    /// `rows x cols` 2-D torus (wraparound mesh).
+    pub fn torus2d(rows: usize, cols: usize) -> Self {
+        assert!(rows >= 2 && cols >= 2);
+        let id = |r: usize, c: usize| (r * cols + c) as u32;
+        let mut edges = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                edges.push((id(r, c), id(r, (c + 1) % cols)));
+                edges.push((id(r, c), id((r + 1) % rows, c)));
+            }
+        }
+        Self::from_edges(rows * cols, &edges)
+    }
+
+    /// `d`-dimensional hypercube (n = 2^d vertices).
+    pub fn hypercube(d: usize) -> Self {
+        assert!(d >= 1);
+        let n = 1usize << d;
+        let mut edges = Vec::new();
+        for v in 0..n as u32 {
+            for bit in 0..d {
+                let w = v ^ (1 << bit);
+                if v < w {
+                    edges.push((v, w));
+                }
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Random `d`-regular-ish expander by superposing `d/2` random
+    /// Hamiltonian cycles (permutation method); retried until connected.
+    pub fn random_regular(n: usize, d: usize, rng: &mut Pcg64) -> Self {
+        assert!(n >= 3 && d >= 2 && d % 2 == 0, "need even d >= 2, n >= 3");
+        for _ in 0..100 {
+            let mut edges = Vec::new();
+            for _ in 0..d / 2 {
+                let mut perm: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut perm);
+                for i in 0..n {
+                    edges.push((perm[i], perm[(i + 1) % n]));
+                }
+            }
+            let g = Self::from_edges(n, &edges);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("random_regular: failed to build a connected graph");
+    }
+
+    /// Barabási–Albert preferential attachment with `m_attach` edges per
+    /// new vertex — a scale-free network (hub-heavy degree distribution,
+    /// the shape of real cluster interconnect overlays).
+    pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Pcg64) -> Self {
+        assert!(m_attach >= 1 && n > m_attach);
+        // seed: complete graph on m_attach + 1 vertices
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut targets: Vec<u32> = Vec::new(); // degree-weighted pool
+        for u in 0..=(m_attach as u32) {
+            for v in (u + 1)..=(m_attach as u32) {
+                edges.push((u, v));
+                targets.push(u);
+                targets.push(v);
+            }
+        }
+        for v in (m_attach as u32 + 1)..(n as u32) {
+            let mut chosen: Vec<u32> = Vec::with_capacity(m_attach);
+            while chosen.len() < m_attach {
+                let t = targets[rng.below(targets.len())];
+                if t != v && !chosen.contains(&t) {
+                    chosen.push(t);
+                }
+            }
+            for &t in &chosen {
+                edges.push((v.min(t), v.max(t)));
+                targets.push(v);
+                targets.push(t);
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+}
+
+/// Topology selector used by configs and the CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    RandomConnected,
+    ErdosRenyi { p: f64 },
+    Ring,
+    Path,
+    Complete,
+    Star,
+    Grid2d,
+    Torus2d,
+    Hypercube,
+    /// Random d-regular expander (d even).
+    RandomRegular { d: usize },
+    /// Barabási–Albert scale-free with m attachments per vertex.
+    ScaleFree { m: usize },
+}
+
+impl Topology {
+    /// Build an `n`-vertex instance (grids use the closest factorization;
+    /// hypercube requires `n` to be a power of two).
+    pub fn build(&self, n: usize, rng: &mut Pcg64) -> Graph {
+        match self {
+            Topology::RandomConnected => Graph::random_connected(n, rng),
+            Topology::ErdosRenyi { p } => Graph::erdos_renyi_connected(n, *p, rng),
+            Topology::Ring => Graph::ring(n),
+            Topology::Path => Graph::path(n),
+            Topology::Complete => Graph::complete(n),
+            Topology::Star => Graph::star(n),
+            Topology::Grid2d => {
+                let rows = (n as f64).sqrt().floor() as usize;
+                let rows = (1..=rows).rev().find(|r| n % r == 0).unwrap_or(1);
+                Graph::grid2d(rows, n / rows)
+            }
+            Topology::Torus2d => {
+                let rows = (n as f64).sqrt().floor() as usize;
+                let rows = (2..=rows).rev().find(|r| n % r == 0).unwrap_or(2);
+                assert!(n % rows == 0 && n / rows >= 2, "torus needs composite n");
+                Graph::torus2d(rows, n / rows)
+            }
+            Topology::Hypercube => {
+                assert!(n.is_power_of_two(), "hypercube needs n = 2^d");
+                Graph::hypercube(n.trailing_zeros() as usize)
+            }
+            Topology::RandomRegular { d } => Graph::random_regular(n, *d, rng),
+            Topology::ScaleFree { m } => Graph::barabasi_albert(n, *m, rng),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "random" | "random-connected" => Some(Topology::RandomConnected),
+            "ring" => Some(Topology::Ring),
+            "path" => Some(Topology::Path),
+            "complete" => Some(Topology::Complete),
+            "star" => Some(Topology::Star),
+            "grid" | "grid2d" => Some(Topology::Grid2d),
+            "torus" | "torus2d" => Some(Topology::Torus2d),
+            "hypercube" => Some(Topology::Hypercube),
+            s if s.starts_with("er:") => s[3..]
+                .parse::<f64>()
+                .ok()
+                .map(|p| Topology::ErdosRenyi { p }),
+            s if s.starts_with("regular:") => s[8..]
+                .parse::<usize>()
+                .ok()
+                .map(|d| Topology::RandomRegular { d }),
+            s if s.starts_with("scalefree:") => s[10..]
+                .parse::<usize>()
+                .ok()
+                .map(|m| Topology::ScaleFree { m }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Topology::RandomConnected => "random".into(),
+            Topology::ErdosRenyi { p } => format!("er:{p}"),
+            Topology::Ring => "ring".into(),
+            Topology::Path => "path".into(),
+            Topology::Complete => "complete".into(),
+            Topology::Star => "star".into(),
+            Topology::Grid2d => "grid2d".into(),
+            Topology::Torus2d => "torus2d".into(),
+            Topology::Hypercube => "hypercube".into(),
+            Topology::RandomRegular { d } => format!("regular:{d}"),
+            Topology::ScaleFree { m } => format!("scalefree:{m}"),
+        }
+    }
+}
+
+/// Union-find with path halving + union by size.
+pub struct UnionFind {
+    parent: Vec<usize>,
+    size: Vec<usize>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n).collect(),
+            size: vec![1; n],
+        }
+    }
+
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+
+    /// Returns true if the two sets were merged (were previously disjoint).
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra] < self.size[rb] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb] = ra;
+        self.size[ra] += self.size[rb];
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(5);
+        assert_eq!(g.num_edges(), 5);
+        assert!(g.is_connected());
+        assert!(g.edges().iter().all(|&(u, v)| u < v));
+        for v in 0..5 {
+            assert_eq!(g.degree(v), 2);
+        }
+    }
+
+    #[test]
+    fn path_structure() {
+        let g = Graph::path(4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = Graph::complete(6);
+        assert_eq!(g.num_edges(), 15);
+        assert_eq!(g.max_degree(), 5);
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = Graph::star(7);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.degree(0), 6);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = Graph::grid2d(3, 4);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.num_edges(), 3 * 3 + 2 * 4); // horizontal + vertical
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_structure() {
+        let g = Graph::torus2d(3, 4);
+        assert_eq!(g.num_edges(), 2 * 12);
+        for v in 0..12 {
+            assert_eq!(g.degree(v), 4);
+        }
+    }
+
+    #[test]
+    fn torus_2x2_no_duplicate_edges() {
+        let g = Graph::torus2d(2, 2);
+        // wraparound == direct neighbor for size 2: dedup leaves 4 edges
+        assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn hypercube_structure() {
+        let g = Graph::hypercube(4);
+        assert_eq!(g.n(), 16);
+        assert_eq!(g.num_edges(), 16 * 4 / 2);
+        for v in 0..16 {
+            assert_eq!(g.degree(v), 4);
+        }
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn random_connected_is_connected() {
+        let mut rng = Pcg64::new(5);
+        for n in [2, 4, 16, 64, 128] {
+            let g = Graph::random_connected(n, &mut rng);
+            assert!(g.is_connected(), "n={n}");
+            assert_eq!(g.n(), n);
+        }
+    }
+
+    #[test]
+    fn random_connected_no_self_loops_or_dups() {
+        let mut rng = Pcg64::new(9);
+        let g = Graph::random_connected(32, &mut rng);
+        let mut seen = std::collections::HashSet::new();
+        for &(u, v) in g.edges() {
+            assert!(u < v);
+            assert!(seen.insert((u, v)));
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_connected_works() {
+        let mut rng = Pcg64::new(17);
+        let g = Graph::erdos_renyi_connected(32, 0.3, &mut rng);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn from_edges_canonicalizes() {
+        let g = Graph::from_edges(3, &[(1, 0), (0, 1), (2, 2), (1, 2)]);
+        assert_eq!(g.edges(), &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        for name in ["random", "ring", "path", "complete", "star", "grid2d", "torus2d", "hypercube"] {
+            let t = Topology::parse(name).unwrap();
+            assert_eq!(Topology::parse(&t.name()).unwrap(), t);
+        }
+        assert_eq!(
+            Topology::parse("er:0.25"),
+            Some(Topology::ErdosRenyi { p: 0.25 })
+        );
+        assert_eq!(Topology::parse("nope"), None);
+    }
+
+    #[test]
+    fn topology_build_all() {
+        let mut rng = Pcg64::new(3);
+        for t in [
+            Topology::RandomConnected,
+            Topology::Ring,
+            Topology::Path,
+            Topology::Complete,
+            Topology::Star,
+            Topology::Grid2d,
+            Topology::Torus2d,
+            Topology::Hypercube,
+        ] {
+            let g = t.build(16, &mut rng);
+            assert_eq!(g.n(), 16);
+            assert!(g.is_connected(), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn random_regular_structure() {
+        let mut rng = Pcg64::new(41);
+        let g = Graph::random_regular(20, 4, &mut rng);
+        assert!(g.is_connected());
+        // superposed cycles may collide on an edge, so degree <= 4
+        for v in 0..20 {
+            assert!(g.degree(v) >= 2 && g.degree(v) <= 4, "deg {}", g.degree(v));
+        }
+    }
+
+    #[test]
+    fn barabasi_albert_structure() {
+        let mut rng = Pcg64::new(43);
+        let g = Graph::barabasi_albert(64, 2, &mut rng);
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 64);
+        // scale-free: max degree well above the attachment count
+        assert!(g.max_degree() >= 6, "max degree {}", g.max_degree());
+        // every late vertex has degree >= m
+        for v in 3..64 {
+            assert!(g.degree(v) >= 2);
+        }
+    }
+
+    #[test]
+    fn extended_topology_parse_roundtrip() {
+        for s in ["regular:4", "scalefree:2"] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(t.name(), s);
+            let mut rng = Pcg64::new(1);
+            let g = t.build(16, &mut rng);
+            assert!(g.is_connected());
+        }
+    }
+
+    #[test]
+    fn union_find() {
+        let mut uf = UnionFind::new(5);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0));
+        assert!(uf.union(2, 3));
+        assert!(uf.union(0, 3));
+        assert_eq!(uf.find(2), uf.find(1));
+        assert_ne!(uf.find(4), uf.find(0));
+    }
+}

@@ -1,0 +1,29 @@
+//! # bcm-dlb
+//!
+//! Production reproduction of **"Balancing indivisible real-valued loads
+//! in arbitrary networks"** (Demirel & Sbalzarini, 2013) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed coordination system: the
+//!   balancing circuit model (BCM) protocol, network substrate, local
+//!   balancers (`Greedy`, `SortedGreedy`), metrics, theory bounds, and a
+//!   leader/worker runtime.
+//! * **Layer 2/1 (python/, build-time only)** — the batched per-round
+//!   rebalance lowered AOT to HLO-text artifacts, executed at runtime via
+//!   PJRT (`runtime` module).  Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod balancer;
+pub mod coordinator;
+pub mod bcm;
+pub mod cli;
+pub mod config;
+pub mod graph;
+pub mod load;
+pub mod runtime;
+pub mod experiments;
+pub mod theory;
+pub mod util;
+pub mod workload;

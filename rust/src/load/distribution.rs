@@ -1,0 +1,206 @@
+//! Ball/load weight distributions.
+//!
+//! The paper's §6 experiments sample weights uniformly from [0, 100] and
+//! Appendix C from [0, 1]; §4 explicitly does "not restrict the
+//! distribution from which the balls sample their weights", so the
+//! framework ships the standard families used in weighted balls-into-bins
+//! analyses (finite second moment is what Talwar & Wieder's discrepancy
+//! result needs — Pareto with alpha <= 2 deliberately violates it for
+//! stress tests).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum WeightDistribution {
+    /// U[lo, hi)
+    Uniform { lo: f64, hi: f64 },
+    /// Exp(mean), unbounded
+    Exponential { mean: f64 },
+    /// N(mean, std) truncated at zero (weights must be non-negative)
+    Normal { mean: f64, std: f64 },
+    /// Pareto(scale, alpha); heavy tail, infinite variance for alpha <= 2
+    Pareto { scale: f64, alpha: f64 },
+    /// Mixture: w.p. `p_hi` sample U[hi_lo, hi_hi), else U[lo_lo, lo_hi)
+    Bimodal {
+        p_hi: f64,
+        lo_lo: f64,
+        lo_hi: f64,
+        hi_lo: f64,
+        hi_hi: f64,
+    },
+    /// All weights equal (the Lemma-5 worst case)
+    Constant { w: f64 },
+}
+
+impl WeightDistribution {
+    /// The paper's §6 setting: U[0, 100).
+    pub fn paper_section6() -> Self {
+        WeightDistribution::Uniform { lo: 0.0, hi: 100.0 }
+    }
+
+    /// The paper's Appendix-C setting: U[0, 1).
+    pub fn paper_appendix_c() -> Self {
+        WeightDistribution::Uniform { lo: 0.0, hi: 1.0 }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            WeightDistribution::Uniform { lo, hi } => rng.uniform(lo, hi),
+            WeightDistribution::Exponential { mean } => rng.exponential(mean),
+            WeightDistribution::Normal { mean, std } => rng.normal(mean, std).max(0.0),
+            WeightDistribution::Pareto { scale, alpha } => rng.pareto(scale, alpha),
+            WeightDistribution::Bimodal {
+                p_hi,
+                lo_lo,
+                lo_hi,
+                hi_lo,
+                hi_hi,
+            } => {
+                if rng.next_f64() < p_hi {
+                    rng.uniform(hi_lo, hi_hi)
+                } else {
+                    rng.uniform(lo_lo, lo_hi)
+                }
+            }
+            WeightDistribution::Constant { w } => w,
+        }
+    }
+
+    pub fn sample_n(&self, n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Population mean (used by theory checks; None if undefined).
+    pub fn mean(&self) -> Option<f64> {
+        match *self {
+            WeightDistribution::Uniform { lo, hi } => Some((lo + hi) / 2.0),
+            WeightDistribution::Exponential { mean } => Some(mean),
+            WeightDistribution::Normal { mean, .. } => Some(mean), // approx (truncation)
+            WeightDistribution::Pareto { scale, alpha } => {
+                (alpha > 1.0).then(|| alpha * scale / (alpha - 1.0))
+            }
+            WeightDistribution::Bimodal {
+                p_hi,
+                lo_lo,
+                lo_hi,
+                hi_lo,
+                hi_hi,
+            } => Some(p_hi * (hi_lo + hi_hi) / 2.0 + (1.0 - p_hi) * (lo_lo + lo_hi) / 2.0),
+            WeightDistribution::Constant { w } => Some(w),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["uniform", lo, hi] => Some(WeightDistribution::Uniform {
+                lo: lo.parse().ok()?,
+                hi: hi.parse().ok()?,
+            }),
+            ["uniform"] => Some(WeightDistribution::paper_section6()),
+            ["exp", mean] => Some(WeightDistribution::Exponential {
+                mean: mean.parse().ok()?,
+            }),
+            ["normal", mean, std] => Some(WeightDistribution::Normal {
+                mean: mean.parse().ok()?,
+                std: std.parse().ok()?,
+            }),
+            ["pareto", scale, alpha] => Some(WeightDistribution::Pareto {
+                scale: scale.parse().ok()?,
+                alpha: alpha.parse().ok()?,
+            }),
+            ["constant", w] => Some(WeightDistribution::Constant {
+                w: w.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            WeightDistribution::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            WeightDistribution::Exponential { mean } => format!("exp:{mean}"),
+            WeightDistribution::Normal { mean, std } => format!("normal:{mean}:{std}"),
+            WeightDistribution::Pareto { scale, alpha } => format!("pareto:{scale}:{alpha}"),
+            WeightDistribution::Bimodal { .. } => "bimodal".into(),
+            WeightDistribution::Constant { w } => format!("constant:{w}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mean(d: &WeightDistribution, n: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::new(seed);
+        d.sample_n(n, &mut rng).iter().sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let d = WeightDistribution::paper_section6();
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let w = d.sample(&mut rng);
+            assert!((0.0..100.0).contains(&w));
+        }
+        assert!((sample_mean(&d, 100_000, 2) - 50.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let d = WeightDistribution::Exponential { mean: 4.0 };
+        assert!((sample_mean(&d, 100_000, 3) - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn normal_truncated_nonnegative() {
+        let d = WeightDistribution::Normal { mean: 1.0, std: 2.0 };
+        let mut rng = Pcg64::new(4);
+        assert!((0..10_000).all(|_| d.sample(&mut rng) >= 0.0));
+    }
+
+    #[test]
+    fn pareto_mean_finite_alpha() {
+        let d = WeightDistribution::Pareto { scale: 1.0, alpha: 3.0 };
+        let want = d.mean().unwrap(); // 1.5
+        assert!((sample_mean(&d, 200_000, 5) - want).abs() < 0.05);
+        assert_eq!(
+            WeightDistribution::Pareto { scale: 1.0, alpha: 0.9 }.mean(),
+            None
+        );
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let d = WeightDistribution::Constant { w: 2.5 };
+        let mut rng = Pcg64::new(6);
+        assert!((0..100).all(|_| d.sample(&mut rng) == 2.5));
+    }
+
+    #[test]
+    fn bimodal_hits_both_modes() {
+        let d = WeightDistribution::Bimodal {
+            p_hi: 0.5,
+            lo_lo: 0.0,
+            lo_hi: 1.0,
+            hi_lo: 10.0,
+            hi_hi: 11.0,
+        };
+        let mut rng = Pcg64::new(7);
+        let xs = d.sample_n(1000, &mut rng);
+        assert!(xs.iter().any(|&x| x < 1.0));
+        assert!(xs.iter().any(|&x| x > 10.0));
+        assert!(xs.iter().all(|&x| x < 1.0 || x >= 10.0));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["uniform:0:100", "exp:2", "normal:5:1", "pareto:1:3", "constant:7"] {
+            let d = WeightDistribution::parse(s).unwrap();
+            assert_eq!(WeightDistribution::parse(&d.name()).unwrap(), d);
+        }
+        assert_eq!(WeightDistribution::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,47 @@
+//! The indivisible, real-valued load (the paper's central object).
+
+/// An atomic work packet: constant real-valued cost, cannot be subdivided,
+/// can only be migrated whole between processors (paper §1, §3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Load {
+    /// Stable identity across migrations.
+    pub id: u64,
+    /// The real-valued cost.  Constant during a DLB epoch.
+    pub weight: f64,
+    /// `false` => pinned to its current processor (partial mobility,
+    /// paper §6.1: e.g. subdomains that must keep processor-neighborhood
+    /// relationships).
+    pub mobile: bool,
+}
+
+impl Load {
+    pub fn new(id: u64, weight: f64) -> Self {
+        Self {
+            id,
+            weight,
+            mobile: true,
+        }
+    }
+
+    pub fn pinned(id: u64, weight: f64) -> Self {
+        Self {
+            id,
+            weight,
+            mobile: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let l = Load::new(3, 1.5);
+        assert!(l.mobile);
+        let p = Load::pinned(4, 2.5);
+        assert!(!p.mobile);
+        assert_eq!(p.weight, 2.5);
+    }
+}

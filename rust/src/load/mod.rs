@@ -1,0 +1,10 @@
+//! Load model: indivisible real-valued loads, weight distributions,
+//! network load state, mobility (paper §2, §6.1).
+
+pub mod distribution;
+pub mod item;
+pub mod state;
+
+pub use distribution::WeightDistribution;
+pub use item::Load;
+pub use state::{LoadState, Mobility};

@@ -1,0 +1,255 @@
+//! Per-network load state: which loads live on which processor.
+
+use super::distribution::WeightDistribution;
+use super::item::Load;
+use crate::util::rng::Pcg64;
+
+/// Load mobility model (paper §6.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mobility {
+    /// All loads are free to move.
+    Full,
+    /// On each node with m loads, r ~ U{1, .., m-1} of them are pinned
+    /// uniformly at random ("we uniformly at random set r ∈ [1, …, l−1]
+    /// of them to be immobile").
+    Partial,
+}
+
+impl Mobility {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" => Some(Mobility::Full),
+            "partial" => Some(Mobility::Partial),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mobility::Full => "full",
+            Mobility::Partial => "partial",
+        }
+    }
+}
+
+/// The assignment of loads to the n processors.
+#[derive(Clone, Debug)]
+pub struct LoadState {
+    nodes: Vec<Vec<Load>>,
+    next_id: u64,
+}
+
+impl LoadState {
+    pub fn empty(n: usize) -> Self {
+        Self {
+            nodes: vec![Vec::new(); n],
+            next_id: 0,
+        }
+    }
+
+    /// The paper's §6 initialization: `per_node` loads on every node, each
+    /// weight drawn i.i.d. from `dist`, then the mobility model applied.
+    pub fn init_uniform_counts(
+        n: usize,
+        per_node: usize,
+        dist: &WeightDistribution,
+        mobility: Mobility,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let mut state = Self::empty(n);
+        for v in 0..n {
+            for _ in 0..per_node {
+                let id = state.next_id;
+                state.next_id += 1;
+                state.nodes[v].push(Load::new(id, dist.sample(rng)));
+            }
+        }
+        if mobility == Mobility::Partial {
+            state.pin_random(rng);
+        }
+        state
+    }
+
+    /// Pin r ∈ U{1..m−1} random loads on every node with m ≥ 2 loads.
+    pub fn pin_random(&mut self, rng: &mut Pcg64) {
+        for node in &mut self.nodes {
+            let m = node.len();
+            if m < 2 {
+                continue;
+            }
+            let r = rng.range_inclusive(1, m - 1);
+            for idx in rng.sample_indices(m, r) {
+                node[idx].mobile = false;
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, v: usize) -> &[Load] {
+        &self.nodes[v]
+    }
+
+    pub fn node_mut(&mut self, v: usize) -> &mut Vec<Load> {
+        &mut self.nodes[v]
+    }
+
+    pub fn push(&mut self, v: usize, load: Load) {
+        self.next_id = self.next_id.max(load.id + 1);
+        self.nodes[v].push(load);
+    }
+
+    /// Total weight on node v.
+    pub fn node_weight(&self, v: usize) -> f64 {
+        self.nodes[v].iter().map(|l| l.weight).sum()
+    }
+
+    /// Weight of the pinned loads on node v.
+    pub fn pinned_weight(&self, v: usize) -> f64 {
+        self.nodes[v]
+            .iter()
+            .filter(|l| !l.mobile)
+            .map(|l| l.weight)
+            .sum()
+    }
+
+    /// The load vector x^(t) (paper §2).
+    pub fn load_vector(&self) -> Vec<f64> {
+        (0..self.n()).map(|v| self.node_weight(v)).collect()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.load_vector().iter().sum()
+    }
+
+    pub fn total_loads(&self) -> usize {
+        self.nodes.iter().map(|n| n.len()).sum()
+    }
+
+    /// Discrepancy: weight difference between heaviest and lightest node.
+    pub fn discrepancy(&self) -> f64 {
+        let x = self.load_vector();
+        let max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = x.iter().cloned().fold(f64::INFINITY, f64::min);
+        max - min
+    }
+
+    /// Largest single load in the network (l_max, Appendix A req. 4).
+    pub fn max_load_weight(&self) -> f64 {
+        self.nodes
+            .iter()
+            .flatten()
+            .map(|l| l.weight)
+            .fold(0.0, f64::max)
+    }
+
+    /// Remove and return the mobile loads of node v (pinned loads stay).
+    pub fn take_mobile(&mut self, v: usize) -> Vec<Load> {
+        let (mobile, pinned): (Vec<Load>, Vec<Load>) =
+            self.nodes[v].drain(..).partition(|l| l.mobile);
+        self.nodes[v] = pinned;
+        mobile
+    }
+
+    /// Append loads to node v.
+    pub fn give(&mut self, v: usize, loads: impl IntoIterator<Item = Load>) {
+        self.nodes[v].extend(loads);
+    }
+
+    /// Sorted ids across the whole network (conservation checks).
+    pub fn all_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.nodes.iter().flatten().map(|l| l.id).collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(per_node: usize, mobility: Mobility, seed: u64) -> LoadState {
+        let mut rng = Pcg64::new(seed);
+        LoadState::init_uniform_counts(
+            8,
+            per_node,
+            &WeightDistribution::paper_section6(),
+            mobility,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn init_counts_and_ids() {
+        let s = mk(10, Mobility::Full, 1);
+        assert_eq!(s.n(), 8);
+        assert_eq!(s.total_loads(), 80);
+        let ids = s.all_ids();
+        assert_eq!(ids, (0..80).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn full_mobility_all_mobile() {
+        let s = mk(10, Mobility::Full, 2);
+        assert!(s.nodes.iter().flatten().all(|l| l.mobile));
+    }
+
+    #[test]
+    fn partial_mobility_pins_some_not_all() {
+        let s = mk(10, Mobility::Partial, 3);
+        for v in 0..8 {
+            let pinned = s.node(v).iter().filter(|l| !l.mobile).count();
+            assert!(
+                (1..10).contains(&pinned),
+                "node {v}: {pinned} pinned of 10"
+            );
+        }
+    }
+
+    #[test]
+    fn single_load_nodes_not_pinned() {
+        let mut rng = Pcg64::new(4);
+        let mut s = LoadState::empty(2);
+        s.push(0, Load::new(0, 1.0));
+        s.pin_random(&mut rng);
+        assert!(s.node(0)[0].mobile);
+    }
+
+    #[test]
+    fn weights_and_discrepancy() {
+        let mut s = LoadState::empty(3);
+        s.push(0, Load::new(0, 5.0));
+        s.push(0, Load::new(1, 3.0));
+        s.push(2, Load::new(2, 1.0));
+        assert_eq!(s.node_weight(0), 8.0);
+        assert_eq!(s.node_weight(1), 0.0);
+        assert_eq!(s.load_vector(), vec![8.0, 0.0, 1.0]);
+        assert_eq!(s.discrepancy(), 8.0);
+        assert_eq!(s.total_weight(), 9.0);
+        assert_eq!(s.max_load_weight(), 5.0);
+    }
+
+    #[test]
+    fn take_mobile_leaves_pinned() {
+        let mut s = LoadState::empty(1);
+        s.push(0, Load::new(0, 1.0));
+        s.push(0, Load::pinned(1, 2.0));
+        s.push(0, Load::new(2, 3.0));
+        let taken = s.take_mobile(0);
+        assert_eq!(taken.len(), 2);
+        assert_eq!(s.node(0).len(), 1);
+        assert_eq!(s.node(0)[0].id, 1);
+        assert_eq!(s.pinned_weight(0), 2.0);
+        s.give(0, taken);
+        assert_eq!(s.node(0).len(), 3);
+    }
+
+    #[test]
+    fn mobility_parse() {
+        assert_eq!(Mobility::parse("full"), Some(Mobility::Full));
+        assert_eq!(Mobility::parse("partial"), Some(Mobility::Partial));
+        assert_eq!(Mobility::parse("x"), None);
+    }
+}

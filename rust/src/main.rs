@@ -1,0 +1,353 @@
+//! bcm-dlb launcher: the Layer-3 coordinator CLI.
+//!
+//! See `bcm-dlb help` (cli::USAGE) for the command reference.
+
+use anyhow::{anyhow, Result};
+use bcm_dlb::balancer::PairAlgorithm;
+use bcm_dlb::bcm::{run, run_device, Schedule, StopRule};
+use bcm_dlb::cli::{Args, USAGE};
+use bcm_dlb::config::ExperimentConfig;
+use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
+use bcm_dlb::experiments::{figures, validate, SweepParams};
+use bcm_dlb::graph::{round_matrix, spectral, Topology};
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::runtime::{default_artifacts_dir, DeviceAlgo, Runtime};
+use bcm_dlb::theory;
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::util::stats::Welford;
+use bcm_dlb::util::table::{f, Table};
+use bcm_dlb::workload::{run_driver, DlbPolicy, ParticleSim};
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "run" => cmd_run(args),
+        "sweep" => cmd_sweep(args),
+        "fig1" | "fig2" | "fig3" | "fig4" | "fig5" => cmd_fig(args),
+        "timings" => cmd_timings(args),
+        "particle-mesh" => cmd_particle_mesh(args),
+        "spectral" => cmd_spectral(args),
+        "validate" => cmd_validate(args),
+        "artifacts" => cmd_artifacts(),
+        other => Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(t) = args.get("topology") {
+        cfg.topology = Topology::parse(t).ok_or_else(|| anyhow!("bad --topology '{t}'"))?;
+    }
+    cfg.n = args.get_usize("n", cfg.n).map_err(|e| anyhow!(e))?;
+    cfg.loads_per_node = args
+        .get_usize("loads", cfg.loads_per_node)
+        .map_err(|e| anyhow!(e))?;
+    if let Some(a) = args.get("algo") {
+        cfg.algorithm = PairAlgorithm::parse(a).ok_or_else(|| anyhow!("bad --algo '{a}'"))?;
+    }
+    if let Some(m) = args.get("mobility") {
+        cfg.mobility = Mobility::parse(m).ok_or_else(|| anyhow!("bad --mobility '{m}'"))?;
+    }
+    if let Some(d) = args.get("dist") {
+        cfg.distribution =
+            WeightDistribution::parse(d).ok_or_else(|| anyhow!("bad --dist '{d}'"))?;
+    }
+    cfg.sweeps = args.get_usize("sweeps", cfg.sweeps).map_err(|e| anyhow!(e))?;
+    cfg.reps = args.get_usize("reps", cfg.reps).map_err(|e| anyhow!(e))?;
+    cfg.seed = args.get_u64("seed", cfg.seed).map_err(|e| anyhow!(e))?;
+    if args.has("device") {
+        cfg.use_device = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    println!("config: {}", cfg.to_json());
+    let mut init_d = Welford::new();
+    let mut final_d = Welford::new();
+    let mut moves = Welford::new();
+    let mut rounds = Welford::new();
+    let mut runtime = if cfg.use_device {
+        let rt = Runtime::new(&default_artifacts_dir())?;
+        println!("device: PJRT platform = {}", rt.platform());
+        Some(rt)
+    } else {
+        None
+    };
+    let use_cluster = args.has("cluster");
+    for rep in 0..cfg.reps {
+        let mut rng = Pcg64::new(cfg.seed.wrapping_add(rep as u64));
+        let g = cfg.topology.build(cfg.n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            cfg.n,
+            cfg.loads_per_node,
+            &cfg.distribution,
+            cfg.mobility,
+            &mut rng,
+        );
+        let trace = if use_cluster {
+            let algo = match cfg.algorithm {
+                PairAlgorithm::Greedy => WorkerAlgo::Greedy,
+                _ => WorkerAlgo::SortedGreedy,
+            };
+            let mut cluster = Cluster::spawn(state, algo);
+            let t = cluster.run(&schedule, cfg.sweeps, &mut rng);
+            cluster.shutdown();
+            t
+        } else if let Some(rt) = runtime.as_mut() {
+            let algo = match cfg.algorithm {
+                PairAlgorithm::Greedy => DeviceAlgo::Greedy,
+                _ => DeviceAlgo::SortedGreedy,
+            };
+            run_device(&mut state, &schedule, algo, cfg.sweeps, Some(rt), &mut rng)?
+        } else {
+            run(
+                &mut state,
+                &schedule,
+                cfg.algorithm,
+                StopRule::sweeps(cfg.sweeps),
+                &mut rng,
+            )
+        };
+        init_d.push(trace.initial_discrepancy);
+        final_d.push(trace.final_discrepancy());
+        moves.push(trace.total_movements() as f64);
+        rounds.push(trace.rounds.len() as f64);
+        // --trace-out FILE: per-round time series of the first repetition
+        if rep == 0 {
+            if let Some(path) = args.get("trace-out") {
+                let mut t = Table::new(
+                    "per-round trace",
+                    &["round", "color", "discrepancy", "movements", "edges"],
+                );
+                for r in &trace.rounds {
+                    t.row(vec![
+                        r.round.to_string(),
+                        r.color.to_string(),
+                        f(r.discrepancy, 4),
+                        r.movements.to_string(),
+                        r.edges.to_string(),
+                    ]);
+                }
+                t.write_csv(Path::new(path))?;
+                println!("trace written to {path}");
+            }
+        }
+    }
+    let mut t = Table::new("run summary", &["metric", "mean", "std", "min", "max"]);
+    for (name, w) in [
+        ("initial discrepancy", &init_d),
+        ("final discrepancy", &final_d),
+        ("total movements", &moves),
+        ("rounds", &rounds),
+    ] {
+        t.row(vec![
+            name.into(),
+            f(w.mean(), 3),
+            f(w.std(), 3),
+            f(w.min(), 3),
+            f(w.max(), 3),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn sweep_params(args: &Args) -> SweepParams {
+    let mut p = SweepParams::from_env();
+    if args.has("quick") {
+        p.network_sizes = vec![4, 8, 16, 32, 64];
+        p.reps = 10;
+        p.sweeps = 10;
+    }
+    p
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let p = sweep_params(args);
+    let out = Path::new("results");
+    for t in figures::fig1(&p, out) {
+        println!("{}", t.render());
+    }
+    for t in figures::fig2(&p, out) {
+        println!("{}", t.render());
+    }
+    for t in figures::fig3(&p, out) {
+        println!("{}", t.render());
+    }
+    println!("CSVs written under results/");
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let out = Path::new("results");
+    let p = sweep_params(args);
+    let quick = args.has("quick")
+        || std::env::var("BCM_DLB_QUICK").map(|v| v == "1").unwrap_or(false);
+    let tables = match args.command.as_str() {
+        "fig1" => figures::fig1(&p, out),
+        "fig2" => figures::fig2(&p, out),
+        "fig3" => figures::fig3(&p, out),
+        "fig4" => figures::fig4(if quick { 100 } else { 1000 }, p.seed, out),
+        "fig5" => figures::fig5(if quick { 100 } else { 1000 }, p.seed, out),
+        _ => unreachable!(),
+    };
+    for t in tables {
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_timings(args: &Args) -> Result<()> {
+    let reps = args.get_usize("reps", 100).map_err(|e| anyhow!(e))?;
+    println!("{}", figures::timings(reps, 2013, Path::new("results")).render());
+    Ok(())
+}
+
+fn cmd_particle_mesh(args: &Args) -> Result<()> {
+    let procs = args.get_usize("procs", 32).map_err(|e| anyhow!(e))?;
+    let steps = args.get_usize("steps", 300).map_err(|e| anyhow!(e))?;
+    let particles = args.get_usize("particles", 200_000).map_err(|e| anyhow!(e))?;
+    let sub_side = args.get_usize("subdomains", 32).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 42).map_err(|e| anyhow!(e))?;
+
+    let mut rng = Pcg64::new(seed);
+    let g = Topology::RandomConnected.build(procs, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let mut t = Table::new(
+        &format!(
+            "E9 particle-mesh driver: {procs} procs, {sub_side}x{sub_side} subdomains, {particles} particles, {steps} steps"
+        ),
+        &["policy", "total_makespan", "efficiency", "migrations", "vs_no_dlb"],
+    );
+    let mut base: Option<f64> = None;
+    for policy in [DlbPolicy::None, DlbPolicy::Greedy, DlbPolicy::SortedGreedy] {
+        let mut sim_rng = Pcg64::new(seed ^ 0xFACE);
+        let mut sim = ParticleSim::new(sub_side, particles, &mut sim_rng);
+        let mut prng = Pcg64::new(seed ^ 0xBEEF);
+        let r = run_driver(policy, &mut sim, &schedule, procs, steps, 10, 8, &mut prng);
+        let speedup = base.map(|b| b / r.total_makespan).unwrap_or(1.0);
+        if base.is_none() {
+            base = Some(r.total_makespan);
+        }
+        t.row(vec![
+            policy.label().into(),
+            f(r.total_makespan, 0),
+            f(r.efficiency(), 3),
+            r.migrations.to_string(),
+            format!("{}x", f(speedup, 2)),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(Path::new("results/e9_particle_mesh.csv")).ok();
+    Ok(())
+}
+
+fn cmd_spectral(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 32).map_err(|e| anyhow!(e))?;
+    let topo = Topology::parse(args.get("topology").unwrap_or("random"))
+        .ok_or_else(|| anyhow!("bad --topology"))?;
+    let seed = args.get_u64("seed", 1).map_err(|e| anyhow!(e))?;
+    let mut rng = Pcg64::new(seed);
+    let g = topo.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let m = round_matrix(n, schedule.matchings());
+    let lambda = spectral::contraction_factor(&m, 500, seed);
+    let mut t = Table::new(
+        &format!("spectral analysis: {} n={n}", topo.name()),
+        &["quantity", "value"],
+    );
+    t.row(vec!["edges".into(), g.num_edges().to_string()]);
+    t.row(vec!["max degree".into(), g.max_degree().to_string()]);
+    t.row(vec!["colors d".into(), schedule.period().to_string()]);
+    t.row(vec!["contraction sigma2(M)".into(), f(lambda, 6)]);
+    t.row(vec!["spectral gap".into(), f(1.0 - lambda, 6)]);
+    t.row(vec!["ergodic".into(), (lambda < 1.0 - 1e-9).to_string()]);
+    t.row(vec![
+        "tau_cont(K=100, eps=1)".into(),
+        f(
+            theory::tau_cont(100.0, 1.0, n, schedule.period(), lambda.min(0.999_999)),
+            0,
+        ),
+    ]);
+    t.row(vec![
+        "discrete bound (lmax=1)".into(),
+        f(theory::discrete_discrepancy_bound(n, 1.0), 2),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 0).map_err(|e| anyhow!(e))?;
+    let topo = Topology::parse(args.get("topology").unwrap_or("random"))
+        .ok_or_else(|| anyhow!("bad --topology"))?;
+    let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
+    let sizes: Vec<usize> = if n > 0 { vec![n] } else { vec![8, 16, 32, 64] };
+    let reports: Vec<_> = sizes
+        .iter()
+        .map(|&n| validate::validate(&topo, n, 50, seed))
+        .collect();
+    println!("{}", validate::validation_table(&reports).render());
+    if reports.iter().all(|r| r.within_bound) {
+        println!("all sizes within the Theorem-1 envelope");
+        Ok(())
+    } else {
+        Err(anyhow!("some sizes exceeded the theory bound"))
+    }
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let mut rt = Runtime::new(&dir)?;
+    println!(
+        "platform {} — {} artifacts in {}",
+        rt.platform(),
+        rt.manifest().artifacts.len(),
+        dir.display()
+    );
+    let names: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    for name in names {
+        let start = std::time::Instant::now();
+        rt.executable(&name)?;
+        println!(
+            "  compiled {name} in {:.0} ms",
+            start.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    println!("all artifacts compile");
+    Ok(())
+}

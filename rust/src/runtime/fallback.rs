@@ -1,0 +1,108 @@
+//! Pure-Rust implementation of the device kernels' exact semantics.
+//!
+//! Used when `artifacts/` is absent or a problem exceeds every shape
+//! bucket, and as the ground truth in the device-vs-fallback integration
+//! tests.  Matches the Pallas kernels: descending sort (stable on ties),
+//! then greedy placement with ties to bin 0.
+
+use super::executor::{DeviceAlgo, EdgeProblem, EdgeSolution};
+
+/// Solve one two-bin problem exactly like the device path does.
+pub fn solve(p: &EdgeProblem, algo: DeviceAlgo) -> EdgeSolution {
+    let m = p.weights.len();
+    let mut sums = p.base;
+    let mut assign = vec![0u8; m];
+    match algo {
+        DeviceAlgo::Greedy => {
+            for (i, &w) in p.weights.iter().enumerate() {
+                let k = usize::from(sums[1] < sums[0]);
+                assign[i] = k as u8;
+                sums[k] += w;
+            }
+        }
+        DeviceAlgo::SortedGreedy => {
+            // Sort (weight, index) pairs directly — contiguous accesses
+            // beat the indirect index sort by ~2x (§Perf experiment E).
+            // Stable descending, matching np.argsort(-w, kind="stable").
+            let mut keyed: Vec<(f64, u32)> = p
+                .weights
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| (w, i as u32))
+                .collect();
+            keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            for &(w, i) in &keyed {
+                let k = usize::from(sums[1] < sums[0]);
+                assign[i as usize] = k as u8;
+                sums[k] += w;
+            }
+        }
+    }
+    let movements = assign
+        .iter()
+        .zip(&p.hosts)
+        .filter(|(a, h)| **a != **h)
+        .count();
+    EdgeSolution {
+        assign,
+        sums,
+        movements,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_greedy_two_balls() {
+        let p = EdgeProblem {
+            weights: vec![1.0, 5.0],
+            hosts: vec![0, 0],
+            base: [0.0, 0.0],
+        };
+        let s = solve(&p, DeviceAlgo::SortedGreedy);
+        // 5 placed first into bin 0 (tie), 1 into bin 1
+        assert_eq!(s.assign, vec![1, 0]);
+        assert_eq!(s.sums, [5.0, 1.0]);
+        assert_eq!(s.movements, 1);
+    }
+
+    #[test]
+    fn greedy_keeps_arrival_order() {
+        let p = EdgeProblem {
+            weights: vec![1.0, 5.0],
+            hosts: vec![0, 1],
+            base: [0.0, 0.0],
+        };
+        let s = solve(&p, DeviceAlgo::Greedy);
+        // 1 -> bin 0 (tie), 5 -> bin 1
+        assert_eq!(s.assign, vec![0, 1]);
+        assert_eq!(s.movements, 0);
+    }
+
+    #[test]
+    fn base_offsets() {
+        let p = EdgeProblem {
+            weights: vec![1.0],
+            hosts: vec![0],
+            base: [10.0, 0.0],
+        };
+        let s = solve(&p, DeviceAlgo::SortedGreedy);
+        assert_eq!(s.assign, vec![1]);
+        assert_eq!(s.sums, [10.0, 1.0]);
+    }
+
+    #[test]
+    fn stable_tie_ordering() {
+        let p = EdgeProblem {
+            weights: vec![2.0, 2.0, 2.0, 2.0],
+            hosts: vec![0; 4],
+            base: [0.0, 0.0],
+        };
+        let s = solve(&p, DeviceAlgo::SortedGreedy);
+        // ties keep index order: 0->bin0, 1->bin1, 2->bin0, 3->bin1
+        assert_eq!(s.assign, vec![0, 1, 0, 1]);
+        assert_eq!(s.sums, [4.0, 4.0]);
+    }
+}

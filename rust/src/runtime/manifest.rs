@@ -1,0 +1,213 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Written once by `python/compile/aot.py`; describes every HLO-text
+//! artifact: entry point, file, input/output shapes and dtypes.  The
+//! runtime uses it to pick the smallest shape bucket that fits a batch.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Logical entry point (e.g. "balance_two_bin").
+    pub entry: String,
+    /// File name relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// For two-bin entries: (B, M) of the weights input.
+    pub fn batch_shape(&self) -> Option<(usize, usize)> {
+        let s = &self.inputs.first()?.shape;
+        if s.len() == 2 {
+            Some((s[0], s[1]))
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if root.get("format").as_str() != Some("hlo-text") {
+            bail!("manifest format must be 'hlo-text'");
+        }
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?
+        {
+            artifacts.push(ArtifactSpec {
+                name: req_str(a, "name")?,
+                entry: req_str(a, "entry")?,
+                file: req_str(a, "file")?,
+                inputs: tensors(a.get("inputs"))?,
+                outputs: tensors(a.get("outputs"))?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts for a given entry point.
+    pub fn entries(&self, entry: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.entry == entry).collect()
+    }
+
+    /// Smallest (by B*M) artifact of `entry` with B >= b and M >= m.
+    pub fn pick_bucket(&self, entry: &str, b: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.entries(entry)
+            .into_iter()
+            .filter_map(|a| a.batch_shape().map(|(ab, am)| (a, ab, am)))
+            .filter(|&(_, ab, am)| ab >= b && am >= m)
+            .min_by_key(|&(_, ab, am)| ab * am)
+            .map(|(a, _, _)| a)
+    }
+
+    /// Bucket that minimizes launches for a `batch`-problem round (each
+    /// problem at most `m` balls), breaking ties by padded area.  Launch
+    /// dispatch costs ~ms on the CPU PJRT client, so fewer launches beats
+    /// tighter padding (§Perf experiment C).
+    pub fn pick_bucket_for_batch(
+        &self,
+        entry: &str,
+        batch: usize,
+        m: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.entries(entry)
+            .into_iter()
+            .filter_map(|a| a.batch_shape().map(|(ab, am)| (a, ab, am)))
+            .filter(|&(_, _, am)| am >= m)
+            .min_by_key(|&(_, ab, am)| (batch.max(1).div_ceil(ab), ab * am))
+            .map(|(a, _, _)| a)
+    }
+
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("manifest: missing string field '{key}'"))
+}
+
+fn tensors(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("manifest: expected tensor array"))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: req_str(t, "name")?,
+                shape: t
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("tensor missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                dtype: req_str(t, "dtype")?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "version": 1,
+      "artifacts": [
+        {"name": "balance_two_bin_b8_m64", "entry": "balance_two_bin",
+         "file": "balance_two_bin_b8_m64.hlo.txt",
+         "inputs": [{"name":"weights","shape":[8,64],"dtype":"f32"},
+                    {"name":"base","shape":[8,2],"dtype":"f32"}],
+         "outputs": [{"name":"sorted_w","shape":[8,64],"dtype":"f32"},
+                     {"name":"perm","shape":[8,64],"dtype":"i32"},
+                     {"name":"assign","shape":[8,64],"dtype":"f32"},
+                     {"name":"sums","shape":[8,2],"dtype":"f32"}]},
+        {"name": "balance_two_bin_b64_m256", "entry": "balance_two_bin",
+         "file": "balance_two_bin_b64_m256.hlo.txt",
+         "inputs": [{"name":"weights","shape":[64,256],"dtype":"f32"},
+                    {"name":"base","shape":[64,2],"dtype":"f32"}],
+         "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.by_name("balance_two_bin_b8_m64").unwrap();
+        assert_eq!(a.entry, "balance_two_bin");
+        assert_eq!(a.inputs[0].shape, vec![8, 64]);
+        assert_eq!(a.outputs[1].dtype, "i32");
+        assert_eq!(a.batch_shape(), Some((8, 64)));
+    }
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.pick_bucket("balance_two_bin", 4, 32).unwrap();
+        assert_eq!(a.name, "balance_two_bin_b8_m64");
+        let b = m.pick_bucket("balance_two_bin", 16, 64).unwrap();
+        assert_eq!(b.name, "balance_two_bin_b64_m256");
+        assert!(m.pick_bucket("balance_two_bin", 128, 64).is_none());
+        assert!(m.pick_bucket("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"format":"proto"}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(m.pick_bucket("balance_two_bin", 8, 64).is_some());
+            for a in &m.artifacts {
+                assert!(m.path_of(a).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

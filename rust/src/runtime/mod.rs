@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT HLO-text artifacts (built once by
+//! `make artifacts`) and execute the batched per-round rebalance.
+//! Python never runs on this path.
+
+pub mod client;
+pub mod executor;
+pub mod fallback;
+pub mod manifest;
+
+pub use client::{Executable, OutputBuffer, Runtime};
+pub use executor::{solve_batch, DeviceAlgo, EdgeProblem, EdgeSolution, ExecPath};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// Default artifacts directory: `$BCM_DLB_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("BCM_DLB_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,117 @@
+//! The discrepancy / convergence bounds of paper §3 and Appendix A.
+
+/// Continuous-case round bound: a BCM reaches discrepancy eps from initial
+/// discrepancy K on an n-node graph within
+/// `4 d / (1 − λ(M)) · log(K n / eps)` rounds (paper §3; Rabani et al.
+/// Thm 1, Sauerwald & Sun Thm 2.2).
+///
+/// `lambda` is the round-matrix contraction factor (see
+/// `graph::spectral::contraction_factor`).
+pub fn tau_cont(k: f64, eps: f64, n: usize, d: usize, lambda: f64) -> f64 {
+    assert!(k > 0.0 && eps > 0.0 && lambda < 1.0);
+    4.0 * d as f64 / (1.0 - lambda) * ((k * n as f64) / eps).ln().max(0.0)
+}
+
+/// The discrete-case discrepancy target: `sqrt(12 log n) + 1` (paper §3,
+/// S&S Thm 2.14), in units of the maximum single load l_max.
+///
+/// For unit tokens l_max = 1 and this is the paper's literal bound; for
+/// indivisible real-valued loads, Appendix A scales the edge-error range
+/// to ±l_max/2, so the guaranteed discrepancy is this value times l_max.
+pub fn discrete_discrepancy_bound(n: usize, l_max: f64) -> f64 {
+    assert!(n >= 2);
+    ((12.0 * (n as f64).ln()).sqrt() + 1.0) * l_max
+}
+
+/// Theorem-1 tail: Pr[max_w |x_w − xi_w| >= sqrt(4 δ log n) · l_max]
+/// <= 2 n^{1−δ}, returned as (deviation_bound, probability).
+pub fn theorem1_tail(n: usize, delta: f64, l_max: f64) -> (f64, f64) {
+    assert!(n >= 2 && delta >= 1.0);
+    let dev = (4.0 * delta * (n as f64).ln()).sqrt() * l_max;
+    let prob = 2.0 * (n as f64).powf(1.0 - delta);
+    (dev, prob)
+}
+
+/// Lemma 5: the maximum deviation of the SortedGreedy two-bin result from
+/// the continuous split is |d_max| <= l_1 / 2 where l_1 is the heaviest
+/// local load.
+pub fn lemma5_max_error(l1: f64) -> f64 {
+    l1 / 2.0
+}
+
+/// Hoeffding-style concentration from Lemma 1 (S&S Lemma 2.12) with
+/// per-edge error ranges g (here |e| <= l_max/2 per edge): probability
+/// that |Z| >= delta given the sum of squared ranges.
+pub fn lemma1_tail(delta: f64, sum_sq_ranges: f64) -> f64 {
+    if sum_sq_ranges <= 0.0 {
+        return 0.0;
+    }
+    (2.0 * (-delta * delta / (2.0 * sum_sq_ranges)).exp()).min(1.0)
+}
+
+/// Eq. 3/4 of §4.1: for m uniform balls on [0,1], the smallest ball is
+/// below 1/m w.h.p., so the last-step discrepancy change obeys
+/// ΔG_m <= W_m <= 1/m.
+pub fn sorted_greedy_last_step_bound(m: usize) -> f64 {
+    assert!(m >= 1);
+    1.0 / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_cont_monotonic() {
+        // More rounds needed for: bigger K, smaller eps, bigger n, bigger
+        // d, lambda closer to 1.
+        let base = tau_cont(100.0, 1.0, 16, 3, 0.5);
+        assert!(tau_cont(1000.0, 1.0, 16, 3, 0.5) > base);
+        assert!(tau_cont(100.0, 0.1, 16, 3, 0.5) > base);
+        assert!(tau_cont(100.0, 1.0, 64, 3, 0.5) > base);
+        assert!(tau_cont(100.0, 1.0, 16, 6, 0.5) > base);
+        assert!(tau_cont(100.0, 1.0, 16, 3, 0.9) > base);
+    }
+
+    #[test]
+    fn tau_cont_nonnegative_even_when_target_exceeds_k() {
+        assert_eq!(tau_cont(1.0, 1000.0, 4, 2, 0.5), 0.0);
+    }
+
+    #[test]
+    fn discrete_bound_values() {
+        // n = 128: sqrt(12 ln 128) + 1 ≈ 8.63
+        let b = discrete_discrepancy_bound(128, 1.0);
+        assert!((b - 8.63).abs() < 0.05, "{b}");
+        // scales linearly with l_max
+        assert!((discrete_discrepancy_bound(128, 100.0) - 100.0 * b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem1_tail_shrinks_with_delta() {
+        let (d1, p1) = theorem1_tail(64, 1.0, 1.0);
+        let (d3, p3) = theorem1_tail(64, 3.0, 1.0);
+        assert!(d3 > d1);
+        assert!(p3 < p1);
+        assert!((p1 - 2.0).abs() < 1e-12); // δ=1 -> trivial probability 2
+    }
+
+    #[test]
+    fn lemma5() {
+        assert_eq!(lemma5_max_error(100.0), 50.0);
+    }
+
+    #[test]
+    fn lemma1_tail_behaviour() {
+        assert_eq!(lemma1_tail(1.0, 0.0), 0.0);
+        let loose = lemma1_tail(1.0, 100.0);
+        let tight = lemma1_tail(10.0, 1.0);
+        assert!(tight < loose);
+        assert!(loose <= 1.0);
+    }
+
+    #[test]
+    fn last_step_bound() {
+        assert_eq!(sorted_greedy_last_step_bound(100), 0.01);
+    }
+}

@@ -1,0 +1,9 @@
+//! Computable forms of the paper's §3 bounds (following Sauerwald & Sun).
+//!
+//! These are used by `bcm-dlb validate`, the E8 bench, and the
+//! theory-bound integration tests to check that measured behaviour stays
+//! inside the proved envelopes.
+
+pub mod bounds;
+
+pub use bounds::*;

@@ -1,0 +1,6 @@
+//! Dependency-free support code: RNG, JSON, statistics, tables.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,5 @@
+//! Realistic workload generators exercising the DLB protocol end-to-end.
+
+pub mod particle_mesh;
+
+pub use particle_mesh::{run_driver, DlbPolicy, DriverResult, ParticleSim};

@@ -1,0 +1,268 @@
+//! PPM-style particle-mesh workload (E9) — the paper's motivating
+//! application (§1, §8: the authors plan to integrate the DLB into the
+//! Parallel Particle-Mesh library).
+//!
+//! A 2-D periodic domain is decomposed into S×S fixed subdomains; each
+//! subdomain is an *indivisible* work packet whose real-valued cost is the
+//! number of particles currently inside it (costs drift as particles
+//! advect — exactly the unpredictable-cost regime DLB targets).  The
+//! subdomains are distributed over P processors; every `dlb_interval`
+//! steps the BCM protocol rebalances them.
+
+use crate::balancer::PairAlgorithm;
+use crate::bcm::{run, Schedule, StopRule};
+use crate::load::{Load, LoadState};
+use crate::util::rng::Pcg64;
+
+/// The particle simulation: swirl advection on the unit torus.
+pub struct ParticleSim {
+    /// subdomain grid side (S×S subdomains)
+    pub s: usize,
+    pub particles: Vec<(f64, f64)>,
+    time: f64,
+}
+
+impl ParticleSim {
+    /// `n_particles` clustered initial condition (two Gaussian blobs), so
+    /// the initial decomposition is strongly imbalanced.
+    pub fn new(s: usize, n_particles: usize, rng: &mut Pcg64) -> Self {
+        let mut particles = Vec::with_capacity(n_particles);
+        for i in 0..n_particles {
+            let (cx, cy) = if i % 2 == 0 { (0.3, 0.3) } else { (0.7, 0.6) };
+            let x = (cx + 0.08 * rng.normal(0.0, 1.0)).rem_euclid(1.0);
+            let y = (cy + 0.08 * rng.normal(0.0, 1.0)).rem_euclid(1.0);
+            particles.push((x, y));
+        }
+        Self {
+            s,
+            particles,
+            time: 0.0,
+        }
+    }
+
+    /// Advect every particle one step through a time-dependent swirl
+    /// (Taylor–Green-like vortex plus a slow drift).
+    pub fn step(&mut self, dt: f64) {
+        use std::f64::consts::PI;
+        let t = self.time;
+        for (x, y) in self.particles.iter_mut() {
+            let u = (PI * *x).sin().powi(2) * (2.0 * PI * *y).sin() * (0.3 * t).cos()
+                + 0.05;
+            let v = -(PI * *y).sin().powi(2) * (2.0 * PI * *x).sin() * (0.3 * t).cos()
+                + 0.02;
+            *x = (*x + dt * u).rem_euclid(1.0);
+            *y = (*y + dt * v).rem_euclid(1.0);
+        }
+        self.time += dt;
+    }
+
+    /// Particles per subdomain (row-major S×S).
+    pub fn counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.s * self.s];
+        let s = self.s as f64;
+        for &(x, y) in &self.particles {
+            let i = ((y * s) as usize).min(self.s - 1);
+            let j = ((x * s) as usize).min(self.s - 1);
+            counts[i * self.s + j] += 1;
+        }
+        counts
+    }
+}
+
+/// Which rebalancing policy the driver applies at each DLB epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DlbPolicy {
+    /// Never rebalance (static block decomposition).
+    None,
+    /// BCM with Greedy per matching.
+    Greedy,
+    /// BCM with SortedGreedy per matching.
+    SortedGreedy,
+}
+
+impl DlbPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DlbPolicy::None => "no-DLB",
+            DlbPolicy::Greedy => "Greedy-BCM",
+            DlbPolicy::SortedGreedy => "SortedGreedy-BCM",
+        }
+    }
+}
+
+/// Result of a full driver run.
+#[derive(Clone, Debug)]
+pub struct DriverResult {
+    pub policy: DlbPolicy,
+    /// Σ_steps max_proc cost — the simulated parallel makespan.
+    pub total_makespan: f64,
+    /// Σ_steps mean_proc cost — the perfect-balance lower bound.
+    pub ideal_makespan: f64,
+    /// Subdomain migrations performed by DLB.
+    pub migrations: usize,
+    /// Makespan time series (per step).
+    pub makespans: Vec<f64>,
+}
+
+impl DriverResult {
+    /// Parallel efficiency vs the perfect-balance bound.
+    pub fn efficiency(&self) -> f64 {
+        self.ideal_makespan / self.total_makespan
+    }
+}
+
+/// Run the particle-mesh workload under a DLB policy.
+///
+/// `procs` processors connected as `schedule`'s graph; `steps` simulation
+/// steps; DLB every `dlb_interval` steps with `sweeps` BCM sweeps.
+#[allow(clippy::too_many_arguments)]
+pub fn run_driver(
+    policy: DlbPolicy,
+    sim: &mut ParticleSim,
+    schedule: &Schedule,
+    procs: usize,
+    steps: usize,
+    dlb_interval: usize,
+    sweeps: usize,
+    rng: &mut Pcg64,
+) -> DriverResult {
+    let nsub = sim.s * sim.s;
+    // static block decomposition: contiguous stripes of subdomains
+    let mut assignment: Vec<u32> = (0..nsub)
+        .map(|i| (i * procs / nsub) as u32)
+        .collect();
+    let mut total_makespan = 0.0;
+    let mut ideal_makespan = 0.0;
+    let mut migrations = 0usize;
+    let mut makespans = Vec::with_capacity(steps);
+
+    for step in 0..steps {
+        sim.step(0.05);
+        let counts = sim.counts();
+        // cost model: per-particle work + fixed per-subdomain mesh work
+        let costs: Vec<f64> = counts.iter().map(|&c| c as f64 + 0.25).collect();
+
+        if policy != DlbPolicy::None && step % dlb_interval == 0 {
+            // Build the load state from the current assignment + costs.
+            let mut state = LoadState::empty(procs);
+            for (sub, &proc) in assignment.iter().enumerate() {
+                state.push(proc as usize, Load::new(sub as u64, costs[sub]));
+            }
+            let algo = match policy {
+                DlbPolicy::Greedy => PairAlgorithm::Greedy,
+                DlbPolicy::SortedGreedy => {
+                    PairAlgorithm::SortedGreedy(crate::balancer::SortAlgo::Quick)
+                }
+                DlbPolicy::None => unreachable!(),
+            };
+            let trace = run(&mut state, schedule, algo, StopRule::sweeps(sweeps), rng);
+            migrations += trace.total_movements();
+            for proc in 0..procs {
+                for l in state.node(proc) {
+                    assignment[l.id as usize] = proc as u32;
+                }
+            }
+        }
+
+        // parallel step cost = max processor load
+        let mut per_proc = vec![0.0f64; procs];
+        for (sub, &proc) in assignment.iter().enumerate() {
+            per_proc[proc as usize] += costs[sub];
+        }
+        let makespan = per_proc.iter().cloned().fold(0.0, f64::max);
+        let total: f64 = per_proc.iter().sum();
+        total_makespan += makespan;
+        ideal_makespan += total / procs as f64;
+        makespans.push(makespan);
+    }
+    DriverResult {
+        policy,
+        total_makespan,
+        ideal_makespan,
+        migrations,
+        makespans,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn particles_stay_in_domain() {
+        let mut rng = Pcg64::new(1);
+        let mut sim = ParticleSim::new(8, 1000, &mut rng);
+        for _ in 0..50 {
+            sim.step(0.05);
+        }
+        assert!(sim
+            .particles
+            .iter()
+            .all(|&(x, y)| (0.0..1.0).contains(&x) && (0.0..1.0).contains(&y)));
+        assert_eq!(sim.counts().iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn clustered_start_is_imbalanced() {
+        let mut rng = Pcg64::new(2);
+        let sim = ParticleSim::new(8, 4000, &mut rng);
+        let counts = sim.counts();
+        let max = *counts.iter().max().unwrap();
+        let mean = 4000.0 / counts.len() as f64;
+        assert!(max as f64 > 3.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn dlb_beats_static_and_sorted_beats_greedy() {
+        let procs = 8;
+        let mut rng = Pcg64::new(3);
+        let g = Graph::random_connected(procs, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let run_policy = |policy: DlbPolicy| -> DriverResult {
+            let mut seed_rng = Pcg64::new(42);
+            let mut sim = ParticleSim::new(16, 20_000, &mut seed_rng);
+            let mut prng = Pcg64::new(7);
+            run_driver(policy, &mut sim, &schedule, procs, 60, 5, 6, &mut prng)
+        };
+        let none = run_policy(DlbPolicy::None);
+        let greedy = run_policy(DlbPolicy::Greedy);
+        let sorted = run_policy(DlbPolicy::SortedGreedy);
+        assert!(
+            sorted.total_makespan < none.total_makespan,
+            "sorted {} vs none {}",
+            sorted.total_makespan,
+            none.total_makespan
+        );
+        assert!(
+            sorted.total_makespan <= greedy.total_makespan * 1.05,
+            "sorted {} vs greedy {}",
+            sorted.total_makespan,
+            greedy.total_makespan
+        );
+        assert!(sorted.efficiency() > none.efficiency());
+        assert!(sorted.migrations > 0);
+    }
+
+    #[test]
+    fn efficiency_bounded_by_one() {
+        let mut rng = Pcg64::new(5);
+        let g = Graph::ring(4);
+        let schedule = Schedule::from_graph(&g);
+        let mut sim = ParticleSim::new(8, 2000, &mut rng);
+        let mut prng = Pcg64::new(9);
+        let r = run_driver(
+            DlbPolicy::SortedGreedy,
+            &mut sim,
+            &schedule,
+            4,
+            20,
+            4,
+            4,
+            &mut prng,
+        );
+        assert!(r.efficiency() <= 1.0 + 1e-9);
+        assert!(r.efficiency() > 0.0);
+        assert_eq!(r.makespans.len(), 20);
+    }
+}

@@ -1,0 +1,127 @@
+//! CLI binary end-to-end: commands run, configs load, exit codes correct.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/{debug,release}/bcm-dlb next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop();
+    p.join("bcm-dlb")
+}
+
+fn run_cli(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn bcm-dlb");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_prints_usage() {
+    let (code, stdout, _) = run_cli(&["help"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("particle-mesh"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (code, _, stderr) = run_cli(&["frobnicate"]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn bad_flag_value_fails() {
+    let (code, _, stderr) = run_cli(&["run", "--n", "banana"]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("integer"));
+}
+
+#[test]
+fn run_small_experiment() {
+    let (code, stdout, stderr) = run_cli(&[
+        "run", "--n", "8", "--loads", "10", "--reps", "2", "--sweeps", "5",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("final discrepancy"));
+}
+
+#[test]
+fn run_with_greedy_and_partial() {
+    let (code, stdout, _) = run_cli(&[
+        "run", "--n", "8", "--loads", "10", "--reps", "1", "--sweeps", "3",
+        "--algo", "greedy", "--mobility", "partial", "--topology", "ring",
+    ]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("\"algorithm\":\"greedy\""));
+    assert!(stdout.contains("\"mobility\":\"partial\""));
+}
+
+#[test]
+fn run_from_config_file() {
+    let dir = std::env::temp_dir().join("bcm_dlb_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.json");
+    std::fs::write(
+        &cfg,
+        r#"{"n": 6, "loads_per_node": 5, "algorithm": "sorted:flash", "reps": 1, "sweeps": 3}"#,
+    )
+    .unwrap();
+    let (code, stdout, stderr) = run_cli(&["run", "--config", cfg.to_str().unwrap()]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("sorted:flash"));
+}
+
+#[test]
+fn spectral_command() {
+    let (code, stdout, _) = run_cli(&["spectral", "--topology", "ring", "--n", "8"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("spectral gap"));
+    assert!(stdout.contains("ergodic"));
+}
+
+#[test]
+fn validate_command_small() {
+    let (code, stdout, stderr) = run_cli(&["validate", "--n", "8", "--topology", "ring"]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("within"));
+    assert!(stdout.contains("envelope"));
+}
+
+#[test]
+fn timings_command_small() {
+    let (code, stdout, _) = run_cli(&["timings", "--reps", "3"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("SortedGreedy/quick"));
+}
+
+#[test]
+fn artifacts_command_if_built() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !manifest.exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (code, stdout, stderr) = run_cli(&["artifacts"]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("all artifacts compile"));
+}
+
+#[test]
+fn particle_mesh_tiny() {
+    let (code, stdout, stderr) = run_cli(&[
+        "particle-mesh", "--procs", "4", "--steps", "10", "--particles", "2000",
+        "--subdomains", "8",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("SortedGreedy-BCM"));
+}

@@ -1,0 +1,235 @@
+//! Cross-module integration: engines agree, the distributed cluster
+//! matches the sequential reference, topologies converge, and failure
+//! injection (weird graphs, degenerate loads) does not break anything.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{run, run_device, Schedule, StopRule};
+use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
+use bcm_dlb::graph::{Graph, Topology};
+use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
+use bcm_dlb::runtime::DeviceAlgo;
+use bcm_dlb::util::rng::Pcg64;
+
+fn sorted() -> PairAlgorithm {
+    PairAlgorithm::SortedGreedy(SortAlgo::Quick)
+}
+
+#[test]
+fn all_topologies_converge() {
+    let mut rng = Pcg64::new(1);
+    for topo in [
+        Topology::Ring,
+        Topology::Path,
+        Topology::Complete,
+        Topology::Star,
+        Topology::Grid2d,
+        Topology::Torus2d,
+        Topology::Hypercube,
+        Topology::RandomConnected,
+    ] {
+        let g = topo.build(16, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            16,
+            30,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let init = state.discrepancy();
+        let trace = run(&mut state, &schedule, sorted(), StopRule::sweeps(40), &mut rng);
+        assert!(
+            trace.final_discrepancy() < init / 5.0,
+            "{topo:?}: init {init}, final {}",
+            trace.final_discrepancy()
+        );
+    }
+}
+
+#[test]
+fn three_engines_agree_on_convergence() {
+    // sequential, device-fallback, and threaded cluster: same protocol,
+    // independent code paths — all should reach tiny discrepancies.
+    let mut rng = Pcg64::new(2);
+    let g = Graph::random_connected(12, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state0 = LoadState::init_uniform_counts(
+        12,
+        40,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let init = state0.discrepancy();
+    let target = init / 10.0;
+
+    let mut s1 = state0.clone();
+    let mut r = Pcg64::new(10);
+    let t1 = run(&mut s1, &schedule, sorted(), StopRule::sweeps(10), &mut r);
+
+    let mut s2 = state0.clone();
+    let mut r = Pcg64::new(20);
+    let t2 = run_device(&mut s2, &schedule, DeviceAlgo::SortedGreedy, 10, None, &mut r).unwrap();
+
+    let mut r = Pcg64::new(30);
+    let mut cluster = Cluster::spawn(state0, WorkerAlgo::SortedGreedy);
+    let t3 = cluster.run(&schedule, 10, &mut r);
+    cluster.shutdown();
+
+    for (name, t) in [("sequential", &t1), ("device-fallback", &t2), ("cluster", &t3)] {
+        assert!(
+            t.final_discrepancy() < target,
+            "{name}: {} >= {target}",
+            t.final_discrepancy()
+        );
+    }
+}
+
+#[test]
+fn minimal_networks() {
+    // n=2 path: single edge, balances in one matching.
+    let mut rng = Pcg64::new(3);
+    let g = Graph::path(2);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::empty(2);
+    for i in 0..10 {
+        state.push(0, Load::new(i, 1.0));
+    }
+    let trace = run(&mut state, &schedule, sorted(), StopRule::sweeps(1), &mut rng);
+    assert_eq!(trace.final_discrepancy(), 0.0);
+}
+
+#[test]
+fn empty_and_degenerate_loads() {
+    let mut rng = Pcg64::new(4);
+    let g = Graph::ring(4);
+    let schedule = Schedule::from_graph(&g);
+
+    // no loads at all
+    let mut empty = LoadState::empty(4);
+    let t = run(&mut empty, &schedule, sorted(), StopRule::sweeps(3), &mut rng);
+    assert_eq!(t.final_discrepancy(), 0.0);
+    assert_eq!(t.total_movements(), 0);
+
+    // all zero-weight loads
+    let mut zeros = LoadState::empty(4);
+    for i in 0..20 {
+        zeros.push((i % 4) as usize, Load::new(i, 0.0));
+    }
+    let t = run(&mut zeros, &schedule, sorted(), StopRule::sweeps(3), &mut rng);
+    assert_eq!(t.final_discrepancy(), 0.0);
+
+    // a single giant load: discrepancy cannot go below its weight
+    let mut giant = LoadState::empty(4);
+    giant.push(0, Load::new(0, 1000.0));
+    let t = run(&mut giant, &schedule, sorted(), StopRule::sweeps(5), &mut rng);
+    assert!((t.final_discrepancy() - 1000.0).abs() < 1e-9);
+}
+
+#[test]
+fn all_loads_pinned_is_a_noop() {
+    let mut rng = Pcg64::new(5);
+    let g = Graph::ring(4);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::empty(4);
+    for i in 0..12 {
+        state.push((i % 4) as usize, Load::pinned(i, (i + 1) as f64));
+    }
+    let before = state.load_vector();
+    let trace = run(&mut state, &schedule, sorted(), StopRule::sweeps(5), &mut rng);
+    assert_eq!(state.load_vector(), before);
+    assert_eq!(trace.total_movements(), 0);
+}
+
+#[test]
+fn heavy_tail_distribution_still_converges_to_lmax_scale() {
+    let mut rng = Pcg64::new(6);
+    let g = Graph::random_connected(16, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::init_uniform_counts(
+        16,
+        50,
+        &WeightDistribution::Pareto { scale: 1.0, alpha: 1.5 },
+        Mobility::Full,
+        &mut rng,
+    );
+    let lmax = state.max_load_weight();
+    let trace = run(&mut state, &schedule, sorted(), StopRule::sweeps(30), &mut rng);
+    // indivisibility floor: final discrepancy is at most ~lmax
+    assert!(
+        trace.final_discrepancy() <= lmax + 1e-6,
+        "final {} vs lmax {lmax}",
+        trace.final_discrepancy()
+    );
+}
+
+#[test]
+fn cluster_with_single_edge_network() {
+    let mut rng = Pcg64::new(7);
+    let g = Graph::path(2);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::empty(2);
+    for i in 0..40 {
+        state.push(0, Load::new(i, 1.0 + (i as f64 % 3.0)));
+    }
+    let mass = state.total_weight();
+    let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
+    let trace = cluster.run(&schedule, 2, &mut rng);
+    let fin = cluster.shutdown();
+    assert!((fin.total_weight() - mass).abs() < 1e-9);
+    assert!(trace.final_discrepancy() <= 3.0);
+}
+
+#[test]
+fn stress_cluster_many_workers() {
+    // 64 worker threads on 1 core: exercises scheduling + channel paths.
+    let mut rng = Pcg64::new(8);
+    let g = Graph::random_connected(64, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        64,
+        10,
+        &WeightDistribution::paper_section6(),
+        Mobility::Partial,
+        &mut rng,
+    );
+    let ids = state.all_ids();
+    let mut cluster = Cluster::spawn(state, WorkerAlgo::Greedy);
+    let trace = cluster.run(&schedule, 3, &mut rng);
+    let fin = cluster.shutdown();
+    assert_eq!(fin.all_ids(), ids);
+    assert!(trace.final_discrepancy() <= trace.initial_discrepancy);
+}
+
+#[test]
+fn incremental_greedy_moves_far_fewer_loads() {
+    // The Fig.2 phenomenon at the protocol level.
+    let mut rng = Pcg64::new(9);
+    let g = Graph::random_connected(32, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state0 = LoadState::init_uniform_counts(
+        32,
+        100,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let mut s1 = state0.clone();
+    let mut r = Pcg64::new(1);
+    let t_sorted = run(&mut s1, &schedule, sorted(), StopRule::sweeps(10), &mut r);
+    let mut s2 = state0;
+    let mut r = Pcg64::new(2);
+    let t_inc = run(
+        &mut s2,
+        &schedule,
+        PairAlgorithm::GreedyIncremental,
+        StopRule::sweeps(10),
+        &mut r,
+    );
+    assert!(
+        t_sorted.total_movements() > 10 * t_inc.total_movements(),
+        "sorted {} vs incremental {}",
+        t_sorted.total_movements(),
+        t_inc.total_movements()
+    );
+}

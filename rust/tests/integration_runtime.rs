@@ -1,0 +1,156 @@
+//! Device-path integration: load the AOT HLO-text artifacts through PJRT,
+//! execute them, and check numerics against the pure-Rust fallback (the
+//! same contract python/tests validates kernel-vs-oracle).
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a message) when artifacts/ is absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use bcm_dlb::bcm::{run_device, Schedule};
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::runtime::{fallback, solve_batch, DeviceAlgo, EdgeProblem, ExecPath, Runtime};
+use bcm_dlb::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn random_problems(n: usize, max_m: usize, seed: u64) -> Vec<EdgeProblem> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let m = rng.range_inclusive(0, max_m);
+            EdgeProblem {
+                weights: (0..m).map(|_| rng.uniform(0.0, 100.0)).collect(),
+                hosts: (0..m).map(|_| rng.below(2) as u8).collect(),
+                base: [rng.uniform(0.0, 50.0), rng.uniform(0.0, 50.0)],
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn device_client_loads_and_compiles() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    assert!(!rt.platform().is_empty());
+    let exe = rt.executable("balance_two_bin_b8_m64").expect("compile");
+    assert_eq!(exe.spec.entry, "balance_two_bin");
+}
+
+#[test]
+fn device_sorted_greedy_matches_fallback() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let problems = random_problems(20, 60, 42);
+    let (dev, path) = solve_batch(Some(&mut rt), DeviceAlgo::SortedGreedy, &problems).unwrap();
+    assert!(matches!(path, ExecPath::Device { .. }), "{path:?}");
+    for (p, d) in problems.iter().zip(&dev) {
+        let f = fallback::solve(p, DeviceAlgo::SortedGreedy);
+        // identical placement decisions modulo f32 rounding inside the
+        // kernel: compare final sums, not per-ball bits (ties among equal
+        // f32 weights may be permuted by the bitonic network)
+        let total: f64 = p.weights.iter().sum::<f64>() + p.base[0] + p.base[1];
+        assert!((d.sums[0] + d.sums[1] - total).abs() < 1e-6);
+        let d_dev = (d.sums[0] - d.sums[1]).abs();
+        let d_fb = (f.sums[0] - f.sums[1]).abs();
+        assert!(
+            (d_dev - d_fb).abs() < 1e-2,
+            "device disc {d_dev} vs fallback {d_fb} (m={})",
+            p.weights.len()
+        );
+    }
+}
+
+#[test]
+fn device_greedy_matches_fallback_exactly() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let problems = random_problems(12, 50, 7);
+    let (dev, _) = solve_batch(Some(&mut rt), DeviceAlgo::Greedy, &problems).unwrap();
+    for (p, d) in problems.iter().zip(&dev) {
+        let f = fallback::solve(p, DeviceAlgo::Greedy);
+        // No sorting stage: arrival order is deterministic, so the
+        // placements must agree bit-for-bit up to f32-vs-f64 tie edges,
+        // which are measure-zero for uniform draws.
+        assert_eq!(d.assign, f.assign, "m={}", p.weights.len());
+        assert_eq!(d.movements, f.movements);
+    }
+}
+
+#[test]
+fn device_handles_batch_larger_than_bucket() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    // 100 problems forces chunking over any bucket's B
+    let problems = random_problems(100, 30, 11);
+    let (dev, path) = solve_batch(Some(&mut rt), DeviceAlgo::SortedGreedy, &problems).unwrap();
+    assert_eq!(dev.len(), 100);
+    if let ExecPath::Device { launches, .. } = path {
+        assert!(launches >= 2, "expected chunked launches, got {launches}");
+    } else {
+        panic!("expected device path");
+    }
+}
+
+#[test]
+fn device_full_bcm_protocol_run() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let mut rng = Pcg64::new(3);
+    let g = Graph::random_connected(16, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::init_uniform_counts(
+        16,
+        20,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let ids = state.all_ids();
+    let init = state.discrepancy();
+    let trace = run_device(
+        &mut state,
+        &schedule,
+        DeviceAlgo::SortedGreedy,
+        6,
+        Some(&mut rt),
+        &mut rng,
+    )
+    .unwrap();
+    assert_eq!(state.all_ids(), ids, "loads lost on device path");
+    assert!(
+        trace.final_discrepancy() < init / 10.0,
+        "init {init}, final {}",
+        trace.final_discrepancy()
+    );
+}
+
+#[test]
+fn device_oversized_problem_falls_back() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    // 10_000 balls exceeds every two-bin bucket (max M = 512)
+    let problems = random_problems(2, 10_000, 13);
+    let has_big = problems.iter().any(|p| p.weights.len() > 512);
+    let (sols, path) = solve_batch(Some(&mut rt), DeviceAlgo::SortedGreedy, &problems).unwrap();
+    assert_eq!(sols.len(), 2);
+    if has_big {
+        assert_eq!(path, ExecPath::Fallback);
+    }
+}

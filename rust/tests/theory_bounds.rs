@@ -1,0 +1,167 @@
+//! E8: measured protocol behaviour stays inside the §3 theory envelope.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{run, Schedule, StopRule};
+use bcm_dlb::experiments::validate::validate;
+use bcm_dlb::graph::{round_matrix, spectral, Graph, Topology};
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::theory;
+use bcm_dlb::util::rng::Pcg64;
+
+#[test]
+fn theorem1_envelope_holds_across_topologies() {
+    for topo in [Topology::Ring, Topology::Torus2d, Topology::Hypercube, Topology::RandomConnected] {
+        for n in [8usize, 16, 64] {
+            let r = validate(&topo, n, 50, 77);
+            assert!(
+                r.within_bound,
+                "{topo:?} n={n}: final {} > bound {}",
+                r.measured_final_disc, r.discrete_bound
+            );
+        }
+    }
+}
+
+#[test]
+fn contraction_factor_orders_topologies() {
+    // Denser graphs contract faster than rings.  The hypercube's
+    // dimension-exchange schedule is special: the product of its d
+    // matchings is EXACTLY the uniform averaging matrix, so one sweep
+    // balances perfectly (sigma2 = 0) — the classical dimension-exchange
+    // result.
+    let n = 16;
+    let mut rng = Pcg64::new(5);
+    let sig = |topo: Topology, rng: &mut Pcg64| {
+        let g = topo.build(n, rng);
+        let s = Schedule::from_graph(&g);
+        let m = round_matrix(n, s.matchings());
+        spectral::contraction_factor(&m, 500, 3)
+    };
+    let ring = sig(Topology::Ring, &mut rng);
+    let hyper = sig(Topology::Hypercube, &mut rng);
+    let complete = sig(Topology::Complete, &mut rng);
+    assert!(hyper < 1e-6, "hypercube sweep should average exactly, got {hyper}");
+    assert!(complete < ring, "complete {complete} >= ring {ring}");
+    assert!(ring > 0.5 && ring < 1.0, "ring contraction {ring}");
+}
+
+#[test]
+fn convergence_rate_tracks_spectral_gap() {
+    // A graph with a larger spectral gap reaches a fixed target in fewer
+    // rounds (comparing ring vs complete at the same n and load set).
+    let n = 16;
+    let mut rounds_for = |topo: Topology| -> usize {
+        let mut rng = Pcg64::new(9);
+        let g = topo.build(n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            n,
+            50,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let target = state.discrepancy() / 20.0;
+        let trace = run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(300),
+            &mut rng,
+        );
+        trace.rounds_to_reach(target).unwrap_or(usize::MAX)
+    };
+    let ring_rounds = rounds_for(Topology::Ring);
+    let complete_rounds = rounds_for(Topology::Complete);
+    assert!(
+        complete_rounds < ring_rounds,
+        "complete {complete_rounds} >= ring {ring_rounds}"
+    );
+}
+
+#[test]
+fn lemma5_error_bound_empirical() {
+    // per-matching error |e_f - e_c| <= l1/2 (Lemma 5): verify over many
+    // random two-bin instances.
+    use bcm_dlb::balancer::sorted_greedy;
+    for seed in 0..100 {
+        let mut rng = Pcg64::new(seed);
+        let m = 1 + rng.below(60);
+        let weights: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let l1 = weights.iter().cloned().fold(0.0, f64::max);
+        let p = sorted_greedy(&weights, 2, SortAlgo::Quick);
+        // e_f = |U0 - U1| / 2 distance from the perfect half-split
+        let total: f64 = weights.iter().sum();
+        let e_f = (p.sums[0] - total / 2.0).abs();
+        assert!(
+            e_f <= theory::lemma5_max_error(l1) + 1e-9,
+            "seed {seed}: e_f {e_f} > l1/2 {}",
+            l1 / 2.0
+        );
+    }
+}
+
+#[test]
+fn tau_cont_predicts_continuous_convergence() {
+    // The continuous process x <- xM reaches eps-discrepancy within
+    // tau_cont rounds (the bound must hold for the linear system itself).
+    let n = 12;
+    let mut rng = Pcg64::new(11);
+    let g = Graph::random_connected(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let m = round_matrix(n, schedule.matchings());
+    let lambda = spectral::contraction_factor(&m, 500, 1);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 100.0)).collect();
+    let k = {
+        let max = x.iter().cloned().fold(f64::MIN, f64::max);
+        let min = x.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    };
+    let eps = 0.5;
+    let tau_sweeps =
+        theory::tau_cont(k, eps, n, schedule.period(), lambda) / schedule.period() as f64;
+    let mut sweeps = 0usize;
+    loop {
+        x = m.apply_left(&x);
+        sweeps += 1;
+        let max = x.iter().cloned().fold(f64::MIN, f64::max);
+        let min = x.iter().cloned().fold(f64::MAX, f64::min);
+        if max - min <= eps {
+            break;
+        }
+        assert!(
+            (sweeps as f64) <= tau_sweeps.max(1.0) + 1.0,
+            "continuous process exceeded tau bound: {sweeps} > {tau_sweeps}"
+        );
+    }
+}
+
+#[test]
+fn discrete_floor_scales_with_lmax() {
+    // Indivisibility floor: scaling all weights by c scales the final
+    // discrepancy by ~c (the protocol is scale-equivariant).
+    let run_with_scale = |scale: f64| -> f64 {
+        let mut rng = Pcg64::new(13);
+        let g = Graph::random_connected(16, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            16,
+            50,
+            &WeightDistribution::Uniform { lo: 0.0, hi: scale },
+            Mobility::Full,
+            &mut rng,
+        );
+        let trace = run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(25),
+            &mut rng,
+        );
+        trace.final_discrepancy()
+    };
+    let d1 = run_with_scale(1.0);
+    let d100 = run_with_scale(100.0);
+    // identical seeds -> identical protocol decisions -> exact scaling
+    assert!((d100 / d1 - 100.0).abs() < 1.0, "d1={d1} d100={d100}");
+}
