@@ -67,7 +67,10 @@ fn main() {
 
     let movements: usize = trace.iter().map(|r| r.movements).sum();
     println!("\nafter {} rounds ({wall:.2}s):", trace.len());
-    println!("  final discrepancy  {final_disc:.3}  ({}x reduction)", (init_disc / final_disc.max(1e-9)) as u64);
+    println!(
+        "  final discrepancy  {final_disc:.3}  ({}x reduction)",
+        (init_disc / final_disc.max(1e-9)) as u64
+    );
     println!("  edges balanced     {total_edges}  ({:.0} edges/s)", total_edges as f64 / wall);
     println!("  loads moved        {movements}");
     println!(

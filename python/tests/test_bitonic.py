@@ -3,6 +3,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly offline
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.bitonic import bitonic_sort_desc

@@ -1,0 +1,68 @@
+//! Sequential-vs-parallel engine speedup on the n >= 4096 topologies
+//! (the §Perf deliverable of the deterministic parallel engine).
+//!
+//! Every parallel run is checked bit-identical against the sequential
+//! reference before its time is reported, so this bench doubles as a
+//! determinism smoke test.
+//!
+//! `cargo bench --bench hotpath_parallel` runs the full
+//! `experiments::scaling::large_scenarios()` set; `-- --smoke` (or
+//! `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates every scenario to
+//! n=256, 1 sweep, so CI can exercise the harness in seconds.
+
+use bcm_dlb::experiments::scaling::{large_scenarios, run_scaling, scaling_table};
+use bcm_dlb::util::table::f;
+use std::path::Path;
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || env_flag("BCM_DLB_SMOKE")
+        || env_flag("BCM_DLB_QUICK");
+    let thread_ladder = [2usize, 4, 0]; // 0 = auto (one worker per core)
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    eprintln!(
+        "hotpath_parallel: {} scenarios, {cores} cores{}",
+        large_scenarios().len(),
+        if smoke { " (smoke: n=256, 1 sweep)" } else { "" }
+    );
+
+    let start = std::time::Instant::now();
+    let mut diverged = false;
+    let mut best_overall: f64 = 0.0;
+    for scenario in large_scenarios() {
+        // Smoke mode keeps the scenario set but shrinks every instance
+        // (all four topologies build at n=256: 2^8, 16^2, 4*8*8, d=8).
+        let (n, loads, sweeps) = if smoke {
+            (256, 10, 1)
+        } else {
+            (scenario.n, scenario.loads_per_node, 2)
+        };
+        let report = run_scaling(&scenario.topology, n, loads, sweeps, 2013, &thread_ladder);
+        let t = scaling_table(&report);
+        println!("{}", t.render());
+        t.write_csv(Path::new(&format!(
+            "results/hotpath_parallel_{}.csv",
+            scenario.name
+        )))
+        .ok();
+        if !report.all_identical() {
+            eprintln!("DIVERGENCE: {} parallel != sequential", scenario.name);
+            diverged = true;
+        }
+        best_overall = best_overall.max(report.best_speedup());
+    }
+    eprintln!(
+        "hotpath_parallel completed in {:.1}s; best speedup {}x",
+        start.elapsed().as_secs_f64(),
+        f(best_overall, 2)
+    );
+    if diverged {
+        std::process::exit(1);
+    }
+}

@@ -330,7 +330,10 @@ mod tests {
             let a = PairAlgorithm::parse(s).unwrap();
             assert_eq!(PairAlgorithm::parse(&a.name()), Some(a));
         }
-        assert_eq!(PairAlgorithm::parse("sorted"), Some(PairAlgorithm::SortedGreedy(SortAlgo::Quick)));
+        assert_eq!(
+            PairAlgorithm::parse("sorted"),
+            Some(PairAlgorithm::SortedGreedy(SortAlgo::Quick))
+        );
         assert_eq!(PairAlgorithm::parse("zzz"), None);
     }
 }

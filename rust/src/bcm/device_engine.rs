@@ -9,8 +9,8 @@ use super::schedule::Schedule;
 use super::trace::{RoundStats, RunTrace};
 use crate::load::{Load, LoadState};
 use crate::runtime::{solve_batch, DeviceAlgo, EdgeProblem, Runtime};
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
-use anyhow::Result;
 
 /// Run `sweeps` full sweeps of the schedule through the device path.
 pub fn run_device(

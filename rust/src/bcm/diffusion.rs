@@ -19,15 +19,10 @@ use crate::load::{Load, LoadState};
 use crate::util::rng::Pcg64;
 
 /// First-order-diffusion protocol with greedy indivisible rounding.
+#[derive(Default)]
 pub struct Diffusion {
     /// Edge weight alpha; None = 1/(maxdeg+1) (the safe uniform choice).
     pub alpha: Option<f64>,
-}
-
-impl Default for Diffusion {
-    fn default() -> Self {
-        Self { alpha: None }
-    }
 }
 
 impl Diffusion {

@@ -6,6 +6,16 @@
 //! algorithm.  Edges within a class are vertex-disjoint, so sequential
 //! application is observationally identical to the concurrent execution
 //! the distributed coordinator performs.
+//!
+//! Two entry points share the sweep/stop-rule driver:
+//!
+//! * [`run`] — the historical stream-based API: edges consume one shared
+//!   RNG stream in order, so results depend on edge iteration order.
+//! * the [`Engine`] trait ([`Sequential`] here, `Parallel` in
+//!   `bcm::parallel`) — counter-based: edge `e` of round `t` draws from
+//!   `Pcg64::for_edge(seed, t, e)`, making the run a pure function of
+//!   `(seed, schedule, state)`.  `Sequential` and `Parallel` are
+//!   bit-identical for every thread count.
 
 use super::schedule::Schedule;
 use super::trace::{RoundStats, RunTrace};
@@ -41,13 +51,65 @@ impl StopRule {
     }
 }
 
-/// Run the BCM protocol on `state`, mutating it in place.
-pub fn run(
+/// A BCM round executor.
+///
+/// Implementations differ only in *how* a round's matching is applied
+/// (one thread, many threads, a device, ...); the protocol semantics and
+/// the randomness are fixed by the counter-based per-edge streams, so any
+/// two engines given the same `(state, schedule, algo, stop, seed)` must
+/// produce bit-identical traces and final states.
+pub trait Engine {
+    /// Engine name for tables and logs.
+    fn name(&self) -> &'static str;
+
+    /// Run the protocol on `state`, mutating it in place.
+    fn run(
+        &self,
+        state: &mut LoadState,
+        schedule: &Schedule,
+        algo: PairAlgorithm,
+        stop: StopRule,
+        seed: u64,
+    ) -> RunTrace;
+}
+
+/// The single-threaded [`Engine`]: edges applied in matching order, each
+/// with its own `(seed, round, edge)` stream.
+pub struct Sequential;
+
+impl Engine for Sequential {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn run(
+        &self,
+        state: &mut LoadState,
+        schedule: &Schedule,
+        algo: PairAlgorithm,
+        stop: StopRule,
+        seed: u64,
+    ) -> RunTrace {
+        drive(state, schedule, stop, |state, pairs, round| {
+            let mut movements = 0usize;
+            for (e, &(u, v)) in pairs.iter().enumerate() {
+                let mut rng = Pcg64::for_edge(seed, round, e);
+                movements += balance_edge(state, u as usize, v as usize, algo, &mut rng);
+            }
+            movements
+        })
+    }
+}
+
+/// The shared sweep loop: round-robin over the schedule's colors, record
+/// per-round stats, stop on `stop.max_sweeps` or the plateau rule.
+/// `round_fn(state, pairs, round)` applies one matching and returns the
+/// movement count.
+pub(crate) fn drive(
     state: &mut LoadState,
     schedule: &Schedule,
-    algo: PairAlgorithm,
     stop: StopRule,
-    rng: &mut Pcg64,
+    mut round_fn: impl FnMut(&mut LoadState, &[(u32, u32)], usize) -> usize,
 ) -> RunTrace {
     assert_eq!(state.n(), schedule.n(), "state/schedule size mismatch");
     let mut trace = RunTrace {
@@ -59,11 +121,8 @@ pub fn run(
     let mut last_sweep_disc = trace.initial_discrepancy;
     for _sweep in 0..stop.max_sweeps {
         for color in 0..d {
-            let mut movements = 0usize;
-            let pairs = schedule.matching(round).to_vec();
-            for &(u, v) in &pairs {
-                movements += balance_edge(state, u as usize, v as usize, algo, rng);
-            }
+            let pairs = schedule.matching(round);
+            let movements = round_fn(state, pairs, round);
             trace.rounds.push(RoundStats {
                 round,
                 color,
@@ -83,6 +142,27 @@ pub fn run(
         last_sweep_disc = disc;
     }
     trace
+}
+
+/// Run the BCM protocol on `state`, mutating it in place.
+///
+/// This is the historical stream-based API (one shared RNG consumed in
+/// edge order); prefer the [`Engine`] implementations for runs that must
+/// be reproducible independent of execution order.
+pub fn run(
+    state: &mut LoadState,
+    schedule: &Schedule,
+    algo: PairAlgorithm,
+    stop: StopRule,
+    rng: &mut Pcg64,
+) -> RunTrace {
+    drive(state, schedule, stop, |state, pairs, _round| {
+        let mut movements = 0usize;
+        for &(u, v) in pairs {
+            movements += balance_edge(state, u as usize, v as usize, algo, rng);
+        }
+        movements
+    })
 }
 
 /// Rebalance one matched edge in place; returns the movement count.
@@ -110,7 +190,12 @@ mod tests {
     use crate::graph::Graph;
     use crate::load::{Load, Mobility, WeightDistribution};
 
-    fn setup(n: usize, per_node: usize, mobility: Mobility, seed: u64) -> (LoadState, Schedule, Pcg64) {
+    fn setup(
+        n: usize,
+        per_node: usize,
+        mobility: Mobility,
+        seed: u64,
+    ) -> (LoadState, Schedule, Pcg64) {
         let mut rng = Pcg64::new(seed);
         let g = Graph::random_connected(n, &mut rng);
         let schedule = Schedule::from_graph(&g);
@@ -122,6 +207,41 @@ mod tests {
             &mut rng,
         );
         (state, schedule, rng)
+    }
+
+    #[test]
+    fn sequential_engine_is_a_pure_function_of_seed() {
+        let (state0, schedule, _) = setup(12, 20, Mobility::Partial, 8);
+        let algo = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+        let mut s1 = state0.clone();
+        let t1 = Sequential.run(&mut s1, &schedule, algo, StopRule::sweeps(4), 99);
+        let mut s2 = state0.clone();
+        let t2 = Sequential.run(&mut s2, &schedule, algo, StopRule::sweeps(4), 99);
+        assert_eq!(t1, t2);
+        assert_eq!(s1, s2);
+        // a different seed takes a different trajectory
+        let mut s3 = state0.clone();
+        let t3 = Sequential.run(&mut s3, &schedule, algo, StopRule::sweeps(4), 100);
+        assert_ne!(t1, t3);
+    }
+
+    #[test]
+    fn sequential_engine_converges_and_conserves() {
+        let (mut state, schedule, _) = setup(16, 50, Mobility::Full, 9);
+        let ids = state.all_ids();
+        let mass = state.total_weight();
+        let init = state.discrepancy();
+        let trace = Sequential.run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(10),
+            1,
+        );
+        assert!(trace.final_discrepancy() < init / 20.0);
+        assert_eq!(state.all_ids(), ids);
+        assert!((state.total_weight() - mass).abs() < 1e-6);
+        assert_eq!(Sequential.name(), "sequential");
     }
 
     #[test]

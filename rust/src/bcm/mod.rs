@@ -3,13 +3,15 @@
 pub mod device_engine;
 pub mod diffusion;
 pub mod engine;
+pub mod parallel;
 pub mod random_matching;
 pub mod schedule;
 pub mod trace;
 
 pub use device_engine::{balance_round, run_device};
 pub use diffusion::Diffusion;
-pub use engine::{balance_edge, run, StopRule};
+pub use engine::{balance_edge, run, Engine, Sequential, StopRule};
+pub use parallel::{parallel_round, Parallel};
 pub use random_matching::{random_maximal_matching, run_rmm};
 pub use schedule::Schedule;
 pub use trace::{RoundStats, RunTrace};

@@ -1,0 +1,215 @@
+//! The deterministic multi-threaded BCM engine.
+//!
+//! Edges within a color class are vertex-disjoint (a matching), so the
+//! class can be applied concurrently — the execution model the protocol
+//! actually prescribes, which the sequential engine merely simulates.
+//! `LoadState::split_pairs` hands each edge a mutable view of exactly its
+//! two endpoint load lists; the views are partitioned over
+//! `std::thread::scope` workers and balanced in parallel.
+//!
+//! Determinism: edge `e` of round `t` draws all of its randomness from
+//! `Pcg64::for_edge(seed, t, e)` — a counter-based stream keyed on values,
+//! not on call order.  Together with the disjointness of the per-edge
+//! state mutations this makes the result **bit-identical** to
+//! [`Sequential`](super::engine::Sequential) for every thread count
+//! (asserted by `tests/property_invariants.rs`).
+
+use super::engine::{drive, Engine, StopRule};
+use super::schedule::Schedule;
+use super::trace::RunTrace;
+use crate::balancer::{balance_pair, PairAlgorithm};
+use crate::load::{Load, LoadState};
+use crate::util::rng::Pcg64;
+
+/// The multi-threaded [`Engine`].
+pub struct Parallel {
+    threads: usize,
+}
+
+impl Parallel {
+    /// `threads == 0` means auto (one worker per available core).
+    pub fn new(threads: usize) -> Self {
+        Self { threads }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self { threads: 0 }
+    }
+
+    /// The resolved worker count.
+    pub fn thread_count(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
+impl Engine for Parallel {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run(
+        &self,
+        state: &mut LoadState,
+        schedule: &Schedule,
+        algo: PairAlgorithm,
+        stop: StopRule,
+        seed: u64,
+    ) -> RunTrace {
+        let threads = self.thread_count();
+        drive(state, schedule, stop, |state, pairs, round| {
+            parallel_round(state, pairs, round, algo, seed, threads)
+        })
+    }
+}
+
+/// Apply one matching with up to `threads` workers; returns the movement
+/// count.  Bit-identical to the per-edge sequential application for any
+/// `threads >= 1`.
+pub fn parallel_round(
+    state: &mut LoadState,
+    pairs: &[(u32, u32)],
+    round: usize,
+    algo: PairAlgorithm,
+    seed: u64,
+    threads: usize,
+) -> usize {
+    let threads = threads.max(1).min(pairs.len());
+    if threads <= 1 {
+        // One worker (or <= 1 edge): skip thread setup, same arithmetic.
+        let mut movements = 0usize;
+        for (e, &(u, v)) in pairs.iter().enumerate() {
+            let mut rng = Pcg64::for_edge(seed, round, e);
+            movements += super::engine::balance_edge(state, u as usize, v as usize, algo, &mut rng);
+        }
+        return movements;
+    }
+    let mut slots = state.split_pairs(pairs);
+    let chunk = pairs.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for (ci, part) in slots.chunks_mut(chunk).enumerate() {
+            let offset = ci * chunk;
+            handles.push(scope.spawn(move || {
+                let mut movements = 0usize;
+                for (i, (u_loads, v_loads)) in part.iter_mut().enumerate() {
+                    let mut rng = Pcg64::for_edge(seed, round, offset + i);
+                    movements += balance_slot(u_loads, v_loads, algo, &mut rng);
+                }
+                movements
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel BCM worker panicked"))
+            .sum()
+    })
+}
+
+/// Rebalance one matched edge through its split views; returns the
+/// movement count.  Mirrors `engine::balance_edge` exactly: pinned loads
+/// keep their order, the rebalanced mobile loads are appended.
+fn balance_slot(
+    u_loads: &mut Vec<Load>,
+    v_loads: &mut Vec<Load>,
+    algo: PairAlgorithm,
+    rng: &mut Pcg64,
+) -> usize {
+    let out = balance_pair(u_loads, v_loads, algo, rng);
+    u_loads.retain(|l| !l.mobile);
+    v_loads.retain(|l| !l.mobile);
+    u_loads.extend(out.to_u);
+    v_loads.extend(out.to_v);
+    out.movements
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::SortAlgo;
+    use crate::graph::Graph;
+    use crate::load::{Mobility, WeightDistribution};
+
+    fn setup(n: usize, per_node: usize, mobility: Mobility, seed: u64) -> (LoadState, Schedule) {
+        let mut rng = Pcg64::new(seed);
+        let g = Graph::random_connected(n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let state = LoadState::init_uniform_counts(
+            n,
+            per_node,
+            &WeightDistribution::paper_section6(),
+            mobility,
+            &mut rng,
+        );
+        (state, schedule)
+    }
+
+    #[test]
+    fn matches_sequential_for_every_thread_count() {
+        let (state0, schedule) = setup(24, 25, Mobility::Partial, 1);
+        let algo = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+        let stop = StopRule::sweeps(5);
+        let mut seq = state0.clone();
+        let seq_trace = super::super::engine::Sequential.run(&mut seq, &schedule, algo, stop, 7);
+        for threads in [1, 2, 3, 4, 7] {
+            let mut par = state0.clone();
+            let trace = Parallel::new(threads).run(&mut par, &schedule, algo, stop, 7);
+            assert_eq!(trace, seq_trace, "trace diverged at {threads} threads");
+            assert_eq!(par, seq, "state diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn auto_thread_count_resolves() {
+        let p = Parallel::auto();
+        assert!(p.thread_count() >= 1);
+        assert_eq!(Parallel::new(3).thread_count(), 3);
+        assert_eq!(p.name(), "parallel");
+    }
+
+    #[test]
+    fn converges_and_conserves() {
+        let (mut state, schedule) = setup(32, 30, Mobility::Full, 2);
+        let ids = state.all_ids();
+        let mass = state.total_weight();
+        let init = state.discrepancy();
+        let trace = Parallel::new(4).run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(10),
+            3,
+        );
+        assert!(trace.final_discrepancy() < init / 20.0);
+        assert_eq!(state.all_ids(), ids);
+        assert!((state.total_weight() - mass).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_matching_round_is_a_noop() {
+        let (mut state, _) = setup(8, 10, Mobility::Full, 3);
+        let before = state.clone();
+        let moves = parallel_round(&mut state, &[], 0, PairAlgorithm::Greedy, 1, 4);
+        assert_eq!(moves, 0);
+        assert_eq!(state, before);
+    }
+
+    #[test]
+    fn more_threads_than_edges_is_fine() {
+        let (state0, schedule) = setup(6, 10, Mobility::Full, 4);
+        let algo = PairAlgorithm::Greedy;
+        let stop = StopRule::sweeps(2);
+        let mut a = state0.clone();
+        let ta = Parallel::new(64).run(&mut a, &schedule, algo, stop, 5);
+        let mut b = state0.clone();
+        let tb = super::super::engine::Sequential.run(&mut b, &schedule, algo, stop, 5);
+        assert_eq!(ta, tb);
+        assert_eq!(a, b);
+    }
+}

@@ -1,7 +1,7 @@
 //! Time series recorded while a BCM protocol runs.
 
 /// Statistics of one BCM round (one matching = one color class applied).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundStats {
     /// Index of the round (0-based, counts color classes applied).
     pub round: usize,
@@ -16,7 +16,7 @@ pub struct RoundStats {
 }
 
 /// Full trace of a protocol run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunTrace {
     pub initial_discrepancy: f64,
     pub rounds: Vec<RoundStats>,

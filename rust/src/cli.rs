@@ -73,7 +73,13 @@ COMMANDS
   run            run one BCM experiment
                  --config FILE | --n N --loads L --algo A --mobility M
                  --topology T --sweeps S --seed X [--device] [--cluster]
+                 [--threads K]  deterministic parallel engine (0 = auto,
+                                1 = sequential; identical results)
                  [--trace-out FILE.csv]  per-round time series (rep 0)
+  scale          sequential-vs-parallel engine scaling report
+                 [--n N] [--topology T] [--loads L] [--sweeps S]
+                 [--threads K] [--seed X]  (default: n=4096 torus2d,
+                 thread ladder 2/4/auto; verifies trace identity)
   sweep          the paper's full §6 sweep (Figs. 1-3 data)
                  [--quick]
   fig1..fig5     regenerate one figure's table(s)   [--quick]
@@ -91,7 +97,7 @@ FLAGS (run)
   --algo     greedy | sorted | sorted:SORT | random     (SORT: quick/merge/flash/std)
   --mobility full | partial
   --topology random | ring | path | complete | star | grid2d | torus2d |
-             hypercube | er:P
+             torus3d | hypercube | er:P | regular:D | scalefree:M
   --device   execute matchings through the PJRT artifacts
   --cluster  run on the multi-threaded leader/worker coordinator
 ";

@@ -6,8 +6,9 @@
 use crate::balancer::PairAlgorithm;
 use crate::graph::Topology;
 use crate::load::{Mobility, WeightDistribution};
+use crate::anyhow;
+use crate::util::error::Result;
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 
 /// One protocol experiment.
 #[derive(Clone, Debug)]
@@ -23,6 +24,10 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Use the PJRT device path when artifacts are available.
     pub use_device: bool,
+    /// Engine worker threads: 1 = sequential reference engine, 0 = one
+    /// worker per core, k > 1 = the deterministic parallel engine with k
+    /// workers.  Results are bit-identical across all values.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -38,6 +43,7 @@ impl Default for ExperimentConfig {
             reps: 10,
             seed: 2013,
             use_device: false,
+            threads: 1,
         }
     }
 }
@@ -84,6 +90,9 @@ impl ExperimentConfig {
         if let Some(b) = v.get("use_device").as_bool() {
             cfg.use_device = b;
         }
+        if let Some(x) = v.get("threads").as_usize() {
+            cfg.threads = x;
+        }
         if cfg.n < 2 {
             return Err(anyhow!("config: n must be >= 2"));
         }
@@ -105,6 +114,7 @@ impl ExperimentConfig {
             ("reps", self.reps.into()),
             ("seed", (self.seed as usize).into()),
             ("use_device", self.use_device.into()),
+            ("threads", self.threads.into()),
         ])
     }
 }
@@ -123,6 +133,17 @@ mod tests {
         assert_eq!(back.algorithm, cfg.algorithm);
         assert_eq!(back.mobility, cfg.mobility);
         assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.threads, cfg.threads);
+    }
+
+    #[test]
+    fn threads_parse_and_default() {
+        let cfg = ExperimentConfig::from_json_str(r#"{"threads": 8}"#).unwrap();
+        assert_eq!(cfg.threads, 8);
+        let cfg = ExperimentConfig::from_json_str(r#"{"threads": 0}"#).unwrap();
+        assert_eq!(cfg.threads, 0); // 0 = auto
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.threads, 1);
     }
 
     #[test]

@@ -196,7 +196,12 @@ mod tests {
     use crate::graph::Graph;
     use crate::load::{Mobility, WeightDistribution};
 
-    fn init(n: usize, per_node: usize, mobility: Mobility, seed: u64) -> (LoadState, Schedule, Pcg64) {
+    fn init(
+        n: usize,
+        per_node: usize,
+        mobility: Mobility,
+        seed: u64,
+    ) -> (LoadState, Schedule, Pcg64) {
         let mut rng = Pcg64::new(seed);
         let g = Graph::random_connected(n, &mut rng);
         let schedule = Schedule::from_graph(&g);

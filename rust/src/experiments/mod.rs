@@ -1,7 +1,13 @@
-//! Paper experiment drivers (E1–E8): shared by the CLI and the benches.
+//! Paper experiment drivers (E1–E8) plus the engine-scaling study (E11):
+//! shared by the CLI and the benches.
 
 pub mod common;
 pub mod figures;
+pub mod scaling;
 pub mod validate;
 
 pub use common::{find, run_cell, run_sweep, CellStats, SweepParams, Variant};
+pub use scaling::{
+    large_scenarios, run_scaling, scaling_table, ScalingReport, ScalingScenario,
+    ThreadMeasurement,
+};

@@ -1,0 +1,203 @@
+//! E11: sequential-vs-parallel engine scaling on large topologies.
+//!
+//! Runs the same `(seed, schedule, state)` through the sequential
+//! reference engine and the deterministic parallel engine at a ladder of
+//! thread counts, verifying bit-identical traces/states and reporting
+//! wall-clock speedup.  The `scale` CLI command and the
+//! `hotpath_parallel` bench both drive this module.
+
+use crate::balancer::{PairAlgorithm, SortAlgo};
+use crate::bcm::{Engine, Parallel, Schedule, Sequential, StopRule};
+use crate::graph::Topology;
+use crate::load::{LoadState, Mobility, WeightDistribution};
+use crate::util::rng::Pcg64;
+use crate::util::table::{f, Table};
+use std::time::Instant;
+
+/// One large-topology scenario for the parallel-engine sweeps.
+#[derive(Clone, Debug)]
+pub struct ScalingScenario {
+    pub name: &'static str,
+    pub topology: Topology,
+    pub n: usize,
+    pub loads_per_node: usize,
+}
+
+/// The n >= 4096 scenario set (torus / hypercube / random-regular), the
+/// scale at which the acceptance criterion's >= 2x speedup is measured.
+pub fn large_scenarios() -> Vec<ScalingScenario> {
+    vec![
+        ScalingScenario {
+            name: "torus2d-4096",
+            topology: Topology::Torus2d,
+            n: 4096,
+            loads_per_node: 20,
+        },
+        ScalingScenario {
+            name: "torus3d-4096",
+            topology: Topology::Torus3d,
+            n: 4096,
+            loads_per_node: 20,
+        },
+        ScalingScenario {
+            name: "hypercube-4096",
+            topology: Topology::Hypercube,
+            n: 4096,
+            loads_per_node: 20,
+        },
+        ScalingScenario {
+            name: "regular8-4096",
+            topology: Topology::RandomRegular { d: 8 },
+            n: 4096,
+            loads_per_node: 20,
+        },
+    ]
+}
+
+/// One parallel measurement within a [`ScalingReport`].
+#[derive(Clone, Debug)]
+pub struct ThreadMeasurement {
+    pub threads: usize,
+    pub secs: f64,
+    /// Sequential wall time / parallel wall time.
+    pub speedup: f64,
+    /// Trace AND final state bit-identical to the sequential run.
+    pub identical: bool,
+}
+
+/// Result of one scenario's sequential-vs-parallel comparison.
+#[derive(Clone, Debug)]
+pub struct ScalingReport {
+    pub scenario: String,
+    pub n: usize,
+    pub edges: usize,
+    pub colors: usize,
+    pub seq_secs: f64,
+    pub final_discrepancy: f64,
+    pub rows: Vec<ThreadMeasurement>,
+}
+
+impl ScalingReport {
+    pub fn all_identical(&self) -> bool {
+        self.rows.iter().all(|r| r.identical)
+    }
+
+    /// Best observed speedup across the thread ladder.
+    pub fn best_speedup(&self) -> f64 {
+        self.rows.iter().map(|r| r.speedup).fold(0.0, f64::max)
+    }
+}
+
+/// Run one scenario: a sequential reference run, then one parallel run
+/// per entry of `thread_counts` (0 = auto), each checked for bit-identity.
+pub fn run_scaling(
+    topology: &Topology,
+    n: usize,
+    loads_per_node: usize,
+    sweeps: usize,
+    seed: u64,
+    thread_counts: &[usize],
+) -> ScalingReport {
+    let mut rng = Pcg64::new(seed);
+    let g = topology.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state0 = LoadState::init_uniform_counts(
+        n,
+        loads_per_node,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let algo = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+    let stop = StopRule::sweeps(sweeps);
+
+    let mut seq_state = state0.clone();
+    let t0 = Instant::now();
+    let seq_trace = Sequential.run(&mut seq_state, &schedule, algo, stop, seed);
+    let seq_secs = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::with_capacity(thread_counts.len());
+    for &threads in thread_counts {
+        let engine = Parallel::new(threads);
+        let mut st = state0.clone();
+        let t0 = Instant::now();
+        let trace = engine.run(&mut st, &schedule, algo, stop, seed);
+        let secs = t0.elapsed().as_secs_f64();
+        rows.push(ThreadMeasurement {
+            threads: engine.thread_count(),
+            secs,
+            speedup: seq_secs / secs.max(1e-12),
+            identical: trace == seq_trace && st == seq_state,
+        });
+    }
+    ScalingReport {
+        scenario: topology.name(),
+        n,
+        edges: g.num_edges(),
+        colors: schedule.period(),
+        seq_secs,
+        final_discrepancy: seq_trace.final_discrepancy(),
+        rows,
+    }
+}
+
+/// Render a report in the shared table format (and for CSV export).
+pub fn scaling_table(r: &ScalingReport) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "E11 parallel scaling: {} n={} ({} edges, d={} colors, final disc {:.3})",
+            r.scenario, r.n, r.edges, r.colors, r.final_discrepancy
+        ),
+        &["engine", "threads", "wall_s", "speedup", "identical"],
+    );
+    t.row(vec![
+        "sequential".into(),
+        "1".into(),
+        f(r.seq_secs, 3),
+        "1.00".into(),
+        "-".into(),
+    ]);
+    for m in &r.rows {
+        t.row(vec![
+            "parallel".into(),
+            m.threads.to_string(),
+            f(m.secs, 3),
+            f(m.speedup, 2),
+            m.identical.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_scaling_run_is_identical_across_threads() {
+        let r = run_scaling(&Topology::Torus2d, 64, 10, 2, 42, &[2, 4]);
+        assert_eq!(r.n, 64);
+        assert_eq!(r.rows.len(), 2);
+        assert!(r.all_identical(), "parallel diverged: {r:?}");
+        assert!(r.final_discrepancy.is_finite());
+    }
+
+    #[test]
+    fn scenario_set_covers_large_topologies() {
+        let scenarios = large_scenarios();
+        assert!(scenarios.len() >= 3);
+        assert!(scenarios.iter().all(|s| s.n >= 4096));
+        let names: Vec<&str> = scenarios.iter().map(|s| s.name).collect();
+        assert!(names.contains(&"hypercube-4096"));
+        assert!(names.contains(&"regular8-4096"));
+    }
+
+    #[test]
+    fn table_renders_with_speedup_column() {
+        let r = run_scaling(&Topology::Ring, 16, 5, 1, 1, &[2]);
+        let s = scaling_table(&r).render();
+        assert!(s.contains("speedup"));
+        assert!(s.contains("sequential"));
+        assert!(s.contains("parallel"));
+    }
+}

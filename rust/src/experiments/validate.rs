@@ -24,7 +24,12 @@ pub struct ValidationReport {
 }
 
 /// Run the SortedGreedy BCM and compare against the theory envelope.
-pub fn validate(topology: &Topology, n: usize, loads_per_node: usize, seed: u64) -> ValidationReport {
+pub fn validate(
+    topology: &Topology,
+    n: usize,
+    loads_per_node: usize,
+    seed: u64,
+) -> ValidationReport {
     let mut rng = Pcg64::new(seed);
     let g = topology.build(n, &mut rng);
     let schedule = Schedule::from_graph(&g);

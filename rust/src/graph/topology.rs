@@ -194,6 +194,25 @@ impl Graph {
         Self::from_edges(rows * cols, &edges)
     }
 
+    /// `a x b x c` 3-D torus (wraparound mesh) — the interconnect shape of
+    /// large particle-mesh clusters; the natural n >= 4096 testbed for the
+    /// parallel engine (degree 6, diameter O(n^(1/3))).
+    pub fn torus3d(a: usize, b: usize, c: usize) -> Self {
+        assert!(a >= 2 && b >= 2 && c >= 2);
+        let id = |x: usize, y: usize, z: usize| ((x * b + y) * c + z) as u32;
+        let mut edges = Vec::with_capacity(3 * a * b * c);
+        for x in 0..a {
+            for y in 0..b {
+                for z in 0..c {
+                    edges.push((id(x, y, z), id((x + 1) % a, y, z)));
+                    edges.push((id(x, y, z), id(x, (y + 1) % b, z)));
+                    edges.push((id(x, y, z), id(x, y, (z + 1) % c)));
+                }
+            }
+        }
+        Self::from_edges(a * b * c, &edges)
+    }
+
     /// `d`-dimensional hypercube (n = 2^d vertices).
     pub fn hypercube(d: usize) -> Self {
         assert!(d >= 1);
@@ -275,6 +294,7 @@ pub enum Topology {
     Star,
     Grid2d,
     Torus2d,
+    Torus3d,
     Hypercube,
     /// Random d-regular expander (d even).
     RandomRegular { d: usize },
@@ -304,6 +324,25 @@ impl Topology {
                 assert!(n % rows == 0 && n / rows >= 2, "torus needs composite n");
                 Graph::torus2d(rows, n / rows)
             }
+            Topology::Torus3d => {
+                // Nearest-to-cubic factorization a x b x c, backtracking
+                // over a: the largest a <= cbrt(n) need not leave n/a
+                // splittable (e.g. n=44: a=4 leaves prime 11, a=2 works).
+                let cbrt = (n as f64).cbrt().round() as usize;
+                let (a, b, c) = (2..=cbrt.max(2))
+                    .rev()
+                    .filter(|a| n % a == 0)
+                    .find_map(|a| {
+                        let rest = n / a;
+                        let sqrt = (rest as f64).sqrt().floor() as usize;
+                        (2..=sqrt.max(2))
+                            .rev()
+                            .find(|b| rest % b == 0 && rest / b >= 2)
+                            .map(|b| (a, b, rest / b))
+                    })
+                    .expect("torus3d needs n = a*b*c with a,b,c >= 2");
+                Graph::torus3d(a, b, c)
+            }
             Topology::Hypercube => {
                 assert!(n.is_power_of_two(), "hypercube needs n = 2^d");
                 Graph::hypercube(n.trailing_zeros() as usize)
@@ -322,6 +361,7 @@ impl Topology {
             "star" => Some(Topology::Star),
             "grid" | "grid2d" => Some(Topology::Grid2d),
             "torus" | "torus2d" => Some(Topology::Torus2d),
+            "torus3d" => Some(Topology::Torus3d),
             "hypercube" => Some(Topology::Hypercube),
             s if s.starts_with("er:") => s[3..]
                 .parse::<f64>()
@@ -349,6 +389,7 @@ impl Topology {
             Topology::Star => "star".into(),
             Topology::Grid2d => "grid2d".into(),
             Topology::Torus2d => "torus2d".into(),
+            Topology::Torus3d => "torus3d".into(),
             Topology::Hypercube => "hypercube".into(),
             Topology::RandomRegular { d } => format!("regular:{d}"),
             Topology::ScaleFree { m } => format!("scalefree:{m}"),
@@ -456,6 +497,34 @@ mod tests {
     }
 
     #[test]
+    fn torus3d_structure() {
+        let g = Graph::torus3d(2, 3, 4);
+        assert_eq!(g.n(), 24);
+        assert!(g.is_connected());
+        // dimension of size 2 collapses its wrap edge: degree 5 not 6
+        for v in 0..24 {
+            assert_eq!(g.degree(v), 5);
+        }
+        let g = Graph::torus3d(3, 3, 3);
+        assert_eq!(g.num_edges(), 3 * 27);
+        for v in 0..27 {
+            assert_eq!(g.degree(v), 6);
+        }
+    }
+
+    #[test]
+    fn torus3d_build_factorizes() {
+        let mut rng = Pcg64::new(7);
+        // 44 = 2x2x11 and 76 = 2x2x19 need the backtracking step: the
+        // largest factor below cbrt(n) leaves a prime remainder.
+        for n in [16, 44, 64, 76, 4096] {
+            let g = Topology::Torus3d.build(n, &mut rng);
+            assert_eq!(g.n(), n);
+            assert!(g.is_connected(), "n={n}");
+        }
+    }
+
+    #[test]
     fn hypercube_structure() {
         let g = Graph::hypercube(4);
         assert_eq!(g.n(), 16);
@@ -508,7 +577,17 @@ mod tests {
 
     #[test]
     fn topology_parse_roundtrip() {
-        for name in ["random", "ring", "path", "complete", "star", "grid2d", "torus2d", "hypercube"] {
+        for name in [
+            "random",
+            "ring",
+            "path",
+            "complete",
+            "star",
+            "grid2d",
+            "torus2d",
+            "torus3d",
+            "hypercube",
+        ] {
             let t = Topology::parse(name).unwrap();
             assert_eq!(Topology::parse(&t.name()).unwrap(), t);
         }
@@ -530,6 +609,7 @@ mod tests {
             Topology::Star,
             Topology::Grid2d,
             Topology::Torus2d,
+            Topology::Torus3d,
             Topology::Hypercube,
         ] {
             let g = t.build(16, &mut rng);

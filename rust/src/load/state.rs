@@ -33,11 +33,15 @@ impl Mobility {
 }
 
 /// The assignment of loads to the n processors.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LoadState {
     nodes: Vec<Vec<Load>>,
     next_id: u64,
 }
+
+/// Disjoint mutable views of a matching's endpoint load lists (one
+/// `(u, v)` entry per edge), as handed out by [`LoadState::split_pairs`].
+pub type PairSlots<'a> = Vec<(&'a mut Vec<Load>, &'a mut Vec<Load>)>;
 
 impl LoadState {
     pub fn empty(n: usize) -> Self {
@@ -158,6 +162,41 @@ impl LoadState {
         self.nodes[v].extend(loads);
     }
 
+    /// Split the state into per-edge mutable views of the endpoint load
+    /// lists of `pairs`.
+    ///
+    /// Edges within one BCM color class are vertex-disjoint by
+    /// construction, so every returned view aliases nothing: the views can
+    /// be balanced concurrently (the foundation of `bcm::parallel`).
+    /// Panics if `pairs` is not a matching (a vertex repeats, a self-loop,
+    /// or an index out of range) — the disjointness check is what makes
+    /// the pointer fan-out below sound.
+    pub fn split_pairs(&mut self, pairs: &[(u32, u32)]) -> PairSlots<'_> {
+        let n = self.nodes.len();
+        let mut seen = vec![false; n];
+        for &(u, v) in pairs {
+            let (u, v) = (u as usize, v as usize);
+            assert!(u < n && v < n, "split_pairs: edge ({u},{v}) out of range for n={n}");
+            assert!(u != v, "split_pairs: self-loop ({u},{v})");
+            assert!(
+                !seen[u] && !seen[v],
+                "split_pairs: vertex reused by ({u},{v}) — pairs are not a matching"
+            );
+            seen[u] = true;
+            seen[v] = true;
+        }
+        let base = self.nodes.as_mut_ptr();
+        pairs
+            .iter()
+            .map(|&(u, v)| {
+                // SAFETY: every index is in bounds (checked above) and no
+                // index appears twice across the whole matching (checked
+                // above), so each element is mutably borrowed at most once.
+                unsafe { (&mut *base.add(u as usize), &mut *base.add(v as usize)) }
+            })
+            .collect()
+    }
+
     /// Sorted ids across the whole network (conservation checks).
     pub fn all_ids(&self) -> Vec<u64> {
         let mut ids: Vec<u64> = self.nodes.iter().flatten().map(|l| l.id).collect();
@@ -244,6 +283,36 @@ mod tests {
         assert_eq!(s.pinned_weight(0), 2.0);
         s.give(0, taken);
         assert_eq!(s.node(0).len(), 3);
+    }
+
+    #[test]
+    fn split_pairs_disjoint_views() {
+        let mut s = mk(5, Mobility::Full, 9);
+        let total_before = s.total_loads();
+        {
+            let mut slots = s.split_pairs(&[(0, 3), (1, 2)]);
+            assert_eq!(slots.len(), 2);
+            // move one load across the first edge through the views
+            let l = slots[0].0.pop().unwrap();
+            slots[0].1.push(l);
+        }
+        assert_eq!(s.node(0).len(), 4);
+        assert_eq!(s.node(3).len(), 6);
+        assert_eq!(s.total_loads(), total_before);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a matching")]
+    fn split_pairs_rejects_repeated_vertex() {
+        let mut s = mk(2, Mobility::Full, 10);
+        let _ = s.split_pairs(&[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn split_pairs_rejects_self_loop() {
+        let mut s = mk(2, Mobility::Full, 11);
+        let _ = s.split_pairs(&[(3, 3)]);
     }
 
     #[test]

@@ -2,17 +2,18 @@
 //!
 //! See `bcm-dlb help` (cli::USAGE) for the command reference.
 
-use anyhow::{anyhow, Result};
+use bcm_dlb::anyhow;
 use bcm_dlb::balancer::PairAlgorithm;
-use bcm_dlb::bcm::{run, run_device, Schedule, StopRule};
+use bcm_dlb::bcm::{run_device, Engine, Parallel, Schedule, Sequential, StopRule};
 use bcm_dlb::cli::{Args, USAGE};
 use bcm_dlb::config::ExperimentConfig;
 use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
-use bcm_dlb::experiments::{figures, validate, SweepParams};
+use bcm_dlb::experiments::{figures, scaling, validate, SweepParams};
 use bcm_dlb::graph::{round_matrix, spectral, Topology};
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
 use bcm_dlb::runtime::{default_artifacts_dir, DeviceAlgo, Runtime};
 use bcm_dlb::theory;
+use bcm_dlb::util::error::Result;
 use bcm_dlb::util::rng::Pcg64;
 use bcm_dlb::util::stats::Welford;
 use bcm_dlb::util::table::{f, Table};
@@ -45,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(args),
+        "scale" => cmd_scale(args),
         "sweep" => cmd_sweep(args),
         "fig1" | "fig2" | "fig3" | "fig4" | "fig5" => cmd_fig(args),
         "timings" => cmd_timings(args),
@@ -84,6 +86,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if args.has("device") {
         cfg.use_device = true;
     }
+    cfg.threads = args.get_usize("threads", cfg.threads).map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -102,6 +105,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         None
     };
     let use_cluster = args.has("cluster");
+    if cfg.threads != 1 && (use_cluster || cfg.use_device) {
+        eprintln!(
+            "warning: --threads {} is ignored on the {} path (engine threading only \
+             applies to the in-process engines)",
+            cfg.threads,
+            if use_cluster { "--cluster" } else { "--device" }
+        );
+    }
     for rep in 0..cfg.reps {
         let mut rng = Pcg64::new(cfg.seed.wrapping_add(rep as u64));
         let g = cfg.topology.build(cfg.n, &mut rng);
@@ -129,12 +140,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             };
             run_device(&mut state, &schedule, algo, cfg.sweeps, Some(rt), &mut rng)?
         } else {
-            run(
+            // Engine runs are keyed on the seed, not the shared stream:
+            // the same config reproduces bit-identically at any --threads.
+            let engine: Box<dyn Engine> = if cfg.threads == 1 {
+                Box::new(Sequential)
+            } else {
+                Box::new(Parallel::new(cfg.threads))
+            };
+            engine.run(
                 &mut state,
                 &schedule,
                 cfg.algorithm,
                 StopRule::sweeps(cfg.sweeps),
-                &mut rng,
+                cfg.seed.wrapping_add(rep as u64),
             )
         };
         init_d.push(trace.initial_discrepancy);
@@ -179,6 +197,32 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 4096).map_err(|e| anyhow!(e))?;
+    let topo = Topology::parse(args.get("topology").unwrap_or("torus2d"))
+        .ok_or_else(|| anyhow!("bad --topology"))?;
+    let loads = args.get_usize("loads", 20).map_err(|e| anyhow!(e))?;
+    let sweeps = args.get_usize("sweeps", 2).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 2013).map_err(|e| anyhow!(e))?;
+    let threads: Vec<usize> = match args.get("threads") {
+        Some(_) => vec![args.get_usize("threads", 0).map_err(|e| anyhow!(e))?],
+        None => vec![2, 4, 0], // ladder ending in auto (one per core)
+    };
+    let report = scaling::run_scaling(&topo, n, loads, sweeps, seed, &threads);
+    let t = scaling::scaling_table(&report);
+    println!("{}", t.render());
+    t.write_csv(Path::new("results/e11_scaling.csv")).ok();
+    if report.all_identical() {
+        println!(
+            "parallel engine trace-identical to sequential; best speedup {:.2}x",
+            report.best_speedup()
+        );
+        Ok(())
+    } else {
+        Err(anyhow!("parallel trace diverged from the sequential reference"))
+    }
 }
 
 fn sweep_params(args: &Args) -> SweepParams {

@@ -3,153 +3,248 @@
 //! Follows the /opt/xla-example/load_hlo pattern: text (not serialized
 //! proto) is the interchange format, outputs come back as a tuple
 //! (`return_tuple=True` at lowering time).
+//!
+//! The real client requires the `xla` crate, which is not vendored in the
+//! offline image; it is gated behind the `pjrt` cargo feature.  With the
+//! feature off (the default) an API-compatible stub is compiled instead:
+//! `Runtime::new` fails with an actionable message, so explicit device
+//! requests (`--device`, `artifacts`) error out cleanly, while every path
+//! that runs with `runtime = None` uses the pure-Rust fallback
+//! (`runtime::fallback`), which carries identical semantics.
 
-use super::manifest::{ArtifactSpec, Manifest};
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+pub use imp::{Executable, OutputBuffer, Runtime};
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: ArtifactSpec,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::bail;
+    use crate::runtime::manifest::{ArtifactSpec, Manifest};
+    use crate::util::error::{Context, Result};
+    use std::collections::HashMap;
 
-impl Executable {
-    /// Execute with f32 row-major buffers (one per manifest input).
-    /// Returns one `Vec<f32>`-convertible literal per manifest output.
-    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<OutputBuffer>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (buf, ts) in inputs.iter().zip(&self.spec.inputs) {
-            let numel: usize = ts.shape.iter().product();
-            if buf.len() != numel {
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub spec: ArtifactSpec,
+    }
+
+    impl Executable {
+        /// Execute with f32 row-major buffers (one per manifest input).
+        /// Returns one `Vec<f32>`-convertible literal per manifest output.
+        pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<OutputBuffer>> {
+            if inputs.len() != self.spec.inputs.len() {
                 bail!(
-                    "{}: input '{}' expects {numel} elements, got {}",
+                    "{}: expected {} inputs, got {}",
                     self.spec.name,
-                    ts.name,
-                    buf.len()
+                    self.spec.inputs.len(),
+                    inputs.len()
                 );
             }
-            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: expected {} outputs, got {}",
-                self.spec.name,
-                self.spec.outputs.len(),
-                parts.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, ts)| OutputBuffer::from_literal(lit, ts.dtype.clone()))
-            .collect()
-    }
-}
-
-/// A decoded output tensor (f32 or i32).
-pub enum OutputBuffer {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl OutputBuffer {
-    fn from_literal(lit: xla::Literal, dtype: String) -> Result<Self> {
-        match dtype.as_str() {
-            "f32" => Ok(OutputBuffer::F32(lit.to_vec::<f32>()?)),
-            "i32" => Ok(OutputBuffer::I32(lit.to_vec::<i32>()?)),
-            other => bail!("unsupported output dtype {other}"),
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (buf, ts) in inputs.iter().zip(&self.spec.inputs) {
+                let numel: usize = ts.shape.iter().product();
+                if buf.len() != numel {
+                    bail!(
+                        "{}: input '{}' expects {numel} elements, got {}",
+                        self.spec.name,
+                        ts.name,
+                        buf.len()
+                    );
+                }
+                let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+                literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            if parts.len() != self.spec.outputs.len() {
+                bail!(
+                    "{}: expected {} outputs, got {}",
+                    self.spec.name,
+                    self.spec.outputs.len(),
+                    parts.len()
+                );
+            }
+            parts
+                .into_iter()
+                .zip(&self.spec.outputs)
+                .map(|(lit, ts)| OutputBuffer::from_literal(lit, ts.dtype.clone()))
+                .collect()
         }
     }
 
-    pub fn as_f32(&self) -> &[f32] {
-        match self {
-            OutputBuffer::F32(v) => v,
-            _ => panic!("expected f32 output"),
+    /// A decoded output tensor (f32 or i32).
+    pub enum OutputBuffer {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+    }
+
+    impl OutputBuffer {
+        fn from_literal(lit: xla::Literal, dtype: String) -> Result<Self> {
+            match dtype.as_str() {
+                "f32" => Ok(OutputBuffer::F32(lit.to_vec::<f32>()?)),
+                "i32" => Ok(OutputBuffer::I32(lit.to_vec::<i32>()?)),
+                other => bail!("unsupported output dtype {other}"),
+            }
+        }
+
+        pub fn as_f32(&self) -> &[f32] {
+            match self {
+                OutputBuffer::F32(v) => v,
+                _ => panic!("expected f32 output"),
+            }
+        }
+
+        pub fn as_i32(&self) -> &[i32] {
+            match self {
+                OutputBuffer::I32(v) => v,
+                _ => panic!("expected i32 output"),
+            }
         }
     }
 
-    pub fn as_i32(&self) -> &[i32] {
-        match self {
-            OutputBuffer::I32(v) => v,
-            _ => panic!("expected i32 output"),
+    /// Owns the PJRT CPU client and the compiled-executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, Executable>,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client and load the manifest from `dir`.
+        pub fn new(dir: &std::path::Path) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self {
+                client,
+                manifest,
+                cache: HashMap::new(),
+            })
         }
-    }
-}
 
-/// Owns the PJRT CPU client and the compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, Executable>,
-}
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-impl Runtime {
-    /// Create a CPU PJRT client and load the manifest from `dir`.
-    pub fn new(dir: &std::path::Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            manifest,
-            cache: HashMap::new(),
-        })
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+        /// Compile (or fetch from cache) the named artifact.
+        pub fn executable(&mut self, name: &str) -> Result<&Executable> {
+            if !self.cache.contains_key(name) {
+                let spec = self
+                    .manifest
+                    .by_name(name)
+                    .with_context(|| format!("artifact '{name}' not in manifest"))?
+                    .clone();
+                let path = self.manifest.path_of(&spec);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))?;
+                self.cache.insert(name.to_string(), Executable { exe, spec });
+            }
+            Ok(&self.cache[name])
+        }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the named artifact.
-    pub fn executable(&mut self, name: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(name) {
-            let spec = self
+        /// Compile every artifact of an entry point (warm-up).
+        pub fn warm_entry(&mut self, entry: &str) -> Result<usize> {
+            let names: Vec<String> = self
                 .manifest
-                .by_name(name)
-                .with_context(|| format!("artifact '{name}' not in manifest"))?
-                .clone();
-            let path = self.manifest.path_of(&spec);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            self.cache.insert(name.to_string(), Executable { exe, spec });
+                .entries(entry)
+                .iter()
+                .map(|a| a.name.clone())
+                .collect();
+            for n in &names {
+                self.executable(n)?;
+            }
+            Ok(names.len())
         }
-        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::bail;
+    use crate::runtime::manifest::{ArtifactSpec, Manifest};
+    use crate::util::error::Result;
+
+    /// Stub of the compiled-artifact handle (the `pjrt` feature is off).
+    pub struct Executable {
+        pub spec: ArtifactSpec,
     }
 
-    /// Compile every artifact of an entry point (warm-up).
-    pub fn warm_entry(&mut self, entry: &str) -> Result<usize> {
-        let names: Vec<String> = self
-            .manifest
-            .entries(entry)
-            .iter()
-            .map(|a| a.name.clone())
-            .collect();
-        for n in &names {
-            self.executable(n)?;
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<OutputBuffer>> {
+            bail!(
+                "{}: PJRT execution requires the `pjrt` feature",
+                self.spec.name
+            )
         }
-        Ok(names.len())
+    }
+
+    /// A decoded output tensor (f32 or i32).
+    pub enum OutputBuffer {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+    }
+
+    impl OutputBuffer {
+        pub fn as_f32(&self) -> &[f32] {
+            match self {
+                OutputBuffer::F32(v) => v,
+                _ => panic!("expected f32 output"),
+            }
+        }
+
+        pub fn as_i32(&self) -> &[i32] {
+            match self {
+                OutputBuffer::I32(v) => v,
+                _ => panic!("expected i32 output"),
+            }
+        }
+    }
+
+    /// Stub runtime: `new` always fails, so no instance ever exists and
+    /// the instance methods below are unreachable — explicit device
+    /// requests fail fast, and the `runtime = None` paths carry on with
+    /// the pure-Rust fallback.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn new(dir: &std::path::Path) -> Result<Self> {
+            // Validate the manifest anyway so configuration errors surface
+            // with the same message whether or not the feature is on.
+            let _ = Manifest::load(dir)?;
+            bail!(
+                "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+                 (artifacts in {} cannot be executed on-device; the pure-Rust \
+                 fallback engine carries identical semantics)",
+                dir.display()
+            )
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            unreachable!("stub Runtime cannot be constructed (pjrt feature off)")
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("stub Runtime cannot be constructed (pjrt feature off)")
+        }
+
+        pub fn executable(&mut self, _name: &str) -> Result<&Executable> {
+            unreachable!("stub Runtime cannot be constructed (pjrt feature off)")
+        }
+
+        pub fn warm_entry(&mut self, _entry: &str) -> Result<usize> {
+            unreachable!("stub Runtime cannot be constructed (pjrt feature off)")
+        }
     }
 }

@@ -9,7 +9,9 @@
 
 use super::client::Runtime;
 use super::fallback;
-use anyhow::{bail, Result};
+use crate::anyhow;
+use crate::bail;
+use crate::util::error::Result;
 
 /// One two-bin problem: the mobile pool (arrival order) and the pinned
 /// base sums.  `hosts[i]` is the original side (0/1) of ball `i`.
@@ -96,7 +98,7 @@ fn solve_on_device(
     };
     let (bucket_b, bucket_m) = spec
         .batch_shape()
-        .ok_or_else(|| anyhow::anyhow!("artifact {} has no batch shape", spec.name))?;
+        .ok_or_else(|| anyhow!("artifact {} has no batch shape", spec.name))?;
 
     let mut solutions: Vec<EdgeSolution> = Vec::with_capacity(problems.len());
     let mut launches = 0usize;

@@ -4,8 +4,10 @@
 //! artifact: entry point, file, input/output shapes and dtypes.  The
 //! runtime uses it to pick the smallest shape bucket that fits a batch.
 
+use crate::anyhow;
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug, PartialEq)]

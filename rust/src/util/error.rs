@@ -1,0 +1,139 @@
+//! Minimal error handling (anyhow is not vendored in this offline image).
+//!
+//! Provides the small slice of `anyhow`'s API the crate uses: a
+//! message-carrying [`Error`], a defaulted [`Result`] alias, the
+//! [`Context`] extension trait for `Result` and `Option`, and the
+//! crate-root [`anyhow!`](crate::anyhow) / [`bail!`](crate::bail) macros.
+
+use std::fmt;
+
+/// A message-style error (the offline stand-in for `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`.  `Error` itself deliberately does NOT
+// implement `std::error::Error`, so this blanket impl cannot overlap the
+// reflexive `From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value
+/// (the offline stand-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err.to_string())
+    };
+}
+
+/// Early-return with an error (the offline stand-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let e = crate::anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = crate::anyhow!("value {x} and {}", 4);
+        assert_eq!(e.to_string(), "value 3 and 4");
+        let s = String::from("owned");
+        let e = crate::anyhow!(s);
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                crate::bail!("failed with {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(5u32).context("ignored").unwrap(), 5);
+    }
+}

@@ -1,5 +1,6 @@
-//! Dependency-free support code: RNG, JSON, statistics, tables.
+//! Dependency-free support code: errors, RNG, JSON, statistics, tables.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -82,6 +82,28 @@ fn run_from_config_file() {
 }
 
 #[test]
+fn run_with_parallel_engine() {
+    let (code, stdout, stderr) = run_cli(&[
+        "run", "--n", "16", "--loads", "10", "--reps", "1", "--sweeps", "3",
+        "--threads", "4",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("\"threads\":4"));
+    assert!(stdout.contains("final discrepancy"));
+}
+
+#[test]
+fn scale_command_small() {
+    let (code, stdout, stderr) = run_cli(&[
+        "scale", "--n", "32", "--topology", "torus2d", "--loads", "5", "--sweeps", "1",
+        "--threads", "2",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("speedup"));
+    assert!(stdout.contains("trace-identical"));
+}
+
+#[test]
 fn spectral_command() {
     let (code, stdout, _) = run_cli(&["spectral", "--topology", "ring", "--n", "8"]);
     assert_eq!(code, 0);

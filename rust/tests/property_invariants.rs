@@ -8,8 +8,8 @@ use bcm_dlb::balancer::refine::swap_refine;
 use bcm_dlb::balancer::{
     balance_pair, greedy, sorted_greedy, PairAlgorithm, SortAlgo,
 };
-use bcm_dlb::bcm::{run, Schedule, StopRule};
-use bcm_dlb::graph::{round_matrix, EdgeColoring, Graph};
+use bcm_dlb::bcm::{run, Engine, Parallel, Schedule, Sequential, StopRule};
+use bcm_dlb::graph::{round_matrix, EdgeColoring, Graph, Topology};
 use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
 use bcm_dlb::runtime::{fallback, DeviceAlgo, EdgeProblem};
 use bcm_dlb::util::rng::Pcg64;
@@ -210,6 +210,98 @@ fn prop_protocol_run_invariants() {
         for r in &trace.rounds {
             assert!(r.discrepancy >= 0.0);
             assert!(r.movements <= state.total_loads());
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_engine_bit_identical_to_sequential() {
+    // The tentpole invariant: for any topology, algorithm, mobility, seed
+    // and thread count, the parallel engine's trace (per-round
+    // discrepancy, movements, edge counts) and final per-node state are
+    // bit-identical to the sequential engine's.
+    forall("parallel == sequential", 10, |rng| {
+        let (topology, n) = match rng.below(5) {
+            0 => (Topology::Ring, 9 + rng.below(24)),
+            1 => (Topology::Torus2d, 36),
+            2 => (Topology::Torus3d, 64),
+            3 => (Topology::Hypercube, 32),
+            _ => (Topology::RandomConnected, 5 + rng.below(30)),
+        };
+        let g = topology.build(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let mobility = if rng.coin() { Mobility::Full } else { Mobility::Partial };
+        let dist = random_dist(rng);
+        let state0 =
+            LoadState::init_uniform_counts(n, 1 + rng.below(25), &dist, mobility, rng);
+        let algo = match rng.below(4) {
+            0 => PairAlgorithm::Greedy,
+            1 => PairAlgorithm::GreedyIncremental,
+            2 => PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            _ => PairAlgorithm::Random,
+        };
+        // include the plateau stop rule so early-exit decisions are also
+        // compared across engines
+        let stop = if rng.coin() {
+            StopRule::sweeps(1 + rng.below(4))
+        } else {
+            StopRule {
+                max_sweeps: 30,
+                rel_tol: 1e-3,
+            }
+        };
+        let seed = rng.next_u64();
+
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(&mut seq_state, &schedule, algo, stop, seed);
+
+        for threads in [1usize, 2, 3, 4, 8] {
+            let mut par_state = state0.clone();
+            let par_trace =
+                Parallel::new(threads).run(&mut par_state, &schedule, algo, stop, seed);
+            assert_eq!(
+                par_trace, seq_trace,
+                "trace diverged: {topology:?} n={n} algo={algo:?} threads={threads}"
+            );
+            assert_eq!(
+                par_state, seq_state,
+                "state diverged: {topology:?} n={n} algo={algo:?} threads={threads}"
+            );
+            assert_eq!(par_state.load_vector(), seq_state.load_vector());
+        }
+        // auto thread count must agree too
+        let mut auto_state = state0.clone();
+        let auto_trace = Parallel::auto().run(&mut auto_state, &schedule, algo, stop, seed);
+        assert_eq!(auto_trace, seq_trace);
+        assert_eq!(auto_state, seq_state);
+    });
+}
+
+#[test]
+fn prop_parallel_engine_keeps_protocol_invariants() {
+    // Conservation and pinning through the threaded path specifically.
+    forall("parallel invariants", 15, |rng| {
+        let n = 6 + rng.below(24);
+        let g = Graph::random_connected(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let dist = random_dist(rng);
+        let mut state =
+            LoadState::init_uniform_counts(n, 2 + rng.below(20), &dist, Mobility::Partial, rng);
+        let ids = state.all_ids();
+        let mass = state.total_weight();
+        let pinned_w: Vec<f64> = (0..n).map(|v| state.pinned_weight(v)).collect();
+        let threads = 2 + rng.below(6);
+        Parallel::new(threads).run(
+            &mut state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(4),
+            rng.next_u64(),
+        );
+        assert_eq!(state.all_ids(), ids);
+        assert!((state.total_weight() - mass).abs() < 1e-6 * mass.max(1.0));
+        for v in 0..n {
+            assert!((state.pinned_weight(v) - pinned_w[v]).abs() < 1e-9);
         }
     });
 }

@@ -10,7 +10,12 @@ use bcm_dlb::util::rng::Pcg64;
 
 #[test]
 fn theorem1_envelope_holds_across_topologies() {
-    for topo in [Topology::Ring, Topology::Torus2d, Topology::Hypercube, Topology::RandomConnected] {
+    for topo in [
+        Topology::Ring,
+        Topology::Torus2d,
+        Topology::Hypercube,
+        Topology::RandomConnected,
+    ] {
         for n in [8usize, 16, 64] {
             let r = validate(&topo, n, 50, 77);
             assert!(
