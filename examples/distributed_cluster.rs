@@ -1,17 +1,18 @@
-//! E10 — the distributed leader/worker coordinator serving BCM rounds.
+//! E10 — the sharded leader/worker coordinator serving BCM rounds.
 //!
 //! ```bash
 //! cargo run --release --example distributed_cluster
 //! ```
 //!
-//! Spawns one worker thread per processor (64 nodes); workers exchange
-//! loads pairwise over channels exactly as the paper's matching model
-//! prescribes (one-to-one communication per round), while the leader only
-//! sequences rounds and aggregates metrics.  Reports throughput and
-//! per-round latency percentiles, then verifies against the sequential
-//! reference engine.
+//! Spawns one worker per core, each owning a contiguous shard of the 64
+//! processors.  Intra-shard edges are solved locally; only the edges
+//! crossing a shard boundary exchange Offer/Settle messages, and every
+//! edge draws from the counter-based `Pcg64::for_edge` streams.  Reports
+//! throughput and per-round latency percentiles, then verifies the run
+//! is **bit-identical** to the sequential reference engine.
 
-use bcm_dlb::bcm::Schedule;
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Engine, RunTrace, Schedule, Sequential, StopRule};
 use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
 use bcm_dlb::graph::Topology;
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
@@ -23,6 +24,7 @@ fn main() {
     let n = 64;
     let loads_per_node = 100;
     let sweeps = 10;
+    let seed = 2013u64;
     let mut rng = Pcg64::new(1);
 
     let g = Topology::RandomConnected.build(n, &mut rng);
@@ -34,45 +36,59 @@ fn main() {
         Mobility::Full,
         &mut rng,
     );
+    let state0 = state.clone();
     let total_loads = state.total_loads();
     let init_disc = state.discrepancy();
+
+    let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
     println!(
-        "cluster: {n} workers, {total_loads} loads, d={} colors, initial discrepancy {init_disc:.1}",
+        "cluster: {} shard workers over {n} nodes, {total_loads} loads, d={} colors, \
+         initial discrepancy {init_disc:.1}",
+        cluster.shards(),
         schedule.period()
     );
 
-    let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
-
-    // Per-round latency measurement: drive rounds one by one.
+    // Per-round latency measurement: drive rounds one by one through the
+    // seeded API, so the whole run reproduces `run_seeded` (and the
+    // sequential engine) bit-exactly.
     let mut latencies_ms = Vec::new();
     let mut total_edges = 0usize;
     let start = Instant::now();
-    let trace = {
-        let mut trace_rounds = Vec::new();
-        let d = schedule.period();
-        for round in 0..sweeps * d {
-            let t0 = Instant::now();
-            let pairs = schedule.matching(round).to_vec();
-            total_edges += pairs.len();
-            // run one round through the public API
-            let t = cluster.run_single_round(&schedule, round, &mut rng);
-            latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-            trace_rounds.push(t);
-        }
-        trace_rounds
-    };
+    let initial_discrepancy = cluster.poll_discrepancy().expect("cluster wedged");
+    let mut rounds = Vec::new();
+    for round in 0..sweeps * schedule.period() {
+        let t0 = Instant::now();
+        total_edges += schedule.matching(round).len();
+        let stats = cluster
+            .run_round_seeded(&schedule, round, seed)
+            .expect("cluster round failed");
+        latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        rounds.push(stats);
+    }
     let wall = start.elapsed().as_secs_f64();
-    let final_disc = cluster.poll_discrepancy();
-    let state = cluster.shutdown();
+    let trace = RunTrace {
+        initial_discrepancy,
+        rounds,
+    };
+    let final_disc = cluster.poll_discrepancy().expect("cluster wedged");
+    let msg_stats = cluster.message_stats();
+    let state = cluster.shutdown().expect("cluster shutdown failed");
 
-    let movements: usize = trace.iter().map(|r| r.movements).sum();
-    println!("\nafter {} rounds ({wall:.2}s):", trace.len());
+    let movements: usize = trace.rounds.iter().map(|r| r.movements).sum();
+    println!("\nafter {} rounds ({wall:.2}s):", trace.rounds.len());
     println!(
         "  final discrepancy  {final_disc:.3}  ({}x reduction)",
         (init_disc / final_disc.max(1e-9)) as u64
     );
-    println!("  edges balanced     {total_edges}  ({:.0} edges/s)", total_edges as f64 / wall);
+    println!(
+        "  edges balanced     {total_edges}  ({:.0} edges/s)",
+        total_edges as f64 / wall
+    );
     println!("  loads moved        {movements}");
+    println!(
+        "  messages           {} leader ctl, {} reports, {} peer (for {} cross-shard edges)",
+        msg_stats.ctl_sent, msg_stats.reports_received, msg_stats.peer_msgs, msg_stats.cross_edges
+    );
     println!(
         "  round latency      p50 {:.2} ms   p99 {:.2} ms   max {:.2} ms",
         percentile(&latencies_ms, 50.0),
@@ -83,5 +99,18 @@ fn main() {
     // consistency: the collected state matches the polled discrepancy
     assert_eq!(state.total_loads(), total_loads, "loads lost!");
     assert!((state.discrepancy() - final_disc).abs() < 1e-9);
-    println!("\nconsistency checks passed (loads conserved, metrics agree)");
+
+    // determinism: the whole distributed run is bit-identical to the
+    // sequential reference engine with the same seed
+    let mut seq_state = state0;
+    let seq_trace = Sequential.run(
+        &mut seq_state,
+        &schedule,
+        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        StopRule::sweeps(sweeps),
+        seed,
+    );
+    assert_eq!(trace, seq_trace, "cluster trace diverged from Sequential");
+    assert_eq!(state, seq_state, "cluster state diverged from Sequential");
+    println!("\nconsistency checks passed (loads conserved, bit-identical to Sequential)");
 }

@@ -1,0 +1,69 @@
+//! Sharded-coordinator scaling: sequential reference vs the cluster at a
+//! ladder of shard counts (the coordinator counterpart of
+//! `hotpath_parallel`).
+//!
+//! Every cluster run is checked bit-identical against the sequential
+//! engine before its time is reported, so this bench doubles as a
+//! determinism smoke test for the coordinator.
+//!
+//! `cargo bench --bench cluster_sharded` runs the n=4096 scenarios;
+//! `-- --smoke` (or `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates to
+//! n=256, 1 sweep, so CI can exercise the sharded protocol in seconds.
+
+use bcm_dlb::coordinator::shard::resolve_shards;
+use bcm_dlb::experiments::scaling::{run_scaling, scaling_table};
+use bcm_dlb::graph::Topology;
+use bcm_dlb::util::table::f;
+use std::path::Path;
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || env_flag("BCM_DLB_SMOKE")
+        || env_flag("BCM_DLB_QUICK");
+    let shard_ladder = [1usize, 2, 4, 0]; // 0 = auto (one worker per core)
+    let cores = resolve_shards(0);
+    let scenarios: Vec<(&str, Topology)> = vec![
+        ("ring", Topology::Ring),
+        ("torus2d", Topology::Torus2d),
+    ];
+    let (n, loads, sweeps) = if smoke { (256, 10, 1) } else { (4096, 20, 2) };
+    eprintln!(
+        "cluster_sharded: {} scenarios at n={n}, {cores} cores{}",
+        scenarios.len(),
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let start = std::time::Instant::now();
+    let mut diverged = false;
+    let mut best_overall: f64 = 0.0;
+    for (name, topology) in scenarios {
+        let report = match run_scaling(&topology, n, loads, sweeps, 2013, &[], &shard_ladder) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cluster_sharded: {name} failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let t = scaling_table(&report);
+        println!("{}", t.render());
+        t.write_csv(Path::new(&format!("results/cluster_sharded_{name}.csv")))
+            .ok();
+        if !report.all_identical() {
+            eprintln!("DIVERGENCE: {name} sharded cluster != sequential");
+            diverged = true;
+        }
+        best_overall = best_overall.max(report.best_speedup());
+    }
+    eprintln!(
+        "cluster_sharded completed in {:.1}s; best speedup {}x",
+        start.elapsed().as_secs_f64(),
+        f(best_overall, 2)
+    );
+    if diverged {
+        std::process::exit(1);
+    }
+}

@@ -139,13 +139,15 @@ fn main() {
         let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
         let mut round = 0usize;
         let s = bench(50, || {
-            let st = cluster.run_single_round(&schedule, round, &mut rng);
+            let st = cluster
+                .run_single_round(&schedule, round, &mut rng)
+                .expect("cluster round failed");
             round += 1;
             st
         });
-        cluster.shutdown();
+        cluster.shutdown().expect("cluster shutdown failed");
         t.row(vec![
-            "cluster round n=64 L/n=100 (threads+channels)".into(),
+            "cluster round n=64 L/n=100 (sharded, one worker/core)".into(),
             format!("{:.2} ms", s * 1e3),
             format!("{:.0} rounds/s", 1.0 / s),
         ]);

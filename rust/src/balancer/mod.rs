@@ -8,5 +8,5 @@ pub mod refine;
 pub mod sorting;
 
 pub use offline::{greedy, lightest_bin, random_place, sorted_greedy, Placement};
-pub use pair::{balance_pair, PairAlgorithm, PairOutcome};
+pub use pair::{balance_pair, balance_pool, PairAlgorithm, PairOutcome};
 pub use sorting::SortAlgo;

@@ -105,7 +105,26 @@ pub fn balance_pair(
             base[1] += l.weight;
         }
     }
+    balance_pool(pool, base, algo, rng)
+}
 
+/// Rebalance an already-pooled edge: `pool` holds the two nodes' mobile
+/// loads in arrival order (u's then v's), each tagged with its current
+/// bin (0 = u, 1 = v); `base` holds the bins' pinned weight sums.
+///
+/// This is the primitive behind [`balance_pair`], exposed so the sharded
+/// coordinator can rebalance a cross-shard edge from an `Offer` message
+/// (the slave ships its mobile loads and pre-summed pinned weight) while
+/// consuming the per-edge RNG stream *exactly* as the in-process engines
+/// do — the orientation flip is always the stream's first draw.  Keeping
+/// one code path here is what makes cluster runs bit-identical to
+/// `bcm::Sequential`.
+pub fn balance_pool(
+    mut pool: Vec<(Load, u8)>,
+    mut base: [f64; 2],
+    algo: PairAlgorithm,
+    rng: &mut Pcg64,
+) -> PairOutcome {
     // Random orientation: swap bin labels with probability 1/2.
     let flip = rng.coin();
     if flip {
@@ -322,6 +341,35 @@ mod tests {
         let u = loads(&[1.0; 30], 0);
         let out = balance_pair(&u, &[], PairAlgorithm::Random, &mut rng);
         assert_eq!(out.to_u.len() + out.to_v.len(), 30);
+    }
+
+    #[test]
+    fn balance_pool_consumes_the_stream_exactly_like_balance_pair() {
+        // The sharded coordinator rebuilds the pool from Offer messages;
+        // the outcome must be bitwise the one balance_pair computes from
+        // the full slices with the same RNG stream.
+        let u = vec![Load::new(0, 3.0), Load::pinned(1, 2.0), Load::new(2, 1.5)];
+        let v = vec![Load::pinned(3, 0.5), Load::new(4, 4.0), Load::new(5, 0.25)];
+        for algo in [
+            PairAlgorithm::Greedy,
+            PairAlgorithm::GreedyIncremental,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            PairAlgorithm::Random,
+        ] {
+            for seed in 0..10u64 {
+                let mut r1 = Pcg64::new(seed);
+                let mut r2 = Pcg64::new(seed);
+                let a = balance_pair(&u, &v, algo, &mut r1);
+                let pool = vec![(u[0], 0u8), (u[2], 0), (v[1], 1), (v[2], 1)];
+                let b = balance_pool(pool, [2.0, 0.5], algo, &mut r2);
+                assert_eq!(a.to_u, b.to_u, "{algo:?} seed {seed}");
+                assert_eq!(a.to_v, b.to_v, "{algo:?} seed {seed}");
+                assert_eq!(a.movements, b.movements);
+                assert_eq!(a.local_discrepancy, b.local_discrepancy);
+                // both consumed the same number of draws
+                assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
     }
 
     #[test]

@@ -104,16 +104,34 @@ impl Engine for Sequential {
 /// The shared sweep loop: round-robin over the schedule's colors, record
 /// per-round stats, stop on `stop.max_sweeps` or the plateau rule.
 /// `round_fn(state, pairs, round)` applies one matching and returns the
-/// movement count.
+/// movement count.  Single-threaded metrics reduction; see [`drive_with`].
 pub(crate) fn drive(
     state: &mut LoadState,
     schedule: &Schedule,
     stop: StopRule,
+    round_fn: impl FnMut(&mut LoadState, &[(u32, u32)], usize) -> usize,
+) -> RunTrace {
+    drive_with(state, schedule, stop, 1, round_fn)
+}
+
+/// [`drive`] with the per-round discrepancy reduction fanned out over up
+/// to `reduce_threads` workers (`LoadState::discrepancy_threaded`).
+///
+/// The reduction was the last single-threaded O(n) term of the round loop
+/// (the Amdahl bottleneck once matchings are applied in parallel at
+/// n >> 4096).  Because the chunked min/max fold is bit-identical to the
+/// scalar one, the resulting `RunTrace` — including plateau-rule stop
+/// decisions — is identical for every value of `reduce_threads`.
+pub(crate) fn drive_with(
+    state: &mut LoadState,
+    schedule: &Schedule,
+    stop: StopRule,
+    reduce_threads: usize,
     mut round_fn: impl FnMut(&mut LoadState, &[(u32, u32)], usize) -> usize,
 ) -> RunTrace {
     assert_eq!(state.n(), schedule.n(), "state/schedule size mismatch");
     let mut trace = RunTrace {
-        initial_discrepancy: state.discrepancy(),
+        initial_discrepancy: state.discrepancy_threaded(reduce_threads),
         rounds: Vec::new(),
     };
     let d = schedule.period();
@@ -126,13 +144,18 @@ pub(crate) fn drive(
             trace.rounds.push(RoundStats {
                 round,
                 color,
-                discrepancy: state.discrepancy(),
+                discrepancy: state.discrepancy_threaded(reduce_threads),
                 movements,
                 edges: pairs.len(),
             });
             round += 1;
         }
-        let disc = state.discrepancy();
+        // the state is unchanged since the sweep's last round recorded
+        // its discrepancy, so reuse it instead of re-reducing O(n)
+        let disc = trace
+            .rounds
+            .last()
+            .map_or(trace.initial_discrepancy, |r| r.discrepancy);
         if stop.rel_tol > 0.0 {
             let improved = (last_sweep_disc - disc).max(0.0);
             if improved <= stop.rel_tol * last_sweep_disc.max(1e-300) {

@@ -14,7 +14,7 @@
 //! [`Sequential`](super::engine::Sequential) for every thread count
 //! (asserted by `tests/property_invariants.rs`).
 
-use super::engine::{drive, Engine, StopRule};
+use super::engine::{drive_with, Engine, StopRule};
 use super::schedule::Schedule;
 use super::trace::RunTrace;
 use crate::balancer::{balance_pair, PairAlgorithm};
@@ -63,7 +63,9 @@ impl Engine for Parallel {
         seed: u64,
     ) -> RunTrace {
         let threads = self.thread_count();
-        drive(state, schedule, stop, |state, pairs, round| {
+        // The same worker pool also fans out the per-round discrepancy
+        // reduction — the O(n) term that would otherwise cap speedup.
+        drive_with(state, schedule, stop, threads, |state, pairs, round| {
             parallel_round(state, pairs, round, algo, seed, threads)
         })
     }
@@ -198,6 +200,32 @@ mod tests {
         let moves = parallel_round(&mut state, &[], 0, PairAlgorithm::Greedy, 1, 4);
         assert_eq!(moves, 0);
         assert_eq!(state, before);
+    }
+
+    #[test]
+    fn threaded_metrics_reduction_keeps_traces_identical_at_scale() {
+        // n large enough that `discrepancy_threaded` takes the chunked
+        // path inside the parallel engine while the sequential reference
+        // still folds scalar — the traces must stay bit-identical.
+        let n = 2 * crate::load::state::REDUCE_CHUNK_MIN;
+        let mut rng = Pcg64::new(5);
+        let g = Graph::ring(n);
+        let schedule = Schedule::from_graph(&g);
+        let state0 = LoadState::init_uniform_counts(
+            n,
+            2,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let algo = PairAlgorithm::Greedy;
+        let stop = StopRule::sweeps(1);
+        let mut seq = state0.clone();
+        let seq_trace = super::super::engine::Sequential.run(&mut seq, &schedule, algo, stop, 11);
+        let mut par = state0.clone();
+        let par_trace = Parallel::new(4).run(&mut par, &schedule, algo, stop, 11);
+        assert_eq!(par_trace, seq_trace);
+        assert_eq!(par, seq);
     }
 
     #[test]

@@ -75,11 +75,15 @@ COMMANDS
                  --topology T --sweeps S --seed X [--device] [--cluster]
                  [--threads K]  deterministic parallel engine (0 = auto,
                                 1 = sequential; identical results)
+                 [--shards K]   sharded coordinator workers on the
+                                --cluster path (0 = one per core;
+                                identical results at any count)
                  [--trace-out FILE.csv]  per-round time series (rep 0)
-  scale          sequential-vs-parallel engine scaling report
+  scale          sequential vs parallel engine vs sharded cluster
                  [--n N] [--topology T] [--loads L] [--sweeps S]
-                 [--threads K] [--seed X]  (default: n=4096 torus2d,
-                 thread ladder 2/4/auto; verifies trace identity)
+                 [--threads K] [--shards K] [--seed X]  (default: n=4096
+                 torus2d, thread ladder 2/4/auto, shard ladder 2/auto;
+                 verifies trace identity, reports edges/s)
   sweep          the paper's full §6 sweep (Figs. 1-3 data)
                  [--quick]
   fig1..fig5     regenerate one figure's table(s)   [--quick]
@@ -99,7 +103,8 @@ FLAGS (run)
   --topology random | ring | path | complete | star | grid2d | torus2d |
              torus3d | hypercube | er:P | regular:D | scalefree:M
   --device   execute matchings through the PJRT artifacts
-  --cluster  run on the multi-threaded leader/worker coordinator
+  --cluster  run on the sharded leader/worker coordinator (one worker
+             per core owning a contiguous node shard; see --shards)
 ";
 
 #[cfg(test)]

@@ -28,6 +28,11 @@ pub struct ExperimentConfig {
     /// worker per core, k > 1 = the deterministic parallel engine with k
     /// workers.  Results are bit-identical across all values.
     pub threads: usize,
+    /// Sharded-coordinator worker count (the `--cluster` path): 0 = one
+    /// shard per core, k = exactly k shards (clamped to n).  Like
+    /// `threads`, purely a performance knob — results are bit-identical
+    /// across all values.
+    pub shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -44,6 +49,7 @@ impl Default for ExperimentConfig {
             seed: 2013,
             use_device: false,
             threads: 1,
+            shards: 0,
         }
     }
 }
@@ -93,6 +99,9 @@ impl ExperimentConfig {
         if let Some(x) = v.get("threads").as_usize() {
             cfg.threads = x;
         }
+        if let Some(x) = v.get("shards").as_usize() {
+            cfg.shards = x;
+        }
         if cfg.n < 2 {
             return Err(anyhow!("config: n must be >= 2"));
         }
@@ -115,6 +124,7 @@ impl ExperimentConfig {
             ("seed", (self.seed as usize).into()),
             ("use_device", self.use_device.into()),
             ("threads", self.threads.into()),
+            ("shards", self.shards.into()),
         ])
     }
 }
@@ -134,6 +144,7 @@ mod tests {
         assert_eq!(back.mobility, cfg.mobility);
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.shards, cfg.shards);
     }
 
     #[test]
@@ -144,6 +155,14 @@ mod tests {
         assert_eq!(cfg.threads, 0); // 0 = auto
         let cfg = ExperimentConfig::from_json_str("{}").unwrap();
         assert_eq!(cfg.threads, 1);
+    }
+
+    #[test]
+    fn shards_parse_and_default() {
+        let cfg = ExperimentConfig::from_json_str(r#"{"shards": 4}"#).unwrap();
+        assert_eq!(cfg.shards, 4);
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.shards, 0); // 0 = one shard per core
     }
 
     #[test]

@@ -1,200 +1,461 @@
-//! The leader: spawns one worker thread per processor, drives the BCM
-//! schedule round by round, aggregates metrics, and tears the cluster
-//! down into a final `LoadState`.
+//! The sharded leader: spawns one worker per core (each owning a
+//! contiguous node shard), drives the BCM schedule round by round,
+//! folds per-shard metrics, and tears the cluster down into a final
+//! `LoadState`.
 //!
-//! This is the deployment shape the paper assumes (§1): local one-to-one
-//! communication only; the leader is pure control plane (schedule +
-//! metrics) — load payloads only ever travel between matched workers.
+//! This is the deployment shape the paper assumes (§1) at shard
+//! granularity: the leader is pure control plane (schedule + metrics) —
+//! load payloads only ever travel between the shards a cut edge spans,
+//! so per-round traffic is O(cross-shard edges + shards) instead of the
+//! O(n) of the historical one-thread-per-processor cluster.
+//!
+//! Determinism: rounds are keyed by a run seed (`run_seeded`) and every
+//! edge draws from `Pcg64::for_edge(seed, round, edge)`, so the trace and
+//! final state are **bit-identical** to `bcm::Sequential` (and
+//! `bcm::Parallel`) for every shard count — asserted by
+//! `tests/property_invariants.rs`.
 
-use super::messages::{Ctl, Peer, Report};
-use super::worker::{Worker, WorkerAlgo};
+use super::messages::{Ctl, Report};
+use super::shard::{RoundPlan, ShardMap};
+use super::worker::{ShardWorker, WorkerAlgo};
+use crate::anyhow;
+use crate::balancer::PairAlgorithm;
 use crate::bcm::{RoundStats, RunTrace, Schedule};
 use crate::load::LoadState;
+use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long the leader waits on worker reports before declaring the
+/// cluster wedged (a worker panic no longer blocks forever).
+const ROUND_TIMEOUT: Duration = Duration::from_secs(60);
+const SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Leader-side message accounting, used to assert the sharding
+/// communication contract: leader traffic is O(shards) per round and
+/// worker-to-worker traffic is O(cross-shard edges).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MessageStats {
+    /// Control messages the leader sent (one per shard per round/poll).
+    pub ctl_sent: usize,
+    /// Reports the leader received (one per shard per round/poll).
+    pub reports_received: usize,
+    /// Worker-to-worker messages (Offer + Settle: two per cross edge).
+    pub peer_msgs: usize,
+    /// Cross-shard edges encountered across all rounds run.
+    pub cross_edges: usize,
+    /// Rounds executed.
+    pub rounds: usize,
+}
 
 pub struct Cluster {
-    n: usize,
+    map: ShardMap,
     ctl_tx: Vec<Sender<Ctl>>,
     report_rx: Receiver<Report>,
     handles: Vec<JoinHandle<()>>,
+    stats: MessageStats,
+    /// Shards that reported a fatal error and exited (they will send no
+    /// `Final` on shutdown).
+    dead: Vec<bool>,
+    /// First worker failure seen, re-surfaced by `shutdown`.
+    failure: Option<String>,
 }
 
 impl Cluster {
-    /// Spawn `n` workers seeded with `state`'s loads.
+    /// Spawn with one worker per available core.
     pub fn spawn(state: LoadState, algo: WorkerAlgo) -> Cluster {
-        let n = state.n();
+        Self::spawn_sharded(state, algo, 0)
+    }
+
+    /// Spawn with an explicit shard count (`0` = one worker per core);
+    /// the count is clamped to the node count.
+    pub fn spawn_sharded(state: LoadState, algo: WorkerAlgo, shards: usize) -> Cluster {
+        Self::spawn_with_algorithm(state, algo.pair(), shards)
+    }
+
+    /// Spawn with any local [`PairAlgorithm`] — the entry point that
+    /// reproduces an engine run with the same algorithm bit-exactly.
+    /// The state is carved into contiguous per-shard slices, each owned
+    /// exclusively by its worker.
+    pub fn spawn_with_algorithm(
+        mut state: LoadState,
+        algo: PairAlgorithm,
+        shards: usize,
+    ) -> Cluster {
+        let map = ShardMap::new(state.n(), shards);
+        let k = map.shards();
         let (report_tx, report_rx) = channel::<Report>();
-        let mut ctl_tx = Vec::with_capacity(n);
-        let mut ctl_rx = Vec::with_capacity(n);
-        let mut peer_tx: Vec<Sender<Peer>> = Vec::with_capacity(n);
-        let mut peer_rx = Vec::with_capacity(n);
-        for _ in 0..n {
+        let mut ctl_tx = Vec::with_capacity(k);
+        let mut ctl_rx = Vec::with_capacity(k);
+        let mut peer_tx = Vec::with_capacity(k);
+        let mut peer_rx = Vec::with_capacity(k);
+        for _ in 0..k {
             let (ct, cr) = channel::<Ctl>();
             ctl_tx.push(ct);
             ctl_rx.push(Some(cr));
-            let (pt, pr) = channel::<Peer>();
+            let (pt, pr) = channel();
             peer_tx.push(pt);
             peer_rx.push(Some(pr));
         }
-        let mut handles = Vec::with_capacity(n);
-        for (v, loads) in (0..n).zip((0..n).map(|v| state.node(v).to_vec())) {
-            let worker = Worker {
-                id: v as u32,
-                loads,
+        let mut handles = Vec::with_capacity(k);
+        for s in 0..k {
+            let range = map.range(s);
+            let nodes: Vec<_> = range
+                .clone()
+                .map(|v| std::mem::take(state.node_mut(v)))
+                .collect();
+            let worker = ShardWorker {
+                shard: s,
+                lo: range.start,
+                nodes,
                 algo,
-                ctl_rx: ctl_rx[v].take().unwrap(),
-                peer_rx: peer_rx[v].take().unwrap(),
+                ctl_rx: ctl_rx[s].take().unwrap(),
+                peer_rx: peer_rx[s].take().unwrap(),
                 peer_tx: peer_tx.clone(),
                 report_tx: report_tx.clone(),
             };
             handles.push(std::thread::spawn(move || worker.run()));
         }
+        let dead = vec![false; k];
         Cluster {
-            n,
+            map,
             ctl_tx,
             report_rx,
             handles,
+            stats: MessageStats::default(),
+            dead,
+            failure: None,
         }
+    }
+
+    /// Record a worker's fatal report: the shard sends no `Final` on
+    /// shutdown, and the failure is re-surfaced there.
+    fn worker_error(&mut self, shard: usize, message: String) -> Error {
+        self.dead[shard] = true;
+        let msg = format!("cluster worker {shard}: {message}");
+        if self.failure.is_none() {
+            self.failure = Some(msg.clone());
+        }
+        Error::msg(msg)
+    }
+
+    /// Any round/poll error leaves leader and workers desynchronized
+    /// (e.g. a timed-out report could be attributed to a later round), so
+    /// the cluster fails stop: further rounds are refused until shutdown.
+    fn check_failed(&self) -> Result<()> {
+        match &self.failure {
+            Some(msg) => Err(anyhow!("cluster has failed, shutdown required: {msg}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Record any error escaping a round/poll so [`check_failed`]
+    /// poisons subsequent calls.
+    fn poison_on_err<T>(&mut self, result: Result<T>) -> Result<T> {
+        if let Err(e) = &result {
+            if self.failure.is_none() {
+                self.failure = Some(e.to_string());
+            }
+        }
+        result
     }
 
     pub fn n(&self) -> usize {
-        self.n
+        self.map.n()
     }
 
-    /// Drive `sweeps` full sweeps of the schedule.  Records per-round
-    /// stats (discrepancy is polled from the workers after each round).
-    pub fn run(&mut self, schedule: &Schedule, sweeps: usize, rng: &mut Pcg64) -> RunTrace {
-        assert_eq!(schedule.n(), self.n);
+    /// Resolved worker count.
+    pub fn shards(&self) -> usize {
+        self.map.shards()
+    }
+
+    /// Leader-side message accounting since spawn.
+    pub fn message_stats(&self) -> MessageStats {
+        self.stats
+    }
+
+    /// Drive `sweeps` full sweeps of the schedule.  The run seed is drawn
+    /// from `rng`; use [`run_seeded`](Self::run_seeded) to reproduce an
+    /// engine run bit-exactly.
+    pub fn run(
+        &mut self,
+        schedule: &Schedule,
+        sweeps: usize,
+        rng: &mut Pcg64,
+    ) -> Result<RunTrace> {
+        self.run_seeded(schedule, sweeps, rng.next_u64())
+    }
+
+    /// Drive `sweeps` sweeps with counter-based per-edge randomness: the
+    /// resulting trace and final state are bit-identical to
+    /// `bcm::Sequential::run(.., StopRule::sweeps(sweeps), seed)` for any
+    /// shard count.
+    pub fn run_seeded(
+        &mut self,
+        schedule: &Schedule,
+        sweeps: usize,
+        seed: u64,
+    ) -> Result<RunTrace> {
+        assert_eq!(schedule.n(), self.n(), "state/schedule size mismatch");
+        let d = schedule.period();
+        // one classification per color, shared across sweeps (zero-copy
+        // per round: workers receive an Arc)
+        let plans: Vec<Arc<RoundPlan>> = (0..d)
+            .map(|c| Arc::new(RoundPlan::build(schedule.matching(c), &self.map)))
+            .collect();
         let mut trace = RunTrace {
-            initial_discrepancy: self.poll_discrepancy(),
+            initial_discrepancy: self.poll_discrepancy()?,
             rounds: Vec::new(),
         };
-        let d = schedule.period();
         for round in 0..sweeps * d {
-            let stats = self.run_single_round(schedule, round, rng);
+            let color = round % d;
+            let stats = self.round_with_plan(round, color, seed, plans[color].clone())?;
             trace.rounds.push(stats);
         }
-        trace
+        Ok(trace)
     }
 
-    /// Execute one round (matching `round % d` of the schedule) and poll
-    /// the resulting global discrepancy.
+    /// Execute one round (matching `round % d`); the round's seed is
+    /// drawn from `rng`.
     pub fn run_single_round(
         &mut self,
         schedule: &Schedule,
         round: usize,
         rng: &mut Pcg64,
-    ) -> RoundStats {
-        let pairs = schedule.matching(round).to_vec();
-        let movements = self.run_round(&pairs, rng);
-        RoundStats {
-            round,
-            color: round % schedule.period(),
-            discrepancy: self.poll_discrepancy(),
-            movements,
-            edges: pairs.len(),
-        }
+    ) -> Result<RoundStats> {
+        self.run_round_seeded(schedule, round, rng.next_u64())
     }
 
-    /// Execute one matching; returns total movements.
-    fn run_round(&mut self, pairs: &[(u32, u32)], rng: &mut Pcg64) -> usize {
-        let mut matched = vec![false; self.n];
-        for &(u, v) in pairs {
-            let flip = rng.coin();
-            matched[u as usize] = true;
-            matched[v as usize] = true;
-            // lower id is the edge master
-            self.ctl_tx[u as usize]
-                .send(Ctl::Balance {
-                    peer: v,
-                    master: true,
-                    flip,
-                })
-                .expect("worker died");
-            self.ctl_tx[v as usize]
-                .send(Ctl::Balance {
-                    peer: u,
-                    master: false,
-                    flip,
-                })
-                .expect("worker died");
-        }
-        for (v, m) in matched.iter().enumerate() {
-            if !m {
-                self.ctl_tx[v].send(Ctl::Idle).expect("worker died");
+    /// Execute one round of a run keyed by `seed` (the per-edge streams
+    /// also depend on `round`, so repeating all rounds of a run through
+    /// this entry point reproduces [`run_seeded`](Self::run_seeded)).
+    pub fn run_round_seeded(
+        &mut self,
+        schedule: &Schedule,
+        round: usize,
+        seed: u64,
+    ) -> Result<RoundStats> {
+        assert_eq!(schedule.n(), self.n(), "state/schedule size mismatch");
+        let plan = Arc::new(RoundPlan::build(schedule.matching(round), &self.map));
+        self.round_with_plan(round, round % schedule.period(), seed, plan)
+    }
+
+    fn round_with_plan(
+        &mut self,
+        round: usize,
+        color: usize,
+        seed: u64,
+        plan: Arc<RoundPlan>,
+    ) -> Result<RoundStats> {
+        self.check_failed()?;
+        let result = self.round_inner(round, color, seed, plan);
+        self.poison_on_err(result)
+    }
+
+    fn round_inner(
+        &mut self,
+        round: usize,
+        color: usize,
+        seed: u64,
+        plan: Arc<RoundPlan>,
+    ) -> Result<RoundStats> {
+        let edges = plan.edges;
+        self.stats.cross_edges += plan.cross_edges;
+        self.stats.rounds += 1;
+        let mut send_failed = None;
+        for (s, tx) in self.ctl_tx.iter().enumerate() {
+            let msg = Ctl::Round {
+                round,
+                seed,
+                plan: plan.clone(),
+            };
+            if tx.send(msg).is_err() {
+                send_failed = Some(s);
+                break;
             }
+            self.stats.ctl_sent += 1;
         }
-        // Collect n RoundAcks + one EdgeDone per pair.
-        let mut acks = 0usize;
+        if let Some(s) = send_failed {
+            let msg = format!("control channel closed before round {round}");
+            return Err(self.worker_error(s, msg));
+        }
         let mut movements = 0usize;
-        let mut edges_done = 0usize;
-        while acks < self.n || edges_done < pairs.len() {
-            match self.report_rx.recv().expect("cluster wedged") {
-                Report::RoundAck { .. } => acks += 1,
-                Report::EdgeDone {
-                    movements: m_edge, ..
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for _ in 0..self.map.shards() {
+            match self.recv_report("round reports")? {
+                Report::Round {
+                    movements: m,
+                    min_weight,
+                    max_weight,
+                    peer_msgs,
+                    ..
                 } => {
-                    movements += m_edge;
-                    edges_done += 1;
+                    movements += m;
+                    min = min.min(min_weight);
+                    max = max.max(max_weight);
+                    self.stats.peer_msgs += peer_msgs;
                 }
-                _ => {}
+                Report::Error { shard, message } => {
+                    return Err(self.worker_error(shard, message))
+                }
+                other => {
+                    return Err(anyhow!("unexpected report during round {round}: {other:?}"))
+                }
             }
         }
-        movements
+        Ok(RoundStats {
+            round,
+            color,
+            discrepancy: max - min,
+            movements,
+            edges,
+        })
     }
 
-    /// Poll every worker's weight and compute the global discrepancy.
-    pub fn poll_discrepancy(&mut self) -> f64 {
-        let w = self.poll_weights();
+    /// Poll every shard's node weights and fold the global discrepancy —
+    /// the same min/max fold `LoadState::discrepancy` performs.
+    pub fn poll_discrepancy(&mut self) -> Result<f64> {
+        let w = self.poll_weights()?;
         let max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
-        max - min
+        Ok(max - min)
     }
 
-    pub fn poll_weights(&mut self) -> Vec<f64> {
-        for tx in &self.ctl_tx {
-            tx.send(Ctl::Report).expect("worker died");
+    /// The per-node weight vector, assembled from one report per shard.
+    pub fn poll_weights(&mut self) -> Result<Vec<f64>> {
+        self.check_failed()?;
+        let result = self.poll_weights_inner();
+        self.poison_on_err(result)
+    }
+
+    fn poll_weights_inner(&mut self) -> Result<Vec<f64>> {
+        let mut send_failed = None;
+        for (s, tx) in self.ctl_tx.iter().enumerate() {
+            if tx.send(Ctl::PollWeights).is_err() {
+                send_failed = Some(s);
+                break;
+            }
+            self.stats.ctl_sent += 1;
         }
-        let mut w = vec![0.0; self.n];
-        let mut got = 0;
-        while got < self.n {
-            if let Report::Weight { node, weight } = self.report_rx.recv().expect("wedged") {
-                w[node as usize] = weight;
-                got += 1;
+        if let Some(s) = send_failed {
+            return Err(self.worker_error(s, "control channel closed during weight poll".into()));
+        }
+        let mut w = vec![0.0f64; self.n()];
+        for _ in 0..self.map.shards() {
+            match self.recv_report("weight reports")? {
+                Report::Weights { shard, weights } => {
+                    let range = self.map.range(shard);
+                    debug_assert_eq!(weights.len(), range.len());
+                    w[range].copy_from_slice(&weights);
+                }
+                Report::Error { shard, message } => {
+                    return Err(self.worker_error(shard, message))
+                }
+                other => return Err(anyhow!("unexpected report while polling weights: {other:?}")),
             }
         }
-        w
+        Ok(w)
     }
 
-    /// Shut the cluster down and collect the final load state.
-    pub fn shutdown(self) -> LoadState {
-        for tx in &self.ctl_tx {
+    fn recv_report(&mut self, what: &str) -> Result<Report> {
+        match self.report_rx.recv_timeout(ROUND_TIMEOUT) {
+            Ok(r) => {
+                self.stats.reports_received += 1;
+                Ok(r)
+            }
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+                "timed out after {}s waiting for {what} (a worker likely panicked)",
+                ROUND_TIMEOUT.as_secs()
+            )),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!(
+                "all cluster workers terminated while waiting for {what}"
+            )),
+        }
+    }
+
+    /// Shut the cluster down, join every worker, and reassemble the final
+    /// `LoadState`.  Worker panics and protocol violations surface as
+    /// errors instead of being silently discarded.
+    pub fn shutdown(self) -> Result<LoadState> {
+        let Cluster {
+            map,
+            ctl_tx,
+            report_rx,
+            handles,
+            dead,
+            failure,
+            ..
+        } = self;
+        for tx in &ctl_tx {
+            // a worker that already exited is surfaced below
             let _ = tx.send(Ctl::Shutdown);
         }
-        let mut state = LoadState::empty(self.n);
-        let mut got = 0;
-        while got < self.n {
-            if let Ok(Report::Final { node, loads }) = self.report_rx.recv() {
-                for l in loads {
-                    state.push(node as usize, l);
+        let mut state = LoadState::empty(map.n());
+        let mut first_err: Option<Error> = failure.map(Error::msg);
+        // shards that already died reported their error and send no Final
+        let mut expected = dead.iter().filter(|&&d| !d).count();
+        let mut got = 0usize;
+        let mut timed_out = false;
+        while got < expected {
+            match report_rx.recv_timeout(SHUTDOWN_TIMEOUT) {
+                Ok(Report::Final { shard, nodes }) => {
+                    let lo = map.range(shard).start;
+                    for (i, loads) in nodes.into_iter().enumerate() {
+                        for l in loads {
+                            state.push(lo + i, l);
+                        }
+                    }
+                    got += 1;
                 }
-                got += 1;
+                Ok(Report::Error { shard, message }) => {
+                    // that worker exits without sending a Final
+                    first_err.get_or_insert_with(|| anyhow!("cluster worker {shard}: {message}"));
+                    expected = expected.saturating_sub(1);
+                }
+                // stale Round/Weights reports can remain queued when a
+                // run was aborted mid-round; drain them
+                Ok(_) => {}
+                Err(_) => {
+                    timed_out = true;
+                    first_err
+                        .get_or_insert_with(|| anyhow!("timed out collecting final shard states"));
+                    break;
+                }
             }
         }
-        for h in self.handles {
-            let _ = h.join();
+        if !timed_out {
+            // every worker has returned (Final or Error), so the joins
+            // are immediate; skip them only when a wedged worker could
+            // block forever
+            for h in handles {
+                if let Err(p) = h.join() {
+                    let msg = p
+                        .downcast_ref::<&'static str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic payload".to_string());
+                    first_err.get_or_insert_with(|| anyhow!("cluster worker panicked: {msg}"));
+                }
+            }
         }
-        state
+        match first_err {
+            None => Ok(state),
+            Some(e) => Err(e),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::balancer::{PairAlgorithm, SortAlgo};
+    use crate::bcm::{Engine, Sequential, StopRule};
     use crate::graph::Graph;
-    use crate::load::{Mobility, WeightDistribution};
+    use crate::load::{Load, Mobility, WeightDistribution};
 
     fn init(
         n: usize,
@@ -222,8 +483,8 @@ mod tests {
         let mass = state.total_weight();
         let init_disc = state.discrepancy();
         let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
-        let trace = cluster.run(&schedule, 8, &mut rng);
-        let final_state = cluster.shutdown();
+        let trace = cluster.run(&schedule, 8, &mut rng).unwrap();
+        let final_state = cluster.shutdown().unwrap();
         assert_eq!(final_state.all_ids(), ids);
         assert!((final_state.total_weight() - mass).abs() < 1e-6);
         assert!(
@@ -238,30 +499,102 @@ mod tests {
     #[test]
     fn cluster_greedy_runs() {
         let (state, schedule, mut rng) = init(6, 20, Mobility::Partial, 2);
-        let mut cluster = Cluster::spawn(state, WorkerAlgo::Greedy);
-        let trace = cluster.run(&schedule, 4, &mut rng);
-        assert!(trace.final_discrepancy() <= trace.initial_discrepancy);
-        cluster.shutdown();
+        let lmax = state.max_load_weight();
+        let mut cluster = Cluster::spawn_sharded(state, WorkerAlgo::Greedy, 3);
+        let trace = cluster.run(&schedule, 4, &mut rng).unwrap();
+        // greedy can overshoot by at most the single-load quantum
+        assert!(trace.final_discrepancy() <= trace.initial_discrepancy + lmax + 1e-9);
+        cluster.shutdown().unwrap();
     }
 
     #[test]
-    fn cluster_matches_sequential_engine_statistically() {
-        let (state, schedule, mut rng) = init(8, 40, Mobility::Full, 3);
-        let mut seq_state = state.clone();
-        let mut seq_rng = Pcg64::new(77);
-        let t_seq = crate::bcm::run(
+    fn cluster_bit_identical_to_sequential_engine() {
+        // The tentpole contract: same seed => same RunTrace and same
+        // final LoadState as the sequential reference, for shard counts
+        // 1, 2 and one-per-core.
+        let (state0, schedule, _) = init(8, 40, Mobility::Full, 3);
+        let seed = 77;
+        let sweeps = 6;
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(
             &mut seq_state,
             &schedule,
-            crate::balancer::PairAlgorithm::SortedGreedy(crate::balancer::SortAlgo::Quick),
-            crate::bcm::StopRule::sweeps(6),
-            &mut seq_rng,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(sweeps),
+            seed,
         );
-        let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
-        let t_par = cluster.run(&schedule, 6, &mut rng);
-        cluster.shutdown();
-        // Both runs should converge to a tiny discrepancy.
-        assert!(t_seq.final_discrepancy() < t_seq.initial_discrepancy / 10.0);
-        assert!(t_par.final_discrepancy() < t_par.initial_discrepancy / 10.0);
+        let cores = crate::coordinator::shard::resolve_shards(0);
+        for shards in [1, 2, cores] {
+            let mut cluster =
+                Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
+            let trace = cluster.run_seeded(&schedule, sweeps, seed).unwrap();
+            let fin = cluster.shutdown().unwrap();
+            assert_eq!(trace, seq_trace, "trace diverged at {shards} shards");
+            assert_eq!(fin, seq_state, "state diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn cluster_bit_identical_with_pinned_and_partial_mobility() {
+        let (mut state0, schedule, _) = init(12, 8, Mobility::Partial, 9);
+        state0.push(3, Load::pinned(10_000, 75.0));
+        state0.push(0, Load::pinned(10_001, 5.0));
+        let seed = 1234;
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(
+            &mut seq_state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(4),
+            seed,
+        );
+        for shards in [1usize, 2, 3, 5] {
+            let mut cluster =
+                Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
+            let trace = cluster.run_seeded(&schedule, 4, seed).unwrap();
+            let fin = cluster.shutdown().unwrap();
+            assert_eq!(trace, seq_trace, "trace diverged at {shards} shards");
+            assert_eq!(fin, seq_state, "state diverged at {shards} shards");
+            // the heavy pinned load never left its host
+            assert!(fin.node(3).iter().any(|l| l.id == 10_000 && !l.mobile));
+        }
+    }
+
+    #[test]
+    fn leader_messages_scale_with_cut_not_n() {
+        // Contiguous shards on a ring: the cut is exactly `shards` edges,
+        // so per-round traffic must be O(shards), not O(n).
+        let n = 64;
+        let shards = 4;
+        let sweeps = 3;
+        let mut rng = Pcg64::new(5);
+        let g = Graph::ring(n);
+        let schedule = Schedule::from_graph(&g);
+        let state = LoadState::init_uniform_counts(
+            n,
+            4,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let mut cluster = Cluster::spawn_sharded(state, WorkerAlgo::SortedGreedy, shards);
+        cluster.run_seeded(&schedule, sweeps, 9).unwrap();
+        let stats = cluster.message_stats();
+        cluster.shutdown().unwrap();
+        let rounds = sweeps * schedule.period();
+        assert_eq!(stats.rounds, rounds);
+        // each of the ring's k cut edges appears once per sweep
+        assert_eq!(stats.cross_edges, shards * sweeps);
+        // exactly one Offer + one Settle per cross-shard edge
+        assert_eq!(stats.peer_msgs, 2 * stats.cross_edges);
+        // leader traffic: k ctl + k reports per round, plus one weight
+        // poll (k + k) for the initial discrepancy — O(shards), never O(n)
+        let leader_msgs = stats.ctl_sent + stats.reports_received;
+        assert_eq!(leader_msgs, 2 * shards * (rounds + 1));
+        assert!(
+            leader_msgs < n * rounds,
+            "leader messaging is O(n) again: {leader_msgs} msgs for {rounds} rounds"
+        );
     }
 
     #[test]
@@ -273,10 +606,28 @@ mod tests {
         state.push(1, crate::load::Load::pinned(0, 42.0));
         state.push(0, crate::load::Load::new(1, 1.0));
         state.push(2, crate::load::Load::new(2, 2.0));
-        let mut cluster = Cluster::spawn(state, WorkerAlgo::SortedGreedy);
-        cluster.run(&schedule, 3, &mut rng);
-        let fin = cluster.shutdown();
+        let mut cluster = Cluster::spawn_sharded(state, WorkerAlgo::SortedGreedy, 2);
+        cluster.run(&schedule, 3, &mut rng).unwrap();
+        let fin = cluster.shutdown().unwrap();
         assert!(fin.node(1).iter().any(|l| l.id == 0 && !l.mobile));
         assert_eq!(fin.total_loads(), 3);
+    }
+
+    #[test]
+    fn single_round_api_reproduces_full_runs() {
+        let (state0, schedule, _) = init(10, 12, Mobility::Full, 6);
+        let seed = 42;
+        let sweeps = 2;
+        let mut a = Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, 2);
+        let full = a.run_seeded(&schedule, sweeps, seed).unwrap();
+        let fin_a = a.shutdown().unwrap();
+        let mut b = Cluster::spawn_sharded(state0, WorkerAlgo::SortedGreedy, 2);
+        let mut rounds = Vec::new();
+        for round in 0..sweeps * schedule.period() {
+            rounds.push(b.run_round_seeded(&schedule, round, seed).unwrap());
+        }
+        let fin_b = b.shutdown().unwrap();
+        assert_eq!(full.rounds, rounds);
+        assert_eq!(fin_a, fin_b);
     }
 }

@@ -1,51 +1,71 @@
-//! Message types of the distributed BCM protocol.
+//! Message types of the sharded distributed BCM protocol.
 //!
 //! The communication structure mirrors the matching model the paper
-//! assumes (§1, §2): in each round a node talks to *at most one* neighbor.
-//! Per matched edge the lower-id endpoint acts as the edge master: the
-//! slave ships its mobile loads over, the master solves the two-bin
-//! problem locally and ships the slave's new loads back.  The leader only
-//! orchestrates rounds and aggregates metrics — it never touches loads.
+//! assumes (§1, §2) at shard granularity: per round, only the edges that
+//! cross a shard boundary exchange payloads (one `Offer` from the slave
+//! shard, one `Settle` back from the master), while intra-shard edges are
+//! solved with no messaging at all.  The leader is pure control plane —
+//! it broadcasts one `Round` per shard and collects one aggregated
+//! report per shard, so leader traffic is O(shards) and worker-to-worker
+//! traffic is O(cross-shard edges) per round.
 
+use super::shard::RoundPlan;
 use crate::load::Load;
+use std::sync::Arc;
 
 /// Leader -> worker control messages.
 #[derive(Debug)]
 pub enum Ctl {
-    /// Balance with `peer` this round; `master` says which endpoint runs
-    /// the placement; `flip` is the leader-drawn orientation bit (the
-    /// E[e]=0 symmetry of paper §3 cond. 3).
-    Balance { peer: u32, master: bool, flip: bool },
-    /// Sit this round out (unmatched).
-    Idle,
-    /// Report current total weight to the leader.
-    Report,
-    /// Terminate and return the final load set.
+    /// Execute round `round`.  `seed` keys the counter-based per-edge RNG
+    /// streams (`Pcg64::for_edge(seed, round, edge)`), replacing the
+    /// leader-drawn coin flips of the historical cluster — the source of
+    /// the sharded runtime's bit-identity with `bcm::Sequential`.
+    Round {
+        round: usize,
+        seed: u64,
+        plan: Arc<RoundPlan>,
+    },
+    /// Report the shard's per-node weights to the leader.
+    PollWeights,
+    /// Terminate and return the shard's final load lists.
     Shutdown,
 }
 
-/// Worker -> worker payloads (peer channel).
+/// Worker -> worker payloads, tagged with the edge's index within the
+/// round's matching (which also keys its RNG stream).
 #[derive(Debug)]
-pub enum Peer {
-    /// Slave -> master: my mobile loads and my pinned weight.
-    Offer { loads: Vec<Load>, pinned: f64 },
-    /// Master -> slave: your new mobile loads.
-    Settle { loads: Vec<Load> },
+pub enum ShardMsg {
+    /// Slave -> master: `v`'s mobile loads (in node order) and its pinned
+    /// weight sum.
+    Offer {
+        edge: usize,
+        loads: Vec<Load>,
+        pinned: f64,
+    },
+    /// Master -> slave: `v`'s new mobile loads.
+    Settle { edge: usize, loads: Vec<Load> },
 }
 
 /// Worker -> leader reports.
 #[derive(Debug)]
 pub enum Report {
-    /// Edge done (sent by the master only).
-    EdgeDone {
-        edge: (u32, u32),
+    /// Round finished on this shard: movement count of the edges this
+    /// shard mastered plus the shard's node-weight extremes (the leader
+    /// folds these into the global discrepancy) and the number of peer
+    /// messages sent.
+    Round {
+        shard: usize,
         movements: usize,
-        local_discrepancy: f64,
+        min_weight: f64,
+        max_weight: f64,
+        peer_msgs: usize,
     },
-    /// Round acknowledged (sent by every worker every round).
-    RoundAck { node: u32 },
-    /// Current node weight (in response to `Ctl::Report`).
-    Weight { node: u32, weight: f64 },
-    /// Final load set (in response to `Ctl::Shutdown`).
-    Final { node: u32, loads: Vec<Load> },
+    /// Per-node weights of the shard (in response to `Ctl::PollWeights`).
+    Weights { shard: usize, weights: Vec<f64> },
+    /// Final load lists of the shard's nodes (in response to
+    /// `Ctl::Shutdown`).
+    Final { shard: usize, nodes: Vec<Vec<Load>> },
+    /// Fatal protocol violation on the worker; the leader surfaces it as
+    /// a `util::error` instead of wedging.
+    Error { shard: usize, message: String },
 }

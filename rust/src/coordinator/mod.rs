@@ -1,10 +1,15 @@
-//! Distributed BCM runtime: a leader thread orchestrating one worker
-//! thread per processor, communicating over channels in the matching
-//! model (one-to-one per round).
+//! Distributed BCM runtime: a leader thread orchestrating one shard
+//! worker per core, communicating over channels.  Intra-shard edges are
+//! solved locally; only cross-shard edges exchange (offer -> placement ->
+//! settle) messages, and every edge draws from the counter-based
+//! `Pcg64::for_edge` streams, so cluster runs are bit-identical to the
+//! in-process engines for any shard count.
 
 pub mod cluster;
 pub mod messages;
+pub mod shard;
 pub mod worker;
 
-pub use cluster::Cluster;
-pub use worker::{Worker, WorkerAlgo};
+pub use cluster::{Cluster, MessageStats};
+pub use shard::{resolve_shards, RoundPlan, ShardMap, ShardPlan};
+pub use worker::{ShardWorker, WorkerAlgo};

@@ -1,0 +1,201 @@
+//! Node sharding for the cluster coordinator: contiguous shard maps and
+//! per-round edge classification.
+//!
+//! The sharded runtime spawns one worker per core, each owning a
+//! contiguous slice of the node range.  A round's matching is classified
+//! once into a [`RoundPlan`]: edges with both endpoints in one shard are
+//! solved locally with no messaging at all, and only the edges crossing a
+//! shard boundary exchange messages — so per-round traffic is
+//! O(cut edges + shards) instead of the O(n) of the historical
+//! one-thread-per-processor cluster.
+
+use std::ops::Range;
+
+/// A partition of `n` nodes into `k` contiguous shards of near-equal
+/// size (the first `n mod k` shards get one extra node).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    /// `k + 1` ascending boundaries; shard `s` owns `starts[s]..starts[s+1]`.
+    starts: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Partition `n` nodes into `shards` contiguous shards.  `shards == 0`
+    /// means one shard per available core; the count is clamped to
+    /// `[1, n]` so every shard owns at least one node.
+    pub fn new(n: usize, shards: usize) -> ShardMap {
+        assert!(n > 0, "ShardMap: empty network");
+        let k = resolve_shards(shards).min(n);
+        let base = n / k;
+        let extra = n % k;
+        let mut starts = Vec::with_capacity(k + 1);
+        starts.push(0);
+        let mut at = 0;
+        for s in 0..k {
+            at += base + usize::from(s < extra);
+            starts.push(at);
+        }
+        ShardMap { starts }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Number of nodes partitioned.
+    pub fn n(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// The shard owning `node`.
+    pub fn shard_of(&self, node: usize) -> usize {
+        debug_assert!(node < self.n(), "node {node} out of range");
+        self.starts.partition_point(|&b| b <= node) - 1
+    }
+
+    /// The node range owned by shard `s`.
+    pub fn range(&self, s: usize) -> Range<usize> {
+        self.starts[s]..self.starts[s + 1]
+    }
+}
+
+/// Resolve a shard-count knob: `0` = one shard per available core.
+pub fn resolve_shards(shards: usize) -> usize {
+    if shards == 0 {
+        std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1)
+    } else {
+        shards
+    }
+}
+
+/// One shard's slice of a round's matching.
+///
+/// Every entry carries the edge's index within the matching — the key of
+/// its counter-based RNG stream (`Pcg64::for_edge`), which is what makes
+/// the sharded execution bit-identical to the in-process engines no
+/// matter how edges are distributed over shards.
+#[derive(Clone, Debug, Default)]
+pub struct ShardPlan {
+    /// `(edge index, u, v)` — both endpoints owned by this shard; solved
+    /// locally with zero messages.
+    pub local: Vec<(usize, u32, u32)>,
+    /// `(edge index, u, v, slave shard)` — this shard owns `u` and runs
+    /// the placement for the cross-shard edge.
+    pub master: Vec<(usize, u32, u32, usize)>,
+    /// `(edge index, v, master shard)` — this shard owns `v`; it offers
+    /// `v`'s mobile loads and receives the settled share back.
+    pub slave: Vec<(usize, u32, usize)>,
+}
+
+/// One matching classified against a [`ShardMap`].  For a cross-shard
+/// edge `(u, v)` the owner of `u` is the edge master, so the pooled load
+/// order (u's loads then v's) matches the sequential engine exactly.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub per_shard: Vec<ShardPlan>,
+    /// Edges whose endpoints live in different shards.
+    pub cross_edges: usize,
+    /// Total edges in the matching.
+    pub edges: usize,
+}
+
+impl RoundPlan {
+    pub fn build(pairs: &[(u32, u32)], map: &ShardMap) -> RoundPlan {
+        let mut per_shard = vec![ShardPlan::default(); map.shards()];
+        let mut cross_edges = 0usize;
+        for (e, &(u, v)) in pairs.iter().enumerate() {
+            let su = map.shard_of(u as usize);
+            let sv = map.shard_of(v as usize);
+            if su == sv {
+                per_shard[su].local.push((e, u, v));
+            } else {
+                cross_edges += 1;
+                per_shard[su].master.push((e, u, v, sv));
+                per_shard[sv].slave.push((e, v, su));
+            }
+        }
+        RoundPlan {
+            per_shard,
+            cross_edges,
+            edges: pairs.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bcm::Schedule;
+    use crate::graph::Graph;
+
+    #[test]
+    fn balanced_contiguous_partition() {
+        let m = ShardMap::new(10, 3); // sizes 4, 3, 3
+        assert_eq!(m.shards(), 3);
+        assert_eq!(m.n(), 10);
+        assert_eq!(m.range(0), 0..4);
+        assert_eq!(m.range(1), 4..7);
+        assert_eq!(m.range(2), 7..10);
+        for v in 0..10 {
+            let s = m.shard_of(v);
+            assert!(m.range(s).contains(&v), "node {v} not in its shard {s}");
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_and_resolved() {
+        assert_eq!(ShardMap::new(3, 64).shards(), 3); // never more shards than nodes
+        let single = ShardMap::new(5, 1);
+        assert_eq!(single.shards(), 1);
+        assert_eq!(single.range(0), 0..5);
+        let auto = ShardMap::new(1024, 0);
+        assert!(auto.shards() >= 1);
+        assert_eq!(auto.n(), 1024);
+        assert!(resolve_shards(0) >= 1);
+        assert_eq!(resolve_shards(7), 7);
+    }
+
+    #[test]
+    fn ring_plan_cut_is_shard_count() {
+        // Contiguous shards on a ring: the cut is exactly the k boundary
+        // edges (k-1 interior boundaries + the wrap edge), each appearing
+        // once per sweep.
+        let g = Graph::ring(16);
+        let schedule = Schedule::from_graph(&g);
+        let map = ShardMap::new(16, 4);
+        let (mut cross, mut total) = (0usize, 0usize);
+        for c in 0..schedule.period() {
+            let plan = RoundPlan::build(schedule.matching(c), &map);
+            cross += plan.cross_edges;
+            total += plan.edges;
+            // every edge is listed exactly once as local or master
+            let listed: usize = plan
+                .per_shard
+                .iter()
+                .map(|p| p.local.len() + p.master.len())
+                .sum();
+            assert_eq!(listed, plan.edges);
+            // and every cross edge has exactly one slave entry
+            let slaves: usize = plan.per_shard.iter().map(|p| p.slave.len()).sum();
+            assert_eq!(slaves, plan.cross_edges);
+        }
+        assert_eq!(total, 16);
+        assert_eq!(cross, 4);
+    }
+
+    #[test]
+    fn master_owns_u_and_slave_owns_v() {
+        let map = ShardMap::new(8, 2);
+        let plan = RoundPlan::build(&[(0, 1), (3, 4), (7, 2)], &map);
+        assert_eq!(plan.edges, 3);
+        assert_eq!(plan.cross_edges, 2);
+        assert_eq!(plan.per_shard[0].local, vec![(0, 0, 1)]);
+        assert_eq!(plan.per_shard[0].master, vec![(1, 3, 4, 1)]);
+        assert_eq!(plan.per_shard[1].slave, vec![(1, 4, 0)]);
+        assert_eq!(plan.per_shard[1].master, vec![(2, 7, 2, 0)]);
+        assert_eq!(plan.per_shard[0].slave, vec![(2, 2, 1)]);
+    }
+}

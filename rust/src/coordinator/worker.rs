@@ -1,15 +1,28 @@
-//! A worker thread = one processor of the network.
+//! A shard worker = one core owning a contiguous slice of processors.
 //!
-//! Owns its load set exclusively; all interaction is via channels.  The
-//! per-edge protocol is one-to-one (matching model): slave offers its
-//! mobile loads, master solves the two-bin problem with the configured
-//! local algorithm and settles the slave's share back.
+//! Owns its nodes' load lists exclusively; all interaction is via
+//! channels.  Intra-shard edges are solved locally through the same
+//! [`balance_pool`] primitive the engines use; for a cross-shard edge the
+//! owner of `u` is the edge master — the slave ships `v`'s mobile loads
+//! (`Offer`), the master solves the two-bin problem and ships `v`'s share
+//! back (`Settle`).  Every edge draws its randomness from
+//! `Pcg64::for_edge(seed, round, edge)`, so a sharded run is bit-identical
+//! to `bcm::Sequential` for any shard count.
 
-use super::messages::{Ctl, Peer, Report};
-use crate::balancer::{PairAlgorithm, SortAlgo};
+use super::messages::{Ctl, Report, ShardMsg};
+use super::shard::ShardPlan;
+use crate::balancer::{balance_pool, PairAlgorithm, SortAlgo};
 use crate::load::Load;
-use crate::runtime::{fallback, DeviceAlgo, EdgeProblem};
-use std::sync::mpsc::{Receiver, Sender};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Bounded mid-round wait for peer messages: a dead peer surfaces as a
+/// reported error instead of wedging the worker (and with it every later
+/// `Cluster::shutdown`) forever.  Shorter than the leader's round
+/// timeout so the error report arrives before the leader gives up.
+const PEER_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Algorithm a worker runs on its matched edges.
 #[derive(Clone, Copy, Debug)]
@@ -19,13 +32,6 @@ pub enum WorkerAlgo {
 }
 
 impl WorkerAlgo {
-    fn device(self) -> DeviceAlgo {
-        match self {
-            WorkerAlgo::Greedy => DeviceAlgo::Greedy,
-            WorkerAlgo::SortedGreedy => DeviceAlgo::SortedGreedy,
-        }
-    }
-
     pub fn pair(self) -> PairAlgorithm {
         match self {
             WorkerAlgo::Greedy => PairAlgorithm::Greedy,
@@ -34,43 +40,68 @@ impl WorkerAlgo {
     }
 }
 
-pub struct Worker {
-    pub id: u32,
-    pub loads: Vec<Load>,
-    pub algo: WorkerAlgo,
+/// One coordinator worker owning the contiguous node range
+/// `lo..lo + nodes.len()`.
+pub struct ShardWorker {
+    pub shard: usize,
+    /// First node id owned; `nodes[i]` holds node `lo + i`.
+    pub lo: usize,
+    pub nodes: Vec<Vec<Load>>,
+    pub algo: PairAlgorithm,
     pub ctl_rx: Receiver<Ctl>,
-    pub peer_rx: Receiver<Peer>,
-    pub peer_tx: Vec<Sender<Peer>>,
+    pub peer_rx: Receiver<ShardMsg>,
+    pub peer_tx: Vec<Sender<ShardMsg>>,
     pub report_tx: Sender<Report>,
 }
 
-impl Worker {
-    /// Event loop; returns when `Ctl::Shutdown` arrives.
+impl ShardWorker {
+    /// Event loop; returns when `Ctl::Shutdown` arrives, the leader goes
+    /// away, or a protocol violation is reported.
     pub fn run(mut self) {
         while let Ok(msg) = self.ctl_rx.recv() {
             match msg {
-                Ctl::Idle => {
-                    let _ = self.report_tx.send(Report::RoundAck { node: self.id });
-                }
-                Ctl::Balance { peer, master, flip } => {
-                    if master {
-                        self.run_master(peer, flip);
-                    } else {
-                        self.run_slave(peer);
+                Ctl::Round { round, seed, plan } => {
+                    match self.run_round(round, seed, &plan.per_shard[self.shard]) {
+                        Ok((movements, peer_msgs)) => {
+                            let (min_weight, max_weight) = self.extremes();
+                            let sent = self.report_tx.send(Report::Round {
+                                shard: self.shard,
+                                movements,
+                                min_weight,
+                                max_weight,
+                                peer_msgs,
+                            });
+                            if sent.is_err() {
+                                return;
+                            }
+                        }
+                        Err(message) => {
+                            let _ = self.report_tx.send(Report::Error {
+                                shard: self.shard,
+                                message,
+                            });
+                            return;
+                        }
                     }
-                    let _ = self.report_tx.send(Report::RoundAck { node: self.id });
                 }
-                Ctl::Report => {
-                    let weight = self.loads.iter().map(|l| l.weight).sum();
-                    let _ = self.report_tx.send(Report::Weight {
-                        node: self.id,
-                        weight,
+                Ctl::PollWeights => {
+                    let weights = self
+                        .nodes
+                        .iter()
+                        .map(|node| node.iter().map(|l| l.weight).sum())
+                        .collect();
+                    let sent = self.report_tx.send(Report::Weights {
+                        shard: self.shard,
+                        weights,
                     });
+                    if sent.is_err() {
+                        return;
+                    }
                 }
                 Ctl::Shutdown => {
                     let _ = self.report_tx.send(Report::Final {
-                        node: self.id,
-                        loads: std::mem::take(&mut self.loads),
+                        shard: self.shard,
+                        nodes: std::mem::take(&mut self.nodes),
                     });
                     return;
                 }
@@ -78,72 +109,223 @@ impl Worker {
         }
     }
 
-    fn run_master(&mut self, peer: u32, flip: bool) {
-        let (their_loads, their_pinned) = match self.peer_rx.recv() {
-            Ok(Peer::Offer { loads, pinned }) => (loads, pinned),
-            _ => return, // peer died; drop the edge
-        };
-        let (mine_mobile, mine_pinned): (Vec<Load>, Vec<Load>) =
-            std::mem::take(&mut self.loads).into_iter().partition(|l| l.mobile);
-        let my_pinned_w: f64 = mine_pinned.iter().map(|l| l.weight).sum();
-
-        // Pool: master's loads then slave's (arrival order), matching the
-        // sequential engine's semantics.
-        let mut pool: Vec<Load> = mine_mobile;
-        let my_count = pool.len();
-        pool.extend(their_loads);
-        let mut hosts: Vec<u8> = (0..pool.len())
-            .map(|i| u8::from(i >= my_count))
+    /// Execute this shard's slice of one matching; returns the movement
+    /// count of the edges this shard mastered and the number of peer
+    /// messages sent.
+    fn run_round(
+        &mut self,
+        round: usize,
+        seed: u64,
+        plan: &ShardPlan,
+    ) -> Result<(usize, usize), String> {
+        let mut peer_msgs = 0usize;
+        // Phase 1 — offer first.  Channel sends never block, so no
+        // ordering between shards can deadlock.
+        for &(edge, v, master) in &plan.slave {
+            let (mobile, pinned) = drain_mobile(&mut self.nodes[v as usize - self.lo]);
+            peer_msgs += 1;
+            if self.peer_tx[master]
+                .send(ShardMsg::Offer {
+                    edge,
+                    loads: mobile,
+                    pinned,
+                })
+                .is_err()
+            {
+                return Err(format!("peer shard {master} unreachable (offer, edge {edge})"));
+            }
+        }
+        // Phase 2 — intra-shard edges, no messaging.
+        let mut movements = 0usize;
+        for &(edge, u, v) in &plan.local {
+            let mut rng = Pcg64::for_edge(seed, round, edge);
+            movements += self.balance_local(&mut rng, u, v);
+        }
+        // Phase 3 — serve master edges as offers arrive and absorb the
+        // settles for slave edges.  Arrival order is irrelevant: each
+        // edge's randomness is keyed on (seed, round, edge).
+        let masters: BTreeMap<usize, (u32, usize)> = plan
+            .master
+            .iter()
+            .map(|&(e, u, _v, slave)| (e, (u, slave)))
             .collect();
-        let mut base = [my_pinned_w, their_pinned];
-        if flip {
-            base.swap(0, 1);
-            for h in hosts.iter_mut() {
-                *h ^= 1;
+        let slaves: BTreeMap<usize, u32> =
+            plan.slave.iter().map(|&(e, v, _)| (e, v)).collect();
+        let mut pending_masters = masters.len();
+        let mut pending_slaves = slaves.len();
+        while pending_masters > 0 || pending_slaves > 0 {
+            let msg = match self.peer_rx.recv_timeout(PEER_TIMEOUT) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(format!(
+                        "timed out waiting for peer messages \
+                         ({pending_masters} offers, {pending_slaves} settles outstanding)"
+                    ))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err("peer channels closed mid-round".to_string())
+                }
+            };
+            match msg {
+                ShardMsg::Offer {
+                    edge,
+                    loads,
+                    pinned,
+                } => {
+                    let &(u, slave) = masters
+                        .get(&edge)
+                        .ok_or_else(|| format!("offer for unmastered edge {edge}"))?;
+                    let mut rng = Pcg64::for_edge(seed, round, edge);
+                    movements += self.balance_master(&mut rng, edge, u, (loads, pinned), slave)?;
+                    peer_msgs += 1; // the settle just sent
+                    pending_masters -= 1;
+                }
+                ShardMsg::Settle { edge, loads } => {
+                    let &v = slaves
+                        .get(&edge)
+                        .ok_or_else(|| format!("settle for unslaved edge {edge}"))?;
+                    // pinned loads stayed put in phase 1; the settled
+                    // mobile loads are appended, exactly like the engines.
+                    self.nodes[v as usize - self.lo].extend(loads);
+                    pending_slaves -= 1;
+                }
             }
         }
-        let problem = EdgeProblem {
-            weights: pool.iter().map(|l| l.weight).collect(),
-            hosts,
-            base,
-        };
-        let sol = fallback::solve(&problem, self.algo.device());
-
-        let mut mine: Vec<Load> = mine_pinned;
-        let mut theirs: Vec<Load> = Vec::new();
-        for (load, &side) in pool.into_iter().zip(&sol.assign) {
-            let to_master = (side == 0) != flip;
-            if to_master {
-                mine.push(load);
-            } else {
-                theirs.push(load);
-            }
-        }
-        let _ = self.peer_tx[peer as usize].send(Peer::Settle { loads: theirs });
-        self.loads = mine;
-        let edge = if self.id < peer {
-            (self.id, peer)
-        } else {
-            (peer, self.id)
-        };
-        let _ = self.report_tx.send(Report::EdgeDone {
-            edge,
-            movements: sol.movements,
-            local_discrepancy: (sol.sums[0] - sol.sums[1]).abs(),
-        });
+        Ok((movements, peer_msgs))
     }
 
-    fn run_slave(&mut self, peer: u32) {
-        let (mobile, pinned): (Vec<Load>, Vec<Load>) =
-            std::mem::take(&mut self.loads).into_iter().partition(|l| l.mobile);
-        let pinned_w: f64 = pinned.iter().map(|l| l.weight).sum();
-        let _ = self.peer_tx[peer as usize].send(Peer::Offer {
-            loads: mobile,
-            pinned: pinned_w,
-        });
-        self.loads = pinned;
-        if let Ok(Peer::Settle { loads }) = self.peer_rx.recv() {
-            self.loads.extend(loads);
+    /// Rebalance an intra-shard edge in place.  Pool order (u then v),
+    /// pinned handling and RNG consumption mirror `balance_pair` exactly.
+    fn balance_local(&mut self, rng: &mut Pcg64, u: u32, v: u32) -> usize {
+        let (ui, vi) = (u as usize - self.lo, v as usize - self.lo);
+        let (u_node, v_node) = two_mut(&mut self.nodes, ui, vi);
+        let (u_mobile, u_pinned) = drain_mobile(u_node);
+        let (v_mobile, v_pinned) = drain_mobile(v_node);
+        let pool: Vec<(Load, u8)> = u_mobile
+            .into_iter()
+            .map(|l| (l, 0))
+            .chain(v_mobile.into_iter().map(|l| (l, 1)))
+            .collect();
+        let out = balance_pool(pool, [u_pinned, v_pinned], self.algo, rng);
+        u_node.extend(out.to_u);
+        v_node.extend(out.to_v);
+        out.movements
+    }
+
+    /// Rebalance a cross-shard edge from the slave's offer; returns the
+    /// movement count after sending the settle.
+    fn balance_master(
+        &mut self,
+        rng: &mut Pcg64,
+        edge: usize,
+        u: u32,
+        offer: (Vec<Load>, f64),
+        slave: usize,
+    ) -> Result<usize, String> {
+        let (their_loads, their_pinned) = offer;
+        let u_node = &mut self.nodes[u as usize - self.lo];
+        let (u_mobile, u_pinned) = drain_mobile(u_node);
+        let pool: Vec<(Load, u8)> = u_mobile
+            .into_iter()
+            .map(|l| (l, 0))
+            .chain(their_loads.into_iter().map(|l| (l, 1)))
+            .collect();
+        let out = balance_pool(pool, [u_pinned, their_pinned], self.algo, rng);
+        u_node.extend(out.to_u);
+        self.peer_tx[slave]
+            .send(ShardMsg::Settle {
+                edge,
+                loads: out.to_v,
+            })
+            .map_err(|_| format!("peer shard {slave} unreachable (settle, edge {edge})"))?;
+        Ok(out.movements)
+    }
+
+    /// `(min, max)` node weight over the shard's nodes; the leader folds
+    /// the shards' extremes into the global discrepancy (f64 min/max are
+    /// exactly associative, so the fold order cannot change the result).
+    fn extremes(&self) -> (f64, f64) {
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for node in &self.nodes {
+            let w: f64 = node.iter().map(|l| l.weight).sum();
+            min = min.min(w);
+            max = max.max(w);
         }
+        (min, max)
+    }
+}
+
+/// Remove and return a node's mobile loads (in order) plus its pinned
+/// weight sum, leaving the pinned loads in place — the same partition
+/// (and the same f64 summation order) `balance_pair` performs on the
+/// full load list.
+fn drain_mobile(node: &mut Vec<Load>) -> (Vec<Load>, f64) {
+    let mut mobile = Vec::with_capacity(node.len());
+    let mut pinned_w = 0.0f64;
+    let mut kept = Vec::new();
+    for l in node.drain(..) {
+        if l.mobile {
+            mobile.push(l);
+        } else {
+            pinned_w += l.weight;
+            kept.push(l);
+        }
+    }
+    *node = kept;
+    (mobile, pinned_w)
+}
+
+/// Disjoint `&mut` views of two distinct entries of `nodes`.
+fn two_mut(nodes: &mut [Vec<Load>], a: usize, b: usize) -> (&mut Vec<Load>, &mut Vec<Load>) {
+    debug_assert_ne!(a, b, "matching contains a self-loop");
+    if a < b {
+        let (lo, hi) = nodes.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = nodes.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drain_mobile_partitions_in_order() {
+        let mut node = vec![
+            Load::new(0, 1.0),
+            Load::pinned(1, 2.0),
+            Load::new(2, 3.0),
+            Load::pinned(3, 4.0),
+        ];
+        let (mobile, pinned_w) = drain_mobile(&mut node);
+        assert_eq!(mobile.iter().map(|l| l.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(node.iter().map(|l| l.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(pinned_w, 6.0);
+    }
+
+    #[test]
+    fn two_mut_returns_disjoint_views_either_order() {
+        let mut nodes = vec![vec![Load::new(0, 1.0)], vec![], vec![Load::new(1, 2.0)]];
+        {
+            let (a, b) = two_mut(&mut nodes, 2, 0);
+            assert_eq!(a[0].id, 1);
+            assert_eq!(b[0].id, 0);
+            let l = b.pop().unwrap();
+            a.push(l);
+        }
+        assert!(nodes[0].is_empty());
+        assert_eq!(nodes[2].len(), 2);
+    }
+
+    #[test]
+    fn worker_algo_maps_to_pair_algorithms() {
+        assert_eq!(WorkerAlgo::Greedy.pair(), PairAlgorithm::Greedy);
+        assert_eq!(
+            WorkerAlgo::SortedGreedy.pair(),
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick)
+        );
     }
 }

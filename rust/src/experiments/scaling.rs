@@ -1,15 +1,19 @@
-//! E11: sequential-vs-parallel engine scaling on large topologies.
+//! E11: engine and coordinator scaling on large topologies.
 //!
 //! Runs the same `(seed, schedule, state)` through the sequential
-//! reference engine and the deterministic parallel engine at a ladder of
-//! thread counts, verifying bit-identical traces/states and reporting
-//! wall-clock speedup.  The `scale` CLI command and the
-//! `hotpath_parallel` bench both drive this module.
+//! reference engine, the deterministic parallel engine at a ladder of
+//! thread counts, and the sharded cluster coordinator at a ladder of
+//! shard counts — verifying bit-identical traces/states for every row
+//! and reporting wall-clock speedup plus throughput (edges balanced per
+//! second, the roofline axis).  The `scale` CLI command and the
+//! `hotpath_parallel` / `cluster_sharded` benches all drive this module.
 
 use crate::balancer::{PairAlgorithm, SortAlgo};
 use crate::bcm::{Engine, Parallel, Schedule, Sequential, StopRule};
+use crate::coordinator::{Cluster, WorkerAlgo};
 use crate::graph::Topology;
 use crate::load::{LoadState, Mobility, WeightDistribution};
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
 use crate::util::table::{f, Table};
 use std::time::Instant;
@@ -54,7 +58,7 @@ pub fn large_scenarios() -> Vec<ScalingScenario> {
     ]
 }
 
-/// One parallel measurement within a [`ScalingReport`].
+/// One parallel-engine measurement within a [`ScalingReport`].
 #[derive(Clone, Debug)]
 pub struct ThreadMeasurement {
     pub threads: usize,
@@ -65,7 +69,16 @@ pub struct ThreadMeasurement {
     pub identical: bool,
 }
 
-/// Result of one scenario's sequential-vs-parallel comparison.
+/// One sharded-cluster measurement within a [`ScalingReport`].
+#[derive(Clone, Debug)]
+pub struct ShardMeasurement {
+    pub shards: usize,
+    pub secs: f64,
+    pub speedup: f64,
+    pub identical: bool,
+}
+
+/// Result of one scenario's sequential-vs-parallel-vs-cluster comparison.
 #[derive(Clone, Debug)]
 pub struct ScalingReport {
     pub scenario: String,
@@ -74,22 +87,33 @@ pub struct ScalingReport {
     pub colors: usize,
     pub seq_secs: f64,
     pub final_discrepancy: f64,
+    /// Total edges balanced over the run (identical for every row by the
+    /// determinism contract) — the numerator of the edges/s column.
+    pub edges_balanced: usize,
     pub rows: Vec<ThreadMeasurement>,
+    pub cluster_rows: Vec<ShardMeasurement>,
 }
 
 impl ScalingReport {
     pub fn all_identical(&self) -> bool {
         self.rows.iter().all(|r| r.identical)
+            && self.cluster_rows.iter().all(|r| r.identical)
     }
 
-    /// Best observed speedup across the thread ladder.
+    /// Best observed speedup across the thread and shard ladders.
     pub fn best_speedup(&self) -> f64 {
-        self.rows.iter().map(|r| r.speedup).fold(0.0, f64::max)
+        self.rows
+            .iter()
+            .map(|r| r.speedup)
+            .chain(self.cluster_rows.iter().map(|r| r.speedup))
+            .fold(0.0, f64::max)
     }
 }
 
 /// Run one scenario: a sequential reference run, then one parallel run
-/// per entry of `thread_counts` (0 = auto), each checked for bit-identity.
+/// per entry of `thread_counts` and one sharded-cluster run per entry of
+/// `shard_counts` (0 = auto), each checked for bit-identity against the
+/// reference.  Cluster worker failures surface as errors.
 pub fn run_scaling(
     topology: &Topology,
     n: usize,
@@ -97,7 +121,8 @@ pub fn run_scaling(
     sweeps: usize,
     seed: u64,
     thread_counts: &[usize],
-) -> ScalingReport {
+    shard_counts: &[usize],
+) -> Result<ScalingReport> {
     let mut rng = Pcg64::new(seed);
     let g = topology.build(n, &mut rng);
     let schedule = Schedule::from_graph(&g);
@@ -130,31 +155,57 @@ pub fn run_scaling(
             identical: trace == seq_trace && st == seq_state,
         });
     }
-    ScalingReport {
+
+    let mut cluster_rows = Vec::with_capacity(shard_counts.len());
+    for &shards in shard_counts {
+        // WorkerAlgo::SortedGreedy maps to the same PairAlgorithm as the
+        // reference run, so the bit-identity check is meaningful.
+        let mut cluster =
+            Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
+        let resolved = cluster.shards();
+        let t0 = Instant::now();
+        let trace = cluster.run_seeded(&schedule, sweeps, seed)?;
+        let st = cluster.shutdown()?;
+        let secs = t0.elapsed().as_secs_f64();
+        cluster_rows.push(ShardMeasurement {
+            shards: resolved,
+            secs,
+            speedup: seq_secs / secs.max(1e-12),
+            identical: trace == seq_trace && st == seq_state,
+        });
+    }
+
+    Ok(ScalingReport {
         scenario: topology.name(),
         n,
         edges: g.num_edges(),
         colors: schedule.period(),
         seq_secs,
         final_discrepancy: seq_trace.final_discrepancy(),
+        edges_balanced: seq_trace.total_edges_balanced(),
         rows,
-    }
+        cluster_rows,
+    })
 }
 
-/// Render a report in the shared table format (and for CSV export).
+/// Render a report in the shared table format (and for CSV export): one
+/// row per engine/worker-count point, with throughput (edges/s) as the
+/// roofline axis.
 pub fn scaling_table(r: &ScalingReport) -> Table {
     let mut t = Table::new(
         &format!(
-            "E11 parallel scaling: {} n={} ({} edges, d={} colors, final disc {:.3})",
+            "E11 scaling: {} n={} ({} edges, d={} colors, final disc {:.3})",
             r.scenario, r.n, r.edges, r.colors, r.final_discrepancy
         ),
-        &["engine", "threads", "wall_s", "speedup", "identical"],
+        &["engine", "workers", "wall_s", "speedup", "edges_per_s", "identical"],
     );
+    let eps = |secs: f64| f(r.edges_balanced as f64 / secs.max(1e-12), 0);
     t.row(vec![
         "sequential".into(),
         "1".into(),
         f(r.seq_secs, 3),
         "1.00".into(),
+        eps(r.seq_secs),
         "-".into(),
     ]);
     for m in &r.rows {
@@ -163,6 +214,17 @@ pub fn scaling_table(r: &ScalingReport) -> Table {
             m.threads.to_string(),
             f(m.secs, 3),
             f(m.speedup, 2),
+            eps(m.secs),
+            m.identical.to_string(),
+        ]);
+    }
+    for m in &r.cluster_rows {
+        t.row(vec![
+            "cluster".into(),
+            m.shards.to_string(),
+            f(m.secs, 3),
+            f(m.speedup, 2),
+            eps(m.secs),
             m.identical.to_string(),
         ]);
     }
@@ -174,12 +236,14 @@ mod tests {
     use super::*;
 
     #[test]
-    fn small_scaling_run_is_identical_across_threads() {
-        let r = run_scaling(&Topology::Torus2d, 64, 10, 2, 42, &[2, 4]);
+    fn small_scaling_run_is_identical_across_threads_and_shards() {
+        let r = run_scaling(&Topology::Torus2d, 64, 10, 2, 42, &[2, 4], &[2, 4]).unwrap();
         assert_eq!(r.n, 64);
         assert_eq!(r.rows.len(), 2);
-        assert!(r.all_identical(), "parallel diverged: {r:?}");
+        assert_eq!(r.cluster_rows.len(), 2);
+        assert!(r.all_identical(), "a row diverged: {r:?}");
         assert!(r.final_discrepancy.is_finite());
+        assert!(r.edges_balanced > 0);
     }
 
     #[test]
@@ -193,11 +257,13 @@ mod tests {
     }
 
     #[test]
-    fn table_renders_with_speedup_column() {
-        let r = run_scaling(&Topology::Ring, 16, 5, 1, 1, &[2]);
+    fn table_renders_engine_and_cluster_rows() {
+        let r = run_scaling(&Topology::Ring, 16, 5, 1, 1, &[2], &[2]).unwrap();
         let s = scaling_table(&r).render();
         assert!(s.contains("speedup"));
+        assert!(s.contains("edges_per_s"));
         assert!(s.contains("sequential"));
         assert!(s.contains("parallel"));
+        assert!(s.contains("cluster"));
     }
 }

@@ -7,10 +7,12 @@
 //! * **Layer 3 (this crate)** — the distributed coordination system: the
 //!   balancing circuit model (BCM) protocol, network substrate, local
 //!   balancers (`Greedy`, `SortedGreedy`), metrics, theory bounds, and a
-//!   leader/worker runtime.  Rounds execute through the [`bcm::Engine`]
-//!   trait: [`bcm::Sequential`] (reference) or [`bcm::Parallel`] (scoped
-//!   threads over vertex-disjoint matchings, bit-identical to sequential
-//!   at every thread count via counter-based per-edge RNG streams).
+//!   sharded leader/worker runtime (`coordinator`: one worker per core
+//!   owning a contiguous node shard, O(cut) messaging).  Rounds execute
+//!   through the [`bcm::Engine`] trait: [`bcm::Sequential`] (reference)
+//!   or [`bcm::Parallel`] (scoped threads over vertex-disjoint
+//!   matchings); both engines and the cluster are bit-identical for any
+//!   worker count via counter-based per-edge RNG streams.
 //! * **Layer 2/1 (python/, build-time only)** — the batched per-round
 //!   rebalance lowered AOT to HLO-text artifacts, executed at runtime via
 //!   PJRT (`runtime` module).  Python never runs on the request path.

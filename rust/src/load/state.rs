@@ -43,6 +43,12 @@ pub struct LoadState {
 /// `(u, v)` entry per edge), as handed out by [`LoadState::split_pairs`].
 pub type PairSlots<'a> = Vec<(&'a mut Vec<Load>, &'a mut Vec<Load>)>;
 
+/// Minimum nodes per worker before the chunked weight reduction spawns
+/// threads; below this the scalar fold (tens of microseconds) is cheaper
+/// than a scoped spawn/join barrier, so threading would regress the
+/// round loop it is meant to speed up.
+pub const REDUCE_CHUNK_MIN: usize = 8192;
+
 impl LoadState {
     pub fn empty(n: usize) -> Self {
         Self {
@@ -134,9 +140,70 @@ impl LoadState {
 
     /// Discrepancy: weight difference between heaviest and lightest node.
     pub fn discrepancy(&self) -> f64 {
-        let x = self.load_vector();
-        let max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let min = x.iter().cloned().fold(f64::INFINITY, f64::min);
+        let (min, max) = self.weight_extremes();
+        max - min
+    }
+
+    /// `(min, max)` node weight, folded in node order — the scalar
+    /// reduction behind [`discrepancy`](Self::discrepancy).
+    pub fn weight_extremes(&self) -> (f64, f64) {
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for node in &self.nodes {
+            let w: f64 = node.iter().map(|l| l.weight).sum();
+            min = min.min(w);
+            max = max.max(w);
+        }
+        (min, max)
+    }
+
+    /// [`weight_extremes`](Self::weight_extremes) fanned out over up to
+    /// `threads` scoped workers, each folding a contiguous chunk of nodes.
+    ///
+    /// Bit-identical to the scalar fold for every thread count: each
+    /// node's weight is summed by the same per-node loop, and f64 min/max
+    /// are exactly associative and commutative (no rounding), so chunking
+    /// cannot change the result.  Small states (under
+    /// [`REDUCE_CHUNK_MIN`] nodes per worker) take the scalar path — the
+    /// thread fan-out would cost more than the fold.
+    pub fn weight_extremes_threaded(&self, threads: usize) -> (f64, f64) {
+        let workers = threads
+            .max(1)
+            .min((self.nodes.len() / REDUCE_CHUNK_MIN).max(1));
+        if workers <= 1 {
+            return self.weight_extremes();
+        }
+        let chunk = self.nodes.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .nodes
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(move || {
+                        let mut min = f64::INFINITY;
+                        let mut max = f64::NEG_INFINITY;
+                        for node in part {
+                            let w: f64 = node.iter().map(|l| l.weight).sum();
+                            min = min.min(w);
+                            max = max.max(w);
+                        }
+                        (min, max)
+                    })
+                })
+                .collect();
+            handles.into_iter().fold(
+                (f64::INFINITY, f64::NEG_INFINITY),
+                |(amin, amax), h| {
+                    let (min, max) = h.join().expect("reduction worker panicked");
+                    (amin.min(min), amax.max(max))
+                },
+            )
+        })
+    }
+
+    /// [`discrepancy`](Self::discrepancy) over the chunked reduction.
+    pub fn discrepancy_threaded(&self, threads: usize) -> f64 {
+        let (min, max) = self.weight_extremes_threaded(threads);
         max - min
     }
 
@@ -313,6 +380,34 @@ mod tests {
     fn split_pairs_rejects_self_loop() {
         let mut s = mk(2, Mobility::Full, 11);
         let _ = s.split_pairs(&[(3, 3)]);
+    }
+
+    #[test]
+    fn threaded_weight_extremes_bit_identical_to_scalar() {
+        // Large enough that the chunked path actually engages
+        // (REDUCE_CHUNK_MIN nodes per worker).
+        let mut rng = Pcg64::new(42);
+        let n = 4 * super::REDUCE_CHUNK_MIN;
+        let mut s = LoadState::empty(n);
+        for v in 0..n {
+            for j in 0..1 + (v % 3) {
+                s.push(v, Load::new((v * 4 + j) as u64, rng.uniform(0.0, 10.0)));
+            }
+        }
+        let scalar = s.weight_extremes();
+        for threads in [1, 2, 3, 4, 8, 64] {
+            assert_eq!(
+                s.weight_extremes_threaded(threads),
+                scalar,
+                "diverged at {threads} threads"
+            );
+        }
+        assert_eq!(s.discrepancy_threaded(4), s.discrepancy());
+        // empty nodes participate with weight 0 in both paths
+        let mut t = LoadState::empty(n);
+        t.push(0, Load::new(0, 5.0));
+        assert_eq!(t.weight_extremes_threaded(8), t.weight_extremes());
+        assert_eq!(t.weight_extremes(), (0.0, 5.0));
     }
 
     #[test]

@@ -7,7 +7,7 @@ use bcm_dlb::balancer::PairAlgorithm;
 use bcm_dlb::bcm::{run_device, Engine, Parallel, Schedule, Sequential, StopRule};
 use bcm_dlb::cli::{Args, USAGE};
 use bcm_dlb::config::ExperimentConfig;
-use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
+use bcm_dlb::coordinator::Cluster;
 use bcm_dlb::experiments::{figures, scaling, validate, SweepParams};
 use bcm_dlb::graph::{round_matrix, spectral, Topology};
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
@@ -87,6 +87,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.use_device = true;
     }
     cfg.threads = args.get_usize("threads", cfg.threads).map_err(|e| anyhow!(e))?;
+    cfg.shards = args.get_usize("shards", cfg.shards).map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -108,9 +109,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if cfg.threads != 1 && (use_cluster || cfg.use_device) {
         eprintln!(
             "warning: --threads {} is ignored on the {} path (engine threading only \
-             applies to the in-process engines)",
+             applies to the in-process engines{})",
             cfg.threads,
-            if use_cluster { "--cluster" } else { "--device" }
+            if use_cluster { "--cluster" } else { "--device" },
+            if use_cluster {
+                "; use --shards to size the sharded coordinator"
+            } else {
+                ""
+            }
         );
     }
     for rep in 0..cfg.reps {
@@ -125,13 +131,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             &mut rng,
         );
         let trace = if use_cluster {
-            let algo = match cfg.algorithm {
-                PairAlgorithm::Greedy => WorkerAlgo::Greedy,
-                _ => WorkerAlgo::SortedGreedy,
-            };
-            let mut cluster = Cluster::spawn(state, algo);
-            let t = cluster.run(&schedule, cfg.sweeps, &mut rng);
-            cluster.shutdown();
+            // Seeded like the engines and running the exact configured
+            // algorithm, so a cluster run reproduces the sequential /
+            // parallel result bit-exactly for any --shards.
+            let mut cluster = Cluster::spawn_with_algorithm(state, cfg.algorithm, cfg.shards);
+            let t = cluster.run_seeded(&schedule, cfg.sweeps, cfg.seed.wrapping_add(rep as u64))?;
+            cluster.shutdown()?;
             t
         } else if let Some(rt) = runtime.as_mut() {
             let algo = match cfg.algorithm {
@@ -210,18 +215,23 @@ fn cmd_scale(args: &Args) -> Result<()> {
         Some(_) => vec![args.get_usize("threads", 0).map_err(|e| anyhow!(e))?],
         None => vec![2, 4, 0], // ladder ending in auto (one per core)
     };
-    let report = scaling::run_scaling(&topo, n, loads, sweeps, seed, &threads);
+    let shards: Vec<usize> = match args.get("shards") {
+        Some(_) => vec![args.get_usize("shards", 0).map_err(|e| anyhow!(e))?],
+        None => vec![2, 0], // shard ladder ending in auto (one per core)
+    };
+    let report = scaling::run_scaling(&topo, n, loads, sweeps, seed, &threads, &shards)?;
     let t = scaling::scaling_table(&report);
     println!("{}", t.render());
     t.write_csv(Path::new("results/e11_scaling.csv")).ok();
     if report.all_identical() {
         println!(
-            "parallel engine trace-identical to sequential; best speedup {:.2}x",
+            "parallel engine and sharded cluster trace-identical to sequential; \
+             best speedup {:.2}x",
             report.best_speedup()
         );
         Ok(())
     } else {
-        Err(anyhow!("parallel trace diverged from the sequential reference"))
+        Err(anyhow!("a parallel or cluster trace diverged from the sequential reference"))
     }
 }
 

@@ -96,11 +96,24 @@ fn run_with_parallel_engine() {
 fn scale_command_small() {
     let (code, stdout, stderr) = run_cli(&[
         "scale", "--n", "32", "--topology", "torus2d", "--loads", "5", "--sweeps", "1",
-        "--threads", "2",
+        "--threads", "2", "--shards", "2",
     ]);
     assert_eq!(code, 0, "stderr: {stderr}");
     assert!(stdout.contains("speedup"));
+    assert!(stdout.contains("cluster"));
+    assert!(stdout.contains("edges_per_s"));
     assert!(stdout.contains("trace-identical"));
+}
+
+#[test]
+fn run_with_sharded_cluster() {
+    let (code, stdout, stderr) = run_cli(&[
+        "run", "--n", "16", "--loads", "8", "--reps", "1", "--sweeps", "3",
+        "--cluster", "--shards", "2",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("\"shards\":2"));
+    assert!(stdout.contains("final discrepancy"));
 }
 
 #[test]

@@ -9,6 +9,7 @@ use bcm_dlb::balancer::{
     balance_pair, greedy, sorted_greedy, PairAlgorithm, SortAlgo,
 };
 use bcm_dlb::bcm::{run, Engine, Parallel, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::{resolve_shards, Cluster, WorkerAlgo};
 use bcm_dlb::graph::{round_matrix, EdgeColoring, Graph, Topology};
 use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
 use bcm_dlb::runtime::{fallback, DeviceAlgo, EdgeProblem};
@@ -274,6 +275,58 @@ fn prop_parallel_engine_bit_identical_to_sequential() {
         let auto_trace = Parallel::auto().run(&mut auto_state, &schedule, algo, stop, seed);
         assert_eq!(auto_trace, seq_trace);
         assert_eq!(auto_state, seq_state);
+    });
+}
+
+#[test]
+fn prop_sharded_cluster_bit_identical_to_sequential() {
+    // The coordinator extension of the tentpole invariant: for any
+    // topology, mobility and seed, the sharded cluster's trace and final
+    // state are bit-identical to the sequential engine's at shard counts
+    // 1, 2 and one-per-core (the counter-based per-edge streams replace
+    // the old leader-drawn coin flips).
+    let cores = resolve_shards(0);
+    forall("cluster == sequential", 6, |rng| {
+        let (topology, n) = match rng.below(4) {
+            0 => (Topology::Ring, 8 + rng.below(17)),
+            1 => (Topology::Torus2d, 16),
+            2 => (Topology::Hypercube, 16),
+            _ => (Topology::RandomConnected, 5 + rng.below(20)),
+        };
+        let g = topology.build(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let mobility = if rng.coin() { Mobility::Full } else { Mobility::Partial };
+        let dist = random_dist(rng);
+        let state0 = LoadState::init_uniform_counts(n, 1 + rng.below(20), &dist, mobility, rng);
+        let (walgo, algo) = if rng.coin() {
+            (WorkerAlgo::Greedy, PairAlgorithm::Greedy)
+        } else {
+            (WorkerAlgo::SortedGreedy, PairAlgorithm::SortedGreedy(SortAlgo::Quick))
+        };
+        let sweeps = 1 + rng.below(3);
+        let seed = rng.next_u64();
+
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(
+            &mut seq_state,
+            &schedule,
+            algo,
+            StopRule::sweeps(sweeps),
+            seed,
+        );
+        for shards in [1usize, 2, cores] {
+            let mut cluster = Cluster::spawn_sharded(state0.clone(), walgo, shards);
+            let trace = cluster.run_seeded(&schedule, sweeps, seed).unwrap();
+            let fin = cluster.shutdown().unwrap();
+            assert_eq!(
+                trace, seq_trace,
+                "trace diverged: {topology:?} n={n} algo={algo:?} shards={shards}"
+            );
+            assert_eq!(
+                fin, seq_state,
+                "state diverged: {topology:?} n={n} algo={algo:?} shards={shards}"
+            );
+        }
     });
 }
 
