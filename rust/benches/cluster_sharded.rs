@@ -1,14 +1,18 @@
 //! Sharded-coordinator scaling: sequential reference vs the cluster at a
-//! ladder of shard counts (the coordinator counterpart of
-//! `hotpath_parallel`).
+//! ladder of shard counts crossed with a ladder of round-batch sizes
+//! (the coordinator counterpart of `hotpath_parallel`).
 //!
 //! Every cluster run is checked bit-identical against the sequential
 //! engine before its time is reported, so this bench doubles as a
-//! determinism smoke test for the coordinator.
+//! determinism smoke test for the coordinator — including the pipelined
+//! batched protocol (`--batch-rounds`), whose leader-message
+//! amortization shows up in the `ldr_msgs_per_round` column.
 //!
 //! `cargo bench --bench cluster_sharded` runs the n=4096 scenarios;
 //! `-- --smoke` (or `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates to
 //! n=256, 1 sweep, so CI can exercise the sharded protocol in seconds.
+//! `-- --batch-rounds B` pins the batch ladder to the single value B
+//! (default ladder: 1 and 4 rounds per leader Ctl message).
 
 use bcm_dlb::coordinator::shard::resolve_shards;
 use bcm_dlb::experiments::scaling::{run_scaling, scaling_table};
@@ -21,9 +25,20 @@ fn env_flag(name: &str) -> bool {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke")
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
         || env_flag("BCM_DLB_SMOKE")
         || env_flag("BCM_DLB_QUICK");
+    let batch_ladder: Vec<usize> = match args.iter().position(|a| a == "--batch-rounds") {
+        Some(i) => {
+            let v = args
+                .get(i + 1)
+                .and_then(|s| s.parse().ok())
+                .expect("--batch-rounds expects an integer");
+            vec![v]
+        }
+        None => vec![1, 4],
+    };
     let shard_ladder = [1usize, 2, 4, 0]; // 0 = auto (one worker per core)
     let cores = resolve_shards(0);
     let scenarios: Vec<(&str, Topology)> = vec![
@@ -32,7 +47,7 @@ fn main() {
     ];
     let (n, loads, sweeps) = if smoke { (256, 10, 1) } else { (4096, 20, 2) };
     eprintln!(
-        "cluster_sharded: {} scenarios at n={n}, {cores} cores{}",
+        "cluster_sharded: {} scenarios at n={n}, {cores} cores, batch ladder {batch_ladder:?}{}",
         scenarios.len(),
         if smoke { " (smoke)" } else { "" }
     );
@@ -41,7 +56,16 @@ fn main() {
     let mut diverged = false;
     let mut best_overall: f64 = 0.0;
     for (name, topology) in scenarios {
-        let report = match run_scaling(&topology, n, loads, sweeps, 2013, &[], &shard_ladder) {
+        let report = match run_scaling(
+            &topology,
+            n,
+            loads,
+            sweeps,
+            2013,
+            &[],
+            &shard_ladder,
+            &batch_ladder,
+        ) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("cluster_sharded: {name} failed: {e}");
@@ -55,6 +79,21 @@ fn main() {
         if !report.all_identical() {
             eprintln!("DIVERGENCE: {name} sharded cluster != sequential");
             diverged = true;
+        }
+        // batching must never increase leader messages per round at a
+        // fixed shard count (the amortization claim of the batched
+        // protocol, also asserted unit-side)
+        for pair in report.cluster_rows.windows(2) {
+            if pair[0].shards == pair[1].shards
+                && pair[1].batch > pair[0].batch
+                && pair[1].leader_msgs_per_round > pair[0].leader_msgs_per_round
+            {
+                eprintln!(
+                    "REGRESSION: {name} batch {} sends more leader messages/round than batch {}",
+                    pair[1].batch, pair[0].batch
+                );
+                diverged = true;
+            }
         }
         best_overall = best_overall.max(report.best_speedup());
     }

@@ -43,8 +43,9 @@ fn main() {
         } else {
             (scenario.n, scenario.loads_per_node, 2)
         };
-        let report = run_scaling(&scenario.topology, n, loads, sweeps, 2013, &thread_ladder, &[])
-            .expect("scaling run failed (no cluster rows requested)");
+        let report =
+            run_scaling(&scenario.topology, n, loads, sweeps, 2013, &thread_ladder, &[], &[])
+                .expect("scaling run failed (no cluster rows requested)");
         let t = scaling_table(&report);
         println!("{}", t.render());
         t.write_csv(Path::new(&format!(

@@ -37,9 +37,24 @@ impl Schedule {
         self.n
     }
 
+    /// Color class (matching index) applied in round `t`.
+    pub fn color_of(&self, t: usize) -> usize {
+        t % self.matchings.len()
+    }
+
     /// Matching applied in round `t` (round-robin over the colors).
     pub fn matching(&self, t: usize) -> &[(u32, u32)] {
-        &self.matchings[t % self.matchings.len()]
+        &self.matchings[self.color_of(t)]
+    }
+
+    /// Look-ahead window: the colors of the `b` rounds starting at
+    /// `start`.  Because the schedule is a fixed periodic matching
+    /// sequence, future rounds' plans are known in advance — this is
+    /// what lets the sharded coordinator dispatch a whole batch of
+    /// rounds in one control message and lets workers prefetch the next
+    /// round's plan while the current round's messages are in flight.
+    pub fn lookahead_colors(&self, start: usize, b: usize) -> Vec<usize> {
+        (start..start + b).map(|t| self.color_of(t)).collect()
     }
 
     pub fn matchings(&self) -> &[Vec<(u32, u32)>] {
@@ -74,6 +89,21 @@ mod tests {
         let s = Schedule::from_graph(&g);
         assert_eq!(s.matching(0), s.matching(s.period()));
         assert_eq!(s.matching(1), s.matching(s.period() + 1));
+        assert_eq!(s.color_of(0), s.color_of(s.period()));
+        assert_eq!(s.color_of(s.period() + 1), 1 % s.period());
+    }
+
+    #[test]
+    fn lookahead_colors_cover_the_window_round_robin() {
+        let g = Graph::ring(8);
+        let s = Schedule::from_graph(&g); // period 2
+        assert_eq!(s.lookahead_colors(0, 5), vec![0, 1, 0, 1, 0]);
+        assert_eq!(s.lookahead_colors(3, 2), vec![1, 0]);
+        assert!(s.lookahead_colors(4, 0).is_empty());
+        // the window agrees with matching() round by round
+        for (i, &c) in s.lookahead_colors(7, 6).iter().enumerate() {
+            assert_eq!(s.matching(7 + i), s.matchings()[c].as_slice());
+        }
     }
 
     #[test]

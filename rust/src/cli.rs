@@ -78,12 +78,16 @@ COMMANDS
                  [--shards K]   sharded coordinator workers on the
                                 --cluster path (0 = one per core;
                                 identical results at any count)
+                 [--batch-rounds B]  rounds per leader Ctl message on the
+                                --cluster path (0 = auto, max(1, n/16384);
+                                identical results at any batch size)
                  [--trace-out FILE.csv]  per-round time series (rep 0)
   scale          sequential vs parallel engine vs sharded cluster
                  [--n N] [--topology T] [--loads L] [--sweeps S]
-                 [--threads K] [--shards K] [--seed X]  (default: n=4096
-                 torus2d, thread ladder 2/4/auto, shard ladder 2/auto;
-                 verifies trace identity, reports edges/s)
+                 [--threads K] [--shards K] [--batch-rounds B] [--seed X]
+                 (default: n=4096 torus2d, thread ladder 2/4/auto, shard
+                 ladder 2/auto, batch ladder 1/4/16; verifies trace
+                 identity, reports edges/s)
   sweep          the paper's full §6 sweep (Figs. 1-3 data)
                  [--quick]
   fig1..fig5     regenerate one figure's table(s)   [--quick]

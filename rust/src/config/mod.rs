@@ -33,6 +33,11 @@ pub struct ExperimentConfig {
     /// `threads`, purely a performance knob — results are bit-identical
     /// across all values.
     pub shards: usize,
+    /// Rounds dispatched per leader control message on the `--cluster`
+    /// path: 0 = auto (`max(1, n / 16384)` — batch only once leader
+    /// round-trips dominate), B = exactly B rounds per batch.  Purely a
+    /// performance knob — results are bit-identical across all values.
+    pub batch_rounds: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -50,6 +55,7 @@ impl Default for ExperimentConfig {
             use_device: false,
             threads: 1,
             shards: 0,
+            batch_rounds: 0,
         }
     }
 }
@@ -102,6 +108,9 @@ impl ExperimentConfig {
         if let Some(x) = v.get("shards").as_usize() {
             cfg.shards = x;
         }
+        if let Some(x) = v.get("batch_rounds").as_usize() {
+            cfg.batch_rounds = x;
+        }
         if cfg.n < 2 {
             return Err(anyhow!("config: n must be >= 2"));
         }
@@ -125,6 +134,7 @@ impl ExperimentConfig {
             ("use_device", self.use_device.into()),
             ("threads", self.threads.into()),
             ("shards", self.shards.into()),
+            ("batch_rounds", self.batch_rounds.into()),
         ])
     }
 }
@@ -163,6 +173,18 @@ mod tests {
         assert_eq!(cfg.shards, 4);
         let cfg = ExperimentConfig::from_json_str("{}").unwrap();
         assert_eq!(cfg.shards, 0); // 0 = one shard per core
+    }
+
+    #[test]
+    fn batch_rounds_parse_roundtrip_and_default() {
+        let cfg = ExperimentConfig::from_json_str(r#"{"batch_rounds": 8}"#).unwrap();
+        assert_eq!(cfg.batch_rounds, 8);
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.batch_rounds, 0); // 0 = auto (max(1, n / 16384))
+        let text = cfg.to_json().to_string();
+        assert!(text.contains("\"batch_rounds\":0"), "not serialized: {text}");
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.batch_rounds, cfg.batch_rounds);
     }
 
     #[test]

@@ -1,19 +1,23 @@
 //! The sharded leader: spawns one worker per core (each owning a
-//! contiguous node shard), drives the BCM schedule round by round,
+//! contiguous node shard), drives the BCM schedule in batches of rounds,
 //! folds per-shard metrics, and tears the cluster down into a final
 //! `LoadState`.
 //!
 //! This is the deployment shape the paper assumes (§1) at shard
 //! granularity: the leader is pure control plane (schedule + metrics) —
 //! load payloads only ever travel between the shards a cut edge spans,
-//! so per-round traffic is O(cross-shard edges + shards) instead of the
-//! O(n) of the historical one-thread-per-processor cluster.
+//! so per-round traffic is O(cross-shard edges + shards / B) where `B`
+//! is the round batch: the leader dispatches `B` rounds per
+//! [`Ctl::RunBatch`] and receives one coalesced [`Report::Batch`] per
+//! shard, amortizing the leader round-trip that dominates wall-clock at
+//! large `n`.  Within a batch workers pipeline freely (see
+//! [`worker`](super::worker)), synchronized only by their cut edges.
 //!
 //! Determinism: rounds are keyed by a run seed (`run_seeded`) and every
 //! edge draws from `Pcg64::for_edge(seed, round, edge)`, so the trace and
 //! final state are **bit-identical** to `bcm::Sequential` (and
-//! `bcm::Parallel`) for every shard count — asserted by
-//! `tests/property_invariants.rs`.
+//! `bcm::Parallel`) for every (shard count, batch size) combination —
+//! asserted by `tests/property_invariants.rs`.
 
 use super::messages::{Ctl, Report};
 use super::shard::{RoundPlan, ShardMap};
@@ -29,19 +33,40 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// How long the leader waits on worker reports before declaring the
-/// cluster wedged (a worker panic no longer blocks forever).
+/// How long the leader waits on worker reports, per dispatched round,
+/// before declaring the cluster wedged (a worker panic no longer blocks
+/// forever).  Scaled by the batch size — a `RunBatch` only reports after
+/// all of its rounds — and kept above the workers' equally-scaled peer
+/// timeout so a genuine fault is blamed on the right shard and round.
 const ROUND_TIMEOUT: Duration = Duration::from_secs(60);
 const SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// `ROUND_TIMEOUT` scaled to a batch of `rounds` rounds.
+fn batch_timeout(rounds: usize) -> Duration {
+    ROUND_TIMEOUT.saturating_mul(u32::try_from(rounds).unwrap_or(u32::MAX))
+}
+
+/// Resolve the rounds-per-control-message knob: `0` = auto, which picks
+/// `max(1, n / 16384)` — batching only pays once leader round-trips
+/// dominate the per-round work, which empirically needs n >= 65536 for
+/// B >= 4 (the open ROADMAP scale); smaller networks keep lock-step
+/// B = 1.  Any explicit value is used as-is (clamped to >= 1).
+pub fn resolve_batch_rounds(batch: usize, n: usize) -> usize {
+    if batch == 0 {
+        (n / 16384).max(1)
+    } else {
+        batch
+    }
+}
+
 /// Leader-side message accounting, used to assert the sharding
-/// communication contract: leader traffic is O(shards) per round and
-/// worker-to-worker traffic is O(cross-shard edges).
+/// communication contract: leader traffic is O(shards / batch) per round
+/// and worker-to-worker traffic is O(cross-shard edges).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MessageStats {
-    /// Control messages the leader sent (one per shard per round/poll).
+    /// Control messages the leader sent (one per shard per batch/poll).
     pub ctl_sent: usize,
-    /// Reports the leader received (one per shard per round/poll).
+    /// Reports the leader received (one per shard per batch/poll).
     pub reports_received: usize,
     /// Worker-to-worker messages (Offer + Settle: two per cross edge).
     pub peer_msgs: usize,
@@ -49,14 +74,21 @@ pub struct MessageStats {
     pub cross_edges: usize,
     /// Rounds executed.
     pub rounds: usize,
+    /// Batches dispatched (each a `Ctl::RunBatch` per shard).
+    pub batches: usize,
 }
 
+/// The sharded cluster handle: owns the worker threads and the control /
+/// report channels, and exposes the seeded run API.
 pub struct Cluster {
     map: ShardMap,
     ctl_tx: Vec<Sender<Ctl>>,
     report_rx: Receiver<Report>,
     handles: Vec<JoinHandle<()>>,
     stats: MessageStats,
+    /// Rounds dispatched per leader control message (0 = auto); resolved
+    /// through [`resolve_batch_rounds`] at run time.
+    batch_rounds: usize,
     /// Shards that reported a fatal error and exited (they will send no
     /// `Final` on shutdown).
     dead: Vec<bool>,
@@ -81,9 +113,31 @@ impl Cluster {
     /// The state is carved into contiguous per-shard slices, each owned
     /// exclusively by its worker.
     pub fn spawn_with_algorithm(
+        state: LoadState,
+        algo: PairAlgorithm,
+        shards: usize,
+    ) -> Cluster {
+        Self::spawn_inner(state, algo, shards, None)
+    }
+
+    /// Fault-injection spawn for tests: worker `fault.0` panics at the
+    /// start of global round `fault.1`, exercising the mid-batch
+    /// fail-stop contract.
+    #[doc(hidden)]
+    pub fn spawn_with_fault(
+        state: LoadState,
+        algo: WorkerAlgo,
+        shards: usize,
+        fault: (usize, usize),
+    ) -> Cluster {
+        Self::spawn_inner(state, algo.pair(), shards, Some(fault))
+    }
+
+    fn spawn_inner(
         mut state: LoadState,
         algo: PairAlgorithm,
         shards: usize,
+        fault: Option<(usize, usize)>,
     ) -> Cluster {
         let map = ShardMap::new(state.n(), shards);
         let k = map.shards();
@@ -116,6 +170,10 @@ impl Cluster {
                 peer_rx: peer_rx[s].take().unwrap(),
                 peer_tx: peer_tx.clone(),
                 report_tx: report_tx.clone(),
+                fail_at_round: match fault {
+                    Some((fs, fr)) if fs == s => Some(fr),
+                    _ => None,
+                },
             };
             handles.push(std::thread::spawn(move || worker.run()));
         }
@@ -126,6 +184,7 @@ impl Cluster {
             report_rx,
             handles,
             stats: MessageStats::default(),
+            batch_rounds: 0,
             dead,
             failure: None,
         }
@@ -163,6 +222,7 @@ impl Cluster {
         result
     }
 
+    /// Number of nodes the cluster balances.
     pub fn n(&self) -> usize {
         self.map.n()
     }
@@ -170,6 +230,19 @@ impl Cluster {
     /// Resolved worker count.
     pub fn shards(&self) -> usize {
         self.map.shards()
+    }
+
+    /// Set the number of rounds dispatched per leader control message
+    /// (`0` = auto, see [`resolve_batch_rounds`]).  Purely a performance
+    /// knob: the determinism contract holds at every (shards, batch)
+    /// combination because no RNG state crosses messages.
+    pub fn set_batch_rounds(&mut self, batch: usize) {
+        self.batch_rounds = batch;
+    }
+
+    /// The resolved rounds-per-control-message this cluster dispatches.
+    pub fn batch_rounds(&self) -> usize {
+        resolve_batch_rounds(self.batch_rounds, self.n())
     }
 
     /// Leader-side message accounting since spawn.
@@ -192,7 +265,8 @@ impl Cluster {
     /// Drive `sweeps` sweeps with counter-based per-edge randomness: the
     /// resulting trace and final state are bit-identical to
     /// `bcm::Sequential::run(.., StopRule::sweeps(sweeps), seed)` for any
-    /// shard count.
+    /// shard count and any batch size
+    /// ([`set_batch_rounds`](Self::set_batch_rounds)).
     pub fn run_seeded(
         &mut self,
         schedule: &Schedule,
@@ -201,19 +275,26 @@ impl Cluster {
     ) -> Result<RunTrace> {
         assert_eq!(schedule.n(), self.n(), "state/schedule size mismatch");
         let d = schedule.period();
-        // one classification per color, shared across sweeps (zero-copy
-        // per round: workers receive an Arc)
-        let plans: Vec<Arc<RoundPlan>> = (0..d)
-            .map(|c| Arc::new(RoundPlan::build(schedule.matching(c), &self.map)))
-            .collect();
+        // one classification per color, shared across sweeps and batches
+        // (zero-copy per dispatch: workers receive Arcs)
+        let plans: Arc<Vec<Arc<RoundPlan>>> = Arc::new(
+            (0..d)
+                .map(|c| Arc::new(RoundPlan::build(schedule.matching(c), &self.map)))
+                .collect(),
+        );
+        let total = sweeps * d;
+        let batch = self.batch_rounds();
         let mut trace = RunTrace {
             initial_discrepancy: self.poll_discrepancy()?,
-            rounds: Vec::new(),
+            rounds: Vec::with_capacity(total),
         };
-        for round in 0..sweeps * d {
-            let color = round % d;
-            let stats = self.round_with_plan(round, color, seed, plans[color].clone())?;
-            trace.rounds.push(stats);
+        let mut start = 0usize;
+        while start < total {
+            let b = batch.min(total - start);
+            let colors = schedule.lookahead_colors(start, b);
+            let stats = self.batch_with_plans(start, &colors, seed, &plans)?;
+            trace.rounds.extend(stats);
+            start += b;
         }
         Ok(trace)
     }
@@ -239,38 +320,57 @@ impl Cluster {
         seed: u64,
     ) -> Result<RoundStats> {
         assert_eq!(schedule.n(), self.n(), "state/schedule size mismatch");
-        let plan = Arc::new(RoundPlan::build(schedule.matching(round), &self.map));
-        self.round_with_plan(round, round % schedule.period(), seed, plan)
+        let plans: Arc<Vec<Arc<RoundPlan>>> = Arc::new(vec![Arc::new(RoundPlan::build(
+            schedule.matching(round),
+            &self.map,
+        ))]);
+        let colors = [schedule.color_of(round)];
+        let mut stats = self.batch_with_plans(round, &colors, seed, &plans)?;
+        debug_assert_eq!(stats.len(), 1);
+        stats.pop().ok_or_else(|| anyhow!("empty batch result"))
     }
 
-    fn round_with_plan(
+    /// Run one batch behind the fail-stop guard.  `colors[i]` is the
+    /// schedule color of round `start_round + i` (recorded in the trace);
+    /// the plan of round `r` is `plans[r % plans.len()]`, mirroring the
+    /// worker's indexing.
+    fn batch_with_plans(
         &mut self,
-        round: usize,
-        color: usize,
+        start_round: usize,
+        colors: &[usize],
         seed: u64,
-        plan: Arc<RoundPlan>,
-    ) -> Result<RoundStats> {
+        plans: &Arc<Vec<Arc<RoundPlan>>>,
+    ) -> Result<Vec<RoundStats>> {
         self.check_failed()?;
-        let result = self.round_inner(round, color, seed, plan);
+        let result = self.batch_inner(start_round, colors, seed, plans);
         self.poison_on_err(result)
     }
 
-    fn round_inner(
+    fn batch_inner(
         &mut self,
-        round: usize,
-        color: usize,
+        start_round: usize,
+        colors: &[usize],
         seed: u64,
-        plan: Arc<RoundPlan>,
-    ) -> Result<RoundStats> {
-        let edges = plan.edges;
-        self.stats.cross_edges += plan.cross_edges;
-        self.stats.rounds += 1;
+        plans: &Arc<Vec<Arc<RoundPlan>>>,
+    ) -> Result<Vec<RoundStats>> {
+        let b = colors.len();
+        let d = plans.len();
+        let mut edges = Vec::with_capacity(b);
+        for i in 0..b {
+            let plan = &plans[(start_round + i) % d];
+            edges.push(plan.edges);
+            self.stats.cross_edges += plan.cross_edges;
+        }
+        self.stats.rounds += b;
+        self.stats.batches += 1;
+        // dispatch: one RunBatch per shard covers all b rounds
         let mut send_failed = None;
         for (s, tx) in self.ctl_tx.iter().enumerate() {
-            let msg = Ctl::Round {
-                round,
+            let msg = Ctl::RunBatch {
+                start_round,
+                rounds: b,
                 seed,
-                plan: plan.clone(),
+                plans: plans.clone(),
             };
             if tx.send(msg).is_err() {
                 send_failed = Some(s);
@@ -279,41 +379,65 @@ impl Cluster {
             self.stats.ctl_sent += 1;
         }
         if let Some(s) = send_failed {
-            let msg = format!("control channel closed before round {round}");
+            let msg = format!("control channel closed before batch at round {start_round}");
             return Err(self.worker_error(s, msg));
         }
-        let mut movements = 0usize;
-        let mut min = f64::INFINITY;
-        let mut max = f64::NEG_INFINITY;
+        // collect: one coalesced report per shard, folded per round
+        let mut movements = vec![0usize; b];
+        let mut min = vec![f64::INFINITY; b];
+        let mut max = vec![f64::NEG_INFINITY; b];
+        let wait = batch_timeout(b);
         for _ in 0..self.map.shards() {
-            match self.recv_report("round reports")? {
-                Report::Round {
-                    movements: m,
-                    min_weight,
-                    max_weight,
-                    peer_msgs,
-                    ..
-                } => {
-                    movements += m;
-                    min = min.min(min_weight);
-                    max = max.max(max_weight);
-                    self.stats.peer_msgs += peer_msgs;
+            match self.recv_report("batch reports", wait)? {
+                Report::Batch { shard, rounds } => {
+                    if rounds.len() != b {
+                        return Err(anyhow!(
+                            "shard {shard} reported {} rounds for a {b}-round batch \
+                             starting at round {start_round}",
+                            rounds.len()
+                        ));
+                    }
+                    for (i, r) in rounds.iter().enumerate() {
+                        if r.round != start_round + i {
+                            return Err(anyhow!(
+                                "shard {shard} report out of order: round {} at slot {i} \
+                                 of the batch starting at round {start_round}",
+                                r.round
+                            ));
+                        }
+                        movements[i] += r.movements;
+                        min[i] = min[i].min(r.min_weight);
+                        max[i] = max[i].max(r.max_weight);
+                        self.stats.peer_msgs += r.peer_msgs;
+                    }
                 }
-                Report::Error { shard, message } => {
-                    return Err(self.worker_error(shard, message))
+                Report::Error {
+                    shard,
+                    round,
+                    message,
+                } => {
+                    let msg = match round {
+                        Some(r) => format!("failed at round {r}: {message}"),
+                        None => message,
+                    };
+                    return Err(self.worker_error(shard, msg));
                 }
                 other => {
-                    return Err(anyhow!("unexpected report during round {round}: {other:?}"))
+                    return Err(anyhow!(
+                        "unexpected report during batch at round {start_round}: {other:?}"
+                    ))
                 }
             }
         }
-        Ok(RoundStats {
-            round,
-            color,
-            discrepancy: max - min,
-            movements,
-            edges,
-        })
+        Ok((0..b)
+            .map(|i| RoundStats {
+                round: start_round + i,
+                color: colors[i],
+                discrepancy: max[i] - min[i],
+                movements: movements[i],
+                edges: edges[i],
+            })
+            .collect())
     }
 
     /// Poll every shard's node weights and fold the global discrepancy —
@@ -346,30 +470,32 @@ impl Cluster {
         }
         let mut w = vec![0.0f64; self.n()];
         for _ in 0..self.map.shards() {
-            match self.recv_report("weight reports")? {
+            match self.recv_report("weight reports", ROUND_TIMEOUT)? {
                 Report::Weights { shard, weights } => {
                     let range = self.map.range(shard);
                     debug_assert_eq!(weights.len(), range.len());
                     w[range].copy_from_slice(&weights);
                 }
-                Report::Error { shard, message } => {
-                    return Err(self.worker_error(shard, message))
-                }
+                Report::Error {
+                    shard,
+                    round: _,
+                    message,
+                } => return Err(self.worker_error(shard, message)),
                 other => return Err(anyhow!("unexpected report while polling weights: {other:?}")),
             }
         }
         Ok(w)
     }
 
-    fn recv_report(&mut self, what: &str) -> Result<Report> {
-        match self.report_rx.recv_timeout(ROUND_TIMEOUT) {
+    fn recv_report(&mut self, what: &str, wait: Duration) -> Result<Report> {
+        match self.report_rx.recv_timeout(wait) {
             Ok(r) => {
                 self.stats.reports_received += 1;
                 Ok(r)
             }
             Err(RecvTimeoutError::Timeout) => Err(anyhow!(
                 "timed out after {}s waiting for {what} (a worker likely panicked)",
-                ROUND_TIMEOUT.as_secs()
+                wait.as_secs()
             )),
             Err(RecvTimeoutError::Disconnected) => Err(anyhow!(
                 "all cluster workers terminated while waiting for {what}"
@@ -411,13 +537,22 @@ impl Cluster {
                     }
                     got += 1;
                 }
-                Ok(Report::Error { shard, message }) => {
+                Ok(Report::Error {
+                    shard,
+                    round,
+                    message,
+                }) => {
                     // that worker exits without sending a Final
-                    first_err.get_or_insert_with(|| anyhow!("cluster worker {shard}: {message}"));
+                    first_err.get_or_insert_with(|| match round {
+                        Some(r) => {
+                            anyhow!("cluster worker {shard}: failed at round {r}: {message}")
+                        }
+                        None => anyhow!("cluster worker {shard}: {message}"),
+                    });
                     expected = expected.saturating_sub(1);
                 }
-                // stale Round/Weights reports can remain queued when a
-                // run was aborted mid-round; drain them
+                // stale Batch/Weights reports can remain queued when a
+                // run was aborted mid-batch; drain them
                 Ok(_) => {}
                 Err(_) => {
                     timed_out = true;
@@ -433,11 +568,7 @@ impl Cluster {
             // block forever
             for h in handles {
                 if let Err(p) = h.join() {
-                    let msg = p
-                        .downcast_ref::<&'static str>()
-                        .map(|s| (*s).to_string())
-                        .or_else(|| p.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "unknown panic payload".to_string());
+                    let msg = super::worker::panic_message(p.as_ref());
                     first_err.get_or_insert_with(|| anyhow!("cluster worker panicked: {msg}"));
                 }
             }
@@ -535,6 +666,44 @@ mod tests {
     }
 
     #[test]
+    fn batched_runs_bit_identical_at_every_batch_size() {
+        // The batching extension of the tentpole contract: the pipelined
+        // batched execution must not be observable in the results, for
+        // any (shards, batch) combination including one batch covering
+        // the whole run.
+        let (state0, schedule, _) = init(10, 25, Mobility::Full, 8);
+        let seed = 31;
+        let sweeps = 4;
+        let total_rounds = sweeps * schedule.period();
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(
+            &mut seq_state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(sweeps),
+            seed,
+        );
+        for shards in [2usize, 3] {
+            for batch in [1usize, 3, total_rounds] {
+                let mut cluster =
+                    Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
+                cluster.set_batch_rounds(batch);
+                assert_eq!(cluster.batch_rounds(), batch);
+                let trace = cluster.run_seeded(&schedule, sweeps, seed).unwrap();
+                let fin = cluster.shutdown().unwrap();
+                assert_eq!(
+                    trace, seq_trace,
+                    "trace diverged at {shards} shards, batch {batch}"
+                );
+                assert_eq!(
+                    fin, seq_state,
+                    "state diverged at {shards} shards, batch {batch}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn cluster_bit_identical_with_pinned_and_partial_mobility() {
         let (mut state0, schedule, _) = init(12, 8, Mobility::Partial, 9);
         state0.push(3, Load::pinned(10_000, 75.0));
@@ -563,26 +732,31 @@ mod tests {
     #[test]
     fn leader_messages_scale_with_cut_not_n() {
         // Contiguous shards on a ring: the cut is exactly `shards` edges,
-        // so per-round traffic must be O(shards), not O(n).
+        // so per-round traffic must be O(shards), not O(n) — and batching
+        // must shrink the leader's share by the batch factor.
         let n = 64;
         let shards = 4;
         let sweeps = 3;
-        let mut rng = Pcg64::new(5);
         let g = Graph::ring(n);
         let schedule = Schedule::from_graph(&g);
-        let state = LoadState::init_uniform_counts(
-            n,
-            4,
-            &WeightDistribution::paper_section6(),
-            Mobility::Full,
-            &mut rng,
-        );
-        let mut cluster = Cluster::spawn_sharded(state, WorkerAlgo::SortedGreedy, shards);
+        let mk_state = || {
+            let mut rng = Pcg64::new(5);
+            LoadState::init_uniform_counts(
+                n,
+                4,
+                &WeightDistribution::paper_section6(),
+                Mobility::Full,
+                &mut rng,
+            )
+        };
+        let mut cluster = Cluster::spawn_sharded(mk_state(), WorkerAlgo::SortedGreedy, shards);
+        cluster.set_batch_rounds(1);
         cluster.run_seeded(&schedule, sweeps, 9).unwrap();
         let stats = cluster.message_stats();
         cluster.shutdown().unwrap();
         let rounds = sweeps * schedule.period();
         assert_eq!(stats.rounds, rounds);
+        assert_eq!(stats.batches, rounds);
         // each of the ring's k cut edges appears once per sweep
         assert_eq!(stats.cross_edges, shards * sweeps);
         // exactly one Offer + one Settle per cross-shard edge
@@ -595,6 +769,54 @@ mod tests {
             leader_msgs < n * rounds,
             "leader messaging is O(n) again: {leader_msgs} msgs for {rounds} rounds"
         );
+
+        // Batched rerun on the same ring: the per-round leader component
+        // must shrink to exactly 1/B of the unbatched count (the poll is
+        // batch-independent), while peer traffic stays pinned to the cut.
+        let batch = 3;
+        assert_eq!(rounds % batch, 0, "test wants an integral batch count");
+        let mut batched = Cluster::spawn_sharded(mk_state(), WorkerAlgo::SortedGreedy, shards);
+        batched.set_batch_rounds(batch);
+        batched.run_seeded(&schedule, sweeps, 9).unwrap();
+        let bstats = batched.message_stats();
+        batched.shutdown().unwrap();
+        assert_eq!(bstats.rounds, rounds);
+        assert_eq!(bstats.batches, rounds / batch);
+        assert_eq!(bstats.cross_edges, stats.cross_edges);
+        assert_eq!(bstats.peer_msgs, stats.peer_msgs);
+        let batched_leader = bstats.ctl_sent + bstats.reports_received;
+        let poll = 2 * shards; // one PollWeights + one Weights per shard
+        assert_eq!(
+            batched_leader - poll,
+            (leader_msgs - poll) / batch,
+            "batching did not amortize leader round-trips by {batch}x"
+        );
+    }
+
+    #[test]
+    fn worker_panic_mid_batch_names_the_failing_round() {
+        // A worker that dies inside a batch must surface an error naming
+        // the round it died in, and the cluster must fail stop.
+        let (state, schedule, _) = init(8, 10, Mobility::Full, 11);
+        let fail_round = 3;
+        let mut cluster =
+            Cluster::spawn_with_fault(state, WorkerAlgo::SortedGreedy, 1, (0, fail_round));
+        cluster.set_batch_rounds(schedule.period() * 3); // whole run in one batch
+        let sweeps = 3;
+        assert!(sweeps * schedule.period() > fail_round, "fault round never reached");
+        let err = cluster
+            .run_seeded(&schedule, sweeps, 5)
+            .expect_err("injected fault did not surface")
+            .to_string();
+        assert!(
+            err.contains(&format!("round {fail_round}")),
+            "error does not name the failing round: {err}"
+        );
+        assert!(err.contains("injected fault"), "panic payload lost: {err}");
+        // fail-stop: the poisoned cluster refuses further rounds and
+        // re-surfaces the failure on shutdown
+        assert!(cluster.run_seeded(&schedule, 1, 5).is_err());
+        assert!(cluster.shutdown().is_err());
     }
 
     #[test]
@@ -629,5 +851,15 @@ mod tests {
         let fin_b = b.shutdown().unwrap();
         assert_eq!(full.rounds, rounds);
         assert_eq!(fin_a, fin_b);
+    }
+
+    #[test]
+    fn batch_knob_resolution() {
+        assert_eq!(resolve_batch_rounds(0, 64), 1); // auto, small n
+        assert_eq!(resolve_batch_rounds(0, 16384), 1);
+        assert_eq!(resolve_batch_rounds(0, 65536), 4); // auto kicks in
+        assert_eq!(resolve_batch_rounds(0, 262144), 16);
+        assert_eq!(resolve_batch_rounds(7, 64), 7); // explicit wins
+        assert_eq!(resolve_batch_rounds(1, 1 << 20), 1);
     }
 }

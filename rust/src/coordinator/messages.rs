@@ -2,12 +2,21 @@
 //!
 //! The communication structure mirrors the matching model the paper
 //! assumes (§1, §2) at shard granularity: per round, only the edges that
-//! cross a shard boundary exchange payloads (one `Offer` from the slave
-//! shard, one `Settle` back from the master), while intra-shard edges are
-//! solved with no messaging at all.  The leader is pure control plane —
-//! it broadcasts one `Round` per shard and collects one aggregated
-//! report per shard, so leader traffic is O(shards) and worker-to-worker
-//! traffic is O(cross-shard edges) per round.
+//! cross a shard boundary exchange payloads (one [`ShardMsg::Offer`] from
+//! the slave shard, one [`ShardMsg::Settle`] back from the master), while
+//! intra-shard edges are solved with no messaging at all.  The leader is
+//! pure control plane — it broadcasts one [`Ctl::RunBatch`] covering `B`
+//! rounds per shard and collects one aggregated [`Report::Batch`] per
+//! shard, so leader traffic is O(shards / B) per round and
+//! worker-to-worker traffic is O(cross-shard edges) per round.
+//!
+//! Batching is what lets workers pipeline: within a batch no worker ever
+//! waits on the leader, only on the peers its cut edges touch, so a
+//! shard can run ahead into later rounds while a slower peer is still
+//! collecting earlier ones.  Peer messages are therefore tagged with
+//! their **round** in addition to their edge index; a receiver stashes
+//! messages that arrive early.  The full message-by-message spec lives
+//! in `DESIGN.md` §"Cluster wire protocol".
 
 use super::shard::RoundPlan;
 use crate::load::Load;
@@ -16,14 +25,26 @@ use std::sync::Arc;
 /// Leader -> worker control messages.
 #[derive(Debug)]
 pub enum Ctl {
-    /// Execute round `round`.  `seed` keys the counter-based per-edge RNG
-    /// streams (`Pcg64::for_edge(seed, round, edge)`), replacing the
-    /// leader-drawn coin flips of the historical cluster — the source of
-    /// the sharded runtime's bit-identity with `bcm::Sequential`.
-    Round {
-        round: usize,
+    /// Execute rounds `start_round .. start_round + rounds` as one
+    /// pipelined batch, reporting back a single [`Report::Batch`].
+    ///
+    /// `seed` keys the counter-based per-edge RNG streams
+    /// (`Pcg64::for_edge(seed, round, edge)`), replacing the leader-drawn
+    /// coin flips of the historical cluster — the source of the sharded
+    /// runtime's bit-identity with `bcm::Sequential` at every
+    /// (shards, batch) combination: no RNG state ever crosses a message.
+    RunBatch {
+        /// Global index of the batch's first round.
+        start_round: usize,
+        /// Number of rounds in the batch (`B >= 1`).
+        rounds: usize,
+        /// Run seed; every edge of round `r` draws from
+        /// `Pcg64::for_edge(seed, r, edge)`.
         seed: u64,
-        plan: Arc<RoundPlan>,
+        /// Per-color plan table (one entry per schedule color, shared
+        /// zero-copy across shards and batches); round `r` executes
+        /// `plans[r % plans.len()]`.
+        plans: Arc<Vec<Arc<RoundPlan>>>,
     },
     /// Report the shard's per-node weights to the leader.
     PollWeights,
@@ -31,41 +52,95 @@ pub enum Ctl {
     Shutdown,
 }
 
-/// Worker -> worker payloads, tagged with the edge's index within the
-/// round's matching (which also keys its RNG stream).
+/// Worker -> worker payloads, tagged with the round they belong to and
+/// the edge's index within that round's matching (which also keys the
+/// edge's RNG stream).
+///
+/// The round tag is what makes pipelining safe: edge indices repeat
+/// across rounds, and within a batch a fast shard may send round `r+1`
+/// traffic while a peer is still collecting round `r` — the receiver
+/// stashes any message whose round is ahead of its own.
 #[derive(Debug)]
 pub enum ShardMsg {
     /// Slave -> master: `v`'s mobile loads (in node order) and its pinned
     /// weight sum.
     Offer {
+        /// Global round the offer belongs to.
+        round: usize,
+        /// Edge index within the round's matching.
         edge: usize,
+        /// `v`'s mobile loads, in node order.
         loads: Vec<Load>,
+        /// Sum of `v`'s pinned load weights (stays on `v`).
         pinned: f64,
     },
     /// Master -> slave: `v`'s new mobile loads.
-    Settle { edge: usize, loads: Vec<Load> },
+    Settle {
+        /// Global round the settle belongs to.
+        round: usize,
+        /// Edge index within the round's matching.
+        edge: usize,
+        /// The mobile loads assigned back to `v`.
+        loads: Vec<Load>,
+    },
+}
+
+/// Per-round metrics inside a [`Report::Batch`]: the shard's movement
+/// count for the edges it mastered, its node-weight extremes after the
+/// round (the leader folds these into the global discrepancy — exact,
+/// because f64 min/max are associative), and the peer messages it sent.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    /// Global round index the entry describes.
+    pub round: usize,
+    /// Loads moved by the edges this shard mastered (local + master).
+    pub movements: usize,
+    /// Minimum node weight on this shard after the round.
+    pub min_weight: f64,
+    /// Maximum node weight on this shard after the round.
+    pub max_weight: f64,
+    /// Peer messages (offers + settles) this shard sent for the round.
+    pub peer_msgs: usize,
 }
 
 /// Worker -> leader reports.
 #[derive(Debug)]
 pub enum Report {
-    /// Round finished on this shard: movement count of the edges this
-    /// shard mastered plus the shard's node-weight extremes (the leader
-    /// folds these into the global discrepancy) and the number of peer
-    /// messages sent.
-    Round {
+    /// A whole batch finished on this shard: one [`RoundReport`] per
+    /// round, in ascending round order.  Coalescing the per-round
+    /// metrics into one message is the reply half of the
+    /// [`Ctl::RunBatch`] amortization.
+    Batch {
+        /// Reporting shard.
         shard: usize,
-        movements: usize,
-        min_weight: f64,
-        max_weight: f64,
-        peer_msgs: usize,
+        /// Per-round metrics, one entry per round of the batch.
+        rounds: Vec<RoundReport>,
     },
-    /// Per-node weights of the shard (in response to `Ctl::PollWeights`).
-    Weights { shard: usize, weights: Vec<f64> },
+    /// Per-node weights of the shard (in response to
+    /// [`Ctl::PollWeights`]).
+    Weights {
+        /// Reporting shard.
+        shard: usize,
+        /// Weight of each node the shard owns, in node order.
+        weights: Vec<f64>,
+    },
     /// Final load lists of the shard's nodes (in response to
-    /// `Ctl::Shutdown`).
-    Final { shard: usize, nodes: Vec<Vec<Load>> },
-    /// Fatal protocol violation on the worker; the leader surfaces it as
-    /// a `util::error` instead of wedging.
-    Error { shard: usize, message: String },
+    /// [`Ctl::Shutdown`]).
+    Final {
+        /// Reporting shard.
+        shard: usize,
+        /// Per-node load lists, in node order.
+        nodes: Vec<Vec<Load>>,
+    },
+    /// Fatal failure on the worker (protocol violation, dead peer, or a
+    /// caught panic); the leader surfaces it as a `util::error` instead
+    /// of wedging.  A mid-batch failure names the round it died in.
+    Error {
+        /// Failing shard.
+        shard: usize,
+        /// Round being executed when the failure hit, when attributable.
+        round: Option<usize>,
+        /// Human-readable failure description.
+        message: String,
+    },
 }

@@ -1,15 +1,49 @@
 //! Distributed BCM runtime: a leader thread orchestrating one shard
-//! worker per core, communicating over channels.  Intra-shard edges are
-//! solved locally; only cross-shard edges exchange (offer -> placement ->
-//! settle) messages, and every edge draws from the counter-based
-//! `Pcg64::for_edge` streams, so cluster runs are bit-identical to the
-//! in-process engines for any shard count.
+//! worker per core, communicating over channels.
+//!
+//! # Architecture
+//!
+//! The node range is carved into contiguous shards ([`ShardMap`]), one
+//! worker per shard.  Per round, a matching is classified once into a
+//! [`RoundPlan`]: intra-shard edges are solved locally with zero
+//! messaging, and only cross-shard edges exchange (offer -> placement ->
+//! settle) payloads between the two shards the edge spans.  The leader
+//! is pure control plane: it dispatches rounds in **batches** of `B`
+//! rounds per [`messages::Ctl::RunBatch`] and receives one coalesced
+//! [`messages::Report::Batch`] per shard, so leader traffic amortizes to
+//! O(shards / B) messages per round while worker-to-worker traffic stays
+//! O(cut edges).  Within a batch, workers pipeline: each round runs
+//! through a post-offers / solve-local / collect-settles state machine,
+//! overlapping cross-shard communication with intra-shard computation,
+//! and a shard may run rounds ahead of a slower peer (early messages are
+//! stashed by round tag).
+//!
+//! # Determinism
+//!
+//! Every edge draws from the counter-based `Pcg64::for_edge(seed,
+//! round, edge)` streams, so no RNG state ever crosses a message and
+//! cluster runs are **bit-identical** to the in-process engines for any
+//! shard count and any batch size ([`Cluster::run_seeded`],
+//! [`Cluster::set_batch_rounds`]).
+//!
+//! # Failure model
+//!
+//! Fail-stop: a worker failure (dead peer, protocol violation, or a
+//! caught panic) is reported to the leader with the round it occurred
+//! in, poisons the cluster against further rounds, and re-surfaces from
+//! [`Cluster::shutdown`].
+//!
+//! The message-by-message wire protocol, ordering guarantees, and the
+//! determinism argument are specified in `DESIGN.md` §"Cluster wire
+//! protocol".
+
+#![deny(missing_docs)]
 
 pub mod cluster;
 pub mod messages;
 pub mod shard;
 pub mod worker;
 
-pub use cluster::{Cluster, MessageStats};
+pub use cluster::{resolve_batch_rounds, Cluster, MessageStats};
 pub use shard::{resolve_shards, RoundPlan, ShardMap, ShardPlan};
 pub use worker::{ShardWorker, WorkerAlgo};

@@ -95,6 +95,7 @@ pub struct ShardPlan {
 /// order (u's loads then v's) matches the sequential engine exactly.
 #[derive(Clone, Debug)]
 pub struct RoundPlan {
+    /// Each shard's slice of the matching, indexed by shard.
     pub per_shard: Vec<ShardPlan>,
     /// Edges whose endpoints live in different shards.
     pub cross_edges: usize,
@@ -103,6 +104,9 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
+    /// Classify the matching `pairs` against `map`: every edge lands in
+    /// exactly one shard's `local` or `master` list (plus the matching
+    /// `slave` entry on the other endpoint's shard for cross edges).
     pub fn build(pairs: &[(u32, u32)], map: &ShardMap) -> RoundPlan {
         let mut per_shard = vec![ShardPlan::default(); map.shards()];
         let mut cross_edges = 0usize;

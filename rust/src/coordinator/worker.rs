@@ -4,34 +4,71 @@
 //! channels.  Intra-shard edges are solved locally through the same
 //! [`balance_pool`] primitive the engines use; for a cross-shard edge the
 //! owner of `u` is the edge master — the slave ships `v`'s mobile loads
-//! (`Offer`), the master solves the two-bin problem and ships `v`'s share
-//! back (`Settle`).  Every edge draws its randomness from
-//! `Pcg64::for_edge(seed, round, edge)`, so a sharded run is bit-identical
-//! to `bcm::Sequential` for any shard count.
+//! ([`ShardMsg::Offer`]), the master solves the two-bin problem and ships
+//! `v`'s share back ([`ShardMsg::Settle`]).  Every edge draws its
+//! randomness from `Pcg64::for_edge(seed, round, edge)`, so a sharded run
+//! is bit-identical to `bcm::Sequential` for any shard count.
+//!
+//! # The batched round state machine
+//!
+//! A [`Ctl::RunBatch`] carries `B` rounds, with every round's
+//! [`ShardPlan`] already on hand (the plans are known in advance because
+//! the BCM schedule is a fixed periodic matching sequence, so the leader
+//! ships the whole per-color plan table with the batch).  The worker
+//! drives each round through three states:
+//!
+//! 1. **post-offers** — ship this round's slave offers; channel sends
+//!    never block, so no inter-shard ordering can deadlock.
+//! 2. **solve-local** — balance the intra-shard edges while the offers
+//!    (and the settles coming back) are in flight.
+//! 3. **collect-settles** — serve master edges as offers arrive and
+//!    absorb the settles for slave edges.  Arrival order is irrelevant:
+//!    each edge's randomness is keyed on `(seed, round, edge)`.
+//!
+//! Within a batch no state touches the leader, so shards proceed at
+//! their own pace, synchronized only by the cut edges they share: a fast
+//! shard's round `r+1` traffic reaching a peer still collecting round
+//! `r` is stashed by round tag and served when the peer gets there.
+//! Rounds still execute in order *per shard* (round `r+1` offers draw on
+//! loads settled in round `r`), which is exactly the data dependency
+//! that keeps the pipeline bit-identical to the lock-step execution.
 
-use super::messages::{Ctl, Report, ShardMsg};
-use super::shard::ShardPlan;
+use super::messages::{Ctl, Report, RoundReport, ShardMsg};
+use super::shard::{RoundPlan, ShardPlan};
 use crate::balancer::{balance_pool, PairAlgorithm, SortAlgo};
 use crate::load::Load;
 use crate::util::rng::Pcg64;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Bounded mid-round wait for peer messages: a dead peer surfaces as a
 /// reported error instead of wedging the worker (and with it every later
-/// `Cluster::shutdown`) forever.  Shorter than the leader's round
+/// `Cluster::shutdown`) forever.  Scaled by the batch size before use —
+/// pipelining allows up to B-1 rounds of inter-shard skew, so a fast
+/// shard may legitimately wait while a slow peer works through earlier
+/// rounds — and kept shorter than the leader's equally-scaled batch
 /// timeout so the error report arrives before the leader gives up.
 const PEER_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// `PEER_TIMEOUT` scaled to a batch of `rounds` rounds.
+fn peer_timeout(rounds: usize) -> Duration {
+    PEER_TIMEOUT.saturating_mul(u32::try_from(rounds).unwrap_or(u32::MAX))
+}
 
 /// Algorithm a worker runs on its matched edges.
 #[derive(Clone, Copy, Debug)]
 pub enum WorkerAlgo {
+    /// Paper Alg. 4.2 applied to the pooled loads.
     Greedy,
+    /// Paper Alg. 4.1 (LPT): sort descending, then greedy.
     SortedGreedy,
 }
 
 impl WorkerAlgo {
+    /// The equivalent local [`PairAlgorithm`] (what the engines run).
     pub fn pair(self) -> PairAlgorithm {
         match self {
             WorkerAlgo::Greedy => PairAlgorithm::Greedy,
@@ -43,47 +80,88 @@ impl WorkerAlgo {
 /// One coordinator worker owning the contiguous node range
 /// `lo..lo + nodes.len()`.
 pub struct ShardWorker {
+    /// This worker's shard index.
     pub shard: usize,
     /// First node id owned; `nodes[i]` holds node `lo + i`.
     pub lo: usize,
+    /// Per-node load lists, owned exclusively by this worker.
     pub nodes: Vec<Vec<Load>>,
+    /// Local balancing algorithm run on every matched edge.
     pub algo: PairAlgorithm,
+    /// Control channel from the leader.
     pub ctl_rx: Receiver<Ctl>,
+    /// Inbound peer messages (offers for mastered edges, settles for
+    /// slaved edges), from any shard.
     pub peer_rx: Receiver<ShardMsg>,
+    /// Outbound peer channels, indexed by shard.
     pub peer_tx: Vec<Sender<ShardMsg>>,
+    /// Report channel to the leader.
     pub report_tx: Sender<Report>,
+    /// Fault injection for tests: panic at the start of this global
+    /// round, exercising the mid-batch failure contract.  Always `None`
+    /// in production spawns.
+    pub fail_at_round: Option<usize>,
+}
+
+/// One color's resolved work for a shard: the plan slice plus the
+/// edge-indexed lookup tables the collect state needs.  The plans
+/// arrive prefetched for the whole batch (the leader ships the
+/// per-color table ahead of time); the index maps are built once per
+/// batch per color — O(colors x cut) memory, the same order as the plan
+/// table itself — and shared by every round of that color.
+struct ColorTask<'a> {
+    /// This shard's slice of the color's matching.
+    plan: &'a ShardPlan,
+    /// edge -> (u, slave shard) for the edges this shard masters.
+    masters: BTreeMap<usize, (u32, usize)>,
+    /// edge -> v for the edges this shard slaves.
+    slaves: BTreeMap<usize, u32>,
+}
+
+impl<'a> ColorTask<'a> {
+    fn new(plan: &'a ShardPlan) -> Self {
+        ColorTask {
+            plan,
+            masters: plan
+                .master
+                .iter()
+                .map(|&(e, u, _v, slave)| (e, (u, slave)))
+                .collect(),
+            slaves: plan.slave.iter().map(|&(e, v, _)| (e, v)).collect(),
+        }
+    }
 }
 
 impl ShardWorker {
-    /// Event loop; returns when `Ctl::Shutdown` arrives, the leader goes
-    /// away, or a protocol violation is reported.
+    /// Event loop; returns when [`Ctl::Shutdown`] arrives, the leader
+    /// goes away, or a failure is reported.
     pub fn run(mut self) {
         while let Ok(msg) = self.ctl_rx.recv() {
             match msg {
-                Ctl::Round { round, seed, plan } => {
-                    match self.run_round(round, seed, &plan.per_shard[self.shard]) {
-                        Ok((movements, peer_msgs)) => {
-                            let (min_weight, max_weight) = self.extremes();
-                            let sent = self.report_tx.send(Report::Round {
-                                shard: self.shard,
-                                movements,
-                                min_weight,
-                                max_weight,
-                                peer_msgs,
-                            });
-                            if sent.is_err() {
-                                return;
-                            }
-                        }
-                        Err(message) => {
-                            let _ = self.report_tx.send(Report::Error {
-                                shard: self.shard,
-                                message,
-                            });
+                Ctl::RunBatch {
+                    start_round,
+                    rounds,
+                    seed,
+                    plans,
+                } => match self.run_batch(start_round, rounds, seed, &plans) {
+                    Ok(reports) => {
+                        let sent = self.report_tx.send(Report::Batch {
+                            shard: self.shard,
+                            rounds: reports,
+                        });
+                        if sent.is_err() {
                             return;
                         }
                     }
-                }
+                    Err((round, message)) => {
+                        let _ = self.report_tx.send(Report::Error {
+                            shard: self.shard,
+                            round: Some(round),
+                            message,
+                        });
+                        return;
+                    }
+                },
                 Ctl::PollWeights => {
                     let weights = self
                         .nodes
@@ -109,23 +187,80 @@ impl ShardWorker {
         }
     }
 
-    /// Execute this shard's slice of one matching; returns the movement
-    /// count of the edges this shard mastered and the number of peer
-    /// messages sent.
+    /// Execute one batch of rounds; on failure, names the round that
+    /// died.  Panics inside a round (including injected faults) are
+    /// caught and converted into the same `(round, message)` error shape
+    /// so the leader's fail-stop contract survives mid-batch.
+    fn run_batch(
+        &mut self,
+        start_round: usize,
+        rounds: usize,
+        seed: u64,
+        plans: &[Arc<RoundPlan>],
+    ) -> Result<Vec<RoundReport>, (usize, String)> {
+        let d = plans.len();
+        let wait = peer_timeout(rounds);
+        // At most one lookup-table build per color per batch, shared by
+        // every round of that color; filled lazily so a lock-step B=1
+        // batch builds exactly the one color it runs.
+        let shard = self.shard;
+        let mut tasks: Vec<Option<ColorTask<'_>>> = (0..d).map(|_| None).collect();
+        // Peer messages that arrived ahead of our pipeline position,
+        // keyed (round, edge).  An Offer and a Settle can never collide:
+        // for a given (round, edge) this shard is either the master
+        // (receives the Offer) or the slave (receives the Settle).
+        let mut stash: BTreeMap<(usize, usize), ShardMsg> = BTreeMap::new();
+        let mut reports = Vec::with_capacity(rounds);
+        for round in start_round..start_round + rounds {
+            let c = round % d;
+            let task = tasks[c]
+                .get_or_insert_with(|| ColorTask::new(&plans[c].per_shard[shard]));
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                self.run_round(seed, round, task, wait, &mut stash)
+            }));
+            match caught {
+                Ok(Ok((movements, peer_msgs))) => {
+                    let (min_weight, max_weight) = self.extremes();
+                    reports.push(RoundReport {
+                        round,
+                        movements,
+                        min_weight,
+                        max_weight,
+                        peer_msgs,
+                    });
+                }
+                Ok(Err(message)) => return Err((round, message)),
+                Err(payload) => {
+                    return Err((round, format!("worker panicked: {}", panic_message(&payload))))
+                }
+            }
+        }
+        Ok(reports)
+    }
+
+    /// Drive one round through the post-offers / solve-local /
+    /// collect-settles state machine; returns the movement count of the
+    /// edges this shard mastered and the number of peer messages sent.
     fn run_round(
         &mut self,
-        round: usize,
         seed: u64,
-        plan: &ShardPlan,
+        round: usize,
+        task: &ColorTask<'_>,
+        wait: Duration,
+        stash: &mut BTreeMap<(usize, usize), ShardMsg>,
     ) -> Result<(usize, usize), String> {
+        if self.fail_at_round == Some(round) {
+            panic!("injected fault at round {round}");
+        }
         let mut peer_msgs = 0usize;
-        // Phase 1 — offer first.  Channel sends never block, so no
+        // State 1 — post offers.  Channel sends never block, so no
         // ordering between shards can deadlock.
-        for &(edge, v, master) in &plan.slave {
+        for &(edge, v, master) in &task.plan.slave {
             let (mobile, pinned) = drain_mobile(&mut self.nodes[v as usize - self.lo]);
             peer_msgs += 1;
             if self.peer_tx[master]
                 .send(ShardMsg::Offer {
+                    round,
                     edge,
                     loads: mobile,
                     pinned,
@@ -135,56 +270,75 @@ impl ShardWorker {
                 return Err(format!("peer shard {master} unreachable (offer, edge {edge})"));
             }
         }
-        // Phase 2 — intra-shard edges, no messaging.
+        // State 2 — solve intra-shard edges while the cross-shard
+        // traffic is in flight; no messaging.
         let mut movements = 0usize;
-        for &(edge, u, v) in &plan.local {
+        for &(edge, u, v) in &task.plan.local {
             let mut rng = Pcg64::for_edge(seed, round, edge);
             movements += self.balance_local(&mut rng, u, v);
         }
-        // Phase 3 — serve master edges as offers arrive and absorb the
-        // settles for slave edges.  Arrival order is irrelevant: each
-        // edge's randomness is keyed on (seed, round, edge).
-        let masters: BTreeMap<usize, (u32, usize)> = plan
-            .master
-            .iter()
-            .map(|&(e, u, _v, slave)| (e, (u, slave)))
-            .collect();
-        let slaves: BTreeMap<usize, u32> =
-            plan.slave.iter().map(|&(e, v, _)| (e, v)).collect();
-        let mut pending_masters = masters.len();
-        let mut pending_slaves = slaves.len();
+        // State 3 — collect: serve master edges as offers arrive and
+        // absorb the settles for slave edges, starting with anything a
+        // faster peer already stashed for this round.  Messages for
+        // later rounds of the batch are stashed in turn.
+        let mut pending_masters = task.masters.len();
+        let mut pending_slaves = task.slaves.len();
         while pending_masters > 0 || pending_slaves > 0 {
-            let msg = match self.peer_rx.recv_timeout(PEER_TIMEOUT) {
-                Ok(m) => m,
-                Err(RecvTimeoutError::Timeout) => {
-                    return Err(format!(
-                        "timed out waiting for peer messages \
-                         ({pending_masters} offers, {pending_slaves} settles outstanding)"
-                    ))
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    return Err("peer channels closed mid-round".to_string())
+            let msg = match take_stashed(stash, round) {
+                Some(m) => m,
+                None => match self.peer_rx.recv_timeout(wait) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Err(format!(
+                            "timed out waiting for peer messages \
+                             ({pending_masters} offers, {pending_slaves} settles outstanding)"
+                        ))
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err("peer channels closed mid-round".to_string())
+                    }
+                },
+            };
+            let (msg_round, msg_edge) = match &msg {
+                ShardMsg::Offer { round, edge, .. } | ShardMsg::Settle { round, edge, .. } => {
+                    (*round, *edge)
                 }
             };
+            if msg_round != round {
+                if msg_round < round {
+                    return Err(format!(
+                        "stale peer message for completed round {msg_round} (edge {msg_edge}) \
+                         while collecting round {round}"
+                    ));
+                }
+                // a peer is running ahead in the pipeline; hold its
+                // message until this shard reaches that round
+                stash.insert((msg_round, msg_edge), msg);
+                continue;
+            }
             match msg {
                 ShardMsg::Offer {
                     edge,
                     loads,
                     pinned,
+                    ..
                 } => {
-                    let &(u, slave) = masters
+                    let &(u, slave) = task
+                        .masters
                         .get(&edge)
                         .ok_or_else(|| format!("offer for unmastered edge {edge}"))?;
                     let mut rng = Pcg64::for_edge(seed, round, edge);
-                    movements += self.balance_master(&mut rng, edge, u, (loads, pinned), slave)?;
+                    movements +=
+                        self.balance_master(&mut rng, round, edge, u, (loads, pinned), slave)?;
                     peer_msgs += 1; // the settle just sent
                     pending_masters -= 1;
                 }
-                ShardMsg::Settle { edge, loads } => {
-                    let &v = slaves
+                ShardMsg::Settle { edge, loads, .. } => {
+                    let &v = task
+                        .slaves
                         .get(&edge)
                         .ok_or_else(|| format!("settle for unslaved edge {edge}"))?;
-                    // pinned loads stayed put in phase 1; the settled
+                    // pinned loads stayed put in state 1; the settled
                     // mobile loads are appended, exactly like the engines.
                     self.nodes[v as usize - self.lo].extend(loads);
                     pending_slaves -= 1;
@@ -217,6 +371,7 @@ impl ShardWorker {
     fn balance_master(
         &mut self,
         rng: &mut Pcg64,
+        round: usize,
         edge: usize,
         u: u32,
         offer: (Vec<Load>, f64),
@@ -234,6 +389,7 @@ impl ShardWorker {
         u_node.extend(out.to_u);
         self.peer_tx[slave]
             .send(ShardMsg::Settle {
+                round,
                 edge,
                 loads: out.to_v,
             })
@@ -254,6 +410,25 @@ impl ShardWorker {
         }
         (min, max)
     }
+}
+
+/// Pop the earliest stashed message belonging to `round`, if any.
+fn take_stashed(
+    stash: &mut BTreeMap<(usize, usize), ShardMsg>,
+    round: usize,
+) -> Option<ShardMsg> {
+    let key = *stash.range((round, 0)..(round + 1, 0)).next()?.0;
+    stash.remove(&key)
+}
+
+/// Render a caught panic payload (str or String) for an error report —
+/// shared by the mid-batch catch here and the leader's thread joins.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&'static str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic payload".to_string())
 }
 
 /// Remove and return a node's mobile loads (in order) plus its pinned
@@ -327,5 +502,44 @@ mod tests {
             WorkerAlgo::SortedGreedy.pair(),
             PairAlgorithm::SortedGreedy(SortAlgo::Quick)
         );
+    }
+
+    #[test]
+    fn stash_is_drained_in_round_order() {
+        let mut stash: BTreeMap<(usize, usize), ShardMsg> = BTreeMap::new();
+        stash.insert(
+            (3, 1),
+            ShardMsg::Settle {
+                round: 3,
+                edge: 1,
+                loads: vec![],
+            },
+        );
+        stash.insert(
+            (2, 5),
+            ShardMsg::Offer {
+                round: 2,
+                edge: 5,
+                loads: vec![],
+                pinned: 0.0,
+            },
+        );
+        assert!(take_stashed(&mut stash, 1).is_none());
+        let m = take_stashed(&mut stash, 2).expect("round-2 message stashed");
+        assert!(matches!(m, ShardMsg::Offer { round: 2, edge: 5, .. }));
+        assert!(take_stashed(&mut stash, 2).is_none());
+        let m = take_stashed(&mut stash, 3).expect("round-3 message stashed");
+        assert!(matches!(m, ShardMsg::Settle { round: 3, edge: 1, .. }));
+        assert!(stash.is_empty());
+    }
+
+    #[test]
+    fn panic_message_renders_both_payload_shapes() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(s.as_ref()), "static str");
+        let owned: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_message(owned.as_ref()), "owned");
+        let other: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(other.as_ref()), "unknown panic payload");
     }
 }

@@ -3,10 +3,12 @@
 //! Runs the same `(seed, schedule, state)` through the sequential
 //! reference engine, the deterministic parallel engine at a ladder of
 //! thread counts, and the sharded cluster coordinator at a ladder of
-//! shard counts — verifying bit-identical traces/states for every row
-//! and reporting wall-clock speedup plus throughput (edges balanced per
-//! second, the roofline axis).  The `scale` CLI command and the
-//! `hotpath_parallel` / `cluster_sharded` benches all drive this module.
+//! shard counts crossed with a ladder of round-batch sizes — verifying
+//! bit-identical traces/states for every row and reporting wall-clock
+//! speedup, throughput (edges balanced per second, the roofline axis),
+//! and leader messages per round (the quantity round batching
+//! amortizes).  The `scale` CLI command and the `hotpath_parallel` /
+//! `cluster_sharded` benches all drive this module.
 
 use crate::balancer::{PairAlgorithm, SortAlgo};
 use crate::bcm::{Engine, Parallel, Schedule, Sequential, StopRule};
@@ -73,9 +75,14 @@ pub struct ThreadMeasurement {
 #[derive(Clone, Debug)]
 pub struct ShardMeasurement {
     pub shards: usize,
+    /// Rounds dispatched per leader Ctl message (resolved, >= 1).
+    pub batch: usize,
     pub secs: f64,
     pub speedup: f64,
     pub identical: bool,
+    /// Leader messages (ctl + reports) per round — the quantity round
+    /// batching amortizes.
+    pub leader_msgs_per_round: f64,
 }
 
 /// Result of one scenario's sequential-vs-parallel-vs-cluster comparison.
@@ -111,9 +118,12 @@ impl ScalingReport {
 }
 
 /// Run one scenario: a sequential reference run, then one parallel run
-/// per entry of `thread_counts` and one sharded-cluster run per entry of
-/// `shard_counts` (0 = auto), each checked for bit-identity against the
-/// reference.  Cluster worker failures surface as errors.
+/// per entry of `thread_counts` and one sharded-cluster run per
+/// (`shard_counts` x `batch_counts`) combination (0 = auto for both
+/// knobs; an empty `batch_counts` means batch 1), each checked for
+/// bit-identity against the reference.  Cluster worker failures surface
+/// as errors.
+#[allow(clippy::too_many_arguments)]
 pub fn run_scaling(
     topology: &Topology,
     n: usize,
@@ -122,6 +132,7 @@ pub fn run_scaling(
     seed: u64,
     thread_counts: &[usize],
     shard_counts: &[usize],
+    batch_counts: &[usize],
 ) -> Result<ScalingReport> {
     let mut rng = Pcg64::new(seed);
     let g = topology.build(n, &mut rng);
@@ -156,23 +167,36 @@ pub fn run_scaling(
         });
     }
 
-    let mut cluster_rows = Vec::with_capacity(shard_counts.len());
+    let batches: &[usize] = if batch_counts.is_empty() {
+        &[1]
+    } else {
+        batch_counts
+    };
+    let mut cluster_rows = Vec::with_capacity(shard_counts.len() * batches.len());
     for &shards in shard_counts {
-        // WorkerAlgo::SortedGreedy maps to the same PairAlgorithm as the
-        // reference run, so the bit-identity check is meaningful.
-        let mut cluster =
-            Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
-        let resolved = cluster.shards();
-        let t0 = Instant::now();
-        let trace = cluster.run_seeded(&schedule, sweeps, seed)?;
-        let st = cluster.shutdown()?;
-        let secs = t0.elapsed().as_secs_f64();
-        cluster_rows.push(ShardMeasurement {
-            shards: resolved,
-            secs,
-            speedup: seq_secs / secs.max(1e-12),
-            identical: trace == seq_trace && st == seq_state,
-        });
+        for &batch in batches {
+            // WorkerAlgo::SortedGreedy maps to the same PairAlgorithm as
+            // the reference run, so the bit-identity check is meaningful.
+            let mut cluster =
+                Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
+            cluster.set_batch_rounds(batch);
+            let resolved = cluster.shards();
+            let resolved_batch = cluster.batch_rounds();
+            let t0 = Instant::now();
+            let trace = cluster.run_seeded(&schedule, sweeps, seed)?;
+            let stats = cluster.message_stats();
+            let st = cluster.shutdown()?;
+            let secs = t0.elapsed().as_secs_f64();
+            cluster_rows.push(ShardMeasurement {
+                shards: resolved,
+                batch: resolved_batch,
+                secs,
+                speedup: seq_secs / secs.max(1e-12),
+                identical: trace == seq_trace && st == seq_state,
+                leader_msgs_per_round: (stats.ctl_sent + stats.reports_received) as f64
+                    / stats.rounds.max(1) as f64,
+            });
+        }
     }
 
     Ok(ScalingReport {
@@ -197,24 +221,37 @@ pub fn scaling_table(r: &ScalingReport) -> Table {
             "E11 scaling: {} n={} ({} edges, d={} colors, final disc {:.3})",
             r.scenario, r.n, r.edges, r.colors, r.final_discrepancy
         ),
-        &["engine", "workers", "wall_s", "speedup", "edges_per_s", "identical"],
+        &[
+            "engine",
+            "workers",
+            "batch",
+            "wall_s",
+            "speedup",
+            "edges_per_s",
+            "ldr_msgs_per_round",
+            "identical",
+        ],
     );
     let eps = |secs: f64| f(r.edges_balanced as f64 / secs.max(1e-12), 0);
     t.row(vec![
         "sequential".into(),
         "1".into(),
+        "-".into(),
         f(r.seq_secs, 3),
         "1.00".into(),
         eps(r.seq_secs),
+        "-".into(),
         "-".into(),
     ]);
     for m in &r.rows {
         t.row(vec![
             "parallel".into(),
             m.threads.to_string(),
+            "-".into(),
             f(m.secs, 3),
             f(m.speedup, 2),
             eps(m.secs),
+            "-".into(),
             m.identical.to_string(),
         ]);
     }
@@ -222,9 +259,11 @@ pub fn scaling_table(r: &ScalingReport) -> Table {
         t.row(vec![
             "cluster".into(),
             m.shards.to_string(),
+            m.batch.to_string(),
             f(m.secs, 3),
             f(m.speedup, 2),
             eps(m.secs),
+            f(m.leader_msgs_per_round, 2),
             m.identical.to_string(),
         ]);
     }
@@ -237,13 +276,25 @@ mod tests {
 
     #[test]
     fn small_scaling_run_is_identical_across_threads_and_shards() {
-        let r = run_scaling(&Topology::Torus2d, 64, 10, 2, 42, &[2, 4], &[2, 4]).unwrap();
+        let r =
+            run_scaling(&Topology::Torus2d, 64, 10, 2, 42, &[2, 4], &[2, 4], &[1, 3]).unwrap();
         assert_eq!(r.n, 64);
         assert_eq!(r.rows.len(), 2);
-        assert_eq!(r.cluster_rows.len(), 2);
+        assert_eq!(r.cluster_rows.len(), 4); // shards x batches
         assert!(r.all_identical(), "a row diverged: {r:?}");
         assert!(r.final_discrepancy.is_finite());
         assert!(r.edges_balanced > 0);
+        // the batch ladder amortizes leader messaging at every shard count
+        for pair in r.cluster_rows.chunks(2) {
+            assert_eq!(pair[0].shards, pair[1].shards);
+            assert_eq!(pair[0].batch, 1);
+            assert_eq!(pair[1].batch, 3);
+            assert!(
+                pair[1].leader_msgs_per_round < pair[0].leader_msgs_per_round,
+                "batching did not reduce leader messages: {:?}",
+                r.cluster_rows
+            );
+        }
     }
 
     #[test]
@@ -258,10 +309,14 @@ mod tests {
 
     #[test]
     fn table_renders_engine_and_cluster_rows() {
-        let r = run_scaling(&Topology::Ring, 16, 5, 1, 1, &[2], &[2]).unwrap();
+        let r = run_scaling(&Topology::Ring, 16, 5, 1, 1, &[2], &[2], &[]).unwrap();
+        assert_eq!(r.cluster_rows.len(), 1); // empty batch ladder = batch 1
+        assert_eq!(r.cluster_rows[0].batch, 1);
         let s = scaling_table(&r).render();
         assert!(s.contains("speedup"));
         assert!(s.contains("edges_per_s"));
+        assert!(s.contains("batch"));
+        assert!(s.contains("ldr_msgs_per_round"));
         assert!(s.contains("sequential"));
         assert!(s.contains("parallel"));
         assert!(s.contains("cluster"));

@@ -88,6 +88,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.threads = args.get_usize("threads", cfg.threads).map_err(|e| anyhow!(e))?;
     cfg.shards = args.get_usize("shards", cfg.shards).map_err(|e| anyhow!(e))?;
+    cfg.batch_rounds = args
+        .get_usize("batch-rounds", cfg.batch_rounds)
+        .map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -133,8 +136,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         let trace = if use_cluster {
             // Seeded like the engines and running the exact configured
             // algorithm, so a cluster run reproduces the sequential /
-            // parallel result bit-exactly for any --shards.
+            // parallel result bit-exactly for any --shards and any
+            // --batch-rounds.
             let mut cluster = Cluster::spawn_with_algorithm(state, cfg.algorithm, cfg.shards);
+            cluster.set_batch_rounds(cfg.batch_rounds);
             let t = cluster.run_seeded(&schedule, cfg.sweeps, cfg.seed.wrapping_add(rep as u64))?;
             cluster.shutdown()?;
             t
@@ -219,7 +224,11 @@ fn cmd_scale(args: &Args) -> Result<()> {
         Some(_) => vec![args.get_usize("shards", 0).map_err(|e| anyhow!(e))?],
         None => vec![2, 0], // shard ladder ending in auto (one per core)
     };
-    let report = scaling::run_scaling(&topo, n, loads, sweeps, seed, &threads, &shards)?;
+    let batches: Vec<usize> = match args.get("batch-rounds") {
+        Some(_) => vec![args.get_usize("batch-rounds", 0).map_err(|e| anyhow!(e))?],
+        None => vec![1, 4, 16], // batch ladder (rounds per Ctl message)
+    };
+    let report = scaling::run_scaling(&topo, n, loads, sweeps, seed, &threads, &shards, &batches)?;
     let t = scaling::scaling_table(&report);
     println!("{}", t.render());
     t.write_csv(Path::new("results/e11_scaling.csv")).ok();

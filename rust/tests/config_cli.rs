@@ -117,6 +117,28 @@ fn run_with_sharded_cluster() {
 }
 
 #[test]
+fn run_with_batched_cluster() {
+    let (code, stdout, stderr) = run_cli(&[
+        "run", "--n", "16", "--loads", "8", "--reps", "1", "--sweeps", "4",
+        "--cluster", "--shards", "2", "--batch-rounds", "4",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("\"batch_rounds\":4"));
+    assert!(stdout.contains("final discrepancy"));
+}
+
+#[test]
+fn scale_with_batch_ladder_pinned() {
+    let (code, stdout, stderr) = run_cli(&[
+        "scale", "--n", "32", "--topology", "ring", "--loads", "4", "--sweeps", "2",
+        "--threads", "2", "--shards", "2", "--batch-rounds", "2",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("ldr_msgs_per_round"));
+    assert!(stdout.contains("trace-identical"));
+}
+
+#[test]
 fn spectral_command() {
     let (code, stdout, _) = run_cli(&["spectral", "--topology", "ring", "--n", "8"]);
     assert_eq!(code, 0);

@@ -331,6 +331,60 @@ fn prop_sharded_cluster_bit_identical_to_sequential() {
 }
 
 #[test]
+fn prop_batched_cluster_bit_identical_to_sequential() {
+    // The batching extension of the cluster invariant: dispatching B
+    // rounds per leader control message (with workers pipelining through
+    // the post-offers / solve-local / collect-settles state machine, and
+    // fast shards running rounds ahead of slow ones) must be invisible
+    // in the results.  Covers B = 1 (lock-step), B = 3 (partial batches,
+    // since total rounds need not divide by 3) and B = total rounds (the
+    // whole run in one dispatch), each at shard counts 1, 2 and
+    // one-per-core.
+    let cores = resolve_shards(0);
+    forall("batched cluster == sequential", 4, |rng| {
+        let (topology, n) = match rng.below(3) {
+            0 => (Topology::Ring, 8 + rng.below(13)),
+            1 => (Topology::Torus2d, 16),
+            _ => (Topology::RandomConnected, 6 + rng.below(15)),
+        };
+        let g = topology.build(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let mobility = if rng.coin() { Mobility::Full } else { Mobility::Partial };
+        let dist = random_dist(rng);
+        let state0 = LoadState::init_uniform_counts(n, 1 + rng.below(15), &dist, mobility, rng);
+        let sweeps = 2 + rng.below(2);
+        let total_rounds = sweeps * schedule.period();
+        let seed = rng.next_u64();
+
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(
+            &mut seq_state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(sweeps),
+            seed,
+        );
+        for shards in [1usize, 2, cores] {
+            for batch in [1usize, 3, total_rounds] {
+                let mut cluster =
+                    Cluster::spawn_sharded(state0.clone(), WorkerAlgo::SortedGreedy, shards);
+                cluster.set_batch_rounds(batch);
+                let trace = cluster.run_seeded(&schedule, sweeps, seed).unwrap();
+                let fin = cluster.shutdown().unwrap();
+                assert_eq!(
+                    trace, seq_trace,
+                    "trace diverged: {topology:?} n={n} shards={shards} batch={batch}"
+                );
+                assert_eq!(
+                    fin, seq_state,
+                    "state diverged: {topology:?} n={n} shards={shards} batch={batch}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_parallel_engine_keeps_protocol_invariants() {
     // Conservation and pinning through the threaded path specifically.
     forall("parallel invariants", 15, |rng| {
