@@ -9,10 +9,14 @@
 //! crossing a shard boundary exchange Offer/Settle messages, and every
 //! edge draws from the counter-based `Pcg64::for_edge` streams.  Reports
 //! throughput and per-round latency percentiles, then verifies the run
-//! is **bit-identical** to the sequential reference engine.
+//! is **bit-identical** to the sequential reference engine — first over
+//! the in-process transport (lock-step, then batched/pipelined), and
+//! finally over **loopback TCP** with real sockets, the length-prefixed
+//! binary wire codec, and the worker event loop on the other end.
 
 use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
 use bcm_dlb::bcm::{Engine, RunTrace, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::transport::tcp::{self, LeaderListener};
 use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
 use bcm_dlb::graph::Topology;
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
@@ -120,7 +124,7 @@ fn main() {
     // round-trip is amortized across the batch — and the result is still
     // bit-identical to the sequential engine.
     let batch = schedule.period();
-    let mut batched = Cluster::spawn(state0, WorkerAlgo::SortedGreedy);
+    let mut batched = Cluster::spawn(state0.clone(), WorkerAlgo::SortedGreedy);
     batched.set_batch_rounds(batch);
     let batched_trace = batched
         .run_seeded(&schedule, sweeps, seed)
@@ -135,5 +139,52 @@ fn main() {
         batched_msgs.ctl_sent,
         batched_msgs.rounds,
         msg_stats.ctl_sent,
+    );
+
+    // The TCP transport: the same protocol over loopback sockets.  In a
+    // real deployment the two workers would be `bcm-dlb cluster-worker
+    // --connect <leader>` processes on other machines (see
+    // tests/tcp_cluster.rs for the multi-process version); here they run
+    // as threads driving the identical socket code path, so the example
+    // stays a single self-contained binary.
+    let tcp_shards = 2;
+    let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader socket");
+    let addr = listener
+        .local_addr()
+        .expect("leader socket address")
+        .to_string();
+    let worker_threads: Vec<_> = (0..tcp_shards)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                tcp::serve_connect(&addr, 40).expect("tcp worker failed");
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut tcp_cluster = Cluster::spawn_tcp(
+        state0,
+        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        tcp_shards,
+        listener,
+    )
+    .expect("tcp cluster spawn failed");
+    tcp_cluster.set_batch_rounds(batch);
+    let tcp_trace = tcp_cluster
+        .run_seeded(&schedule, sweeps, seed)
+        .expect("tcp cluster run failed");
+    let tcp_msgs = tcp_cluster.message_stats();
+    let tcp_state = tcp_cluster.shutdown().expect("tcp shutdown failed");
+    for t in worker_threads {
+        t.join().expect("tcp worker thread panicked");
+    }
+    assert_eq!(tcp_trace, seq_trace, "tcp trace diverged");
+    assert_eq!(tcp_state, seq_state, "tcp state diverged");
+    println!(
+        "loopback-TCP rerun on {addr} ({tcp_shards} socket workers, {:.2}s): \
+         {} leader ctl frames, {} peer frames — bit-identical to Sequential over the wire",
+        t0.elapsed().as_secs_f64(),
+        tcp_msgs.ctl_sent,
+        tcp_msgs.peer_msgs,
     );
 }

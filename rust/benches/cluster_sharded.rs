@@ -13,12 +13,42 @@
 //! n=256, 1 sweep, so CI can exercise the sharded protocol in seconds.
 //! `-- --batch-rounds B` pins the batch ladder to the single value B
 //! (default ladder: 1 and 4 rounds per leader Ctl message).
+//!
+//! Smoke runs additionally enforce the perf-regression floor checked
+//! into `bench_floor.toml` (section `[cluster_sharded.smoke]`): if the
+//! best cluster throughput drops below `min_edges_per_s`, the bench
+//! exits nonzero and CI fails.  `-- --no-floor` skips the gate (for
+//! hosts known to be slower than the floor assumes).
 
 use bcm_dlb::coordinator::shard::resolve_shards;
 use bcm_dlb::experiments::scaling::{run_scaling, scaling_table};
 use bcm_dlb::graph::Topology;
 use bcm_dlb::util::table::f;
 use std::path::Path;
+
+/// Read `key` from `[section]` of the checked-in floor file (a tiny
+/// hand-rolled parser for the toml subset the file uses: section
+/// headers, `key = value`, `#` comments).
+fn read_floor(path: &Path, section: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut in_section = false;
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            in_section = name.trim() == section;
+        } else if in_section {
+            if let Some((k, v)) = line.split_once('=') {
+                if k.trim() == key {
+                    return v.trim().parse().ok();
+                }
+            }
+        }
+    }
+    None
+}
 
 fn env_flag(name: &str) -> bool {
     std::env::var(name).map(|v| v == "1").unwrap_or(false)
@@ -55,6 +85,7 @@ fn main() {
     let start = std::time::Instant::now();
     let mut diverged = false;
     let mut best_overall: f64 = 0.0;
+    let mut best_cluster_eps: f64 = 0.0;
     for (name, topology) in scenarios {
         let report = match run_scaling(
             &topology,
@@ -96,12 +127,51 @@ fn main() {
             }
         }
         best_overall = best_overall.max(report.best_speedup());
+        for row in &report.cluster_rows {
+            let eps = report.edges_balanced as f64 / row.secs.max(1e-12);
+            best_cluster_eps = best_cluster_eps.max(eps);
+        }
     }
     eprintln!(
-        "cluster_sharded completed in {:.1}s; best speedup {}x",
+        "cluster_sharded completed in {:.1}s; best speedup {}x, best cluster {} edges/s",
         start.elapsed().as_secs_f64(),
-        f(best_overall, 2)
+        f(best_overall, 2),
+        f(best_cluster_eps, 0)
     );
+    // Perf-regression gate (smoke/CI runs only): the best cluster
+    // throughput must clear the floor recorded next to the E11 baseline.
+    if smoke && !args.iter().any(|a| a == "--no-floor") {
+        let floor_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_floor.toml");
+        match read_floor(&floor_path, "cluster_sharded.smoke", "min_edges_per_s") {
+            Some(floor) if best_cluster_eps < floor => {
+                eprintln!(
+                    "REGRESSION: best cluster throughput {} edges/s is below the \
+                     bench_floor.toml floor of {} edges/s",
+                    f(best_cluster_eps, 0),
+                    f(floor, 0)
+                );
+                diverged = true;
+            }
+            Some(floor) => {
+                eprintln!(
+                    "perf floor ok: {} edges/s >= {} edges/s floor",
+                    f(best_cluster_eps, 0),
+                    f(floor, 0)
+                );
+            }
+            None => {
+                // the floor file is checked in: a missing/unparsable
+                // value means the gate was broken, not that it should
+                // silently stop gating
+                eprintln!(
+                    "REGRESSION GATE BROKEN: no parsable [cluster_sharded.smoke] \
+                     min_edges_per_s in {} (use --no-floor to bypass deliberately)",
+                    floor_path.display()
+                );
+                diverged = true;
+            }
+        }
+    }
     if diverged {
         std::process::exit(1);
     }

@@ -81,13 +81,29 @@ COMMANDS
                  [--batch-rounds B]  rounds per leader Ctl message on the
                                 --cluster path (0 = auto, max(1, n/16384);
                                 identical results at any batch size)
+                 [--transport local|tcp]  cluster backend: in-process
+                                channels (default) or real sockets with
+                                cluster-worker processes
+                 [--listen ADDR]  tcp leader bind address (workers dial
+                                in with cluster-worker --connect ADDR)
+                 [--peers A,B,...]  tcp leader dials these listening
+                                workers instead (cluster-worker --listen)
+                 [--verify]     rerun Sequential and assert the cluster
+                                trace/state are bit-identical
                  [--trace-out FILE.csv]  per-round time series (rep 0)
+  cluster-worker one shard worker process of a TCP cluster; exits after
+                 the leader shuts the cluster down
+                 --connect HOST:PORT  dial the leader
+                 --listen HOST:PORT   await the leader's dial-in
+                 [--retry N]    connect attempts, 250 ms apart (def. 40)
   scale          sequential vs parallel engine vs sharded cluster
-                 [--n N] [--topology T] [--loads L] [--sweeps S]
+                 [--n N] [--topology T] [--loads L[,L2,...]] [--sweeps S]
                  [--threads K] [--shards K] [--batch-rounds B] [--seed X]
                  (default: n=4096 torus2d, thread ladder 2/4/auto, shard
                  ladder 2/auto, batch ladder 1/4/16; verifies trace
-                 identity, reports edges/s)
+                 identity, reports edges/s; a multi-value --loads ladder
+                 additionally emits the combined workers x L/n roofline
+                 table)
   sweep          the paper's full §6 sweep (Figs. 1-3 data)
                  [--quick]
   fig1..fig5     regenerate one figure's table(s)   [--quick]

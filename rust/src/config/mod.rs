@@ -4,6 +4,7 @@
 //! sweeps and ad-hoc experiments share one schema.
 
 use crate::balancer::PairAlgorithm;
+use crate::coordinator::transport::TransportKind;
 use crate::graph::Topology;
 use crate::load::{Mobility, WeightDistribution};
 use crate::anyhow;
@@ -38,6 +39,18 @@ pub struct ExperimentConfig {
     /// round-trips dominate), B = exactly B rounds per batch.  Purely a
     /// performance knob — results are bit-identical across all values.
     pub batch_rounds: usize,
+    /// Cluster transport backend: `local` (in-process channels, the
+    /// default) or `tcp` (workers are separate `cluster-worker`
+    /// processes).  Results are bit-identical across backends.
+    pub transport: TransportKind,
+    /// Leader bind address for `transport = tcp` (the `--listen` flag);
+    /// workers dial in with `cluster-worker --connect`.
+    pub listen: String,
+    /// Worker addresses for `transport = tcp` when the leader dials out
+    /// instead of listening (the `--peers` flag; workers run
+    /// `cluster-worker --listen`).  Non-empty `peers` takes precedence
+    /// over `listen`, and its length fixes the shard count.
+    pub peers: Vec<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -56,6 +69,9 @@ impl Default for ExperimentConfig {
             threads: 1,
             shards: 0,
             batch_rounds: 0,
+            transport: TransportKind::Local,
+            listen: "127.0.0.1:7411".to_string(),
+            peers: Vec::new(),
         }
     }
 }
@@ -111,6 +127,23 @@ impl ExperimentConfig {
         if let Some(x) = v.get("batch_rounds").as_usize() {
             cfg.batch_rounds = x;
         }
+        if let Some(s) = v.get("transport").as_str() {
+            cfg.transport =
+                TransportKind::parse(s).ok_or_else(|| anyhow!("bad transport '{s}'"))?;
+        }
+        if let Some(s) = v.get("listen").as_str() {
+            cfg.listen = s.to_string();
+        }
+        if let Some(arr) = v.get("peers").as_arr() {
+            cfg.peers = arr
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("peers must be an array of strings"))
+                })
+                .collect::<Result<Vec<String>>>()?;
+        }
         if cfg.n < 2 {
             return Err(anyhow!("config: n must be >= 2"));
         }
@@ -135,6 +168,12 @@ impl ExperimentConfig {
             ("threads", self.threads.into()),
             ("shards", self.shards.into()),
             ("batch_rounds", self.batch_rounds.into()),
+            ("transport", self.transport.name().into()),
+            ("listen", self.listen.clone().into()),
+            (
+                "peers",
+                Json::Arr(self.peers.iter().map(|p| p.as_str().into()).collect()),
+            ),
         ])
     }
 }
@@ -185,6 +224,29 @@ mod tests {
         assert!(text.contains("\"batch_rounds\":0"), "not serialized: {text}");
         let back = ExperimentConfig::from_json_str(&text).unwrap();
         assert_eq!(back.batch_rounds, cfg.batch_rounds);
+    }
+
+    #[test]
+    fn transport_keys_parse_roundtrip_and_default() {
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.transport, TransportKind::Local);
+        assert!(cfg.peers.is_empty());
+        assert!(!cfg.listen.is_empty());
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"transport": "tcp", "listen": "0.0.0.0:9000",
+                "peers": ["10.0.0.1:7411", "10.0.0.2:7411"]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.peers, vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.transport, cfg.transport);
+        assert_eq!(back.listen, cfg.listen);
+        assert_eq!(back.peers, cfg.peers);
+        assert!(ExperimentConfig::from_json_str(r#"{"transport": "udp"}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"peers": [42]}"#).is_err());
     }
 
     #[test]

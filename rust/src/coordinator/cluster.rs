@@ -1,7 +1,11 @@
 //! The sharded leader: spawns one worker per core (each owning a
 //! contiguous node shard), drives the BCM schedule in batches of rounds,
 //! folds per-shard metrics, and tears the cluster down into a final
-//! `LoadState`.
+//! `LoadState`.  All I/O goes through a pluggable
+//! [`LeaderTransport`]: in-process channels for the thread-per-shard
+//! spawns, or TCP sockets ([`Cluster::spawn_tcp`] /
+//! [`Cluster::spawn_tcp_connect`]) when the workers are separate OS
+//! processes.
 //!
 //! This is the deployment shape the paper assumes (§1) at shard
 //! granularity: the leader is pure control plane (schedule + metrics) —
@@ -21,14 +25,15 @@
 
 use super::messages::{Ctl, Report};
 use super::shard::{RoundPlan, ShardMap};
+use super::transport::tcp::{InitPayload, LeaderListener, TcpLeader};
+use super::transport::{local, LeaderTransport, TransportError};
 use super::worker::{ShardWorker, WorkerAlgo};
 use crate::anyhow;
 use crate::balancer::PairAlgorithm;
 use crate::bcm::{RoundStats, RunTrace, Schedule};
-use crate::load::LoadState;
+use crate::load::{Load, LoadState};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -59,6 +64,31 @@ pub fn resolve_batch_rounds(batch: usize, n: usize) -> usize {
     }
 }
 
+/// Carve `state` into per-shard node lists (each worker owns its slice
+/// exclusively; the leader keeps only the empty husk).
+fn carve(state: &mut LoadState, map: &ShardMap) -> Vec<Vec<Vec<Load>>> {
+    (0..map.shards())
+        .map(|s| {
+            map.range(s)
+                .map(|v| std::mem::take(state.node_mut(v)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Build the per-worker `Init` payloads of a TCP spawn.
+fn tcp_inits(state: &mut LoadState, map: &ShardMap, algo: PairAlgorithm) -> Vec<InitPayload> {
+    carve(state, map)
+        .into_iter()
+        .enumerate()
+        .map(|(s, nodes)| InitPayload {
+            lo: map.range(s).start,
+            algo: algo.name(),
+            nodes,
+        })
+        .collect()
+}
+
 /// Leader-side message accounting, used to assert the sharding
 /// communication contract: leader traffic is O(shards / batch) per round
 /// and worker-to-worker traffic is O(cross-shard edges).
@@ -78,12 +108,14 @@ pub struct MessageStats {
     pub batches: usize,
 }
 
-/// The sharded cluster handle: owns the worker threads and the control /
-/// report channels, and exposes the seeded run API.
+/// The sharded cluster handle: owns the leader side of the transport
+/// (and, on the local backend, the worker threads) and exposes the
+/// seeded run API.
 pub struct Cluster {
     map: ShardMap,
-    ctl_tx: Vec<Sender<Ctl>>,
-    report_rx: Receiver<Report>,
+    transport: Box<dyn LeaderTransport>,
+    /// Worker thread handles (empty on the TCP backend, where workers
+    /// are separate processes).
     handles: Vec<JoinHandle<()>>,
     stats: MessageStats,
     /// Rounds dispatched per leader control message (0 = auto); resolved
@@ -141,48 +173,103 @@ impl Cluster {
     ) -> Cluster {
         let map = ShardMap::new(state.n(), shards);
         let k = map.shards();
-        let (report_tx, report_rx) = channel::<Report>();
-        let mut ctl_tx = Vec::with_capacity(k);
-        let mut ctl_rx = Vec::with_capacity(k);
-        let mut peer_tx = Vec::with_capacity(k);
-        let mut peer_rx = Vec::with_capacity(k);
-        for _ in 0..k {
-            let (ct, cr) = channel::<Ctl>();
-            ctl_tx.push(ct);
-            ctl_rx.push(Some(cr));
-            let (pt, pr) = channel();
-            peer_tx.push(pt);
-            peer_rx.push(Some(pr));
-        }
+        let shard_nodes = carve(&mut state, &map);
+        let (leader, workers) = local::pair(k);
         let mut handles = Vec::with_capacity(k);
-        for s in 0..k {
-            let range = map.range(s);
-            let nodes: Vec<_> = range
-                .clone()
-                .map(|v| std::mem::take(state.node_mut(v)))
-                .collect();
+        for (s, (transport, nodes)) in workers.into_iter().zip(shard_nodes).enumerate() {
             let worker = ShardWorker {
                 shard: s,
-                lo: range.start,
+                lo: map.range(s).start,
                 nodes,
                 algo,
-                ctl_rx: ctl_rx[s].take().unwrap(),
-                peer_rx: peer_rx[s].take().unwrap(),
-                peer_tx: peer_tx.clone(),
-                report_tx: report_tx.clone(),
+                transport: Box::new(transport),
                 fail_at_round: match fault {
                     Some((fs, fr)) if fs == s => Some(fr),
                     _ => None,
                 },
             };
-            handles.push(std::thread::spawn(move || worker.run()));
+            handles.push(std::thread::spawn(move || {
+                // a worker's failure already reached the leader as a
+                // Report::Error; the return value only matters for
+                // worker *processes* (exit codes)
+                let _ = worker.run();
+            }));
         }
         let dead = vec![false; k];
         Cluster {
             map,
-            ctl_tx,
-            report_rx,
+            transport: Box::new(leader),
             handles,
+            stats: MessageStats::default(),
+            batch_rounds: 0,
+            dead,
+            failure: None,
+        }
+    }
+
+    /// Spawn a cluster whose workers are separate OS processes speaking
+    /// TCP: accept `shards` worker connections on `listener` (each
+    /// started with `bcm-dlb cluster-worker --connect <addr>`), ship
+    /// every worker its shard of `state`, and return the leader handle.
+    /// The run API and the bit-identity contract are exactly those of
+    /// the in-process spawns.
+    pub fn spawn_tcp(
+        mut state: LoadState,
+        algo: PairAlgorithm,
+        shards: usize,
+        listener: LeaderListener,
+    ) -> Result<Cluster> {
+        if shards == 0 {
+            return Err(anyhow!(
+                "the tcp transport needs an explicit worker count (--shards >= 1): \
+                 workers are external processes, not cores"
+            ));
+        }
+        let map = ShardMap::new(state.n(), shards);
+        if map.shards() != shards {
+            // never leave extra worker processes dangling in the accept
+            // queue: surface the clamp instead
+            return Err(anyhow!(
+                "{} shards requested for a {}-node network (at most one shard per node)",
+                shards,
+                state.n()
+            ));
+        }
+        let inits = tcp_inits(&mut state, &map, algo);
+        let transport = TcpLeader::accept(listener, inits)?;
+        Ok(Self::from_transport(map, Box::new(transport)))
+    }
+
+    /// Spawn a TCP cluster by dialing one listening worker per entry of
+    /// `peers` (each started with `bcm-dlb cluster-worker --listen
+    /// <addr>`); worker `i` becomes shard `i`.
+    pub fn spawn_tcp_connect(
+        mut state: LoadState,
+        algo: PairAlgorithm,
+        peers: &[String],
+    ) -> Result<Cluster> {
+        if peers.is_empty() {
+            return Err(anyhow!("the tcp transport needs at least one worker address"));
+        }
+        let map = ShardMap::new(state.n(), peers.len());
+        if map.shards() != peers.len() {
+            return Err(anyhow!(
+                "{} worker addresses for a {}-node network (at most one shard per node)",
+                peers.len(),
+                state.n()
+            ));
+        }
+        let inits = tcp_inits(&mut state, &map, algo);
+        let transport = TcpLeader::connect(peers, inits)?;
+        Ok(Self::from_transport(map, Box::new(transport)))
+    }
+
+    fn from_transport(map: ShardMap, transport: Box<dyn LeaderTransport>) -> Cluster {
+        let dead = vec![false; map.shards()];
+        Cluster {
+            map,
+            transport,
+            handles: Vec::new(),
             stats: MessageStats::default(),
             batch_rounds: 0,
             dead,
@@ -364,23 +451,18 @@ impl Cluster {
         self.stats.rounds += b;
         self.stats.batches += 1;
         // dispatch: one RunBatch per shard covers all b rounds
-        let mut send_failed = None;
-        for (s, tx) in self.ctl_tx.iter().enumerate() {
+        for s in 0..self.map.shards() {
             let msg = Ctl::RunBatch {
                 start_round,
                 rounds: b,
                 seed,
                 plans: plans.clone(),
             };
-            if tx.send(msg).is_err() {
-                send_failed = Some(s);
-                break;
+            if let Err(e) = self.transport.send_ctl(s, msg) {
+                let msg = format!("control link closed before batch at round {start_round}: {e}");
+                return Err(self.worker_error(s, msg));
             }
             self.stats.ctl_sent += 1;
-        }
-        if let Some(s) = send_failed {
-            let msg = format!("control channel closed before batch at round {start_round}");
-            return Err(self.worker_error(s, msg));
         }
         // collect: one coalesced report per shard, folded per round
         let mut movements = vec![0usize; b];
@@ -457,16 +539,12 @@ impl Cluster {
     }
 
     fn poll_weights_inner(&mut self) -> Result<Vec<f64>> {
-        let mut send_failed = None;
-        for (s, tx) in self.ctl_tx.iter().enumerate() {
-            if tx.send(Ctl::PollWeights).is_err() {
-                send_failed = Some(s);
-                break;
+        for s in 0..self.map.shards() {
+            if let Err(e) = self.transport.send_ctl(s, Ctl::PollWeights) {
+                let msg = format!("control link closed during weight poll: {e}");
+                return Err(self.worker_error(s, msg));
             }
             self.stats.ctl_sent += 1;
-        }
-        if let Some(s) = send_failed {
-            return Err(self.worker_error(s, "control channel closed during weight poll".into()));
         }
         let mut w = vec![0.0f64; self.n()];
         for _ in 0..self.map.shards() {
@@ -488,17 +566,17 @@ impl Cluster {
     }
 
     fn recv_report(&mut self, what: &str, wait: Duration) -> Result<Report> {
-        match self.report_rx.recv_timeout(wait) {
+        match self.transport.recv_report(wait) {
             Ok(r) => {
                 self.stats.reports_received += 1;
                 Ok(r)
             }
-            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+            Err(TransportError::Timeout) => Err(anyhow!(
                 "timed out after {}s waiting for {what} (a worker likely panicked)",
                 wait.as_secs()
             )),
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow!(
-                "all cluster workers terminated while waiting for {what}"
+            Err(TransportError::Closed(why)) => Err(anyhow!(
+                "all cluster workers terminated while waiting for {what}: {why}"
             )),
         }
     }
@@ -509,16 +587,15 @@ impl Cluster {
     pub fn shutdown(self) -> Result<LoadState> {
         let Cluster {
             map,
-            ctl_tx,
-            report_rx,
+            mut transport,
             handles,
             dead,
             failure,
             ..
         } = self;
-        for tx in &ctl_tx {
+        for s in 0..map.shards() {
             // a worker that already exited is surfaced below
-            let _ = tx.send(Ctl::Shutdown);
+            let _ = transport.send_ctl(s, Ctl::Shutdown);
         }
         let mut state = LoadState::empty(map.n());
         let mut first_err: Option<Error> = failure.map(Error::msg);
@@ -527,7 +604,7 @@ impl Cluster {
         let mut got = 0usize;
         let mut timed_out = false;
         while got < expected {
-            match report_rx.recv_timeout(SHUTDOWN_TIMEOUT) {
+            match transport.recv_report(SHUTDOWN_TIMEOUT) {
                 Ok(Report::Final { shard, nodes }) => {
                     let lo = map.range(shard).start;
                     for (i, loads) in nodes.into_iter().enumerate() {

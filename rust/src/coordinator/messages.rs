@@ -15,15 +15,21 @@
 //! shard can run ahead into later rounds while a slower peer is still
 //! collecting earlier ones.  Peer messages are therefore tagged with
 //! their **round** in addition to their edge index; a receiver stashes
-//! messages that arrive early.  The full message-by-message spec lives
-//! in `DESIGN.md` §"Cluster wire protocol".
+//! messages that arrive early.
+//!
+//! These types are transport-agnostic: they cross in-process channels on
+//! the [`local`](super::transport::local) backend and travel as
+//! length-prefixed binary frames ([`codec`](super::transport::codec)) on
+//! the [`tcp`](super::transport::tcp) backend.  The full
+//! message-by-message spec — including the normative on-the-wire frame
+//! format — lives in `DESIGN.md` §"Cluster wire protocol".
 
 use super::shard::RoundPlan;
 use crate::load::Load;
 use std::sync::Arc;
 
 /// Leader -> worker control messages.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum Ctl {
     /// Execute rounds `start_round .. start_round + rounds` as one
     /// pipelined batch, reporting back a single [`Report::Batch`].
@@ -60,7 +66,7 @@ pub enum Ctl {
 /// across rounds, and within a batch a fast shard may send round `r+1`
 /// traffic while a peer is still collecting round `r` — the receiver
 /// stashes any message whose round is ahead of its own.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum ShardMsg {
     /// Slave -> master: `v`'s mobile loads (in node order) and its pinned
     /// weight sum.
@@ -89,7 +95,7 @@ pub enum ShardMsg {
 /// count for the edges it mastered, its node-weight extremes after the
 /// round (the leader folds these into the global discrepancy — exact,
 /// because f64 min/max are associative), and the peer messages it sent.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundReport {
     /// Global round index the entry describes.
     pub round: usize,
@@ -104,7 +110,7 @@ pub struct RoundReport {
 }
 
 /// Worker -> leader reports.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum Report {
     /// A whole batch finished on this shard: one [`RoundReport`] per
     /// round, in ascending round order.  Coalescing the per-round

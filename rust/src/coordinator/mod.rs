@@ -1,5 +1,6 @@
-//! Distributed BCM runtime: a leader thread orchestrating one shard
-//! worker per core, communicating over channels.
+//! Distributed BCM runtime: a leader orchestrating shard workers over a
+//! pluggable [`transport`] — in-process channels (one worker thread per
+//! core) or TCP sockets (one worker OS process per shard).
 //!
 //! # Architecture
 //!
@@ -33,17 +34,29 @@
 //! in, poisons the cluster against further rounds, and re-surfaces from
 //! [`Cluster::shutdown`].
 //!
-//! The message-by-message wire protocol, ordering guarantees, and the
-//! determinism argument are specified in `DESIGN.md` §"Cluster wire
-//! protocol".
+//! # Transports
+//!
+//! All coordinator I/O flows through the [`transport`] traits.  The
+//! [`transport::local`] backend keeps the historical in-process
+//! channels; the [`transport::tcp`] backend frames the same messages
+//! with the [`transport::codec`] wire format over real sockets, so
+//! `bcm-dlb run --cluster --transport tcp` plus `bcm-dlb
+//! cluster-worker` processes form a genuine multi-process cluster —
+//! still bit-identical to `bcm::Sequential`.
+//!
+//! The message-by-message wire protocol, ordering guarantees, the
+//! on-the-wire frame format, and the determinism argument are specified
+//! in `DESIGN.md` §"Cluster wire protocol".
 
 #![deny(missing_docs)]
 
 pub mod cluster;
 pub mod messages;
 pub mod shard;
+pub mod transport;
 pub mod worker;
 
 pub use cluster::{resolve_batch_rounds, Cluster, MessageStats};
 pub use shard::{resolve_shards, RoundPlan, ShardMap, ShardPlan};
+pub use transport::{LeaderTransport, TransportError, TransportKind, WorkerTransport};
 pub use worker::{ShardWorker, WorkerAlgo};

@@ -77,7 +77,7 @@ pub fn resolve_shards(shards: usize) -> usize {
 /// its counter-based RNG stream (`Pcg64::for_edge`), which is what makes
 /// the sharded execution bit-identical to the in-process engines no
 /// matter how edges are distributed over shards.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ShardPlan {
     /// `(edge index, u, v)` — both endpoints owned by this shard; solved
     /// locally with zero messages.
@@ -93,7 +93,7 @@ pub struct ShardPlan {
 /// One matching classified against a [`ShardMap`].  For a cross-shard
 /// edge `(u, v)` the owner of `u` is the edge master, so the pooled load
 /// order (u's loads then v's) matches the sequential engine exactly.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundPlan {
     /// Each shard's slice of the matching, indexed by shard.
     pub per_shard: Vec<ShardPlan>,

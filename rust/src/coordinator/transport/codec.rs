@@ -1,0 +1,870 @@
+//! The cluster wire codec: hand-rolled, dependency-free binary ser/de
+//! for every message that crosses a TCP link, framed with a versioned
+//! header and a CRC-32 payload checksum.
+//!
+//! The crate vendors no external crates, so the format is defined here
+//! from first principles and `DESIGN.md` §6 ("Wire frame format") is its
+//! normative specification.  In short:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic     the bytes "BCMW" (LE u32 0x574D4342)
+//! 4       2     version   WIRE_VERSION, little-endian
+//! 6       1     kind      message discriminant (see `kind` consts)
+//! 7       1     reserved  must be 0
+//! 8       4     length    payload byte count, little-endian
+//! 12      4     checksum  CRC-32 (IEEE, poly 0xEDB88320) of the payload
+//! 16      len   payload   fields in declaration order, little-endian
+//! ```
+//!
+//! Integers are fixed-width little-endian (`usize` travels as `u64`),
+//! `f64` travels as its IEEE-754 bit pattern (`to_bits`/`from_bits`, so
+//! load weights round-trip *bit-exactly* — the determinism contract
+//! survives the wire), `bool` is one byte (0/1), strings and vectors are
+//! length-prefixed with a `u64` count.  Decoders reject truncated
+//! frames, bad magic, version skew, checksum mismatches, unknown kinds,
+//! trailing payload bytes, and length fields that overrun the frame —
+//! each with a distinct [`CodecError`] so failure modes are testable.
+
+use crate::coordinator::messages::{Ctl, Report, RoundReport, ShardMsg};
+use crate::coordinator::shard::{RoundPlan, ShardPlan};
+use crate::load::Load;
+use std::fmt;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// Frame magic: the bytes `B C M W` read as a little-endian `u32`.
+pub const FRAME_MAGIC: u32 = 0x574D_4342;
+
+/// Current wire protocol version; bumped on any incompatible change.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Frame header size in bytes (magic + version + kind + reserved +
+/// length + checksum).
+pub const HEADER_LEN: usize = 16;
+
+/// Upper bound on a frame's payload size (256 MiB): a corrupted length
+/// field must not translate into an unbounded allocation.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Message discriminants (the header's `kind` byte).
+mod kind {
+    pub const CTL_RUN_BATCH: u8 = 1;
+    pub const CTL_POLL_WEIGHTS: u8 = 2;
+    pub const CTL_SHUTDOWN: u8 = 3;
+    pub const PEER_OFFER: u8 = 4;
+    pub const PEER_SETTLE: u8 = 5;
+    pub const REPORT_BATCH: u8 = 6;
+    pub const REPORT_WEIGHTS: u8 = 7;
+    pub const REPORT_FINAL: u8 = 8;
+    pub const REPORT_ERROR: u8 = 9;
+    pub const HELLO: u8 = 10;
+    pub const INIT: u8 = 11;
+    pub const PEER_HELLO: u8 = 12;
+}
+
+/// Everything that can travel over a cluster TCP link: the three
+/// protocol message families plus the connection-setup handshake.
+#[derive(Debug, PartialEq)]
+pub enum WireMsg {
+    /// Leader -> worker control message.
+    Ctl(Ctl),
+    /// Worker -> worker data-plane message.
+    Peer(ShardMsg),
+    /// Worker -> leader report.
+    Report(Report),
+    /// Worker -> leader, first frame after connecting: announces the
+    /// address of the worker's peer-mesh listener.
+    Hello {
+        /// `host:port` the worker accepts peer connections on.
+        peer_addr: String,
+    },
+    /// Leader -> worker, the reply to [`WireMsg::Hello`] once every
+    /// worker has connected: the worker's identity and initial state.
+    Init(Init),
+    /// Worker -> worker, first frame on a freshly dialed peer
+    /// connection: identifies the dialing shard.
+    PeerHello {
+        /// The dialing worker's shard index.
+        shard: usize,
+    },
+}
+
+/// The payload of [`WireMsg::Init`]: everything a worker process needs
+/// to become shard `shard` of a cluster.
+#[derive(Debug, PartialEq)]
+pub struct Init {
+    /// The shard index assigned to this worker.
+    pub shard: usize,
+    /// Total number of shards in the cluster.
+    pub shards: usize,
+    /// First node id the shard owns (`nodes[i]` holds node `lo + i`).
+    pub lo: usize,
+    /// The pair algorithm to run, as its canonical
+    /// `PairAlgorithm::name()` spelling.
+    pub algo: String,
+    /// Initial per-node load lists, in node order.
+    pub nodes: Vec<Vec<Load>>,
+    /// Peer-mesh listener address of every worker, indexed by shard
+    /// (entry `shard` is this worker's own address).
+    pub peers: Vec<String>,
+}
+
+/// A decode failure; each frame defect maps to a distinct variant.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The buffer ends before the header or the declared payload does.
+    Truncated,
+    /// The first four bytes are not [`FRAME_MAGIC`].
+    BadMagic,
+    /// The frame's version field disagrees with [`WIRE_VERSION`].
+    BadVersion(u16),
+    /// The payload checksum does not match the header's CRC-32.
+    BadChecksum,
+    /// The header's `kind` byte names no known message.
+    BadKind(u8),
+    /// The payload decoded cleanly but left unconsumed bytes.
+    Trailing,
+    /// A field inside the payload is malformed (bad bool byte, a length
+    /// prefix overrunning the frame, an oversized payload, ...).
+    Malformed(&'static str),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "truncated frame"),
+            CodecError::BadMagic => write!(f, "bad frame magic"),
+            CodecError::BadVersion(v) => {
+                write!(f, "wire version skew: got {v}, speak {WIRE_VERSION}")
+            }
+            CodecError::BadChecksum => write!(f, "frame checksum mismatch"),
+            CodecError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            CodecError::Trailing => write!(f, "trailing bytes after payload"),
+            CodecError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`), bitwise —
+/// plenty fast for protocol frames and entirely self-contained.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &byte in data {
+        crc ^= u32::from(byte);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u8(buf: &mut Vec<u8>, x: u8) {
+    buf.push(x);
+}
+
+fn put_u16(buf: &mut Vec<u8>, x: u16) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, x: usize) {
+    put_u64(buf, x as u64);
+}
+
+fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    put_u64(buf, x.to_bits());
+}
+
+fn put_bool(buf: &mut Vec<u8>, x: bool) {
+    put_u8(buf, u8::from(x));
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_load(buf: &mut Vec<u8>, l: &Load) {
+    put_u64(buf, l.id);
+    put_f64(buf, l.weight);
+    put_bool(buf, l.mobile);
+}
+
+fn put_loads(buf: &mut Vec<u8>, loads: &[Load]) {
+    put_usize(buf, loads.len());
+    for l in loads {
+        put_load(buf, l);
+    }
+}
+
+fn put_shard_plan(buf: &mut Vec<u8>, p: &ShardPlan) {
+    put_usize(buf, p.local.len());
+    for &(e, u, v) in &p.local {
+        put_usize(buf, e);
+        put_u32(buf, u);
+        put_u32(buf, v);
+    }
+    put_usize(buf, p.master.len());
+    for &(e, u, v, slave) in &p.master {
+        put_usize(buf, e);
+        put_u32(buf, u);
+        put_u32(buf, v);
+        put_usize(buf, slave);
+    }
+    put_usize(buf, p.slave.len());
+    for &(e, v, master) in &p.slave {
+        put_usize(buf, e);
+        put_u32(buf, v);
+        put_usize(buf, master);
+    }
+}
+
+fn put_round_plan(buf: &mut Vec<u8>, p: &RoundPlan) {
+    put_usize(buf, p.cross_edges);
+    put_usize(buf, p.edges);
+    put_usize(buf, p.per_shard.len());
+    for sp in &p.per_shard {
+        put_shard_plan(buf, sp);
+    }
+}
+
+/// Serialize a message's payload and return `(kind, payload)`.
+fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
+    let mut b = Vec::new();
+    let kind = match msg {
+        WireMsg::Ctl(Ctl::RunBatch {
+            start_round,
+            rounds,
+            seed,
+            plans,
+        }) => {
+            put_usize(&mut b, *start_round);
+            put_usize(&mut b, *rounds);
+            put_u64(&mut b, *seed);
+            put_usize(&mut b, plans.len());
+            for p in plans.iter() {
+                put_round_plan(&mut b, p);
+            }
+            kind::CTL_RUN_BATCH
+        }
+        WireMsg::Ctl(Ctl::PollWeights) => kind::CTL_POLL_WEIGHTS,
+        WireMsg::Ctl(Ctl::Shutdown) => kind::CTL_SHUTDOWN,
+        WireMsg::Peer(ShardMsg::Offer {
+            round,
+            edge,
+            loads,
+            pinned,
+        }) => {
+            put_usize(&mut b, *round);
+            put_usize(&mut b, *edge);
+            put_loads(&mut b, loads);
+            put_f64(&mut b, *pinned);
+            kind::PEER_OFFER
+        }
+        WireMsg::Peer(ShardMsg::Settle { round, edge, loads }) => {
+            put_usize(&mut b, *round);
+            put_usize(&mut b, *edge);
+            put_loads(&mut b, loads);
+            kind::PEER_SETTLE
+        }
+        WireMsg::Report(Report::Batch { shard, rounds }) => {
+            put_usize(&mut b, *shard);
+            put_usize(&mut b, rounds.len());
+            for r in rounds {
+                put_usize(&mut b, r.round);
+                put_usize(&mut b, r.movements);
+                put_f64(&mut b, r.min_weight);
+                put_f64(&mut b, r.max_weight);
+                put_usize(&mut b, r.peer_msgs);
+            }
+            kind::REPORT_BATCH
+        }
+        WireMsg::Report(Report::Weights { shard, weights }) => {
+            put_usize(&mut b, *shard);
+            put_usize(&mut b, weights.len());
+            for &w in weights {
+                put_f64(&mut b, w);
+            }
+            kind::REPORT_WEIGHTS
+        }
+        WireMsg::Report(Report::Final { shard, nodes }) => {
+            put_usize(&mut b, *shard);
+            put_usize(&mut b, nodes.len());
+            for node in nodes {
+                put_loads(&mut b, node);
+            }
+            kind::REPORT_FINAL
+        }
+        WireMsg::Report(Report::Error {
+            shard,
+            round,
+            message,
+        }) => {
+            put_usize(&mut b, *shard);
+            match round {
+                Some(r) => {
+                    put_bool(&mut b, true);
+                    put_usize(&mut b, *r);
+                }
+                None => put_bool(&mut b, false),
+            }
+            put_str(&mut b, message);
+            kind::REPORT_ERROR
+        }
+        WireMsg::Hello { peer_addr } => {
+            put_str(&mut b, peer_addr);
+            kind::HELLO
+        }
+        WireMsg::Init(init) => {
+            put_usize(&mut b, init.shard);
+            put_usize(&mut b, init.shards);
+            put_usize(&mut b, init.lo);
+            put_str(&mut b, &init.algo);
+            put_usize(&mut b, init.nodes.len());
+            for node in &init.nodes {
+                put_loads(&mut b, node);
+            }
+            put_usize(&mut b, init.peers.len());
+            for p in &init.peers {
+                put_str(&mut b, p);
+            }
+            kind::INIT
+        }
+        WireMsg::PeerHello { shard } => {
+            put_usize(&mut b, *shard);
+            kind::PEER_HELLO
+        }
+    };
+    (kind, b)
+}
+
+/// Serialize `msg` into one self-contained frame (header + payload).
+pub fn encode_frame(msg: &WireMsg) -> Vec<u8> {
+    let (kind, payload) = encode_payload(msg);
+    assert!(payload.len() <= MAX_PAYLOAD, "frame payload exceeds MAX_PAYLOAD");
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload.len());
+    put_u32(&mut frame, FRAME_MAGIC);
+    put_u16(&mut frame, WIRE_VERSION);
+    put_u8(&mut frame, kind);
+    put_u8(&mut frame, 0); // reserved
+    put_u32(&mut frame, payload.len() as u32);
+    put_u32(&mut frame, crc32(&payload));
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+// ---------------------------------------------------------------- decode
+
+/// A bounds-checked read cursor over a payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn usize(&mut self) -> Result<usize, CodecError> {
+        usize::try_from(self.u64()?).map_err(|_| CodecError::Malformed("usize overflow"))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool, CodecError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CodecError::Malformed("bad bool byte")),
+        }
+    }
+
+    /// Read a vector length prefix and sanity-check it against the bytes
+    /// actually left in the frame (each element needs at least
+    /// `min_elem` bytes), so a corrupted count cannot trigger an
+    /// unbounded allocation.
+    fn vec_len(&mut self, min_elem: usize) -> Result<usize, CodecError> {
+        let n = self.usize()?;
+        match n.checked_mul(min_elem.max(1)) {
+            Some(need) if need <= self.remaining() => Ok(n),
+            _ => Err(CodecError::Malformed("length prefix overruns frame")),
+        }
+    }
+
+    fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.vec_len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::Malformed("non-utf8 string"))
+    }
+
+    fn load(&mut self) -> Result<Load, CodecError> {
+        Ok(Load {
+            id: self.u64()?,
+            weight: self.f64()?,
+            mobile: self.bool()?,
+        })
+    }
+
+    fn loads(&mut self) -> Result<Vec<Load>, CodecError> {
+        let n = self.vec_len(17)?; // id(8) + weight(8) + mobile(1)
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.load()?);
+        }
+        Ok(v)
+    }
+
+    fn shard_plan(&mut self) -> Result<ShardPlan, CodecError> {
+        let n_local = self.vec_len(16)?;
+        let mut local = Vec::with_capacity(n_local);
+        for _ in 0..n_local {
+            local.push((self.usize()?, self.u32()?, self.u32()?));
+        }
+        let n_master = self.vec_len(24)?;
+        let mut master = Vec::with_capacity(n_master);
+        for _ in 0..n_master {
+            master.push((self.usize()?, self.u32()?, self.u32()?, self.usize()?));
+        }
+        let n_slave = self.vec_len(20)?;
+        let mut slave = Vec::with_capacity(n_slave);
+        for _ in 0..n_slave {
+            slave.push((self.usize()?, self.u32()?, self.usize()?));
+        }
+        Ok(ShardPlan {
+            local,
+            master,
+            slave,
+        })
+    }
+
+    fn round_plan(&mut self) -> Result<RoundPlan, CodecError> {
+        let cross_edges = self.usize()?;
+        let edges = self.usize()?;
+        let n = self.vec_len(24)?; // three length prefixes minimum
+        let mut per_shard = Vec::with_capacity(n);
+        for _ in 0..n {
+            per_shard.push(self.shard_plan()?);
+        }
+        Ok(RoundPlan {
+            per_shard,
+            cross_edges,
+            edges,
+        })
+    }
+}
+
+/// Deserialize a payload of the given `kind`.
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
+    let mut c = Cursor::new(payload);
+    let msg = match kind {
+        kind::CTL_RUN_BATCH => {
+            let start_round = c.usize()?;
+            let rounds = c.usize()?;
+            let seed = c.u64()?;
+            let n = c.vec_len(24)?;
+            let mut plans = Vec::with_capacity(n);
+            for _ in 0..n {
+                plans.push(Arc::new(c.round_plan()?));
+            }
+            WireMsg::Ctl(Ctl::RunBatch {
+                start_round,
+                rounds,
+                seed,
+                plans: Arc::new(plans),
+            })
+        }
+        kind::CTL_POLL_WEIGHTS => WireMsg::Ctl(Ctl::PollWeights),
+        kind::CTL_SHUTDOWN => WireMsg::Ctl(Ctl::Shutdown),
+        kind::PEER_OFFER => WireMsg::Peer(ShardMsg::Offer {
+            round: c.usize()?,
+            edge: c.usize()?,
+            loads: c.loads()?,
+            pinned: c.f64()?,
+        }),
+        kind::PEER_SETTLE => WireMsg::Peer(ShardMsg::Settle {
+            round: c.usize()?,
+            edge: c.usize()?,
+            loads: c.loads()?,
+        }),
+        kind::REPORT_BATCH => {
+            let shard = c.usize()?;
+            let n = c.vec_len(40)?;
+            let mut rounds = Vec::with_capacity(n);
+            for _ in 0..n {
+                rounds.push(RoundReport {
+                    round: c.usize()?,
+                    movements: c.usize()?,
+                    min_weight: c.f64()?,
+                    max_weight: c.f64()?,
+                    peer_msgs: c.usize()?,
+                });
+            }
+            WireMsg::Report(Report::Batch { shard, rounds })
+        }
+        kind::REPORT_WEIGHTS => {
+            let shard = c.usize()?;
+            let n = c.vec_len(8)?;
+            let mut weights = Vec::with_capacity(n);
+            for _ in 0..n {
+                weights.push(c.f64()?);
+            }
+            WireMsg::Report(Report::Weights { shard, weights })
+        }
+        kind::REPORT_FINAL => {
+            let shard = c.usize()?;
+            let n = c.vec_len(8)?;
+            let mut nodes = Vec::with_capacity(n);
+            for _ in 0..n {
+                nodes.push(c.loads()?);
+            }
+            WireMsg::Report(Report::Final { shard, nodes })
+        }
+        kind::REPORT_ERROR => {
+            let shard = c.usize()?;
+            let round = if c.bool()? { Some(c.usize()?) } else { None };
+            let message = c.str()?;
+            WireMsg::Report(Report::Error {
+                shard,
+                round,
+                message,
+            })
+        }
+        kind::HELLO => WireMsg::Hello {
+            peer_addr: c.str()?,
+        },
+        kind::INIT => {
+            let shard = c.usize()?;
+            let shards = c.usize()?;
+            let lo = c.usize()?;
+            let algo = c.str()?;
+            let n = c.vec_len(8)?;
+            let mut nodes = Vec::with_capacity(n);
+            for _ in 0..n {
+                nodes.push(c.loads()?);
+            }
+            let np = c.vec_len(8)?;
+            let mut peers = Vec::with_capacity(np);
+            for _ in 0..np {
+                peers.push(c.str()?);
+            }
+            WireMsg::Init(Init {
+                shard,
+                shards,
+                lo,
+                algo,
+                nodes,
+                peers,
+            })
+        }
+        kind::PEER_HELLO => WireMsg::PeerHello { shard: c.usize()? },
+        other => return Err(CodecError::BadKind(other)),
+    };
+    if c.remaining() != 0 {
+        return Err(CodecError::Trailing);
+    }
+    Ok(msg)
+}
+
+/// Decode one frame from the front of `buf`; returns the message and
+/// the number of bytes consumed.
+pub fn decode_frame(buf: &[u8]) -> Result<(WireMsg, usize), CodecError> {
+    if buf.len() < HEADER_LEN {
+        return Err(CodecError::Truncated);
+    }
+    let mut h = Cursor::new(&buf[..HEADER_LEN]);
+    let magic = h.u32().expect("header sized");
+    if magic != FRAME_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let version = {
+        let b = h.take(2).expect("header sized");
+        u16::from_le_bytes([b[0], b[1]])
+    };
+    if version != WIRE_VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let kind = h.u8().expect("header sized");
+    let reserved = h.u8().expect("header sized");
+    if reserved != 0 {
+        // actually reserved: a future revision may repurpose it only if
+        // version-1 peers reject nonzero values today
+        return Err(CodecError::Malformed("reserved header byte must be 0"));
+    }
+    let len = h.u32().expect("header sized") as usize;
+    let checksum = h.u32().expect("header sized");
+    if len > MAX_PAYLOAD {
+        return Err(CodecError::Malformed("payload length exceeds MAX_PAYLOAD"));
+    }
+    if buf.len() < HEADER_LEN + len {
+        return Err(CodecError::Truncated);
+    }
+    let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+    if crc32(payload) != checksum {
+        return Err(CodecError::BadChecksum);
+    }
+    let msg = decode_payload(kind, payload)?;
+    Ok((msg, HEADER_LEN + len))
+}
+
+/// Write one frame to a byte sink (a `TcpStream`), flushing it.
+pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> std::io::Result<()> {
+    let frame = encode_frame(msg);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Read exactly one frame from a byte source (a `TcpStream`).
+///
+/// Transport-level failures (EOF, reset) surface as the underlying
+/// `io::Error`; protocol-level defects (bad magic, checksum, version
+/// skew, malformed payload) surface as `io::ErrorKind::InvalidData`
+/// wrapping the [`CodecError`]'s description.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<WireMsg> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(invalid_data(CodecError::Malformed(
+            "payload length exceeds MAX_PAYLOAD",
+        )));
+    }
+    let mut frame = Vec::with_capacity(HEADER_LEN + len);
+    frame.extend_from_slice(&header);
+    frame.resize(HEADER_LEN + len, 0);
+    r.read_exact(&mut frame[HEADER_LEN..])?;
+    match decode_frame(&frame) {
+        Ok((msg, used)) => {
+            debug_assert_eq!(used, frame.len());
+            Ok(msg)
+        }
+        Err(e) => Err(invalid_data(e)),
+    }
+}
+
+fn invalid_data(e: CodecError) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: WireMsg) -> WireMsg {
+        let frame = encode_frame(&msg);
+        let (back, used) = decode_frame(&frame).expect("frame decodes");
+        assert_eq!(used, frame.len());
+        assert_eq!(back, msg, "round-trip changed the message");
+        back
+    }
+
+    #[test]
+    fn simple_variants_roundtrip() {
+        roundtrip(WireMsg::Ctl(Ctl::PollWeights));
+        roundtrip(WireMsg::Ctl(Ctl::Shutdown));
+        roundtrip(WireMsg::PeerHello { shard: 3 });
+        roundtrip(WireMsg::Hello {
+            peer_addr: "127.0.0.1:4510".into(),
+        });
+        roundtrip(WireMsg::Report(Report::Error {
+            shard: 2,
+            round: Some(7),
+            message: "worker panicked: injected fault".into(),
+        }));
+        roundtrip(WireMsg::Report(Report::Error {
+            shard: 0,
+            round: None,
+            message: String::new(),
+        }));
+    }
+
+    #[test]
+    fn f64_bit_patterns_survive() {
+        for w in [0.0f64, -0.0, 1.5, 1e-300, 1e300, f64::MIN_POSITIVE] {
+            let msg = WireMsg::Peer(ShardMsg::Offer {
+                round: 1,
+                edge: 2,
+                loads: vec![Load::new(9, w)],
+                pinned: w,
+            });
+            let frame = encode_frame(&msg);
+            let (back, _) = decode_frame(&frame).unwrap();
+            match back {
+                WireMsg::Peer(ShardMsg::Offer { loads, pinned, .. }) => {
+                    assert_eq!(loads[0].weight.to_bits(), w.to_bits());
+                    assert_eq!(pinned.to_bits(), w.to_bits());
+                }
+                other => panic!("wrong variant back: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected_at_every_cut() {
+        let msg = WireMsg::Report(Report::Weights {
+            shard: 1,
+            weights: vec![1.0, 2.0, 3.0],
+        });
+        let frame = encode_frame(&msg);
+        for cut in 0..frame.len() {
+            assert_eq!(
+                decode_frame(&frame[..cut]).unwrap_err(),
+                CodecError::Truncated,
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_version_kind_and_trailing_are_rejected() {
+        let msg = WireMsg::Hello {
+            peer_addr: "10.0.0.1:9".into(),
+        };
+        let frame = encode_frame(&msg);
+
+        // flip a payload byte -> checksum mismatch
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert_eq!(decode_frame(&bad).unwrap_err(), CodecError::BadChecksum);
+
+        // bump the version -> version skew
+        let mut bad = frame.clone();
+        bad[4] = 0xFE;
+        bad[5] = 0xCA;
+        assert_eq!(
+            decode_frame(&bad).unwrap_err(),
+            CodecError::BadVersion(0xCAFE)
+        );
+
+        // clobber the magic
+        let mut bad = frame.clone();
+        bad[0] = 0;
+        assert_eq!(decode_frame(&bad).unwrap_err(), CodecError::BadMagic);
+
+        // unknown kind (checksum covers only the payload, so this hits
+        // the kind check, not the checksum)
+        let mut bad = frame.clone();
+        bad[6] = 200;
+        assert_eq!(decode_frame(&bad).unwrap_err(), CodecError::BadKind(200));
+
+        // nonzero reserved byte is rejected, per the normative spec
+        let mut bad = frame.clone();
+        bad[7] = 1;
+        assert_eq!(
+            decode_frame(&bad).unwrap_err(),
+            CodecError::Malformed("reserved header byte must be 0")
+        );
+
+        // payload padded with an extra byte (length + checksum fixed up)
+        let payload_len = frame.len() - HEADER_LEN;
+        let mut bad = frame.clone();
+        bad.push(0);
+        bad[8..12].copy_from_slice(&((payload_len + 1) as u32).to_le_bytes());
+        let crc = crc32(&bad[HEADER_LEN..]);
+        bad[12..16].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(decode_frame(&bad).unwrap_err(), CodecError::Trailing);
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_bounded() {
+        // a Weights report whose element count claims more data than the
+        // frame carries must be rejected, not allocated
+        let mut payload = Vec::new();
+        put_usize(&mut payload, 0); // shard
+        put_usize(&mut payload, u64::MAX as usize); // weight count
+        let mut frame = Vec::new();
+        put_u32(&mut frame, FRAME_MAGIC);
+        put_u16(&mut frame, WIRE_VERSION);
+        put_u8(&mut frame, 7); // REPORT_WEIGHTS
+        put_u8(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(
+            decode_frame(&frame).unwrap_err(),
+            CodecError::Malformed("length prefix overruns frame")
+        );
+    }
+
+    #[test]
+    fn io_framing_roundtrips_back_to_back_frames() {
+        let msgs = vec![
+            WireMsg::Ctl(Ctl::PollWeights),
+            WireMsg::Peer(ShardMsg::Settle {
+                round: 4,
+                edge: 1,
+                loads: vec![Load::new(1, 2.5), Load::pinned(2, 0.5)],
+            }),
+            WireMsg::Report(Report::Batch {
+                shard: 1,
+                rounds: vec![RoundReport {
+                    round: 4,
+                    movements: 3,
+                    min_weight: 0.25,
+                    max_weight: 9.75,
+                    peer_msgs: 2,
+                }],
+            }),
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut reader = &wire[..];
+        for m in &msgs {
+            let back = read_frame(&mut reader).unwrap();
+            assert_eq!(&back, m);
+        }
+        assert!(reader.is_empty());
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! The in-process transport: the coordinator's original
+//! `std::sync::mpsc` channels, packaged as [`LeaderTransport`] /
+//! [`WorkerTransport`] implementations.
+//!
+//! This is the PR-4 wiring verbatim — one control channel per worker,
+//! one shared report channel, one inbound peer channel per worker that
+//! every other worker holds a sender for — so the behavior of every
+//! existing bit-identity and fail-stop test is unchanged: the channels
+//! are unbounded (sends never block), FIFO per sender/receiver pair, and
+//! messages move by pointer (a `Ctl::RunBatch`'s plan table crosses as a
+//! zero-copy `Arc` clone, never serialized).
+
+use super::{LeaderTransport, TransportError, WorkerTransport};
+use crate::coordinator::messages::{Ctl, Report, ShardMsg};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Leader half of an in-process cluster: control senders plus the
+/// shared report receiver.
+pub struct LocalLeader {
+    ctl_tx: Vec<Sender<Ctl>>,
+    report_rx: Receiver<Report>,
+}
+
+/// Worker half of an in-process cluster: the four channel endpoints of
+/// one shard.
+pub struct LocalWorker {
+    shard: usize,
+    ctl_rx: Receiver<Ctl>,
+    report_tx: Sender<Report>,
+    peer_rx: Receiver<ShardMsg>,
+    peer_tx: Vec<Sender<ShardMsg>>,
+}
+
+/// Wire up a `shards`-worker in-process cluster: one [`LocalLeader`]
+/// and one [`LocalWorker`] per shard, fully cross-connected.
+pub fn pair(shards: usize) -> (LocalLeader, Vec<LocalWorker>) {
+    assert!(shards > 0, "local transport needs at least one worker");
+    let (report_tx, report_rx) = channel::<Report>();
+    let mut ctl_tx = Vec::with_capacity(shards);
+    let mut ctl_rx = Vec::with_capacity(shards);
+    let mut peer_tx = Vec::with_capacity(shards);
+    let mut peer_rx = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (ct, cr) = channel::<Ctl>();
+        ctl_tx.push(ct);
+        ctl_rx.push(cr);
+        let (pt, pr) = channel::<ShardMsg>();
+        peer_tx.push(pt);
+        peer_rx.push(pr);
+    }
+    let mut workers = Vec::with_capacity(shards);
+    // each worker takes ownership of its own receivers and shares
+    // clones of every peer sender (its own included, by symmetry)
+    for (shard, (cr, pr)) in ctl_rx.into_iter().zip(peer_rx).enumerate() {
+        workers.push(LocalWorker {
+            shard,
+            ctl_rx: cr,
+            report_tx: report_tx.clone(),
+            peer_rx: pr,
+            peer_tx: peer_tx.clone(),
+        });
+    }
+    // the leader holds no report sender: when every worker is gone the
+    // channel disconnects, exactly like the pre-transport wiring
+    drop(report_tx);
+    (LocalLeader { ctl_tx, report_rx }, workers)
+}
+
+impl LeaderTransport for LocalLeader {
+    fn shards(&self) -> usize {
+        self.ctl_tx.len()
+    }
+
+    fn send_ctl(&mut self, shard: usize, msg: Ctl) -> Result<(), TransportError> {
+        self.ctl_tx[shard]
+            .send(msg)
+            .map_err(|_| TransportError::Closed(format!("worker {shard} control channel closed")))
+    }
+
+    fn recv_report(&mut self, wait: Duration) -> Result<Report, TransportError> {
+        match self.report_rx.recv_timeout(wait) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
+                "all cluster workers terminated".to_string(),
+            )),
+        }
+    }
+}
+
+impl WorkerTransport for LocalWorker {
+    fn shard(&self) -> usize {
+        self.shard
+    }
+
+    fn shards(&self) -> usize {
+        self.peer_tx.len()
+    }
+
+    fn recv_ctl(&mut self) -> Result<Ctl, TransportError> {
+        self.ctl_rx
+            .recv()
+            .map_err(|_| TransportError::Closed("leader control channel closed".to_string()))
+    }
+
+    fn send_report(&mut self, msg: Report) -> Result<(), TransportError> {
+        self.report_tx
+            .send(msg)
+            .map_err(|_| TransportError::Closed("leader report channel closed".to_string()))
+    }
+
+    fn send_peer(&mut self, peer: usize, msg: ShardMsg) -> Result<(), TransportError> {
+        self.peer_tx[peer]
+            .send(msg)
+            .map_err(|_| TransportError::Closed(format!("peer shard {peer} channel closed")))
+    }
+
+    fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError> {
+        match self.peer_rx.recv_timeout(wait) {
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
+                "peer channels closed".to_string(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_cross_connects_leader_and_workers() {
+        let (mut leader, mut workers) = pair(3);
+        assert_eq!(leader.shards(), 3);
+        assert_eq!(workers.len(), 3);
+        for (i, w) in workers.iter().enumerate() {
+            assert_eq!(w.shard(), i);
+            assert_eq!(WorkerTransport::shards(w), 3);
+        }
+        // leader -> worker control
+        leader.send_ctl(1, Ctl::PollWeights).unwrap();
+        assert!(matches!(workers[1].recv_ctl().unwrap(), Ctl::PollWeights));
+        // worker -> worker peer plane
+        workers[0]
+            .send_peer(
+                2,
+                ShardMsg::Settle {
+                    round: 0,
+                    edge: 0,
+                    loads: vec![],
+                },
+            )
+            .unwrap();
+        let got = workers[2].recv_peer(Duration::from_secs(1)).unwrap();
+        assert!(matches!(got, ShardMsg::Settle { .. }));
+        // worker -> leader reports
+        workers[2]
+            .send_report(Report::Weights {
+                shard: 2,
+                weights: vec![1.0],
+            })
+            .unwrap();
+        assert!(matches!(
+            leader.recv_report(Duration::from_secs(1)).unwrap(),
+            Report::Weights { shard: 2, .. }
+        ));
+    }
+
+    #[test]
+    fn dropped_workers_disconnect_the_report_channel() {
+        let (mut leader, workers) = pair(2);
+        drop(workers);
+        match leader.recv_report(Duration::from_millis(10)) {
+            Err(TransportError::Closed(_)) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert!(leader.send_ctl(0, Ctl::Shutdown).is_err());
+    }
+
+    #[test]
+    fn empty_queue_times_out() {
+        let (mut leader, mut workers) = pair(1);
+        assert!(matches!(
+            leader.recv_report(Duration::from_millis(5)),
+            Err(TransportError::Timeout)
+        ));
+        assert!(matches!(
+            workers[0].recv_peer(Duration::from_millis(5)),
+            Err(TransportError::Timeout)
+        ));
+    }
+}

@@ -1,0 +1,161 @@
+//! Pluggable message transports for the sharded coordinator.
+//!
+//! PR 4 left the cluster "distributed" across the threads of one
+//! process: every [`Ctl`]/[`ShardMsg`]/[`Report`] travelled over a
+//! hardwired `std::sync::mpsc` channel.  This module lifts the protocol
+//! onto two small traits — [`LeaderTransport`] for the control/report
+//! plane and [`WorkerTransport`] for a shard worker's four endpoints —
+//! with two backends:
+//!
+//! * [`local`] — the original in-process channels, now just one
+//!   implementation of the traits.  Behavior (and every bit-identity and
+//!   fail-stop test) is unchanged.
+//! * [`tcp`] — a dependency-free length-prefixed binary codec
+//!   ([`codec`]) over `std::net::TcpStream`, so the leader and the shard
+//!   workers can run as separate OS processes (`bcm-dlb cluster-worker`)
+//!   and still produce traces **bit-identical** to `bcm::Sequential`.
+//!
+//! The protocol (DESIGN.md §6) needs exactly two guarantees from a
+//! transport, and both backends provide them:
+//!
+//! 1. **FIFO per directed link** — messages between one sender and one
+//!    receiver arrive in send order (mpsc channels and TCP streams are
+//!    both ordered).
+//! 2. **Sends never block indefinitely** — the local backend's channels
+//!    are unbounded; the TCP backend pairs every socket with a dedicated
+//!    reader thread draining into an unbounded in-process queue, so the
+//!    kernel's socket buffers can always empty and a write can always
+//!    complete.
+//!
+//! Failures are *values*, not panics: every operation returns a
+//! [`TransportError`] that the coordinator maps onto its existing
+//! fail-stop paths (a dead peer mid-round still surfaces as an error
+//! naming the round, whichever backend carried the traffic).
+
+pub mod codec;
+pub mod local;
+pub mod tcp;
+
+use super::messages::{Ctl, Report, ShardMsg};
+use std::fmt;
+use std::time::Duration;
+
+/// A transport-level failure.
+///
+/// The two cases mirror the two ways `std::sync::mpsc` receives fail,
+/// which is exactly the granularity the coordinator's fail-stop logic
+/// distinguishes: *nothing arrived in time* vs *the other side is gone*.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The other endpoint is gone: a closed channel, a closed socket, or
+    /// a connection that died mid-frame.  Carries a human-readable
+    /// description of what was lost.
+    Closed(String),
+    /// No message arrived within the allowed wait.
+    Timeout,
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Closed(why) => write!(f, "{why}"),
+            TransportError::Timeout => write!(f, "timed out"),
+        }
+    }
+}
+
+/// Which transport backend a cluster run uses (the `--transport` knob,
+/// config key `"transport"`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process `mpsc` channels; workers are threads of the leader
+    /// process (the default, and the only option before this module).
+    Local,
+    /// Length-prefixed binary frames over `std::net::TcpStream`; workers
+    /// are separate OS processes (`bcm-dlb cluster-worker`).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI/config spelling (`"local"` / `"tcp"`).
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "local" | "mpsc" => Some(TransportKind::Local),
+            "tcp" | "socket" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling, round-trips through [`parse`](Self::parse).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// The leader's endpoint: a control channel to each of `shards()`
+/// workers plus one merged report inbox.
+///
+/// Implementations must preserve per-link FIFO order and deliver
+/// reports from all workers into the single [`recv_report`] queue in
+/// per-worker send order (cross-worker interleaving is unspecified, as
+/// with the shared mpsc report channel).
+///
+/// [`recv_report`]: LeaderTransport::recv_report
+pub trait LeaderTransport: Send {
+    /// Number of workers this endpoint fans out to.
+    fn shards(&self) -> usize;
+
+    /// Send a control message to worker `shard`.
+    fn send_ctl(&mut self, shard: usize, msg: Ctl) -> Result<(), TransportError>;
+
+    /// Receive the next report from any worker, waiting at most `wait`.
+    fn recv_report(&mut self, wait: Duration) -> Result<Report, TransportError>;
+}
+
+/// A shard worker's endpoint: the control inbox, the report channel
+/// back to the leader, and the peer data plane to every other shard.
+pub trait WorkerTransport: Send {
+    /// This worker's shard index.
+    fn shard(&self) -> usize;
+
+    /// Total number of shards in the cluster.
+    fn shards(&self) -> usize;
+
+    /// Block until the next control message from the leader.
+    fn recv_ctl(&mut self) -> Result<Ctl, TransportError>;
+
+    /// Send a report to the leader.
+    fn send_report(&mut self, msg: Report) -> Result<(), TransportError>;
+
+    /// Send a peer message to worker `peer`.
+    fn send_peer(&mut self, peer: usize, msg: ShardMsg) -> Result<(), TransportError>;
+
+    /// Receive the next peer message from any shard, waiting at most
+    /// `wait`.
+    fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parse_roundtrip() {
+        for kind in [TransportKind::Local, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(TransportKind::parse("mpsc"), Some(TransportKind::Local));
+        assert_eq!(TransportKind::parse("socket"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn transport_error_displays() {
+        let e = TransportError::Closed("peer 3 hung up".into());
+        assert_eq!(e.to_string(), "peer 3 hung up");
+        assert_eq!(TransportError::Timeout.to_string(), "timed out");
+    }
+}

@@ -1,0 +1,615 @@
+//! The TCP socket transport: the cluster protocol over real
+//! `std::net::TcpStream`s, with the leader and every shard worker in
+//! separate OS processes.
+//!
+//! # Topology
+//!
+//! One duplex leader<->worker connection per shard (control frames down,
+//! report frames up) plus a full worker<->worker mesh for the
+//! Offer/Settle data plane — the same channel graph as
+//! [`local`](super::local), realized as sockets.
+//!
+//! # Connection establishment
+//!
+//! 1. Each worker process reaches the leader either by dialing it
+//!    (`bcm-dlb cluster-worker --connect`, leader bound via
+//!    [`LeaderListener`]) or by listening for the leader's dial-in
+//!    (`--listen`, leader using [`TcpLeader::connect`], config key
+//!    `peers`).  Either way the worker immediately binds an ephemeral
+//!    **peer listener** and sends `Hello { peer_addr }`.
+//! 2. Once all `k` workers are known, the leader assigns shard indices
+//!    (connection order) and sends each worker an `Init` frame: its
+//!    shard id, node range, initial load lists, the algorithm name, and
+//!    the full peer-address table.
+//! 3. Workers build the mesh: shard `s` dials every shard `< s`
+//!    (announcing itself with `PeerHello`) and accepts a connection from
+//!    every shard `> s`, so each unordered pair shares exactly one
+//!    socket.
+//!
+//! # Blocking and ordering
+//!
+//! Every socket gets a dedicated reader thread that decodes frames into
+//! an unbounded in-process queue, which restores the two guarantees the
+//! protocol needs from a transport: FIFO per directed link (TCP is
+//! ordered) and sends that cannot block indefinitely (the reader threads
+//! keep the kernel's socket buffers draining).  Determinism is untouched
+//! because the codec round-trips every `f64` bit-exactly and no RNG
+//! state ever crosses a message — a loopback-TCP cluster run is
+//! **bit-identical** to `bcm::Sequential` (asserted by
+//! `tests/tcp_cluster.rs`, which spawns real worker processes).
+//!
+//! # Failure mapping
+//!
+//! A lost leader connection surfaces on the worker as a transport error
+//! (the worker exits); a lost worker connection surfaces on the leader
+//! as a synthesized `Report::Error` naming the shard, feeding the
+//! existing fail-stop path; a lost peer connection surfaces on the
+//! blocked worker as a `Closed` error that its round loop converts into
+//! an `Error { round: Some(r), .. }` report — so disconnects name the
+//! round they killed, exactly like the in-process backend.  The full
+//! failure-mode table lives in DESIGN.md §6.
+
+use super::codec::{read_frame, write_frame, Init, WireMsg};
+use super::{LeaderTransport, TransportError, WorkerTransport};
+use crate::anyhow;
+use crate::balancer::PairAlgorithm;
+use crate::coordinator::messages::{Ctl, Report, ShardMsg};
+use crate::coordinator::shard::{RoundPlan, ShardPlan};
+use crate::coordinator::worker::ShardWorker;
+use crate::load::Load;
+use crate::util::error::{Context, Result};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How long handshake reads (Hello/Init/PeerHello) and mesh accepts may
+/// take before connection setup is declared failed.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Delay between worker connect retries (`--retry` attempts).
+const CONNECT_RETRY_DELAY: Duration = Duration::from_millis(250);
+
+/// Default number of connect attempts for workers and mesh dials.
+pub const DEFAULT_CONNECT_RETRIES: usize = 40;
+
+/// Dial `addr`, retrying on transient refusal so workers can start
+/// before the other side has bound its socket.  Permanent errors (bad
+/// address, permission) fail fast instead of burning the retry budget.
+fn connect_with_retry(addr: &str, retries: usize) -> io::Result<TcpStream> {
+    let attempts = retries.max(1);
+    let mut last: Option<io::Error> = None;
+    for i in 0..attempts {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => {
+                let transient = matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::ConnectionAborted
+                        | io::ErrorKind::TimedOut
+                );
+                if !transient {
+                    return Err(e);
+                }
+                last = Some(e);
+            }
+        }
+        if i + 1 < attempts {
+            std::thread::sleep(CONNECT_RETRY_DELAY);
+        }
+    }
+    Err(last.unwrap_or_else(|| io::Error::other("no connect attempts made")))
+}
+
+/// Accept one connection with a deadline (std's blocking `accept` has
+/// no timeout, so poll in non-blocking mode).
+fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Duration,
+    what: &str,
+) -> Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    let start = Instant::now();
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                listener.set_nonblocking(false)?;
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if start.elapsed() > deadline {
+                    return Err(anyhow!("timed out accepting {what}"));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow!("accepting {what}: {e}")),
+        }
+    }
+}
+
+/// Read one frame with a bounded wait (used only during handshakes;
+/// steady-state reads run on dedicated reader threads with no timeout).
+fn read_frame_timed(stream: &mut TcpStream, what: &str) -> Result<WireMsg> {
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let msg = read_frame(stream).with_context(|| format!("reading {what}"))?;
+    stream.set_read_timeout(None)?;
+    Ok(msg)
+}
+
+// ---------------------------------------------------------------- leader
+
+/// The leader's bound-but-not-yet-accepting socket.  Binding is split
+/// from accepting so callers can learn the ephemeral port (and hand it
+/// to worker processes) before [`Cluster::spawn_tcp`] blocks in the
+/// handshake.
+///
+/// [`Cluster::spawn_tcp`]: crate::coordinator::Cluster::spawn_tcp
+pub struct LeaderListener {
+    listener: TcpListener,
+}
+
+impl LeaderListener {
+    /// Bind the leader socket (e.g. `"127.0.0.1:0"` for an ephemeral
+    /// loopback port).
+    pub fn bind(addr: &str) -> Result<LeaderListener> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding leader socket {addr}"))?;
+        Ok(LeaderListener { listener })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+}
+
+/// Initial state shipped to one worker in its `Init` frame.
+pub struct InitPayload {
+    /// First node id of the worker's contiguous shard.
+    pub lo: usize,
+    /// Algorithm to run, as its canonical `PairAlgorithm::name()`.
+    pub algo: String,
+    /// The shard's initial per-node load lists, in node order.
+    pub nodes: Vec<Vec<Load>>,
+}
+
+/// The leader's TCP endpoint: one connected socket per worker plus the
+/// merged report queue fed by the per-socket reader threads.
+pub struct TcpLeader {
+    workers: Vec<TcpStream>,
+    report_rx: Receiver<Report>,
+}
+
+impl TcpLeader {
+    /// Accept `inits.len()` workers on `listener`, then complete the
+    /// handshake (collect `Hello`s, send `Init`s, start reader threads).
+    pub fn accept(listener: LeaderListener, inits: Vec<InitPayload>) -> Result<TcpLeader> {
+        let k = inits.len();
+        let mut conns = Vec::with_capacity(k);
+        for i in 0..k {
+            let stream = accept_with_deadline(
+                &listener.listener,
+                HANDSHAKE_TIMEOUT,
+                &format!("cluster worker {} of {k}", i + 1),
+            )?;
+            conns.push(stream);
+        }
+        Self::handshake(conns, inits)
+    }
+
+    /// Dial one listening worker per address (workers started with
+    /// `cluster-worker --listen`), then complete the handshake.  Worker
+    /// `i` of `addrs` becomes shard `i`.
+    pub fn connect(addrs: &[String], inits: Vec<InitPayload>) -> Result<TcpLeader> {
+        assert_eq!(addrs.len(), inits.len(), "one address per shard");
+        let mut conns = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
+                .with_context(|| format!("dialing cluster worker {addr}"))?;
+            conns.push(stream);
+        }
+        Self::handshake(conns, inits)
+    }
+
+    fn handshake(mut conns: Vec<TcpStream>, inits: Vec<InitPayload>) -> Result<TcpLeader> {
+        let k = conns.len();
+        // collect every worker's peer-mesh address
+        let mut peer_addrs = Vec::with_capacity(k);
+        for (i, stream) in conns.iter_mut().enumerate() {
+            match read_frame_timed(stream, &format!("Hello from worker {i}"))? {
+                WireMsg::Hello { peer_addr } => peer_addrs.push(peer_addr),
+                other => {
+                    return Err(anyhow!(
+                        "worker {i} handshake: expected Hello, got {other:?}"
+                    ))
+                }
+            }
+        }
+        // ship each worker its identity, initial nodes, and the mesh map
+        for (shard, (stream, init)) in conns.iter_mut().zip(inits).enumerate() {
+            let msg = WireMsg::Init(Init {
+                shard,
+                shards: k,
+                lo: init.lo,
+                algo: init.algo,
+                nodes: init.nodes,
+                peers: peer_addrs.clone(),
+            });
+            write_frame(stream, &msg)
+                .with_context(|| format!("sending Init to worker {shard}"))?;
+        }
+        // one reader thread per worker socket, all feeding one queue
+        let (report_tx, report_rx) = channel::<Report>();
+        for (shard, stream) in conns.iter().enumerate() {
+            let reader = stream.try_clone().context("cloning worker socket")?;
+            let tx = report_tx.clone();
+            std::thread::spawn(move || leader_reader(shard, reader, tx));
+        }
+        drop(report_tx);
+        Ok(TcpLeader {
+            workers: conns,
+            report_rx,
+        })
+    }
+}
+
+/// Decode report frames from one worker socket into the shared queue.
+/// A connection loss is synthesized into a `Report::Error` naming the
+/// shard, so a killed worker process trips the leader's fail-stop path
+/// instead of a bare timeout.  After forwarding a `Final` or an `Error`
+/// the worker is done by protocol, so the inevitable EOF that follows
+/// is *not* reported as a failure.
+fn leader_reader(shard: usize, mut stream: TcpStream, tx: Sender<Report>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(WireMsg::Report(report)) => {
+                let last = matches!(report, Report::Final { .. } | Report::Error { .. });
+                if tx.send(report).is_err() || last {
+                    return;
+                }
+            }
+            Ok(other) => {
+                let _ = tx.send(Report::Error {
+                    shard,
+                    round: None,
+                    message: format!("protocol violation: unexpected frame {other:?}"),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(Report::Error {
+                    shard,
+                    round: None,
+                    message: format!("worker connection lost: {e}"),
+                });
+                return;
+            }
+        }
+    }
+}
+
+impl LeaderTransport for TcpLeader {
+    fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn send_ctl(&mut self, shard: usize, msg: Ctl) -> Result<(), TransportError> {
+        // A worker only ever reads its own slice of each plan
+        // (`per_shard[shard]`), so strip the other shards' entries
+        // before serializing: leader egress stays O(plan bytes) per
+        // batch instead of O(k x plan bytes).  The local backend keeps
+        // the shared Arc table untouched (zero-copy anyway).
+        let msg = match msg {
+            Ctl::RunBatch {
+                start_round,
+                rounds,
+                seed,
+                plans,
+            } => {
+                let sliced: Vec<Arc<RoundPlan>> = plans
+                    .iter()
+                    .map(|p| {
+                        let mut per_shard = vec![ShardPlan::default(); p.per_shard.len()];
+                        per_shard[shard] = p.per_shard[shard].clone();
+                        Arc::new(RoundPlan {
+                            per_shard,
+                            cross_edges: p.cross_edges,
+                            edges: p.edges,
+                        })
+                    })
+                    .collect();
+                Ctl::RunBatch {
+                    start_round,
+                    rounds,
+                    seed,
+                    plans: Arc::new(sliced),
+                }
+            }
+            other => other,
+        };
+        write_frame(&mut self.workers[shard], &WireMsg::Ctl(msg)).map_err(|e| {
+            TransportError::Closed(format!("worker {shard} connection closed: {e}"))
+        })
+    }
+
+    fn recv_report(&mut self, wait: Duration) -> Result<Report, TransportError> {
+        match self.report_rx.recv_timeout(wait) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
+                "all cluster worker connections closed".to_string(),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- worker
+
+enum CtlEvent {
+    Msg(Box<Ctl>),
+    Gone(String),
+}
+
+enum PeerEvent {
+    Msg(ShardMsg),
+    Gone { peer: usize, reason: String },
+}
+
+/// A worker's TCP endpoint: the leader socket (reports out, control
+/// frames in via a reader thread) and one mesh socket per peer shard.
+pub struct TcpWorker {
+    shard: usize,
+    shards_total: usize,
+    leader: TcpStream,
+    ctl_rx: Receiver<CtlEvent>,
+    peers: Vec<Option<TcpStream>>,
+    peer_rx: Receiver<PeerEvent>,
+}
+
+impl WorkerTransport for TcpWorker {
+    fn shard(&self) -> usize {
+        self.shard
+    }
+
+    fn shards(&self) -> usize {
+        self.shards_total
+    }
+
+    fn recv_ctl(&mut self) -> Result<Ctl, TransportError> {
+        match self.ctl_rx.recv() {
+            Ok(CtlEvent::Msg(c)) => Ok(*c),
+            Ok(CtlEvent::Gone(reason)) => Err(TransportError::Closed(reason)),
+            Err(_) => Err(TransportError::Closed(
+                "leader connection closed".to_string(),
+            )),
+        }
+    }
+
+    fn send_report(&mut self, msg: Report) -> Result<(), TransportError> {
+        write_frame(&mut self.leader, &WireMsg::Report(msg))
+            .map_err(|e| TransportError::Closed(format!("leader connection closed: {e}")))
+    }
+
+    fn send_peer(&mut self, peer: usize, msg: ShardMsg) -> Result<(), TransportError> {
+        let stream = self.peers[peer]
+            .as_mut()
+            .ok_or_else(|| TransportError::Closed(format!("no mesh link to shard {peer}")))?;
+        write_frame(stream, &WireMsg::Peer(msg)).map_err(|e| {
+            TransportError::Closed(format!("peer shard {peer} connection closed: {e}"))
+        })
+    }
+
+    fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError> {
+        match self.peer_rx.recv_timeout(wait) {
+            Ok(PeerEvent::Msg(m)) => Ok(m),
+            Ok(PeerEvent::Gone { peer, reason }) => Err(TransportError::Closed(format!(
+                "peer shard {peer} disconnected: {reason}"
+            ))),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
+                "peer reader threads terminated".to_string(),
+            )),
+        }
+    }
+}
+
+/// Everything a worker process learned from its `Init` frame, needed to
+/// construct the [`ShardWorker`] around the transport.
+pub struct WorkerSeed {
+    /// Assigned shard index.
+    pub shard: usize,
+    /// Total shard count.
+    pub shards: usize,
+    /// First node id of the shard.
+    pub lo: usize,
+    /// Algorithm name (`PairAlgorithm::parse` spelling).
+    pub algo: String,
+    /// Initial per-node load lists.
+    pub nodes: Vec<Vec<Load>>,
+}
+
+/// Complete a worker's side of the handshake over an established leader
+/// connection: bind the peer listener, send `Hello`, await `Init`,
+/// build the mesh, and start the reader threads.
+fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
+    leader.set_nodelay(true).ok();
+    // the peer listener lives on whatever interface reaches the leader
+    let ip = leader.local_addr()?.ip();
+    let peer_listener =
+        TcpListener::bind((ip, 0)).context("binding the worker's peer-mesh listener")?;
+    let my_addr = peer_listener.local_addr()?.to_string();
+    write_frame(&mut leader, &WireMsg::Hello { peer_addr: my_addr })
+        .context("sending Hello to the leader")?;
+    let init = match read_frame_timed(&mut leader, "Init from the leader")? {
+        WireMsg::Init(init) => init,
+        other => return Err(anyhow!("handshake: expected Init, got {other:?}")),
+    };
+    let (me, k) = (init.shard, init.shards);
+    if me >= k || init.peers.len() != k {
+        return Err(anyhow!(
+            "handshake: inconsistent Init (shard {me} of {k}, {} peers)",
+            init.peers.len()
+        ));
+    }
+    // mesh: dial every lower shard, accept every higher one, so each
+    // unordered pair of shards shares exactly one socket
+    let mut peers: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+    for (p, addr) in init.peers.iter().enumerate().take(me) {
+        let mut stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
+            .with_context(|| format!("dialing peer shard {p} at {addr}"))?;
+        write_frame(&mut stream, &WireMsg::PeerHello { shard: me })
+            .with_context(|| format!("greeting peer shard {p}"))?;
+        peers[p] = Some(stream);
+    }
+    for _ in me + 1..k {
+        let mut stream =
+            accept_with_deadline(&peer_listener, HANDSHAKE_TIMEOUT, "a peer-mesh connection")?;
+        match read_frame_timed(&mut stream, "PeerHello")? {
+            WireMsg::PeerHello { shard } if shard < k && shard > me && peers[shard].is_none() => {
+                peers[shard] = Some(stream);
+            }
+            WireMsg::PeerHello { shard } => {
+                return Err(anyhow!("mesh: unexpected PeerHello from shard {shard}"))
+            }
+            other => return Err(anyhow!("mesh: expected PeerHello, got {other:?}")),
+        }
+    }
+    // reader threads: leader frames -> ctl queue, peer frames -> peer queue
+    let (ctl_tx, ctl_rx) = channel::<CtlEvent>();
+    let leader_reader_stream = leader.try_clone().context("cloning the leader socket")?;
+    std::thread::spawn(move || worker_ctl_reader(leader_reader_stream, ctl_tx));
+    let (peer_tx, peer_rx) = channel::<PeerEvent>();
+    for (p, slot) in peers.iter().enumerate() {
+        if let Some(stream) = slot {
+            let reader = stream.try_clone().context("cloning a peer socket")?;
+            let tx = peer_tx.clone();
+            std::thread::spawn(move || worker_peer_reader(p, reader, tx));
+        }
+    }
+    drop(peer_tx);
+    let transport = TcpWorker {
+        shard: me,
+        shards_total: k,
+        leader,
+        ctl_rx,
+        peers,
+        peer_rx,
+    };
+    let seed = WorkerSeed {
+        shard: init.shard,
+        shards: init.shards,
+        lo: init.lo,
+        algo: init.algo,
+        nodes: init.nodes,
+    };
+    Ok((transport, seed))
+}
+
+/// Decode control frames from the leader socket into the ctl queue.
+/// After forwarding `Shutdown` the connection's end-of-life EOF is
+/// expected and not reported.
+fn worker_ctl_reader(mut stream: TcpStream, tx: Sender<CtlEvent>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(WireMsg::Ctl(ctl)) => {
+                let last = matches!(ctl, Ctl::Shutdown);
+                if tx.send(CtlEvent::Msg(Box::new(ctl))).is_err() || last {
+                    return;
+                }
+            }
+            Ok(other) => {
+                let _ = tx.send(CtlEvent::Gone(format!(
+                    "protocol violation: unexpected frame from leader: {other:?}"
+                )));
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(CtlEvent::Gone(format!("leader connection lost: {e}")));
+                return;
+            }
+        }
+    }
+}
+
+/// Decode peer frames from one mesh socket into the peer queue; EOF or
+/// a decode failure becomes a `Gone` event naming the peer.
+fn worker_peer_reader(peer: usize, mut stream: TcpStream, tx: Sender<PeerEvent>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(WireMsg::Peer(msg)) => {
+                if tx.send(PeerEvent::Msg(msg)).is_err() {
+                    return;
+                }
+            }
+            Ok(other) => {
+                let _ = tx.send(PeerEvent::Gone {
+                    peer,
+                    reason: format!("protocol violation: unexpected frame {other:?}"),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(PeerEvent::Gone {
+                    peer,
+                    reason: e.to_string(),
+                });
+                return;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- worker process
+
+/// Serve one cluster run as a worker process, dialing the leader at
+/// `addr` (the `bcm-dlb cluster-worker --connect` entry point).
+/// Returns after the cluster shuts down.
+pub fn serve_connect(addr: &str, retries: usize) -> Result<()> {
+    let leader = connect_with_retry(addr, retries)
+        .with_context(|| format!("connecting to cluster leader {addr}"))?;
+    serve(leader)
+}
+
+/// Serve one cluster run as a worker process, listening on `addr` for
+/// the leader's dial-in (the `bcm-dlb cluster-worker --listen` entry
+/// point, paired with the leader's `peers` list).
+pub fn serve_listen(addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding worker socket {addr}"))?;
+    let leader = accept_with_deadline(&listener, HANDSHAKE_TIMEOUT, "the cluster leader")?;
+    serve(leader)
+}
+
+fn serve(leader: TcpStream) -> Result<()> {
+    let (transport, seed) = worker_handshake(leader)?;
+    let algo = PairAlgorithm::parse(&seed.algo)
+        .with_context(|| format!("leader sent unknown algorithm '{}'", seed.algo))?;
+    eprintln!(
+        "cluster-worker: shard {}/{} serving nodes {}..{}",
+        seed.shard,
+        seed.shards,
+        seed.lo,
+        seed.lo + seed.nodes.len()
+    );
+    let worker = ShardWorker {
+        shard: seed.shard,
+        lo: seed.lo,
+        nodes: seed.nodes,
+        algo,
+        transport: Box::new(transport),
+        fail_at_round: None,
+    };
+    // only a clean Ctl::Shutdown lifecycle exits 0 — scripts and
+    // orchestrators keyed on the exit code must see failures
+    worker
+        .run()
+        .map_err(|e| anyhow!("cluster-worker shard {} terminated abnormally: {e}", seed.shard))
+}

@@ -1,7 +1,8 @@
 //! A shard worker = one core owning a contiguous slice of processors.
 //!
-//! Owns its nodes' load lists exclusively; all interaction is via
-//! channels.  Intra-shard edges are solved locally through the same
+//! Owns its nodes' load lists exclusively; all interaction goes through
+//! its [`WorkerTransport`] (in-process channels or TCP sockets — the
+//! round loop cannot tell).  Intra-shard edges are solved locally through the same
 //! [`balance_pool`] primitive the engines use; for a cross-shard edge the
 //! owner of `u` is the edge master — the slave ships `v`'s mobile loads
 //! ([`ShardMsg::Offer`]), the master solves the two-bin problem and ships
@@ -17,8 +18,8 @@
 //! ships the whole per-color plan table with the batch).  The worker
 //! drives each round through three states:
 //!
-//! 1. **post-offers** — ship this round's slave offers; channel sends
-//!    never block, so no inter-shard ordering can deadlock.
+//! 1. **post-offers** — ship this round's slave offers; transport sends
+//!    never block indefinitely, so no inter-shard ordering can deadlock.
 //! 2. **solve-local** — balance the intra-shard edges while the offers
 //!    (and the settles coming back) are in flight.
 //! 3. **collect-settles** — serve master edges as offers arrive and
@@ -35,12 +36,12 @@
 
 use super::messages::{Ctl, Report, RoundReport, ShardMsg};
 use super::shard::{RoundPlan, ShardPlan};
+use super::transport::{TransportError, WorkerTransport};
 use crate::balancer::{balance_pool, PairAlgorithm, SortAlgo};
 use crate::load::Load;
 use crate::util::rng::Pcg64;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -79,6 +80,13 @@ impl WorkerAlgo {
 
 /// One coordinator worker owning the contiguous node range
 /// `lo..lo + nodes.len()`.
+///
+/// All communication — the leader's control/report plane and the peer
+/// data plane — goes through the worker's [`WorkerTransport`], so the
+/// same round loop runs unchanged whether the worker is a thread of the
+/// leader process (the [`local`](super::transport::local) backend) or a
+/// separate OS process speaking TCP
+/// ([`tcp`](super::transport::tcp)).
 pub struct ShardWorker {
     /// This worker's shard index.
     pub shard: usize,
@@ -88,15 +96,8 @@ pub struct ShardWorker {
     pub nodes: Vec<Vec<Load>>,
     /// Local balancing algorithm run on every matched edge.
     pub algo: PairAlgorithm,
-    /// Control channel from the leader.
-    pub ctl_rx: Receiver<Ctl>,
-    /// Inbound peer messages (offers for mastered edges, settles for
-    /// slaved edges), from any shard.
-    pub peer_rx: Receiver<ShardMsg>,
-    /// Outbound peer channels, indexed by shard.
-    pub peer_tx: Vec<Sender<ShardMsg>>,
-    /// Report channel to the leader.
-    pub report_tx: Sender<Report>,
+    /// The worker's communication endpoints (control, reports, peers).
+    pub transport: Box<dyn WorkerTransport>,
     /// Fault injection for tests: panic at the start of this global
     /// round, exercising the mid-batch failure contract.  Always `None`
     /// in production spawns.
@@ -135,8 +136,18 @@ impl<'a> ColorTask<'a> {
 impl ShardWorker {
     /// Event loop; returns when [`Ctl::Shutdown`] arrives, the leader
     /// goes away, or a failure is reported.
-    pub fn run(mut self) {
-        while let Ok(msg) = self.ctl_rx.recv() {
+    ///
+    /// `Ok(())` means a clean [`Ctl::Shutdown`] lifecycle; every other
+    /// exit returns the failure as `Err`, so a worker *process* can
+    /// translate abnormal termination into a nonzero exit code (thread
+    /// spawns ignore the value — the leader already learned of the
+    /// failure through the report channel).
+    pub fn run(mut self) -> Result<(), String> {
+        loop {
+            let msg = match self.transport.recv_ctl() {
+                Ok(m) => m,
+                Err(e) => return Err(format!("control link lost: {e}")),
+            };
             match msg {
                 Ctl::RunBatch {
                     start_round,
@@ -145,21 +156,21 @@ impl ShardWorker {
                     plans,
                 } => match self.run_batch(start_round, rounds, seed, &plans) {
                     Ok(reports) => {
-                        let sent = self.report_tx.send(Report::Batch {
+                        let sent = self.transport.send_report(Report::Batch {
                             shard: self.shard,
                             rounds: reports,
                         });
-                        if sent.is_err() {
-                            return;
+                        if let Err(e) = sent {
+                            return Err(format!("report link lost: {e}"));
                         }
                     }
                     Err((round, message)) => {
-                        let _ = self.report_tx.send(Report::Error {
+                        let _ = self.transport.send_report(Report::Error {
                             shard: self.shard,
                             round: Some(round),
-                            message,
+                            message: message.clone(),
                         });
-                        return;
+                        return Err(format!("failed at round {round}: {message}"));
                     }
                 },
                 Ctl::PollWeights => {
@@ -168,20 +179,20 @@ impl ShardWorker {
                         .iter()
                         .map(|node| node.iter().map(|l| l.weight).sum())
                         .collect();
-                    let sent = self.report_tx.send(Report::Weights {
+                    let sent = self.transport.send_report(Report::Weights {
                         shard: self.shard,
                         weights,
                     });
-                    if sent.is_err() {
-                        return;
+                    if let Err(e) = sent {
+                        return Err(format!("report link lost: {e}"));
                     }
                 }
                 Ctl::Shutdown => {
-                    let _ = self.report_tx.send(Report::Final {
+                    let _ = self.transport.send_report(Report::Final {
                         shard: self.shard,
                         nodes: std::mem::take(&mut self.nodes),
                     });
-                    return;
+                    return Ok(());
                 }
             }
         }
@@ -253,21 +264,22 @@ impl ShardWorker {
             panic!("injected fault at round {round}");
         }
         let mut peer_msgs = 0usize;
-        // State 1 — post offers.  Channel sends never block, so no
-        // ordering between shards can deadlock.
+        // State 1 — post offers.  Transport sends never block
+        // indefinitely (unbounded queues; socket buffers drained by
+        // reader threads), so no ordering between shards can deadlock.
         for &(edge, v, master) in &task.plan.slave {
             let (mobile, pinned) = drain_mobile(&mut self.nodes[v as usize - self.lo]);
             peer_msgs += 1;
-            if self.peer_tx[master]
-                .send(ShardMsg::Offer {
-                    round,
-                    edge,
-                    loads: mobile,
-                    pinned,
-                })
-                .is_err()
-            {
-                return Err(format!("peer shard {master} unreachable (offer, edge {edge})"));
+            let offer = ShardMsg::Offer {
+                round,
+                edge,
+                loads: mobile,
+                pinned,
+            };
+            if let Err(e) = self.transport.send_peer(master, offer) {
+                return Err(format!(
+                    "peer shard {master} unreachable (offer, edge {edge}): {e}"
+                ));
             }
         }
         // State 2 — solve intra-shard edges while the cross-shard
@@ -286,16 +298,16 @@ impl ShardWorker {
         while pending_masters > 0 || pending_slaves > 0 {
             let msg = match take_stashed(stash, round) {
                 Some(m) => m,
-                None => match self.peer_rx.recv_timeout(wait) {
+                None => match self.transport.recv_peer(wait) {
                     Ok(m) => m,
-                    Err(RecvTimeoutError::Timeout) => {
+                    Err(TransportError::Timeout) => {
                         return Err(format!(
                             "timed out waiting for peer messages \
                              ({pending_masters} offers, {pending_slaves} settles outstanding)"
                         ))
                     }
-                    Err(RecvTimeoutError::Disconnected) => {
-                        return Err("peer channels closed mid-round".to_string())
+                    Err(TransportError::Closed(why)) => {
+                        return Err(format!("peer channels closed mid-round: {why}"))
                     }
                 },
             };
@@ -387,13 +399,14 @@ impl ShardWorker {
             .collect();
         let out = balance_pool(pool, [u_pinned, their_pinned], self.algo, rng);
         u_node.extend(out.to_u);
-        self.peer_tx[slave]
-            .send(ShardMsg::Settle {
-                round,
-                edge,
-                loads: out.to_v,
-            })
-            .map_err(|_| format!("peer shard {slave} unreachable (settle, edge {edge})"))?;
+        let settle = ShardMsg::Settle {
+            round,
+            edge,
+            loads: out.to_v,
+        };
+        self.transport
+            .send_peer(slave, settle)
+            .map_err(|e| format!("peer shard {slave} unreachable (settle, edge {edge}): {e}"))?;
         Ok(out.movements)
     }
 

@@ -212,6 +212,98 @@ pub fn run_scaling(
     })
 }
 
+/// One L/n point of a roofline sweep: the per-node load count and the
+/// full scaling report measured at it.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    /// Loads per node (the L/n axis of the roofline).
+    pub loads_per_node: usize,
+    /// The (sequential, thread ladder, shard x batch ladder) report at
+    /// this L/n.
+    pub report: ScalingReport,
+}
+
+/// Run the full scaling ladder at every L/n of `loads_ladder` — the E11
+/// roofline sweep, one command for the whole (workers x L/n) surface.
+/// Every point is held to the usual bit-identity bar.
+#[allow(clippy::too_many_arguments)]
+pub fn run_roofline(
+    topology: &Topology,
+    n: usize,
+    loads_ladder: &[usize],
+    sweeps: usize,
+    seed: u64,
+    thread_counts: &[usize],
+    shard_counts: &[usize],
+    batch_counts: &[usize],
+) -> Result<Vec<RooflinePoint>> {
+    loads_ladder
+        .iter()
+        .map(|&loads_per_node| {
+            Ok(RooflinePoint {
+                loads_per_node,
+                report: run_scaling(
+                    topology,
+                    n,
+                    loads_per_node,
+                    sweeps,
+                    seed,
+                    thread_counts,
+                    shard_counts,
+                    batch_counts,
+                )?,
+            })
+        })
+        .collect()
+}
+
+/// Render a roofline sweep as one combined table: a row per
+/// engine/worker/batch configuration, an `eps@L<loads>` throughput
+/// (edges/s) column per L/n point.  All points share the same ladders,
+/// so rows line up across columns by construction.
+pub fn roofline_table(points: &[RooflinePoint]) -> Table {
+    assert!(!points.is_empty(), "roofline needs at least one L/n point");
+    let first = &points[0].report;
+    let mut headers: Vec<String> =
+        vec!["engine".to_string(), "workers".to_string(), "batch".to_string()];
+    for p in points {
+        headers.push(format!("eps@L{}", p.loads_per_node));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new(
+        &format!(
+            "E11 roofline: {} n={} — edges/s across workers x L/n ({} points)",
+            first.scenario, first.n, points.len()
+        ),
+        &header_refs,
+    );
+    let eps = |r: &ScalingReport, secs: f64| f(r.edges_balanced as f64 / secs.max(1e-12), 0);
+    let mut row = vec!["sequential".to_string(), "1".to_string(), "-".to_string()];
+    for p in points {
+        row.push(eps(&p.report, p.report.seq_secs));
+    }
+    t.row(row);
+    for (i, m) in first.rows.iter().enumerate() {
+        let mut row = vec!["parallel".to_string(), m.threads.to_string(), "-".to_string()];
+        for p in points {
+            row.push(eps(&p.report, p.report.rows[i].secs));
+        }
+        t.row(row);
+    }
+    for (i, m) in first.cluster_rows.iter().enumerate() {
+        let mut row = vec![
+            "cluster".to_string(),
+            m.shards.to_string(),
+            m.batch.to_string(),
+        ];
+        for p in points {
+            row.push(eps(&p.report, p.report.cluster_rows[i].secs));
+        }
+        t.row(row);
+    }
+    t
+}
+
 /// Render a report in the shared table format (and for CSV export): one
 /// row per engine/worker-count point, with throughput (edges/s) as the
 /// roofline axis.
@@ -305,6 +397,22 @@ mod tests {
         let names: Vec<&str> = scenarios.iter().map(|s| s.name).collect();
         assert!(names.contains(&"hypercube-4096"));
         assert!(names.contains(&"regular8-4096"));
+    }
+
+    #[test]
+    fn roofline_sweep_combines_ln_points() {
+        let points =
+            run_roofline(&Topology::Ring, 16, &[4, 8], 1, 3, &[2], &[2], &[1]).unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].loads_per_node, 4);
+        assert_eq!(points[1].loads_per_node, 8);
+        assert!(points.iter().all(|p| p.report.all_identical()));
+        let t = roofline_table(&points);
+        assert_eq!(t.rows.len(), 3); // sequential + 1 thread + 1 (shard, batch)
+        let s = t.render();
+        assert!(s.contains("eps@L4"));
+        assert!(s.contains("eps@L8"));
+        assert!(s.contains("roofline"));
     }
 
     #[test]

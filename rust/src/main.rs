@@ -7,6 +7,8 @@ use bcm_dlb::balancer::PairAlgorithm;
 use bcm_dlb::bcm::{run_device, Engine, Parallel, Schedule, Sequential, StopRule};
 use bcm_dlb::cli::{Args, USAGE};
 use bcm_dlb::config::ExperimentConfig;
+use bcm_dlb::coordinator::transport::tcp::{self, LeaderListener, DEFAULT_CONNECT_RETRIES};
+use bcm_dlb::coordinator::transport::TransportKind;
 use bcm_dlb::coordinator::Cluster;
 use bcm_dlb::experiments::{figures, scaling, validate, SweepParams};
 use bcm_dlb::graph::{round_matrix, spectral, Topology};
@@ -46,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(args),
+        "cluster-worker" => cmd_cluster_worker(args),
         "scale" => cmd_scale(args),
         "sweep" => cmd_sweep(args),
         "fig1" | "fig2" | "fig3" | "fig4" | "fig5" => cmd_fig(args),
@@ -91,7 +94,37 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.batch_rounds = args
         .get_usize("batch-rounds", cfg.batch_rounds)
         .map_err(|e| anyhow!(e))?;
+    if let Some(t) = args.get("transport") {
+        cfg.transport =
+            TransportKind::parse(t).ok_or_else(|| anyhow!("bad --transport '{t}'"))?;
+    }
+    if let Some(l) = args.get("listen") {
+        cfg.listen = l.to_string();
+    }
+    if let Some(p) = args.get("peers") {
+        cfg.peers = p
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
     Ok(cfg)
+}
+
+/// `bcm-dlb cluster-worker`: serve one shard of a TCP cluster, either
+/// dialing the leader (`--connect`) or awaiting its dial-in
+/// (`--listen`).
+fn cmd_cluster_worker(args: &Args) -> Result<()> {
+    let retries = args
+        .get_usize("retry", DEFAULT_CONNECT_RETRIES)
+        .map_err(|e| anyhow!(e))?;
+    match (args.get("connect"), args.get("listen")) {
+        (Some(addr), None) => tcp::serve_connect(addr, retries),
+        (None, Some(addr)) => tcp::serve_listen(addr),
+        _ => Err(anyhow!(
+            "cluster-worker needs exactly one of --connect or --listen\n\n{USAGE}"
+        )),
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -122,7 +155,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
         );
     }
-    for rep in 0..cfg.reps {
+    let tcp_cluster = cfg.transport == TransportKind::Tcp;
+    if tcp_cluster && !use_cluster {
+        return Err(anyhow!("--transport tcp requires --cluster"));
+    }
+    if tcp_cluster && cfg.reps > 1 {
+        // worker processes serve exactly one cluster lifecycle
+        eprintln!(
+            "warning: --transport tcp runs a single repetition (requested reps {})",
+            cfg.reps
+        );
+    }
+    let reps = if tcp_cluster { 1 } else { cfg.reps };
+    for rep in 0..reps {
         let mut rng = Pcg64::new(cfg.seed.wrapping_add(rep as u64));
         let g = cfg.topology.build(cfg.n, &mut rng);
         let schedule = Schedule::from_graph(&g);
@@ -136,12 +181,54 @@ fn cmd_run(args: &Args) -> Result<()> {
         let trace = if use_cluster {
             // Seeded like the engines and running the exact configured
             // algorithm, so a cluster run reproduces the sequential /
-            // parallel result bit-exactly for any --shards and any
-            // --batch-rounds.
-            let mut cluster = Cluster::spawn_with_algorithm(state, cfg.algorithm, cfg.shards);
+            // parallel result bit-exactly for any --shards, any
+            // --batch-rounds, and either transport backend.
+            let verify_src = if args.has("verify") {
+                Some(state.clone())
+            } else {
+                None
+            };
+            let mut cluster = match cfg.transport {
+                TransportKind::Local => {
+                    Cluster::spawn_with_algorithm(state, cfg.algorithm, cfg.shards)
+                }
+                TransportKind::Tcp if !cfg.peers.is_empty() => {
+                    Cluster::spawn_tcp_connect(state, cfg.algorithm, &cfg.peers)?
+                }
+                TransportKind::Tcp => {
+                    let listener = LeaderListener::bind(&cfg.listen)?;
+                    println!(
+                        "tcp leader listening on {} for {} cluster-worker processes",
+                        listener.local_addr()?,
+                        cfg.shards
+                    );
+                    Cluster::spawn_tcp(state, cfg.algorithm, cfg.shards, listener)?
+                }
+            };
             cluster.set_batch_rounds(cfg.batch_rounds);
-            let t = cluster.run_seeded(&schedule, cfg.sweeps, cfg.seed.wrapping_add(rep as u64))?;
-            cluster.shutdown()?;
+            let seed = cfg.seed.wrapping_add(rep as u64);
+            let t = cluster.run_seeded(&schedule, cfg.sweeps, seed)?;
+            let final_state = cluster.shutdown()?;
+            if let Some(initial) = verify_src {
+                let mut seq_state = initial;
+                let seq_trace = Sequential.run(
+                    &mut seq_state,
+                    &schedule,
+                    cfg.algorithm,
+                    StopRule::sweeps(cfg.sweeps),
+                    seed,
+                );
+                if seq_trace != t || seq_state != final_state {
+                    return Err(anyhow!(
+                        "cluster run diverged from the sequential reference"
+                    ));
+                }
+                println!(
+                    "verified: cluster trace and final state bit-identical to Sequential \
+                     ({} transport)",
+                    cfg.transport.name()
+                );
+            }
             t
         } else if let Some(rt) = runtime.as_mut() {
             let algo = match cfg.algorithm {
@@ -213,7 +300,22 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 4096).map_err(|e| anyhow!(e))?;
     let topo = Topology::parse(args.get("topology").unwrap_or("torus2d"))
         .ok_or_else(|| anyhow!("bad --topology"))?;
-    let loads = args.get_usize("loads", 20).map_err(|e| anyhow!(e))?;
+    // --loads accepts a comma-separated L/n ladder; a single value keeps
+    // the classic one-table output, more values add the combined
+    // (workers x L/n) roofline table.
+    let loads_ladder: Vec<usize> = args
+        .get("loads")
+        .unwrap_or("20")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--loads expects integers, got '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    if loads_ladder.is_empty() {
+        return Err(anyhow!("--loads ladder is empty"));
+    }
     let sweeps = args.get_usize("sweeps", 2).map_err(|e| anyhow!(e))?;
     let seed = args.get_u64("seed", 2013).map_err(|e| anyhow!(e))?;
     let threads: Vec<usize> = match args.get("threads") {
@@ -228,15 +330,35 @@ fn cmd_scale(args: &Args) -> Result<()> {
         Some(_) => vec![args.get_usize("batch-rounds", 0).map_err(|e| anyhow!(e))?],
         None => vec![1, 4, 16], // batch ladder (rounds per Ctl message)
     };
-    let report = scaling::run_scaling(&topo, n, loads, sweeps, seed, &threads, &shards, &batches)?;
-    let t = scaling::scaling_table(&report);
-    println!("{}", t.render());
-    t.write_csv(Path::new("results/e11_scaling.csv")).ok();
-    if report.all_identical() {
+    let points =
+        scaling::run_roofline(&topo, n, &loads_ladder, sweeps, seed, &threads, &shards, &batches)?;
+    for p in &points {
+        let t = scaling::scaling_table(&p.report);
+        println!("{}", t.render());
+        // one classic CSV per L/n point (the single-value invocation
+        // keeps the historical path)
+        let path = if points.len() == 1 {
+            "results/e11_scaling.csv".to_string()
+        } else {
+            format!("results/e11_scaling_L{}.csv", p.loads_per_node)
+        };
+        if t.write_csv(Path::new(&path)).is_ok() {
+            println!("scaling table for L/n={} written to {path}", p.loads_per_node);
+        }
+    }
+    if points.len() > 1 {
+        let t = scaling::roofline_table(&points);
+        println!("{}", t.render());
+        t.write_csv(Path::new("results/e11_roofline.csv")).ok();
+    }
+    let best = points
+        .iter()
+        .map(|p| p.report.best_speedup())
+        .fold(0.0f64, f64::max);
+    if points.iter().all(|p| p.report.all_identical()) {
         println!(
             "parallel engine and sharded cluster trace-identical to sequential; \
-             best speedup {:.2}x",
-            report.best_speedup()
+             best speedup {best:.2}x"
         );
         Ok(())
     } else {

@@ -139,6 +139,33 @@ fn scale_with_batch_ladder_pinned() {
 }
 
 #[test]
+fn cluster_worker_requires_an_endpoint() {
+    let (code, _, stderr) = run_cli(&["cluster-worker"]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("--connect or --listen"), "stderr: {stderr}");
+}
+
+#[test]
+fn tcp_transport_requires_cluster() {
+    let (code, _, stderr) = run_cli(&["run", "--n", "8", "--transport", "tcp"]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("requires --cluster"), "stderr: {stderr}");
+}
+
+#[test]
+fn scale_loads_ladder_emits_roofline() {
+    let (code, stdout, stderr) = run_cli(&[
+        "scale", "--n", "16", "--topology", "ring", "--loads", "4,8", "--sweeps", "1",
+        "--threads", "2", "--shards", "2", "--batch-rounds", "1",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("roofline"), "no roofline table: {stdout}");
+    assert!(stdout.contains("eps@L4"));
+    assert!(stdout.contains("eps@L8"));
+    assert!(stdout.contains("trace-identical"));
+}
+
+#[test]
 fn spectral_command() {
     let (code, stdout, _) = run_cli(&["spectral", "--topology", "ring", "--n", "8"]);
     assert_eq!(code, 0);

@@ -1,0 +1,88 @@
+//! Device-vs-parallel differential test, compiled only with the `pjrt`
+//! cargo feature (`cargo test --features pjrt`).
+//!
+//! With the vendored `vendor/xla` API stub, `Runtime::new` fails by
+//! design and the device path runs through the bit-equivalent pure-Rust
+//! fallback; with a real `xla` checkout in its place the same test
+//! exercises actual PJRT execution.  Either way the device engine and
+//! the deterministic parallel engine must agree on everything the
+//! protocol conserves: load identity, total mass, per-round edge
+//! counts, and the contraction of the discrepancy (the two engines use
+//! different RNG models — shared stream vs counter-based — so the
+//! comparison is structural/statistical, not bit-exact; bit-exactness
+//! across *engines* is covered by `property_invariants.rs`).
+
+#![cfg(feature = "pjrt")]
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{run_device, Engine, Parallel, Schedule, StopRule};
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::runtime::{default_artifacts_dir, DeviceAlgo, Runtime};
+use bcm_dlb::util::rng::Pcg64;
+
+#[test]
+fn device_vs_parallel_differential() {
+    let n = 24;
+    let sweeps = 8;
+    let seed = 9u64;
+    let mut rng = Pcg64::new(seed);
+    let g = Graph::random_connected(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state0 = LoadState::init_uniform_counts(
+        n,
+        30,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let init_disc = state0.discrepancy();
+
+    // Device path: a real PJRT runtime when one is available (real xla
+    // vendored + artifacts built), else the bit-equivalent fallback.
+    let mut rt = Runtime::new(&default_artifacts_dir()).ok();
+    let mut dev_state = state0.clone();
+    let mut dev_rng = Pcg64::new(seed ^ 0xD0D0);
+    let dev_trace = run_device(
+        &mut dev_state,
+        &schedule,
+        DeviceAlgo::SortedGreedy,
+        sweeps,
+        rt.as_mut(),
+        &mut dev_rng,
+    )
+    .expect("device/fallback run failed");
+
+    // Parallel engine on the same initial state.
+    let mut par_state = state0.clone();
+    let par_trace = Parallel::new(2).run(
+        &mut par_state,
+        &schedule,
+        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        StopRule::sweeps(sweeps),
+        seed,
+    );
+
+    // Conservation: identical load populations and total mass.
+    assert_eq!(dev_state.all_ids(), par_state.all_ids());
+    assert!((dev_state.total_weight() - par_state.total_weight()).abs() < 1e-6);
+
+    // Structure: same rounds, same per-round matching sizes.
+    assert_eq!(dev_trace.rounds.len(), par_trace.rounds.len());
+    for (d, p) in dev_trace.rounds.iter().zip(&par_trace.rounds) {
+        assert_eq!(d.edges, p.edges, "matching size diverged at round {}", d.round);
+        assert_eq!(d.color, p.color, "schedule color diverged at round {}", d.round);
+    }
+
+    // Effectiveness: both engines contract the initial discrepancy by a
+    // wide margin (SortedGreedy/full mobility reaches near-l_max), and
+    // land within a small factor of each other.
+    let (df, pf) = (dev_trace.final_discrepancy(), par_trace.final_discrepancy());
+    assert!(df < init_disc / 4.0, "device engine barely balanced: {df} vs {init_disc}");
+    assert!(pf < init_disc / 4.0, "parallel engine barely balanced: {pf} vs {init_disc}");
+    let ratio = (df.max(1e-9)) / (pf.max(1e-9));
+    assert!(
+        (0.2..=5.0).contains(&ratio),
+        "device ({df}) and parallel ({pf}) engines disagree beyond tolerance"
+    );
+}

@@ -1,0 +1,109 @@
+//! Loopback-TCP multi-process cluster tests: the leader runs in this
+//! test process, the shard workers are real `bcm-dlb cluster-worker`
+//! OS processes on 127.0.0.1 — and the result must be bit-identical to
+//! `bcm::Sequential`, at lock-step batching and with the pipeline on.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Engine, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::transport::tcp::LeaderListener;
+use bcm_dlb::coordinator::Cluster;
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use std::process::{Child, Command, Stdio};
+
+const ALGO: PairAlgorithm = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+
+fn init_scenario(n: usize, per_node: usize, seed: u64) -> (LoadState, Schedule) {
+    let mut rng = Pcg64::new(seed);
+    let g = Graph::random_connected(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::init_uniform_counts(
+        n,
+        per_node,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    // a couple of pinned loads so partial mobility crosses the wire too
+    state.push(0, Load::pinned(90_000, 17.5));
+    state.push(n / 2, Load::pinned(90_001, 3.25));
+    (state, schedule)
+}
+
+/// Spawn `k` worker processes dialing the leader at `addr`.
+fn spawn_workers(addr: &str, k: usize) -> Vec<Child> {
+    (0..k)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_bcm-dlb"))
+                .args(["cluster-worker", "--connect", addr, "--retry", "40"])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a cluster-worker process")
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_cluster_processes_bit_identical_to_sequential() {
+    let (state0, schedule) = init_scenario(24, 10, 41);
+    let sweeps = 4;
+    let seed = 77u64;
+    let mut seq_state = state0.clone();
+    let seq_trace = Sequential.run(
+        &mut seq_state,
+        &schedule,
+        ALGO,
+        StopRule::sweeps(sweeps),
+        seed,
+    );
+    // batch-rounds 1 (lock-step), 0 (auto), and 3 (pipelining inside
+    // batches); each lifecycle gets fresh worker processes
+    for batch in [1usize, 0, 3] {
+        let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let mut workers = spawn_workers(&addr, 2);
+        let mut cluster =
+            Cluster::spawn_tcp(state0.clone(), ALGO, 2, listener).expect("tcp spawn");
+        assert_eq!(cluster.shards(), 2);
+        cluster.set_batch_rounds(batch);
+        let trace = cluster.run_seeded(&schedule, sweeps, seed).expect("tcp run");
+        let fin = cluster.shutdown().expect("tcp shutdown");
+        assert_eq!(trace, seq_trace, "TCP trace diverged at batch {batch}");
+        assert_eq!(fin, seq_state, "TCP state diverged at batch {batch}");
+        // pinned loads made the round trip without moving hosts
+        assert!(fin.node(0).iter().any(|l| l.id == 90_000 && !l.mobile));
+        for w in &mut workers {
+            let status = w.wait().expect("waiting for worker");
+            assert!(status.success(), "worker exited nonzero at batch {batch}");
+        }
+    }
+}
+
+#[test]
+fn tcp_cluster_fail_stops_when_a_worker_process_dies() {
+    let (state0, schedule) = init_scenario(16, 6, 5);
+    let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let mut workers = spawn_workers(&addr, 2);
+    let mut cluster = Cluster::spawn_tcp(state0, ALGO, 2, listener).expect("tcp spawn");
+    // kill one worker after the handshake; the next batch must surface
+    // an error quickly (EOF-driven, not timeout-driven) and poison the
+    // cluster
+    workers[0].kill().expect("killing worker 0");
+    workers[0].wait().expect("reaping worker 0");
+    let err = cluster
+        .run_seeded(&schedule, 2, 9)
+        .expect_err("run against a dead worker succeeded")
+        .to_string();
+    assert!(
+        err.contains("lost") || err.contains("disconnect") || err.contains("closed"),
+        "error does not mention the lost connection: {err}"
+    );
+    // fail-stop: poisoned for further rounds, and shutdown re-surfaces
+    assert!(cluster.run_seeded(&schedule, 1, 9).is_err());
+    assert!(cluster.shutdown().is_err());
+    // the surviving worker exits once the leader closes its sockets
+    let _ = workers[1].wait();
+}

@@ -1,0 +1,261 @@
+//! Codec property tests: round-trip fuzz over randomly generated
+//! `Ctl`/`ShardMsg`/`Report` values (hand-rolled generators driven by
+//! the crate's own deterministic RNG, proptest-style) plus rejection
+//! tests for truncated, corrupted, and mis-versioned frames.
+
+use bcm_dlb::coordinator::messages::{Ctl, Report, RoundReport, ShardMsg};
+use bcm_dlb::coordinator::shard::{RoundPlan, ShardMap};
+use bcm_dlb::coordinator::transport::codec::{
+    crc32, decode_frame, encode_frame, CodecError, Init, WireMsg, HEADER_LEN,
+};
+use bcm_dlb::load::Load;
+use bcm_dlb::util::rng::Pcg64;
+use std::sync::Arc;
+
+// ------------------------------------------------------------ generators
+
+/// A weight palette mixing ordinary values with exact-representation
+/// edge cases; bit-exact round-tripping over the wire is part of the
+/// determinism contract.
+fn gen_weight(rng: &mut Pcg64) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => 1e300,
+        3 => 1e-300,
+        4 => f64::MIN_POSITIVE,
+        5 => -rng.uniform(0.0, 100.0),
+        _ => rng.uniform(0.0, 1000.0),
+    }
+}
+
+fn gen_load(rng: &mut Pcg64) -> Load {
+    Load {
+        id: rng.next_u64(),
+        weight: gen_weight(rng),
+        mobile: rng.coin(),
+    }
+}
+
+fn gen_loads(rng: &mut Pcg64) -> Vec<Load> {
+    (0..rng.below(6)).map(|_| gen_load(rng)).collect()
+}
+
+fn gen_string(rng: &mut Pcg64) -> String {
+    let palette = ["", "worker panicked: injected fault", "127.0.0.1:7411", "κόσμος"];
+    palette[rng.below(palette.len())].to_string()
+}
+
+/// A random matching over `n` nodes classified against a random shard
+/// map — the payload of a `RunBatch` plan table.
+fn gen_plan(rng: &mut Pcg64) -> RoundPlan {
+    let n = 2 + rng.below(30);
+    let shards = 1 + rng.below(4);
+    let map = ShardMap::new(n, shards);
+    let mut nodes: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut nodes);
+    let edges = rng.below(n / 2 + 1);
+    let pairs: Vec<(u32, u32)> = (0..edges)
+        .map(|e| (nodes[2 * e], nodes[2 * e + 1]))
+        .collect();
+    RoundPlan::build(&pairs, &map)
+}
+
+fn gen_ctl(rng: &mut Pcg64, variant: usize) -> Ctl {
+    match variant % 3 {
+        0 => {
+            let d = 1 + rng.below(4);
+            let plans: Vec<Arc<RoundPlan>> = (0..d).map(|_| Arc::new(gen_plan(rng))).collect();
+            Ctl::RunBatch {
+                start_round: rng.below(1 << 20),
+                rounds: 1 + rng.below(64),
+                seed: rng.next_u64(),
+                plans: Arc::new(plans),
+            }
+        }
+        1 => Ctl::PollWeights,
+        _ => Ctl::Shutdown,
+    }
+}
+
+fn gen_peer(rng: &mut Pcg64, variant: usize) -> ShardMsg {
+    match variant % 2 {
+        0 => ShardMsg::Offer {
+            round: rng.below(1 << 16),
+            edge: rng.below(1 << 16),
+            loads: gen_loads(rng),
+            pinned: gen_weight(rng),
+        },
+        _ => ShardMsg::Settle {
+            round: rng.below(1 << 16),
+            edge: rng.below(1 << 16),
+            loads: gen_loads(rng),
+        },
+    }
+}
+
+fn gen_report(rng: &mut Pcg64, variant: usize) -> Report {
+    match variant % 4 {
+        0 => Report::Batch {
+            shard: rng.below(16),
+            rounds: (0..rng.below(8))
+                .map(|i| RoundReport {
+                    round: i,
+                    movements: rng.below(1000),
+                    min_weight: gen_weight(rng),
+                    max_weight: gen_weight(rng),
+                    peer_msgs: rng.below(64),
+                })
+                .collect(),
+        },
+        1 => Report::Weights {
+            shard: rng.below(16),
+            weights: (0..rng.below(20)).map(|_| gen_weight(rng)).collect(),
+        },
+        2 => Report::Final {
+            shard: rng.below(16),
+            nodes: (0..rng.below(10)).map(|_| gen_loads(rng)).collect(),
+        },
+        _ => Report::Error {
+            shard: rng.below(16),
+            round: if rng.coin() { Some(rng.below(1 << 16)) } else { None },
+            message: gen_string(rng),
+        },
+    }
+}
+
+fn gen_wire(rng: &mut Pcg64, variant: usize) -> WireMsg {
+    // cycle deterministically through the four families so every
+    // variant of every enum is fuzzed
+    match variant % 4 {
+        0 => WireMsg::Ctl(gen_ctl(rng, variant / 4)),
+        1 => WireMsg::Peer(gen_peer(rng, variant / 4)),
+        2 => WireMsg::Report(gen_report(rng, variant / 4)),
+        _ => match (variant / 4) % 3 {
+            0 => WireMsg::Hello {
+                peer_addr: gen_string(rng),
+            },
+            1 => WireMsg::PeerHello {
+                shard: rng.below(16),
+            },
+            _ => WireMsg::Init(Init {
+                shard: rng.below(8),
+                shards: 1 + rng.below(8),
+                lo: rng.below(1 << 16),
+                algo: "sorted:quick".to_string(),
+                nodes: (0..rng.below(12)).map(|_| gen_loads(rng)).collect(),
+                peers: (0..rng.below(5)).map(|_| gen_string(rng)).collect(),
+            }),
+        },
+    }
+}
+
+// ---------------------------------------------------------------- tests
+
+#[test]
+fn prop_every_message_roundtrips_bit_exactly() {
+    let mut rng = Pcg64::new(0xC0DEC);
+    for variant in 0..400 {
+        let msg = gen_wire(&mut rng, variant);
+        let frame = encode_frame(&msg);
+        let (back, used) = decode_frame(&frame)
+            .unwrap_or_else(|e| panic!("decode failed ({e:?}) for {msg:?}"));
+        assert_eq!(used, frame.len(), "partial consume for {msg:?}");
+        assert_eq!(back, msg, "round-trip changed the message");
+    }
+}
+
+#[test]
+fn prop_truncated_frames_are_rejected_never_panic() {
+    let mut rng = Pcg64::new(0x7A11);
+    for variant in 0..40 {
+        let msg = gen_wire(&mut rng, variant);
+        let frame = encode_frame(&msg);
+        // every strict prefix must fail cleanly with Truncated
+        let cuts: Vec<usize> = if frame.len() <= 64 {
+            (0..frame.len()).collect()
+        } else {
+            vec![0, 1, HEADER_LEN - 1, HEADER_LEN, frame.len() / 2, frame.len() - 1]
+        };
+        for cut in cuts {
+            assert_eq!(
+                decode_frame(&frame[..cut]).unwrap_err(),
+                CodecError::Truncated,
+                "cut {cut} of {} for {msg:?}",
+                frame.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_payload_corruption_is_detected() {
+    let mut rng = Pcg64::new(0xBADC);
+    for variant in 0..60 {
+        let msg = gen_wire(&mut rng, variant);
+        let frame = encode_frame(&msg);
+        if frame.len() == HEADER_LEN {
+            continue; // no payload bytes to corrupt
+        }
+        let at = HEADER_LEN + rng.below(frame.len() - HEADER_LEN);
+        let mut bad = frame.clone();
+        bad[at] ^= 1 << rng.below(8);
+        if bad[at] == frame[at] {
+            continue;
+        }
+        assert_eq!(
+            decode_frame(&bad).unwrap_err(),
+            CodecError::BadChecksum,
+            "flip at {at} for {msg:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_version_skew_and_bad_kind_are_rejected() {
+    let mut rng = Pcg64::new(0x5EED);
+    for variant in 0..24 {
+        let msg = gen_wire(&mut rng, variant);
+        let frame = encode_frame(&msg);
+
+        let mut skew = frame.clone();
+        skew[4] = skew[4].wrapping_add(1); // version low byte
+        match decode_frame(&skew).unwrap_err() {
+            CodecError::BadVersion(_) => {}
+            other => panic!("version skew surfaced as {other:?}"),
+        }
+
+        let mut unkind = frame.clone();
+        unkind[6] = 0xEE; // kind byte; checksum covers only the payload
+        assert_eq!(decode_frame(&unkind).unwrap_err(), CodecError::BadKind(0xEE));
+
+        let mut magic = frame;
+        magic[1] ^= 0xFF;
+        assert_eq!(decode_frame(&magic).unwrap_err(), CodecError::BadMagic);
+    }
+}
+
+#[test]
+fn corrupt_length_cannot_cause_huge_allocation() {
+    let frame = encode_frame(&WireMsg::Ctl(Ctl::PollWeights));
+    let mut bad = frame;
+    // claim a ~4 GiB payload; the decoder must refuse before allocating
+    bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    match decode_frame(&bad).unwrap_err() {
+        CodecError::Malformed(_) | CodecError::Truncated => {}
+        other => panic!("oversized length surfaced as {other:?}"),
+    }
+}
+
+#[test]
+fn checksum_is_stable_across_runs() {
+    // the CRC is part of the wire contract: a different implementation
+    // on the other end must compute the same value
+    let frame = encode_frame(&WireMsg::Hello {
+        peer_addr: "192.168.1.9:6000".into(),
+    });
+    let payload = &frame[HEADER_LEN..];
+    let stored = u32::from_le_bytes([frame[12], frame[13], frame[14], frame[15]]);
+    assert_eq!(crc32(payload), stored);
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926); // IEEE check value
+}
