@@ -1,0 +1,194 @@
+//! Multi-tenant service throughput: a ladder of concurrent job counts
+//! on one shared [`ShardPool`] (the engine behind `bcm-dlb serve`),
+//! measuring aggregate rounds/s across tenants.
+//!
+//! Every job's trace is checked bit-identical against `bcm::Sequential`
+//! before its time is reported, so this bench doubles as a
+//! multi-tenancy determinism smoke test: tenants interleaved on the
+//! same workers must not perturb each other.
+//!
+//! `cargo bench --bench service_throughput` runs the n=1024 scenarios;
+//! `-- --smoke` (or `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates to
+//! n=128, 1 sweep for CI.  Smoke runs enforce the
+//! `[service_throughput.smoke] min_rounds_per_s` floor from
+//! `bench_floor.toml`; `-- --no-floor` skips the gate.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Engine, RunTrace, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::{JobEvent, JobSpec, ShardPool};
+use bcm_dlb::graph::Topology;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::util::table::{f, Table};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+const ALGO: PairAlgorithm = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+
+fn read_floor(path: &Path, section: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut in_section = false;
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            in_section = name.trim() == section;
+        } else if in_section {
+            if let Some((k, v)) = line.split_once('=') {
+                if k.trim() == key {
+                    return v.trim().parse().ok();
+                }
+            }
+        }
+    }
+    None
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+/// One tenant, seeded exactly like `bcm-dlb run`'s first repetition.
+fn make_tenant(n: usize, sweeps: usize, seed: u64) -> (JobSpec, RunTrace) {
+    let mut rng = Pcg64::new(seed);
+    let g = Topology::Torus2d.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        10,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let mut seq_state = state.clone();
+    let seq_trace = Sequential.run(
+        &mut seq_state,
+        &schedule,
+        ALGO,
+        StopRule::sweeps(sweeps),
+        seed,
+    );
+    (
+        JobSpec {
+            state,
+            schedule,
+            algo: ALGO,
+            sweeps,
+            seed,
+            batch: 0,
+        },
+        seq_trace,
+    )
+}
+
+/// Run `jobs` tenants concurrently; returns (secs, total rounds) or an
+/// error string on divergence/failure.
+fn run_fleet(jobs: usize, n: usize, sweeps: usize) -> Result<(f64, usize), String> {
+    let mut pool = ShardPool::spawn(0);
+    let mut refs: BTreeMap<u32, RunTrace> = BTreeMap::new();
+    let start = std::time::Instant::now();
+    for j in 0..jobs {
+        let (spec, seq_trace) = make_tenant(n, sweeps, 1000 + j as u64);
+        let id = pool.open_job(spec).map_err(|e| e.to_string())?;
+        refs.insert(id, seq_trace);
+    }
+    let mut total_rounds = 0usize;
+    let mut open = refs.len();
+    while open > 0 {
+        let events = pool.step(Duration::from_millis(20)).map_err(|e| e.to_string())?;
+        for ev in events {
+            match ev {
+                JobEvent::Finished { job, trace, .. } => {
+                    open -= 1;
+                    total_rounds += trace.rounds.len();
+                    if &trace != refs.get(&job).expect("known job") {
+                        return Err(format!("job {job} diverged from Sequential"));
+                    }
+                }
+                JobEvent::Failed { job, error } => {
+                    return Err(format!("job {job} failed: {error}"));
+                }
+                _ => {}
+            }
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    pool.shutdown().map_err(|e| e.to_string())?;
+    Ok((secs, total_rounds))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || env_flag("BCM_DLB_SMOKE")
+        || env_flag("BCM_DLB_QUICK");
+    let (n, sweeps) = if smoke { (128, 1) } else { (1024, 2) };
+    let job_ladder = [1usize, 2, 4];
+    eprintln!(
+        "service_throughput: torus2d n={n}, sweeps={sweeps}, job ladder {job_ladder:?}{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut t = Table::new(
+        "service throughput (one shared shard pool, every tenant verified vs Sequential)",
+        &["concurrent jobs", "total rounds", "secs", "rounds/s"],
+    );
+    let mut best_rps: f64 = 0.0;
+    let mut failed = false;
+    for jobs in job_ladder {
+        match run_fleet(jobs, n, sweeps) {
+            Ok((secs, rounds)) => {
+                let rps = rounds as f64 / secs.max(1e-12);
+                best_rps = best_rps.max(rps);
+                t.row(vec![
+                    jobs.to_string(),
+                    rounds.to_string(),
+                    f(secs, 3),
+                    f(rps, 0),
+                ]);
+            }
+            Err(e) => {
+                eprintln!("service_throughput: {jobs} jobs failed: {e}");
+                failed = true;
+            }
+        }
+    }
+    println!("{}", t.render());
+    t.write_csv(Path::new("results/service_throughput.csv")).ok();
+
+    if smoke && !args.iter().any(|a| a == "--no-floor") {
+        let floor_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_floor.toml");
+        match read_floor(&floor_path, "service_throughput.smoke", "min_rounds_per_s") {
+            Some(floor) if best_rps < floor => {
+                eprintln!(
+                    "REGRESSION: best service throughput {} rounds/s is below the \
+                     bench_floor.toml floor of {} rounds/s",
+                    f(best_rps, 0),
+                    f(floor, 0)
+                );
+                failed = true;
+            }
+            Some(floor) => {
+                eprintln!(
+                    "perf floor ok: {} rounds/s >= {} rounds/s floor",
+                    f(best_rps, 0),
+                    f(floor, 0)
+                );
+            }
+            None => {
+                eprintln!(
+                    "REGRESSION GATE BROKEN: no parsable [service_throughput.smoke] \
+                     min_rounds_per_s in {} (use --no-floor to bypass deliberately)",
+                    floor_path.display()
+                );
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

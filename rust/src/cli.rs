@@ -96,6 +96,21 @@ COMMANDS
                  --connect HOST:PORT  dial the leader
                  --listen HOST:PORT   await the leader's dial-in
                  [--retry N]    connect attempts, 250 ms apart (def. 40)
+  serve          multi-tenant balancer service: accepts JSON job specs
+                 over a socket, runs them concurrently on one shared
+                 shard pool, streams per-round reports back as JSON lines
+                 [--listen ADDR]    bind address (def. 127.0.0.1:7412)
+                 [--max-jobs J]     concurrent job slots (def. 4)
+                 [--shards K]       pool workers (0 = one per core)
+                 [--max-conns C]    queued + active connections (def. 64)
+  submit         send one job spec to a serve instance and stream its
+                 per-round reports to stdout; exits nonzero on job error
+                 --config FILE | --n N --loads L --algo A ... (run flags)
+                 [--connect ADDR]   service address (def. 127.0.0.1:7412)
+                 [--verify]     service reruns Sequential and asserts the
+                                streamed trace is bit-identical
+                 [--shutdown]   ask the service to drain and exit instead
+                                of submitting a job
   scale          sequential vs parallel engine vs sharded cluster
                  [--n N] [--topology T] [--loads L[,L2,...]] [--sweeps S]
                  [--threads K] [--shards K] [--batch-rounds B] [--seed X]

@@ -51,6 +51,14 @@ pub struct ExperimentConfig {
     /// `cluster-worker --listen`).  Non-empty `peers` takes precedence
     /// over `listen`, and its length fixes the shard count.
     pub peers: Vec<String>,
+    /// `bcm-dlb serve` bind address (config key `serve.listen`, flag
+    /// `--listen`): where the multi-tenant balancer service accepts job
+    /// specs.
+    pub serve_listen: String,
+    /// Maximum jobs `bcm-dlb serve` runs concurrently on its shard pool
+    /// (config key `serve.max_jobs`, flag `--max-jobs`); further
+    /// submissions queue until a slot frees.
+    pub serve_max_jobs: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -72,6 +80,8 @@ impl Default for ExperimentConfig {
             transport: TransportKind::Local,
             listen: "127.0.0.1:7411".to_string(),
             peers: Vec::new(),
+            serve_listen: "127.0.0.1:7412".to_string(),
+            serve_max_jobs: 4,
         }
     }
 }
@@ -144,6 +154,16 @@ impl ExperimentConfig {
                 })
                 .collect::<Result<Vec<String>>>()?;
         }
+        let serve = v.get("serve");
+        if let Some(s) = serve.get("listen").as_str() {
+            cfg.serve_listen = s.to_string();
+        }
+        if let Some(x) = serve.get("max_jobs").as_usize() {
+            if x == 0 {
+                return Err(anyhow!("config: serve.max_jobs must be >= 1"));
+            }
+            cfg.serve_max_jobs = x;
+        }
         if cfg.n < 2 {
             return Err(anyhow!("config: n must be >= 2"));
         }
@@ -173,6 +193,13 @@ impl ExperimentConfig {
             (
                 "peers",
                 Json::Arr(self.peers.iter().map(|p| p.as_str().into()).collect()),
+            ),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("listen", self.serve_listen.clone().into()),
+                    ("max_jobs", self.serve_max_jobs.into()),
+                ]),
             ),
         ])
     }
@@ -247,6 +274,24 @@ mod tests {
         assert_eq!(back.peers, cfg.peers);
         assert!(ExperimentConfig::from_json_str(r#"{"transport": "udp"}"#).is_err());
         assert!(ExperimentConfig::from_json_str(r#"{"peers": [42]}"#).is_err());
+    }
+
+    #[test]
+    fn serve_keys_parse_roundtrip_and_default() {
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.serve_listen, "127.0.0.1:7412");
+        assert_eq!(cfg.serve_max_jobs, 4);
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"serve": {"listen": "0.0.0.0:8100", "max_jobs": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve_listen, "0.0.0.0:8100");
+        assert_eq!(cfg.serve_max_jobs, 2);
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.serve_listen, cfg.serve_listen);
+        assert_eq!(back.serve_max_jobs, cfg.serve_max_jobs);
+        assert!(ExperimentConfig::from_json_str(r#"{"serve": {"max_jobs": 0}}"#).is_err());
     }
 
     #[test]

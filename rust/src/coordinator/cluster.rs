@@ -24,7 +24,7 @@
 //! asserted by `tests/property_invariants.rs`.
 
 use super::messages::{Ctl, Report};
-use super::shard::{RoundPlan, ShardMap};
+use super::shard::{resolve_shards, RoundPlan, ShardMap};
 use super::transport::tcp::{InitPayload, LeaderListener, TcpLeader};
 use super::transport::{local, LeaderTransport, TransportError};
 use super::worker::{ShardWorker, WorkerAlgo};
@@ -34,9 +34,10 @@ use crate::bcm::{RoundStats, RunTrace, Schedule};
 use crate::load::{Load, LoadState};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long the leader waits on worker reports, per dispatched round,
 /// before declaring the cluster wedged (a worker panic no longer blocks
@@ -177,17 +178,13 @@ impl Cluster {
         let (leader, workers) = local::pair(k);
         let mut handles = Vec::with_capacity(k);
         for (s, (transport, nodes)) in workers.into_iter().zip(shard_nodes).enumerate() {
-            let worker = ShardWorker {
-                shard: s,
-                lo: map.range(s).start,
-                nodes,
-                algo,
-                transport: Box::new(transport),
-                fail_at_round: match fault {
-                    Some((fs, fr)) if fs == s => Some(fr),
-                    _ => None,
-                },
-            };
+            let mut worker = ShardWorker::new(Box::new(transport));
+            worker.install_job(0, map.range(s).start, nodes, algo);
+            if let Some((fs, fr)) = fault {
+                if fs == s {
+                    worker.set_fault(0, fr);
+                }
+            }
             handles.push(std::thread::spawn(move || {
                 // a worker's failure already reached the leader as a
                 // Report::Error; the return value only matters for
@@ -453,6 +450,7 @@ impl Cluster {
         // dispatch: one RunBatch per shard covers all b rounds
         for s in 0..self.map.shards() {
             let msg = Ctl::RunBatch {
+                job: 0,
                 start_round,
                 rounds: b,
                 seed,
@@ -471,7 +469,7 @@ impl Cluster {
         let wait = batch_timeout(b);
         for _ in 0..self.map.shards() {
             match self.recv_report("batch reports", wait)? {
-                Report::Batch { shard, rounds } => {
+                Report::Batch { job: _, shard, rounds } => {
                     if rounds.len() != b {
                         return Err(anyhow!(
                             "shard {shard} reported {} rounds for a {b}-round batch \
@@ -494,6 +492,7 @@ impl Cluster {
                     }
                 }
                 Report::Error {
+                    job: _,
                     shard,
                     round,
                     message,
@@ -540,7 +539,7 @@ impl Cluster {
 
     fn poll_weights_inner(&mut self) -> Result<Vec<f64>> {
         for s in 0..self.map.shards() {
-            if let Err(e) = self.transport.send_ctl(s, Ctl::PollWeights) {
+            if let Err(e) = self.transport.send_ctl(s, Ctl::PollWeights { job: 0 }) {
                 let msg = format!("control link closed during weight poll: {e}");
                 return Err(self.worker_error(s, msg));
             }
@@ -549,12 +548,13 @@ impl Cluster {
         let mut w = vec![0.0f64; self.n()];
         for _ in 0..self.map.shards() {
             match self.recv_report("weight reports", ROUND_TIMEOUT)? {
-                Report::Weights { shard, weights } => {
+                Report::Weights { job: _, shard, weights } => {
                     let range = self.map.range(shard);
                     debug_assert_eq!(weights.len(), range.len());
                     w[range].copy_from_slice(&weights);
                 }
                 Report::Error {
+                    job: _,
                     shard,
                     round: _,
                     message,
@@ -605,7 +605,7 @@ impl Cluster {
         let mut timed_out = false;
         while got < expected {
             match transport.recv_report(SHUTDOWN_TIMEOUT) {
-                Ok(Report::Final { shard, nodes }) => {
+                Ok(Report::Final { job: _, shard, nodes }) => {
                     let lo = map.range(shard).start;
                     for (i, loads) in nodes.into_iter().enumerate() {
                         for l in loads {
@@ -615,6 +615,7 @@ impl Cluster {
                     got += 1;
                 }
                 Ok(Report::Error {
+                    job: _,
                     shard,
                     round,
                     message,
@@ -654,6 +655,600 @@ impl Cluster {
             None => Ok(state),
             Some(e) => Err(e),
         }
+    }
+}
+
+/// One tenant's complete run, submitted to a [`ShardPool`].
+pub struct JobSpec {
+    /// The initial load state (consumed: the pool carves it into
+    /// per-shard slices).
+    pub state: LoadState,
+    /// The matching schedule driving the run.
+    pub schedule: Schedule,
+    /// Local balancing algorithm.
+    pub algo: PairAlgorithm,
+    /// Full sweeps of the schedule to run.
+    pub sweeps: usize,
+    /// Run seed; the job's trace is bit-identical to
+    /// `bcm::Sequential::run(.., StopRule::sweeps(sweeps), seed)`.
+    pub seed: u64,
+    /// Rounds per control message (`0` = auto, see
+    /// [`resolve_batch_rounds`]).
+    pub batch: usize,
+}
+
+/// Progress surfaced by [`ShardPool::step`], in job-lifecycle order:
+/// one `Started`, a `Rounds` per completed batch, then exactly one of
+/// `Finished` / `Failed`.
+#[derive(Debug)]
+pub enum JobEvent {
+    /// The job's initial weight poll completed.
+    Started {
+        /// Pool-assigned job id.
+        job: u32,
+        /// Discrepancy before round 0 (the trace's
+        /// `initial_discrepancy`).
+        initial_discrepancy: f64,
+    },
+    /// A batch of rounds completed; stats arrive in round order.
+    Rounds {
+        /// Pool-assigned job id.
+        job: u32,
+        /// Per-round statistics of the batch, ready to stream.
+        stats: Vec<RoundStats>,
+    },
+    /// All sweeps ran and the final state was collected; terminal.
+    Finished {
+        /// Pool-assigned job id.
+        job: u32,
+        /// The complete run trace (identical to the `Rounds` stream).
+        trace: RunTrace,
+        /// The reassembled final load state.
+        state: LoadState,
+    },
+    /// The job died (worker panic, dead peer, bad spec); terminal.
+    /// Other jobs on the pool are unaffected.
+    Failed {
+        /// Pool-assigned job id.
+        job: u32,
+        /// What went wrong, naming the shard and round where known.
+        error: String,
+    },
+}
+
+/// What a pool job is waiting for.
+enum JobPhase {
+    /// Initial weight poll: `pending` shards still owe a `Weights`
+    /// report folded into `weights`.
+    Weights {
+        pending: usize,
+        weights: Vec<f64>,
+    },
+    /// Nothing outstanding; the next [`ShardPool::step`] dispatches a
+    /// batch (or the close, once all rounds ran).
+    Ready,
+    /// A dispatched batch: `pending` shards still owe their
+    /// `Report::Batch`, folded per round into the vectors.
+    Batch {
+        start: usize,
+        b: usize,
+        colors: Vec<usize>,
+        edges: Vec<usize>,
+        pending: usize,
+        movements: Vec<usize>,
+        min: Vec<f64>,
+        max: Vec<f64>,
+    },
+    /// `CloseJob` sent: `pending` shards still owe their `Final`,
+    /// merged into `state`.
+    Closing {
+        pending: usize,
+        state: LoadState,
+    },
+}
+
+/// Leader-side state of one pool job.
+struct PoolJob {
+    map: ShardMap,
+    schedule: Schedule,
+    plans: Arc<Vec<Arc<RoundPlan>>>,
+    seed: u64,
+    batch: usize,
+    total: usize,
+    /// Next round to dispatch (advanced when a batch completes).
+    next: usize,
+    trace: RunTrace,
+    phase: JobPhase,
+    /// Fail-stop deadline for the current pending phase, renewed on
+    /// every report absorbed for this job.
+    deadline: Instant,
+}
+
+impl PoolJob {
+    /// Shards participating in this job (a job on fewer nodes than the
+    /// pool has shards uses a prefix of the workers).
+    fn shards(&self) -> usize {
+        self.map.shards()
+    }
+}
+
+/// A shared pool of shard workers serving any number of independent
+/// jobs — the event-driven leader behind `bcm-dlb serve`.
+///
+/// Where [`Cluster`] *blocks* inside `run_seeded` until its single
+/// run completes, a `ShardPool` never blocks on one tenant: all
+/// leader-side I/O funnels through [`step`](Self::step), a
+/// `select`-style turn of the event loop that dispatches at most one
+/// batch per ready job (round-robin, so a long job cannot starve a
+/// short one) and absorbs whatever reports have arrived, returning the
+/// resulting [`JobEvent`]s.  One thread therefore drives every tenant
+/// concurrently, and each job's trace stays bit-identical to
+/// `bcm::Sequential` because nothing about the interleaving touches a
+/// job's `(seed, round, edge)` RNG streams or its carved load slices.
+///
+/// Failures stay job-scoped: a worker panic or dead peer inside one
+/// job's batch surfaces as [`JobEvent::Failed`] for that job while the
+/// workers retire the job locally and keep serving the rest.  Only a
+/// transport-level loss (a worker thread gone) poisons the whole pool.
+pub struct ShardPool {
+    shards: usize,
+    transport: Box<dyn LeaderTransport>,
+    handles: Vec<JoinHandle<()>>,
+    jobs: BTreeMap<u32, PoolJob>,
+    next_job: u32,
+    /// Rotation offset for the round-robin dispatch order.
+    cursor: usize,
+    poisoned: Option<String>,
+    down: bool,
+}
+
+impl ShardPool {
+    /// Spawn a pool of `shards` local workers (`0` = one per core).
+    pub fn spawn(shards: usize) -> ShardPool {
+        Self::spawn_tuned(shards, None, None)
+    }
+
+    /// Test spawn: inject a panic at `(shard, job, round)` and/or cap
+    /// the workers' peer-collect wait so dead-peer paths resolve in
+    /// test time.
+    #[doc(hidden)]
+    pub fn spawn_tuned(
+        shards: usize,
+        fault: Option<(usize, u32, usize)>,
+        peer_wait: Option<Duration>,
+    ) -> ShardPool {
+        let k = resolve_shards(shards);
+        let (leader, workers) = local::pair(k);
+        let mut handles = Vec::with_capacity(k);
+        for (s, transport) in workers.into_iter().enumerate() {
+            let mut worker = ShardWorker::new(Box::new(transport));
+            if let Some((fs, fj, fr)) = fault {
+                if fs == s {
+                    worker.set_fault(fj, fr);
+                }
+            }
+            if let Some(w) = peer_wait {
+                worker.set_peer_wait(w);
+            }
+            handles.push(std::thread::spawn(move || {
+                let _ = worker.run();
+            }));
+        }
+        ShardPool {
+            shards: k,
+            transport: Box::new(leader),
+            handles,
+            jobs: BTreeMap::new(),
+            next_job: 1, // job 0 is the classic single-job id
+            cursor: 0,
+            poisoned: None,
+            down: false,
+        }
+    }
+
+    /// Worker count of the pool.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Jobs open on the pool (any phase).
+    pub fn jobs_active(&self) -> usize {
+        self.jobs.len()
+    }
+
+    fn check_poisoned(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(msg) => Err(anyhow!("shard pool has failed: {msg}")),
+            None => Ok(()),
+        }
+    }
+
+    fn poison(&mut self, msg: String) -> Error {
+        if self.poisoned.is_none() {
+            self.poisoned = Some(msg.clone());
+        }
+        Error::msg(format!("shard pool has failed: {msg}"))
+    }
+
+    /// Open a job: carve its state across the pool (a job smaller than
+    /// the pool uses a prefix of the workers), ship each participating
+    /// shard its slice, and start the initial weight poll.  Returns the
+    /// pool-assigned job id; progress arrives through
+    /// [`step`](Self::step).
+    pub fn open_job(&mut self, spec: JobSpec) -> Result<u32> {
+        self.check_poisoned()?;
+        if self.down {
+            return Err(anyhow!("shard pool is shut down"));
+        }
+        let JobSpec {
+            mut state,
+            schedule,
+            algo,
+            sweeps,
+            seed,
+            batch,
+        } = spec;
+        let n = state.n();
+        if schedule.n() != n {
+            return Err(anyhow!(
+                "job state has {n} nodes but its schedule covers {}",
+                schedule.n()
+            ));
+        }
+        let job = self.next_job;
+        self.next_job += 1;
+        let map = ShardMap::new(n, self.shards);
+        let shard_nodes = carve(&mut state, &map);
+        for (s, nodes) in shard_nodes.into_iter().enumerate() {
+            let open = Ctl::OpenJob {
+                job,
+                lo: map.range(s).start,
+                algo: algo.name(),
+                nodes,
+            };
+            if let Err(e) = self.transport.send_ctl(s, open) {
+                return Err(self.poison(format!("control link to shard {s} closed: {e}")));
+            }
+            if let Err(e) = self.transport.send_ctl(s, Ctl::PollWeights { job }) {
+                return Err(self.poison(format!("control link to shard {s} closed: {e}")));
+            }
+        }
+        let d = schedule.period();
+        let plans: Arc<Vec<Arc<RoundPlan>>> = Arc::new(
+            (0..d)
+                .map(|c| Arc::new(RoundPlan::build(schedule.matching(c), &map)))
+                .collect(),
+        );
+        let pending = map.shards();
+        self.jobs.insert(
+            job,
+            PoolJob {
+                map,
+                schedule,
+                plans,
+                seed,
+                batch: resolve_batch_rounds(batch, n),
+                total: sweeps * d,
+                next: 0,
+                trace: RunTrace {
+                    initial_discrepancy: 0.0,
+                    rounds: Vec::new(),
+                },
+                phase: JobPhase::Weights {
+                    pending,
+                    weights: vec![0.0; n],
+                },
+                deadline: Instant::now() + ROUND_TIMEOUT,
+            },
+        );
+        Ok(job)
+    }
+
+    /// One turn of the event loop: dispatch a batch (or the close) to
+    /// every `Ready` job — round-robin, one batch each, so no tenant
+    /// starves — then absorb whatever reports arrive within `wait` and
+    /// return the resulting events.  An empty vec just means nothing
+    /// completed this turn.
+    ///
+    /// `Err` means the *pool* is broken (worker thread lost, protocol
+    /// violation, wedged shard); per-job failures are reported as
+    /// [`JobEvent::Failed`] and leave the pool and its other jobs
+    /// running.
+    pub fn step(&mut self, wait: Duration) -> Result<Vec<JobEvent>> {
+        self.check_poisoned()?;
+        let mut events = Vec::new();
+        // dispatch phase: rotate over the ready jobs
+        let ids: Vec<u32> = self.jobs.keys().copied().collect();
+        if !ids.is_empty() {
+            let offset = self.cursor % ids.len();
+            self.cursor = self.cursor.wrapping_add(1);
+            for i in 0..ids.len() {
+                let id = ids[(offset + i) % ids.len()];
+                if matches!(self.jobs[&id].phase, JobPhase::Ready) {
+                    if let Err(e) = self.dispatch(id) {
+                        return Err(self.poison(e.to_string()));
+                    }
+                }
+            }
+        }
+        if self.jobs.is_empty() {
+            return Ok(events);
+        }
+        // absorb phase: block up to `wait` for the first report, then
+        // drain whatever else is already queued
+        let mut budget = wait;
+        loop {
+            match self.transport.recv_report(budget) {
+                Ok(report) => {
+                    if let Err(e) = self.route(report, &mut events) {
+                        return Err(self.poison(e.to_string()));
+                    }
+                }
+                Err(TransportError::Timeout) => break,
+                Err(TransportError::Closed(why)) => {
+                    return Err(self.poison(format!("all pool workers terminated: {why}")));
+                }
+            }
+            budget = Duration::ZERO;
+        }
+        // fail-stop: a shard that stopped reporting would otherwise
+        // wedge its job (and the service connection above it) forever
+        let now = Instant::now();
+        if let Some((&id, _)) = self
+            .jobs
+            .iter()
+            .find(|(_, j)| !matches!(j.phase, JobPhase::Ready) && j.deadline < now)
+        {
+            return Err(self.poison(format!(
+                "job {id} timed out waiting for shard reports (a worker is wedged)"
+            )));
+        }
+        Ok(events)
+    }
+
+    /// Send a `Ready` job its next batch, or its close once all rounds
+    /// have run.
+    fn dispatch(&mut self, id: u32) -> Result<()> {
+        let job = self.jobs.get_mut(&id).expect("dispatch of unknown job");
+        let m = job.shards();
+        if job.next >= job.total {
+            for s in 0..m {
+                self.transport
+                    .send_ctl(s, Ctl::CloseJob { job: id })
+                    .map_err(|e| anyhow!("control link to shard {s} closed: {e}"))?;
+            }
+            job.phase = JobPhase::Closing {
+                pending: m,
+                state: LoadState::empty(job.map.n()),
+            };
+            job.deadline = Instant::now() + SHUTDOWN_TIMEOUT;
+            return Ok(());
+        }
+        let start = job.next;
+        let b = job.batch.min(job.total - start);
+        let colors = job.schedule.lookahead_colors(start, b);
+        let d = job.plans.len();
+        let edges = (0..b)
+            .map(|i| job.plans[(start + i) % d].edges)
+            .collect();
+        for s in 0..m {
+            let msg = Ctl::RunBatch {
+                job: id,
+                start_round: start,
+                rounds: b,
+                seed: job.seed,
+                plans: job.plans.clone(),
+            };
+            self.transport
+                .send_ctl(s, msg)
+                .map_err(|e| anyhow!("control link to shard {s} closed: {e}"))?;
+        }
+        job.phase = JobPhase::Batch {
+            start,
+            b,
+            colors,
+            edges,
+            pending: m,
+            movements: vec![0; b],
+            min: vec![f64::INFINITY; b],
+            max: vec![f64::NEG_INFINITY; b],
+        };
+        job.deadline = Instant::now() + batch_timeout(b);
+        Ok(())
+    }
+
+    /// Fold one worker report into its job, staging any completed
+    /// lifecycle events.  Reports for unknown job ids are dropped: they
+    /// are the tail of an already-failed job (e.g. a surviving peer's
+    /// timeout self-report).  `Err` poisons the pool.
+    fn route(&mut self, report: Report, events: &mut Vec<JobEvent>) -> Result<()> {
+        match report {
+            Report::Error {
+                job: None,
+                shard,
+                message,
+                ..
+            } => Err(anyhow!("worker {shard} failed: {message}")),
+            Report::Error {
+                job: Some(id),
+                shard,
+                round,
+                message,
+            } => {
+                if self.jobs.remove(&id).is_some() {
+                    let error = match round {
+                        Some(r) => format!("shard {shard} failed at round {r}: {message}"),
+                        None => format!("shard {shard}: {message}"),
+                    };
+                    events.push(JobEvent::Failed { job: id, error });
+                }
+                Ok(())
+            }
+            Report::Weights {
+                job: id,
+                shard,
+                weights,
+            } => {
+                let Some(job) = self.jobs.get_mut(&id) else {
+                    return Ok(());
+                };
+                job.deadline = Instant::now() + ROUND_TIMEOUT;
+                let JobPhase::Weights { pending, weights: w } = &mut job.phase else {
+                    return Err(anyhow!("unexpected weight report for job {id}"));
+                };
+                let range = job.map.range(shard);
+                debug_assert_eq!(weights.len(), range.len());
+                w[range].copy_from_slice(&weights);
+                *pending -= 1;
+                if *pending == 0 {
+                    let max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+                    let disc = max - min;
+                    job.trace.initial_discrepancy = disc;
+                    job.trace.rounds.reserve(job.total);
+                    job.phase = JobPhase::Ready;
+                    events.push(JobEvent::Started {
+                        job: id,
+                        initial_discrepancy: disc,
+                    });
+                }
+                Ok(())
+            }
+            Report::Batch {
+                job: id,
+                shard,
+                rounds,
+            } => {
+                let Some(job) = self.jobs.get_mut(&id) else {
+                    return Ok(());
+                };
+                job.deadline = Instant::now() + batch_timeout(job.batch);
+                let JobPhase::Batch {
+                    start,
+                    b,
+                    colors,
+                    edges,
+                    pending,
+                    movements,
+                    min,
+                    max,
+                } = &mut job.phase
+                else {
+                    return Err(anyhow!("unexpected batch report for job {id}"));
+                };
+                if rounds.len() != *b {
+                    return Err(anyhow!(
+                        "shard {shard} reported {} rounds for a {b}-round batch of job {id} \
+                         starting at round {start}",
+                        rounds.len()
+                    ));
+                }
+                for (i, r) in rounds.iter().enumerate() {
+                    if r.round != *start + i {
+                        return Err(anyhow!(
+                            "shard {shard} report out of order: round {} at slot {i} of the \
+                             batch of job {id} starting at round {start}",
+                            r.round
+                        ));
+                    }
+                    movements[i] += r.movements;
+                    min[i] = min[i].min(r.min_weight);
+                    max[i] = max[i].max(r.max_weight);
+                }
+                *pending -= 1;
+                if *pending == 0 {
+                    let stats: Vec<RoundStats> = (0..*b)
+                        .map(|i| RoundStats {
+                            round: *start + i,
+                            color: colors[i],
+                            discrepancy: max[i] - min[i],
+                            movements: movements[i],
+                            edges: edges[i],
+                        })
+                        .collect();
+                    job.next = *start + *b;
+                    job.trace.rounds.extend(stats.iter().cloned());
+                    job.phase = JobPhase::Ready;
+                    events.push(JobEvent::Rounds { job: id, stats });
+                }
+                Ok(())
+            }
+            Report::Final {
+                job: id,
+                shard,
+                nodes,
+            } => {
+                let Some(job) = self.jobs.get_mut(&id) else {
+                    return Ok(());
+                };
+                job.deadline = Instant::now() + SHUTDOWN_TIMEOUT;
+                let JobPhase::Closing { pending, state } = &mut job.phase else {
+                    return Err(anyhow!("unexpected final report for job {id}"));
+                };
+                let lo = job.map.range(shard).start;
+                for (i, loads) in nodes.into_iter().enumerate() {
+                    for l in loads {
+                        state.push(lo + i, l);
+                    }
+                }
+                *pending -= 1;
+                if *pending == 0 {
+                    let job = self.jobs.remove(&id).expect("job vanished mid-close");
+                    let JobPhase::Closing { state, .. } = job.phase else {
+                        unreachable!("checked above");
+                    };
+                    events.push(JobEvent::Finished {
+                        job: id,
+                        trace: job.trace,
+                        state,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Shut the pool down and join every worker; idempotent (a second
+    /// call is a no-op `Ok`).  Still-open jobs are abandoned: workers
+    /// flush a `Final` per open job on their way out, and the drain
+    /// below discards them.
+    pub fn shutdown(&mut self) -> Result<()> {
+        if self.down {
+            return Ok(());
+        }
+        self.down = true;
+        for s in 0..self.shards {
+            // a worker that already exited is surfaced by the join
+            let _ = self.transport.send_ctl(s, Ctl::Shutdown);
+        }
+        // drain until every worker hangs up, so the joins are immediate
+        let mut wedged = false;
+        loop {
+            match self.transport.recv_report(SHUTDOWN_TIMEOUT) {
+                Ok(_) => {}
+                Err(TransportError::Closed(_)) => break,
+                Err(TransportError::Timeout) => {
+                    wedged = true;
+                    break;
+                }
+            }
+        }
+        if wedged {
+            return Err(anyhow!("timed out shutting down the shard pool"));
+        }
+        for h in self.handles.drain(..) {
+            if let Err(p) = h.join() {
+                let msg = super::worker::panic_message(p.as_ref());
+                return Err(anyhow!("pool worker panicked: {msg}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
     }
 }
 

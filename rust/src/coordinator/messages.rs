@@ -17,6 +17,13 @@
 //! their **round** in addition to their edge index; a receiver stashes
 //! messages that arrive early.
 //!
+//! Since the multi-tenant service, every data-plane message also carries
+//! a **job id**: a shard pool runs several independent balancing jobs on
+//! the same worker set, and `(round, edge)` keys repeat across jobs.  Job
+//! `0` is the classic single-job id installed by `Cluster::spawn*` and
+//! the TCP `Init` handshake; [`Ctl::OpenJob`]/[`Ctl::CloseJob`] add and
+//! retire further jobs at runtime without restarting workers.
+//!
 //! These types are transport-agnostic: they cross in-process channels on
 //! the [`local`](super::transport::local) backend and travel as
 //! length-prefixed binary frames ([`codec`](super::transport::codec)) on
@@ -31,8 +38,28 @@ use std::sync::Arc;
 /// Leader -> worker control messages.
 #[derive(Debug, PartialEq)]
 pub enum Ctl {
-    /// Execute rounds `start_round .. start_round + rounds` as one
-    /// pipelined batch, reporting back a single [`Report::Batch`].
+    /// Install a new job on the worker: the shard's node slice plus the
+    /// pair algorithm to run.  Workers spawned through `Cluster` have
+    /// job `0` pre-installed; a shard pool opens every job this way.
+    OpenJob {
+        /// Job the slice belongs to.
+        job: u32,
+        /// Global index of the first node in `nodes`.
+        lo: usize,
+        /// Pair algorithm name (`PairAlgorithm::parse` format).
+        algo: String,
+        /// Per-node load lists of the shard's slice, in node order.
+        nodes: Vec<Vec<Load>>,
+    },
+    /// Retire a job: the worker replies with that job's
+    /// [`Report::Final`] and frees its state; other jobs keep running.
+    CloseJob {
+        /// Job to retire.
+        job: u32,
+    },
+    /// Execute rounds `start_round .. start_round + rounds` of one job
+    /// as one pipelined batch, reporting back a single
+    /// [`Report::Batch`].
     ///
     /// `seed` keys the counter-based per-edge RNG streams
     /// (`Pcg64::for_edge(seed, round, edge)`), replacing the leader-drawn
@@ -40,6 +67,8 @@ pub enum Ctl {
     /// runtime's bit-identity with `bcm::Sequential` at every
     /// (shards, batch) combination: no RNG state ever crosses a message.
     RunBatch {
+        /// Job the batch belongs to.
+        job: u32,
         /// Global index of the batch's first round.
         start_round: usize,
         /// Number of rounds in the batch (`B >= 1`).
@@ -52,25 +81,33 @@ pub enum Ctl {
         /// `plans[r % plans.len()]`.
         plans: Arc<Vec<Arc<RoundPlan>>>,
     },
-    /// Report the shard's per-node weights to the leader.
-    PollWeights,
-    /// Terminate and return the shard's final load lists.
+    /// Report one job's per-node weights to the leader.
+    PollWeights {
+        /// Job whose weights to report.
+        job: u32,
+    },
+    /// Terminate and return every open job's final load lists.
     Shutdown,
 }
 
-/// Worker -> worker payloads, tagged with the round they belong to and
-/// the edge's index within that round's matching (which also keys the
-/// edge's RNG stream).
+/// Worker -> worker payloads, tagged with the job and round they belong
+/// to and the edge's index within that round's matching (which also keys
+/// the edge's RNG stream).
 ///
 /// The round tag is what makes pipelining safe: edge indices repeat
 /// across rounds, and within a batch a fast shard may send round `r+1`
 /// traffic while a peer is still collecting round `r` — the receiver
-/// stashes any message whose round is ahead of its own.
+/// stashes any message whose round is ahead of its own.  The job tag
+/// extends the same argument across tenants: `(round, edge)` keys repeat
+/// across concurrent jobs, and a peer may not even have processed a
+/// job's `OpenJob` yet when its first offer arrives.
 #[derive(Debug, PartialEq)]
 pub enum ShardMsg {
     /// Slave -> master: `v`'s mobile loads (in node order) and its pinned
     /// weight sum.
     Offer {
+        /// Job the offer belongs to.
+        job: u32,
         /// Global round the offer belongs to.
         round: usize,
         /// Edge index within the round's matching.
@@ -82,6 +119,8 @@ pub enum ShardMsg {
     },
     /// Master -> slave: `v`'s new mobile loads.
     Settle {
+        /// Job the settle belongs to.
+        job: u32,
         /// Global round the settle belongs to.
         round: usize,
         /// Edge index within the round's matching.
@@ -117,31 +156,44 @@ pub enum Report {
     /// metrics into one message is the reply half of the
     /// [`Ctl::RunBatch`] amortization.
     Batch {
+        /// Job the batch belongs to.
+        job: u32,
         /// Reporting shard.
         shard: usize,
         /// Per-round metrics, one entry per round of the batch.
         rounds: Vec<RoundReport>,
     },
-    /// Per-node weights of the shard (in response to
+    /// Per-node weights of one job's shard slice (in response to
     /// [`Ctl::PollWeights`]).
     Weights {
+        /// Job the weights belong to.
+        job: u32,
         /// Reporting shard.
         shard: usize,
         /// Weight of each node the shard owns, in node order.
         weights: Vec<f64>,
     },
-    /// Final load lists of the shard's nodes (in response to
-    /// [`Ctl::Shutdown`]).
+    /// Final load lists of one job's shard slice (in response to
+    /// [`Ctl::CloseJob`] or, for every open job, [`Ctl::Shutdown`]).
     Final {
+        /// Job the slice belongs to.
+        job: u32,
         /// Reporting shard.
         shard: usize,
         /// Per-node load lists, in node order.
         nodes: Vec<Vec<Load>>,
     },
-    /// Fatal failure on the worker (protocol violation, dead peer, or a
-    /// caught panic); the leader surfaces it as a `util::error` instead
-    /// of wedging.  A mid-batch failure names the round it died in.
+    /// Failure on the worker (protocol violation, dead peer, or a caught
+    /// panic); the leader surfaces it as a `util::error` instead of
+    /// wedging.  A mid-batch failure names the round it died in.
+    ///
+    /// `job: Some(j)` scopes the failure to job `j` — the worker retires
+    /// that job and keeps serving the others.  `job: None` is
+    /// worker-fatal (or synthesized by the leader transport for a lost
+    /// connection) and poisons everything the worker was running.
     Error {
+        /// Failing job, when the failure is scoped to one job.
+        job: Option<u32>,
         /// Failing shard.
         shard: usize,
         /// Round being executed when the failure hit, when attributable.

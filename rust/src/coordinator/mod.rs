@@ -42,7 +42,19 @@
 //! with the [`transport::codec`] wire format over real sockets, so
 //! `bcm-dlb run --cluster --transport tcp` plus `bcm-dlb
 //! cluster-worker` processes form a genuine multi-process cluster —
-//! still bit-identical to `bcm::Sequential`.
+//! still bit-identical to `bcm::Sequential`.  Socket I/O runs entirely
+//! on the calling thread through a readiness [`transport::poll`]er —
+//! nonblocking sockets, incremental frame reassembly, buffered writes —
+//! so neither endpoint spawns per-connection helper threads.
+//!
+//! # Multi-tenancy
+//!
+//! Every data-plane message carries a job id, so one worker set can
+//! serve several independent runs at once: [`ShardPool`] is the
+//! event-driven leader that multiplexes jobs ([`JobSpec`]) over a
+//! shared worker pool and surfaces progress as [`JobEvent`]s — the
+//! engine behind `bcm-dlb serve`.  The classic [`Cluster`] API is the
+//! single-job special case (job id 0).
 //!
 //! The message-by-message wire protocol, ordering guarantees, the
 //! on-the-wire frame format, and the determinism argument are specified
@@ -56,7 +68,7 @@ pub mod shard;
 pub mod transport;
 pub mod worker;
 
-pub use cluster::{resolve_batch_rounds, Cluster, MessageStats};
+pub use cluster::{resolve_batch_rounds, Cluster, JobEvent, JobSpec, MessageStats, ShardPool};
 pub use shard::{resolve_shards, RoundPlan, ShardMap, ShardPlan};
 pub use transport::{LeaderTransport, TransportError, TransportKind, WorkerTransport};
 pub use worker::{ShardWorker, WorkerAlgo};

@@ -37,7 +37,9 @@ use std::sync::Arc;
 pub const FRAME_MAGIC: u32 = 0x574D_4342;
 
 /// Current wire protocol version; bumped on any incompatible change.
-pub const WIRE_VERSION: u16 = 1;
+/// Version 2 added the job id carried by every data-plane message plus
+/// the `OpenJob`/`CloseJob` control frames of the multi-tenant service.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Frame header size in bytes (magic + version + kind + reserved +
 /// length + checksum).
@@ -61,6 +63,8 @@ mod kind {
     pub const HELLO: u8 = 10;
     pub const INIT: u8 = 11;
     pub const PEER_HELLO: u8 = 12;
+    pub const CTL_OPEN_JOB: u8 = 13;
+    pub const CTL_CLOSE_JOB: u8 = 14;
 }
 
 /// Everything that can travel over a cluster TCP link: the three
@@ -243,12 +247,33 @@ fn put_round_plan(buf: &mut Vec<u8>, p: &RoundPlan) {
 fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
     let mut b = Vec::new();
     let kind = match msg {
+        WireMsg::Ctl(Ctl::OpenJob {
+            job,
+            lo,
+            algo,
+            nodes,
+        }) => {
+            put_u32(&mut b, *job);
+            put_usize(&mut b, *lo);
+            put_str(&mut b, algo);
+            put_usize(&mut b, nodes.len());
+            for node in nodes {
+                put_loads(&mut b, node);
+            }
+            kind::CTL_OPEN_JOB
+        }
+        WireMsg::Ctl(Ctl::CloseJob { job }) => {
+            put_u32(&mut b, *job);
+            kind::CTL_CLOSE_JOB
+        }
         WireMsg::Ctl(Ctl::RunBatch {
+            job,
             start_round,
             rounds,
             seed,
             plans,
         }) => {
+            put_u32(&mut b, *job);
             put_usize(&mut b, *start_round);
             put_usize(&mut b, *rounds);
             put_u64(&mut b, *seed);
@@ -258,27 +283,39 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             }
             kind::CTL_RUN_BATCH
         }
-        WireMsg::Ctl(Ctl::PollWeights) => kind::CTL_POLL_WEIGHTS,
+        WireMsg::Ctl(Ctl::PollWeights { job }) => {
+            put_u32(&mut b, *job);
+            kind::CTL_POLL_WEIGHTS
+        }
         WireMsg::Ctl(Ctl::Shutdown) => kind::CTL_SHUTDOWN,
         WireMsg::Peer(ShardMsg::Offer {
+            job,
             round,
             edge,
             loads,
             pinned,
         }) => {
+            put_u32(&mut b, *job);
             put_usize(&mut b, *round);
             put_usize(&mut b, *edge);
             put_loads(&mut b, loads);
             put_f64(&mut b, *pinned);
             kind::PEER_OFFER
         }
-        WireMsg::Peer(ShardMsg::Settle { round, edge, loads }) => {
+        WireMsg::Peer(ShardMsg::Settle {
+            job,
+            round,
+            edge,
+            loads,
+        }) => {
+            put_u32(&mut b, *job);
             put_usize(&mut b, *round);
             put_usize(&mut b, *edge);
             put_loads(&mut b, loads);
             kind::PEER_SETTLE
         }
-        WireMsg::Report(Report::Batch { shard, rounds }) => {
+        WireMsg::Report(Report::Batch { job, shard, rounds }) => {
+            put_u32(&mut b, *job);
             put_usize(&mut b, *shard);
             put_usize(&mut b, rounds.len());
             for r in rounds {
@@ -290,7 +327,12 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             }
             kind::REPORT_BATCH
         }
-        WireMsg::Report(Report::Weights { shard, weights }) => {
+        WireMsg::Report(Report::Weights {
+            job,
+            shard,
+            weights,
+        }) => {
+            put_u32(&mut b, *job);
             put_usize(&mut b, *shard);
             put_usize(&mut b, weights.len());
             for &w in weights {
@@ -298,7 +340,8 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             }
             kind::REPORT_WEIGHTS
         }
-        WireMsg::Report(Report::Final { shard, nodes }) => {
+        WireMsg::Report(Report::Final { job, shard, nodes }) => {
+            put_u32(&mut b, *job);
             put_usize(&mut b, *shard);
             put_usize(&mut b, nodes.len());
             for node in nodes {
@@ -307,10 +350,18 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             kind::REPORT_FINAL
         }
         WireMsg::Report(Report::Error {
+            job,
             shard,
             round,
             message,
         }) => {
+            match job {
+                Some(j) => {
+                    put_bool(&mut b, true);
+                    put_u32(&mut b, *j);
+                }
+                None => put_bool(&mut b, false),
+            }
             put_usize(&mut b, *shard);
             match round {
                 Some(r) => {
@@ -500,7 +551,25 @@ impl<'a> Cursor<'a> {
 fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
     let mut c = Cursor::new(payload);
     let msg = match kind {
+        kind::CTL_OPEN_JOB => {
+            let job = c.u32()?;
+            let lo = c.usize()?;
+            let algo = c.str()?;
+            let n = c.vec_len(8)?;
+            let mut nodes = Vec::with_capacity(n);
+            for _ in 0..n {
+                nodes.push(c.loads()?);
+            }
+            WireMsg::Ctl(Ctl::OpenJob {
+                job,
+                lo,
+                algo,
+                nodes,
+            })
+        }
+        kind::CTL_CLOSE_JOB => WireMsg::Ctl(Ctl::CloseJob { job: c.u32()? }),
         kind::CTL_RUN_BATCH => {
+            let job = c.u32()?;
             let start_round = c.usize()?;
             let rounds = c.usize()?;
             let seed = c.u64()?;
@@ -510,26 +579,30 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 plans.push(Arc::new(c.round_plan()?));
             }
             WireMsg::Ctl(Ctl::RunBatch {
+                job,
                 start_round,
                 rounds,
                 seed,
                 plans: Arc::new(plans),
             })
         }
-        kind::CTL_POLL_WEIGHTS => WireMsg::Ctl(Ctl::PollWeights),
+        kind::CTL_POLL_WEIGHTS => WireMsg::Ctl(Ctl::PollWeights { job: c.u32()? }),
         kind::CTL_SHUTDOWN => WireMsg::Ctl(Ctl::Shutdown),
         kind::PEER_OFFER => WireMsg::Peer(ShardMsg::Offer {
+            job: c.u32()?,
             round: c.usize()?,
             edge: c.usize()?,
             loads: c.loads()?,
             pinned: c.f64()?,
         }),
         kind::PEER_SETTLE => WireMsg::Peer(ShardMsg::Settle {
+            job: c.u32()?,
             round: c.usize()?,
             edge: c.usize()?,
             loads: c.loads()?,
         }),
         kind::REPORT_BATCH => {
+            let job = c.u32()?;
             let shard = c.usize()?;
             let n = c.vec_len(40)?;
             let mut rounds = Vec::with_capacity(n);
@@ -542,31 +615,39 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                     peer_msgs: c.usize()?,
                 });
             }
-            WireMsg::Report(Report::Batch { shard, rounds })
+            WireMsg::Report(Report::Batch { job, shard, rounds })
         }
         kind::REPORT_WEIGHTS => {
+            let job = c.u32()?;
             let shard = c.usize()?;
             let n = c.vec_len(8)?;
             let mut weights = Vec::with_capacity(n);
             for _ in 0..n {
                 weights.push(c.f64()?);
             }
-            WireMsg::Report(Report::Weights { shard, weights })
+            WireMsg::Report(Report::Weights {
+                job,
+                shard,
+                weights,
+            })
         }
         kind::REPORT_FINAL => {
+            let job = c.u32()?;
             let shard = c.usize()?;
             let n = c.vec_len(8)?;
             let mut nodes = Vec::with_capacity(n);
             for _ in 0..n {
                 nodes.push(c.loads()?);
             }
-            WireMsg::Report(Report::Final { shard, nodes })
+            WireMsg::Report(Report::Final { job, shard, nodes })
         }
         kind::REPORT_ERROR => {
+            let job = if c.bool()? { Some(c.u32()?) } else { None };
             let shard = c.usize()?;
             let round = if c.bool()? { Some(c.usize()?) } else { None };
             let message = c.str()?;
             WireMsg::Report(Report::Error {
+                job,
                 shard,
                 round,
                 message,
@@ -702,18 +783,27 @@ mod tests {
 
     #[test]
     fn simple_variants_roundtrip() {
-        roundtrip(WireMsg::Ctl(Ctl::PollWeights));
+        roundtrip(WireMsg::Ctl(Ctl::PollWeights { job: 0 }));
         roundtrip(WireMsg::Ctl(Ctl::Shutdown));
+        roundtrip(WireMsg::Ctl(Ctl::CloseJob { job: 9 }));
+        roundtrip(WireMsg::Ctl(Ctl::OpenJob {
+            job: 3,
+            lo: 4,
+            algo: "sorted:quick".into(),
+            nodes: vec![vec![Load::new(1, 2.5)], vec![]],
+        }));
         roundtrip(WireMsg::PeerHello { shard: 3 });
         roundtrip(WireMsg::Hello {
             peer_addr: "127.0.0.1:4510".into(),
         });
         roundtrip(WireMsg::Report(Report::Error {
+            job: Some(4),
             shard: 2,
             round: Some(7),
             message: "worker panicked: injected fault".into(),
         }));
         roundtrip(WireMsg::Report(Report::Error {
+            job: None,
             shard: 0,
             round: None,
             message: String::new(),
@@ -724,6 +814,7 @@ mod tests {
     fn f64_bit_patterns_survive() {
         for w in [0.0f64, -0.0, 1.5, 1e-300, 1e300, f64::MIN_POSITIVE] {
             let msg = WireMsg::Peer(ShardMsg::Offer {
+                job: 0,
                 round: 1,
                 edge: 2,
                 loads: vec![Load::new(9, w)],
@@ -744,6 +835,7 @@ mod tests {
     #[test]
     fn truncation_is_detected_at_every_cut() {
         let msg = WireMsg::Report(Report::Weights {
+            job: 0,
             shard: 1,
             weights: vec![1.0, 2.0, 3.0],
         });
@@ -813,6 +905,7 @@ mod tests {
         // a Weights report whose element count claims more data than the
         // frame carries must be rejected, not allocated
         let mut payload = Vec::new();
+        put_u32(&mut payload, 0); // job
         put_usize(&mut payload, 0); // shard
         put_usize(&mut payload, u64::MAX as usize); // weight count
         let mut frame = Vec::new();
@@ -832,13 +925,15 @@ mod tests {
     #[test]
     fn io_framing_roundtrips_back_to_back_frames() {
         let msgs = vec![
-            WireMsg::Ctl(Ctl::PollWeights),
+            WireMsg::Ctl(Ctl::PollWeights { job: 0 }),
             WireMsg::Peer(ShardMsg::Settle {
+                job: 2,
                 round: 4,
                 edge: 1,
                 loads: vec![Load::new(1, 2.5), Load::pinned(2, 0.5)],
             }),
             WireMsg::Report(Report::Batch {
+                job: 0,
                 shard: 1,
                 rounds: vec![RoundReport {
                     round: 4,

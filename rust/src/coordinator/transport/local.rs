@@ -141,13 +141,17 @@ mod tests {
             assert_eq!(WorkerTransport::shards(w), 3);
         }
         // leader -> worker control
-        leader.send_ctl(1, Ctl::PollWeights).unwrap();
-        assert!(matches!(workers[1].recv_ctl().unwrap(), Ctl::PollWeights));
+        leader.send_ctl(1, Ctl::PollWeights { job: 0 }).unwrap();
+        assert!(matches!(
+            workers[1].recv_ctl().unwrap(),
+            Ctl::PollWeights { job: 0 }
+        ));
         // worker -> worker peer plane
         workers[0]
             .send_peer(
                 2,
                 ShardMsg::Settle {
+                    job: 0,
                     round: 0,
                     edge: 0,
                     loads: vec![],
@@ -159,6 +163,7 @@ mod tests {
         // worker -> leader reports
         workers[2]
             .send_report(Report::Weights {
+                job: 0,
                 shard: 2,
                 weights: vec![1.0],
             })

@@ -22,10 +22,13 @@
 //!    receiver arrive in send order (mpsc channels and TCP streams are
 //!    both ordered).
 //! 2. **Sends never block indefinitely** — the local backend's channels
-//!    are unbounded; the TCP backend pairs every socket with a dedicated
-//!    reader thread draining into an unbounded in-process queue, so the
-//!    kernel's socket buffers can always empty and a write can always
-//!    complete.
+//!    are unbounded; the TCP backend runs every socket nonblocking under
+//!    one readiness [`poll`]er per endpoint, buffering writes that would
+//!    block and retrying them on every poll pass, so the kernel's socket
+//!    buffers can always empty and a send always completes or fails —
+//!    it never wedges.  (Earlier revisions paired each socket with a
+//!    detached reader thread; the poller replaced those, so a leader or
+//!    worker is exactly one thread with zero I/O helpers to leak.)
 //!
 //! Failures are *values*, not panics: every operation returns a
 //! [`TransportError`] that the coordinator maps onto its existing
@@ -34,6 +37,7 @@
 
 pub mod codec;
 pub mod local;
+pub mod poll;
 pub mod tcp;
 
 use super::messages::{Ctl, Report, ShardMsg};

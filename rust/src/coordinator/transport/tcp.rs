@@ -28,15 +28,21 @@
 //!
 //! # Blocking and ordering
 //!
-//! Every socket gets a dedicated reader thread that decodes frames into
-//! an unbounded in-process queue, which restores the two guarantees the
-//! protocol needs from a transport: FIFO per directed link (TCP is
-//! ordered) and sends that cannot block indefinitely (the reader threads
-//! keep the kernel's socket buffers draining).  Determinism is untouched
-//! because the codec round-trips every `f64` bit-exactly and no RNG
-//! state ever crosses a message — a loopback-TCP cluster run is
-//! **bit-identical** to `bcm::Sequential` (asserted by
-//! `tests/tcp_cluster.rs`, which spawns real worker processes).
+//! After the (blocking) handshake, every socket of an endpoint runs
+//! nonblocking under one [`Poller`](super::poll::Poller): the leader
+//! polls all `k` worker connections from its own thread, and each worker
+//! polls its leader connection plus its whole peer mesh.  A blocked
+//! receive (`recv_report`, `recv_ctl`, `recv_peer`) therefore keeps
+//! draining **every** connection — frames destined for the other queue
+//! are buffered, which preserves the pipelining the old per-socket
+//! reader threads provided — and every poll pass retries buffered
+//! writes, so sends never block indefinitely either.  No helper threads
+//! exist anymore: shutting an endpoint down leaks nothing (asserted by
+//! `tests/service_teardown.rs`).  Determinism is untouched because the
+//! codec round-trips every `f64` bit-exactly and no RNG state ever
+//! crosses a message — a loopback-TCP cluster run is **bit-identical**
+//! to `bcm::Sequential` (asserted by `tests/tcp_cluster.rs`, which
+//! spawns real worker processes).
 //!
 //! # Failure mapping
 //!
@@ -50,6 +56,7 @@
 //! failure-mode table lives in DESIGN.md §6.
 
 use super::codec::{read_frame, write_frame, Init, WireMsg};
+use super::poll::{Event, Poller};
 use super::{LeaderTransport, TransportError, WorkerTransport};
 use crate::anyhow;
 use crate::balancer::PairAlgorithm;
@@ -58,9 +65,9 @@ use crate::coordinator::shard::{RoundPlan, ShardPlan};
 use crate::coordinator::worker::ShardWorker;
 use crate::load::Load;
 use crate::util::error::{Context, Result};
+use std::collections::VecDeque;
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -77,7 +84,7 @@ pub const DEFAULT_CONNECT_RETRIES: usize = 40;
 /// Dial `addr`, retrying on transient refusal so workers can start
 /// before the other side has bound its socket.  Permanent errors (bad
 /// address, permission) fail fast instead of burning the retry budget.
-fn connect_with_retry(addr: &str, retries: usize) -> io::Result<TcpStream> {
+pub(crate) fn connect_with_retry(addr: &str, retries: usize) -> io::Result<TcpStream> {
     let attempts = retries.max(1);
     let mut last: Option<io::Error> = None;
     for i in 0..attempts {
@@ -136,7 +143,7 @@ fn accept_with_deadline(
 }
 
 /// Read one frame with a bounded wait (used only during handshakes;
-/// steady-state reads run on dedicated reader threads with no timeout).
+/// steady-state reads run nonblocking under the poller).
 fn read_frame_timed(stream: &mut TcpStream, what: &str) -> Result<WireMsg> {
     stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let msg = read_frame(stream).with_context(|| format!("reading {what}"))?;
@@ -181,16 +188,24 @@ pub struct InitPayload {
     pub nodes: Vec<Vec<Load>>,
 }
 
-/// The leader's TCP endpoint: one connected socket per worker plus the
-/// merged report queue fed by the per-socket reader threads.
+/// The leader's TCP endpoint: one connected socket per worker, all
+/// polled nonblocking from the leader's own thread.
 pub struct TcpLeader {
-    workers: Vec<TcpStream>,
-    report_rx: Receiver<Report>,
+    poller: Poller,
+    /// Poller token per shard.
+    tokens: Vec<usize>,
+    /// Shard sent its terminal report (`Final`/`Error`, possibly
+    /// synthesized from a lost connection); ignore anything further.
+    done: Vec<bool>,
+    /// Reports decoded but not yet handed to the caller.
+    queue: VecDeque<Report>,
+    events: VecDeque<Event>,
 }
 
 impl TcpLeader {
     /// Accept `inits.len()` workers on `listener`, then complete the
-    /// handshake (collect `Hello`s, send `Init`s, start reader threads).
+    /// handshake (collect `Hello`s, send `Init`s, register the sockets
+    /// with the poller).
     pub fn accept(listener: LeaderListener, inits: Vec<InitPayload>) -> Result<TcpLeader> {
         let k = inits.len();
         let mut conns = Vec::with_capacity(k);
@@ -246,59 +261,88 @@ impl TcpLeader {
             write_frame(stream, &msg)
                 .with_context(|| format!("sending Init to worker {shard}"))?;
         }
-        // one reader thread per worker socket, all feeding one queue
-        let (report_tx, report_rx) = channel::<Report>();
-        for (shard, stream) in conns.iter().enumerate() {
-            let reader = stream.try_clone().context("cloning worker socket")?;
-            let tx = report_tx.clone();
-            std::thread::spawn(move || leader_reader(shard, reader, tx));
+        // hand every socket to the poller; from here on the leader
+        // thread is the only reader and writer
+        let mut poller = Poller::new();
+        let mut tokens = Vec::with_capacity(k);
+        for stream in conns {
+            tokens.push(
+                poller
+                    .add_frame_conn(stream)
+                    .context("registering a worker socket")?,
+            );
         }
-        drop(report_tx);
         Ok(TcpLeader {
-            workers: conns,
-            report_rx,
+            poller,
+            tokens,
+            done: vec![false; k],
+            queue: VecDeque::new(),
+            events: VecDeque::new(),
         })
     }
-}
 
-/// Decode report frames from one worker socket into the shared queue.
-/// A connection loss is synthesized into a `Report::Error` naming the
-/// shard, so a killed worker process trips the leader's fail-stop path
-/// instead of a bare timeout.  After forwarding a `Final` or an `Error`
-/// the worker is done by protocol, so the inevitable EOF that follows
-/// is *not* reported as a failure.
-fn leader_reader(shard: usize, mut stream: TcpStream, tx: Sender<Report>) {
-    loop {
-        match read_frame(&mut stream) {
-            Ok(WireMsg::Report(report)) => {
-                let last = matches!(report, Report::Final { .. } | Report::Error { .. });
-                if tx.send(report).is_err() || last {
+    fn shard_of(&self, token: usize) -> Option<usize> {
+        self.tokens.iter().position(|&t| t == token)
+    }
+
+    /// Turn one poller event into zero or more queued reports.  A
+    /// connection loss is synthesized into a `Report::Error` naming the
+    /// shard, so a killed worker process trips the leader's fail-stop
+    /// path instead of a bare timeout.  After a `Final` or an `Error`
+    /// the worker is done by protocol, so the inevitable EOF that
+    /// follows is *not* reported as a failure.
+    fn absorb(&mut self, ev: Event) {
+        match ev {
+            Event::Frame { token, msg } => {
+                let Some(shard) = self.shard_of(token) else {
+                    return;
+                };
+                if self.done[shard] {
                     return;
                 }
+                match msg {
+                    WireMsg::Report(report) => {
+                        if matches!(report, Report::Final { .. } | Report::Error { .. }) {
+                            self.done[shard] = true;
+                            self.poller.set_done(token);
+                        }
+                        self.queue.push_back(report);
+                    }
+                    other => {
+                        self.done[shard] = true;
+                        self.poller.set_done(token);
+                        self.queue.push_back(Report::Error {
+                            job: None,
+                            shard,
+                            round: None,
+                            message: format!("protocol violation: unexpected frame {other:?}"),
+                        });
+                    }
+                }
             }
-            Ok(other) => {
-                let _ = tx.send(Report::Error {
+            Event::Closed { token, reason } => {
+                let Some(shard) = self.shard_of(token) else {
+                    return;
+                };
+                if self.done[shard] {
+                    return;
+                }
+                self.done[shard] = true;
+                self.queue.push_back(Report::Error {
+                    job: None,
                     shard,
                     round: None,
-                    message: format!("protocol violation: unexpected frame {other:?}"),
+                    message: format!("worker connection lost: {reason}"),
                 });
-                return;
             }
-            Err(e) => {
-                let _ = tx.send(Report::Error {
-                    shard,
-                    round: None,
-                    message: format!("worker connection lost: {e}"),
-                });
-                return;
-            }
+            _ => {}
         }
     }
 }
 
 impl LeaderTransport for TcpLeader {
     fn shards(&self) -> usize {
-        self.workers.len()
+        self.tokens.len()
     }
 
     fn send_ctl(&mut self, shard: usize, msg: Ctl) -> Result<(), TransportError> {
@@ -309,6 +353,7 @@ impl LeaderTransport for TcpLeader {
         // the shared Arc table untouched (zero-copy anyway).
         let msg = match msg {
             Ctl::RunBatch {
+                job,
                 start_round,
                 rounds,
                 seed,
@@ -327,6 +372,7 @@ impl LeaderTransport for TcpLeader {
                     })
                     .collect();
                 Ctl::RunBatch {
+                    job,
                     start_round,
                     rounds,
                     seed,
@@ -335,18 +381,32 @@ impl LeaderTransport for TcpLeader {
             }
             other => other,
         };
-        write_frame(&mut self.workers[shard], &WireMsg::Ctl(msg)).map_err(|e| {
-            TransportError::Closed(format!("worker {shard} connection closed: {e}"))
-        })
+        self.poller
+            .send(self.tokens[shard], &WireMsg::Ctl(msg))
+            .map_err(|e| {
+                TransportError::Closed(format!("worker {shard} connection closed: {e}"))
+            })
     }
 
     fn recv_report(&mut self, wait: Duration) -> Result<Report, TransportError> {
-        match self.report_rx.recv_timeout(wait) {
-            Ok(r) => Ok(r),
-            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
-            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
-                "all cluster worker connections closed".to_string(),
-            )),
+        let deadline = Instant::now() + wait;
+        loop {
+            if let Some(r) = self.queue.pop_front() {
+                return Ok(r);
+            }
+            if self.done.iter().all(|&d| d) {
+                return Err(TransportError::Closed(
+                    "all cluster worker connections closed".to_string(),
+                ));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            self.poller.poll(deadline - now, &mut self.events);
+            while let Some(ev) = self.events.pop_front() {
+                self.absorb(ev);
+            }
         }
     }
 }
@@ -363,15 +423,90 @@ enum PeerEvent {
     Gone { peer: usize, reason: String },
 }
 
-/// A worker's TCP endpoint: the leader socket (reports out, control
-/// frames in via a reader thread) and one mesh socket per peer shard.
+/// A worker's TCP endpoint: the leader socket plus one mesh socket per
+/// peer shard, all polled nonblocking from the worker's own thread.
+///
+/// Any blocked receive drains **all** connections: control frames
+/// arriving while the worker waits for peer traffic (and vice versa)
+/// queue up instead of stalling the sender, which is what lets a fast
+/// shard run ahead within a batch.
 pub struct TcpWorker {
     shard: usize,
     shards_total: usize,
-    leader: TcpStream,
-    ctl_rx: Receiver<CtlEvent>,
-    peers: Vec<Option<TcpStream>>,
-    peer_rx: Receiver<PeerEvent>,
+    poller: Poller,
+    leader_tok: usize,
+    /// Poller token per peer shard (`None` for self / no link).
+    peer_toks: Vec<Option<usize>>,
+    ctl_q: VecDeque<CtlEvent>,
+    peer_q: VecDeque<PeerEvent>,
+    events: VecDeque<Event>,
+}
+
+impl TcpWorker {
+    fn peer_of(&self, token: usize) -> Option<usize> {
+        self.peer_toks.iter().position(|&t| t == Some(token))
+    }
+
+    /// Route one poller event to the control or peer queue.
+    fn absorb(&mut self, ev: Event) {
+        match ev {
+            Event::Frame { token, msg } if token == self.leader_tok => match msg {
+                WireMsg::Ctl(ctl) => {
+                    if matches!(ctl, Ctl::Shutdown) {
+                        // the leader closes the socket after Shutdown;
+                        // that EOF is expected, not a failure
+                        self.poller.set_done(self.leader_tok);
+                    }
+                    self.ctl_q.push_back(CtlEvent::Msg(Box::new(ctl)));
+                }
+                other => {
+                    self.poller.set_done(self.leader_tok);
+                    self.ctl_q.push_back(CtlEvent::Gone(format!(
+                        "protocol violation: unexpected frame from leader: {other:?}"
+                    )));
+                }
+            },
+            Event::Frame { token, msg } => {
+                let Some(peer) = self.peer_of(token) else {
+                    return;
+                };
+                match msg {
+                    WireMsg::Peer(m) => self.peer_q.push_back(PeerEvent::Msg(m)),
+                    other => {
+                        self.poller.set_done(token);
+                        self.peer_q.push_back(PeerEvent::Gone {
+                            peer,
+                            reason: format!("protocol violation: unexpected frame {other:?}"),
+                        });
+                    }
+                }
+            }
+            Event::Closed { token, reason } => {
+                if token == self.leader_tok {
+                    self.ctl_q
+                        .push_back(CtlEvent::Gone(format!("leader connection lost: {reason}")));
+                } else if let Some(peer) = self.peer_of(token) {
+                    self.peer_q.push_back(PeerEvent::Gone { peer, reason });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn pump(&mut self, wait: Duration) {
+        self.poller.poll(wait, &mut self.events);
+        while let Some(ev) = self.events.pop_front() {
+            self.absorb(ev);
+        }
+    }
+
+    /// All mesh links down (or none ever existed) with nothing queued —
+    /// the poller equivalent of the old "every peer reader exited".
+    fn peers_gone(&self) -> bool {
+        self.peer_toks
+            .iter()
+            .all(|t| t.map_or(true, |tok| self.poller.is_closed(tok)))
+    }
 }
 
 impl WorkerTransport for TcpWorker {
@@ -384,45 +519,63 @@ impl WorkerTransport for TcpWorker {
     }
 
     fn recv_ctl(&mut self) -> Result<Ctl, TransportError> {
-        match self.ctl_rx.recv() {
-            Ok(CtlEvent::Msg(c)) => Ok(*c),
-            Ok(CtlEvent::Gone(reason)) => Err(TransportError::Closed(reason)),
-            Err(_) => Err(TransportError::Closed(
-                "leader connection closed".to_string(),
-            )),
+        loop {
+            match self.ctl_q.pop_front() {
+                Some(CtlEvent::Msg(c)) => return Ok(*c),
+                Some(CtlEvent::Gone(reason)) => return Err(TransportError::Closed(reason)),
+                None => {}
+            }
+            if self.poller.is_closed(self.leader_tok) {
+                return Err(TransportError::Closed(
+                    "leader connection closed".to_string(),
+                ));
+            }
+            self.pump(Duration::from_millis(100));
         }
     }
 
     fn send_report(&mut self, msg: Report) -> Result<(), TransportError> {
-        write_frame(&mut self.leader, &WireMsg::Report(msg))
+        self.poller
+            .send(self.leader_tok, &WireMsg::Report(msg))
             .map_err(|e| TransportError::Closed(format!("leader connection closed: {e}")))
     }
 
     fn send_peer(&mut self, peer: usize, msg: ShardMsg) -> Result<(), TransportError> {
-        let stream = self.peers[peer]
-            .as_mut()
+        let token = self.peer_toks[peer]
             .ok_or_else(|| TransportError::Closed(format!("no mesh link to shard {peer}")))?;
-        write_frame(stream, &WireMsg::Peer(msg)).map_err(|e| {
+        self.poller.send(token, &WireMsg::Peer(msg)).map_err(|e| {
             TransportError::Closed(format!("peer shard {peer} connection closed: {e}"))
         })
     }
 
     fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError> {
-        match self.peer_rx.recv_timeout(wait) {
-            Ok(PeerEvent::Msg(m)) => Ok(m),
-            Ok(PeerEvent::Gone { peer, reason }) => Err(TransportError::Closed(format!(
-                "peer shard {peer} disconnected: {reason}"
-            ))),
-            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
-            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
-                "peer reader threads terminated".to_string(),
-            )),
+        let deadline = Instant::now() + wait;
+        loop {
+            match self.peer_q.pop_front() {
+                Some(PeerEvent::Msg(m)) => return Ok(m),
+                Some(PeerEvent::Gone { peer, reason }) => {
+                    return Err(TransportError::Closed(format!(
+                        "peer shard {peer} disconnected: {reason}"
+                    )))
+                }
+                None => {}
+            }
+            if self.peers_gone() {
+                return Err(TransportError::Closed(
+                    "all peer connections closed".to_string(),
+                ));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            self.pump(deadline - now);
         }
     }
 }
 
 /// Everything a worker process learned from its `Init` frame, needed to
-/// construct the [`ShardWorker`] around the transport.
+/// install the bootstrap job (job 0) on the [`ShardWorker`].
 pub struct WorkerSeed {
     /// Assigned shard index.
     pub shard: usize,
@@ -438,7 +591,7 @@ pub struct WorkerSeed {
 
 /// Complete a worker's side of the handshake over an established leader
 /// connection: bind the peer listener, send `Hello`, await `Init`,
-/// build the mesh, and start the reader threads.
+/// build the mesh, and register every socket with the worker's poller.
 fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
     leader.set_nodelay(true).ok();
     // the peer listener lives on whatever interface reaches the leader
@@ -482,26 +635,31 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
             other => return Err(anyhow!("mesh: expected PeerHello, got {other:?}")),
         }
     }
-    // reader threads: leader frames -> ctl queue, peer frames -> peer queue
-    let (ctl_tx, ctl_rx) = channel::<CtlEvent>();
-    let leader_reader_stream = leader.try_clone().context("cloning the leader socket")?;
-    std::thread::spawn(move || worker_ctl_reader(leader_reader_stream, ctl_tx));
-    let (peer_tx, peer_rx) = channel::<PeerEvent>();
-    for (p, slot) in peers.iter().enumerate() {
+    // every socket goes nonblocking under one poller; the worker thread
+    // is its own reader from here on
+    let mut poller = Poller::new();
+    let leader_tok = poller
+        .add_frame_conn(leader)
+        .context("registering the leader socket")?;
+    let mut peer_toks: Vec<Option<usize>> = (0..k).map(|_| None).collect();
+    for (p, slot) in peers.into_iter().enumerate() {
         if let Some(stream) = slot {
-            let reader = stream.try_clone().context("cloning a peer socket")?;
-            let tx = peer_tx.clone();
-            std::thread::spawn(move || worker_peer_reader(p, reader, tx));
+            peer_toks[p] = Some(
+                poller
+                    .add_frame_conn(stream)
+                    .context("registering a peer socket")?,
+            );
         }
     }
-    drop(peer_tx);
     let transport = TcpWorker {
         shard: me,
         shards_total: k,
-        leader,
-        ctl_rx,
-        peers,
-        peer_rx,
+        poller,
+        leader_tok,
+        peer_toks,
+        ctl_q: VecDeque::new(),
+        peer_q: VecDeque::new(),
+        events: VecDeque::new(),
     };
     let seed = WorkerSeed {
         shard: init.shard,
@@ -511,60 +669,6 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
         nodes: init.nodes,
     };
     Ok((transport, seed))
-}
-
-/// Decode control frames from the leader socket into the ctl queue.
-/// After forwarding `Shutdown` the connection's end-of-life EOF is
-/// expected and not reported.
-fn worker_ctl_reader(mut stream: TcpStream, tx: Sender<CtlEvent>) {
-    loop {
-        match read_frame(&mut stream) {
-            Ok(WireMsg::Ctl(ctl)) => {
-                let last = matches!(ctl, Ctl::Shutdown);
-                if tx.send(CtlEvent::Msg(Box::new(ctl))).is_err() || last {
-                    return;
-                }
-            }
-            Ok(other) => {
-                let _ = tx.send(CtlEvent::Gone(format!(
-                    "protocol violation: unexpected frame from leader: {other:?}"
-                )));
-                return;
-            }
-            Err(e) => {
-                let _ = tx.send(CtlEvent::Gone(format!("leader connection lost: {e}")));
-                return;
-            }
-        }
-    }
-}
-
-/// Decode peer frames from one mesh socket into the peer queue; EOF or
-/// a decode failure becomes a `Gone` event naming the peer.
-fn worker_peer_reader(peer: usize, mut stream: TcpStream, tx: Sender<PeerEvent>) {
-    loop {
-        match read_frame(&mut stream) {
-            Ok(WireMsg::Peer(msg)) => {
-                if tx.send(PeerEvent::Msg(msg)).is_err() {
-                    return;
-                }
-            }
-            Ok(other) => {
-                let _ = tx.send(PeerEvent::Gone {
-                    peer,
-                    reason: format!("protocol violation: unexpected frame {other:?}"),
-                });
-                return;
-            }
-            Err(e) => {
-                let _ = tx.send(PeerEvent::Gone {
-                    peer,
-                    reason: e.to_string(),
-                });
-                return;
-            }
-        }
-    }
 }
 
 // ------------------------------------------------------- worker process
@@ -599,14 +703,8 @@ fn serve(leader: TcpStream) -> Result<()> {
         seed.lo,
         seed.lo + seed.nodes.len()
     );
-    let worker = ShardWorker {
-        shard: seed.shard,
-        lo: seed.lo,
-        nodes: seed.nodes,
-        algo,
-        transport: Box::new(transport),
-        fail_at_round: None,
-    };
+    let mut worker = ShardWorker::new(Box::new(transport));
+    worker.install_job(0, seed.lo, seed.nodes, algo);
     // only a clean Ctl::Shutdown lifecycle exits 0 — scripts and
     // orchestrators keyed on the exit code must see failures
     worker

@@ -1,4 +1,5 @@
-//! A shard worker = one core owning a contiguous slice of processors.
+//! A shard worker = one core owning a contiguous slice of processors —
+//! for each job it participates in.
 //!
 //! Owns its nodes' load lists exclusively; all interaction goes through
 //! its [`WorkerTransport`] (in-process channels or TCP sockets — the
@@ -10,9 +11,23 @@
 //! randomness from `Pcg64::for_edge(seed, round, edge)`, so a sharded run
 //! is bit-identical to `bcm::Sequential` for any shard count.
 //!
+//! # Jobs
+//!
+//! Since the multi-tenant service, one worker serves any number of
+//! **jobs** — independent `(LoadState slice, algorithm, seed)` tenants
+//! multiplexed over the same transport.  Jobs are installed by
+//! [`Ctl::OpenJob`] (or at spawn time for the classic single-job paths,
+//! which use job `0`), retired by [`Ctl::CloseJob`], and fail
+//! *independently*: a panic or dead peer inside one job's batch sends a
+//! job-scoped [`Report::Error`] and retires that job, while every other
+//! job keeps its state and its bit-identical trace.  Determinism per job
+//! is untouched by the interleaving because each job's RNG streams are
+//! keyed by its own `(seed, round, edge)` and its loads never mix with
+//! another job's.
+//!
 //! # The batched round state machine
 //!
-//! A [`Ctl::RunBatch`] carries `B` rounds, with every round's
+//! A [`Ctl::RunBatch`] carries `B` rounds of one job, with every round's
 //! [`ShardPlan`] already on hand (the plans are known in advance because
 //! the BCM schedule is a fixed periodic matching sequence, so the leader
 //! ships the whole per-color plan table with the batch).  The worker
@@ -29,10 +44,13 @@
 //! Within a batch no state touches the leader, so shards proceed at
 //! their own pace, synchronized only by the cut edges they share: a fast
 //! shard's round `r+1` traffic reaching a peer still collecting round
-//! `r` is stashed by round tag and served when the peer gets there.
-//! Rounds still execute in order *per shard* (round `r+1` offers draw on
-//! loads settled in round `r`), which is exactly the data dependency
-//! that keeps the pipeline bit-identical to the lock-step execution.
+//! `r` is stashed by `(job, round)` tag and served when the peer gets
+//! there — as is traffic for a *different* job, including one whose
+//! `OpenJob` this worker has not processed yet (control and peer links
+//! have no cross-channel ordering).  Rounds still execute in order *per
+//! shard per job* (round `r+1` offers draw on loads settled in round
+//! `r`), which is exactly the data dependency that keeps the pipeline
+//! bit-identical to the lock-step execution.
 
 use super::messages::{Ctl, Report, RoundReport, ShardMsg};
 use super::shard::{RoundPlan, ShardPlan};
@@ -40,7 +58,7 @@ use super::transport::{TransportError, WorkerTransport};
 use crate::balancer::{balance_pool, PairAlgorithm, SortAlgo};
 use crate::load::Load;
 use crate::util::rng::Pcg64;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Duration;
@@ -78,30 +96,50 @@ impl WorkerAlgo {
     }
 }
 
-/// One coordinator worker owning the contiguous node range
-/// `lo..lo + nodes.len()`.
+/// One job's state on one worker: a contiguous slice of that job's
+/// nodes plus the algorithm it runs.
+struct JobState {
+    /// First node id owned; `nodes[i]` holds node `lo + i`.
+    lo: usize,
+    /// Per-node load lists, owned exclusively by this worker.
+    nodes: Vec<Vec<Load>>,
+    /// Local balancing algorithm run on every matched edge.
+    algo: PairAlgorithm,
+}
+
+/// One coordinator worker multiplexing any number of jobs over a single
+/// [`WorkerTransport`].
 ///
 /// All communication — the leader's control/report plane and the peer
-/// data plane — goes through the worker's [`WorkerTransport`], so the
-/// same round loop runs unchanged whether the worker is a thread of the
-/// leader process (the [`local`](super::transport::local) backend) or a
+/// data plane — goes through the worker's transport, so the same round
+/// loop runs unchanged whether the worker is a thread of the leader
+/// process (the [`local`](super::transport::local) backend) or a
 /// separate OS process speaking TCP
 /// ([`tcp`](super::transport::tcp)).
 pub struct ShardWorker {
-    /// This worker's shard index.
-    pub shard: usize,
-    /// First node id owned; `nodes[i]` holds node `lo + i`.
-    pub lo: usize,
-    /// Per-node load lists, owned exclusively by this worker.
-    pub nodes: Vec<Vec<Load>>,
-    /// Local balancing algorithm run on every matched edge.
-    pub algo: PairAlgorithm,
-    /// The worker's communication endpoints (control, reports, peers).
-    pub transport: Box<dyn WorkerTransport>,
-    /// Fault injection for tests: panic at the start of this global
-    /// round, exercising the mid-batch failure contract.  Always `None`
-    /// in production spawns.
-    pub fail_at_round: Option<usize>,
+    shard: usize,
+    transport: Box<dyn WorkerTransport>,
+    /// Open jobs by id.
+    jobs: BTreeMap<u32, JobState>,
+    /// Ids that were opened and since closed or failed; their late peer
+    /// traffic is dropped silently.
+    retired: BTreeSet<u32>,
+    /// Peer messages that arrived ahead of this worker's pipeline
+    /// position, keyed `(job, round, edge)`.  An Offer and a Settle can
+    /// never collide: for a given key this shard is either the master
+    /// (receives the Offer) or the slave (receives the Settle).
+    stash: BTreeMap<(u32, usize, usize), ShardMsg>,
+    /// Fault injection for tests: panic at the start of this job's
+    /// global round, exercising the mid-batch failure contract.  Always
+    /// `None` in production spawns.
+    fault: Option<(u32, usize)>,
+    /// Test override for the peer-collect wait (production uses
+    /// `peer_timeout(batch)`).
+    peer_wait: Option<Duration>,
+    /// First job failure, kept so a worker *process* exits nonzero
+    /// after an abnormal lifecycle even though it served other jobs to
+    /// completion.
+    first_failure: Option<String>,
 }
 
 /// One color's resolved work for a shard: the plan slice plus the
@@ -134,14 +172,74 @@ impl<'a> ColorTask<'a> {
 }
 
 impl ShardWorker {
-    /// Event loop; returns when [`Ctl::Shutdown`] arrives, the leader
-    /// goes away, or a failure is reported.
+    /// A worker with no jobs installed; the shard index comes from the
+    /// transport.
+    pub fn new(transport: Box<dyn WorkerTransport>) -> ShardWorker {
+        ShardWorker {
+            shard: transport.shard(),
+            transport,
+            jobs: BTreeMap::new(),
+            retired: BTreeSet::new(),
+            stash: BTreeMap::new(),
+            fault: None,
+            peer_wait: None,
+            first_failure: None,
+        }
+    }
+
+    /// Install a job before (or instead of) its `Ctl::OpenJob` — the
+    /// classic single-job spawn paths install job `0` this way.
+    pub fn install_job(&mut self, job: u32, lo: usize, nodes: Vec<Vec<Load>>, algo: PairAlgorithm) {
+        self.jobs.insert(job, JobState { lo, nodes, algo });
+    }
+
+    /// Test hook: panic at the start of `round` of `job`.
+    #[doc(hidden)]
+    pub fn set_fault(&mut self, job: u32, round: usize) {
+        self.fault = Some((job, round));
+    }
+
+    /// Test hook: cap the peer-collect wait so dead-peer paths resolve
+    /// in test time rather than `PEER_TIMEOUT`.
+    #[doc(hidden)]
+    pub fn set_peer_wait(&mut self, wait: Duration) {
+        self.peer_wait = Some(wait);
+    }
+
+    /// Retire a job: drop its state and purge its stashed traffic.
+    fn retire(&mut self, job: u32) {
+        self.jobs.remove(&job);
+        self.retired.insert(job);
+        self.stash
+            .retain(|&(j, _, _), _| j != job);
+    }
+
+    fn job_failed(&mut self, job: u32, round: Option<usize>, message: String) {
+        let rendered = match round {
+            Some(r) => format!("failed at round {r}: {message}"),
+            None => message.clone(),
+        };
+        if self.first_failure.is_none() {
+            self.first_failure = Some(rendered);
+        }
+        self.retire(job);
+        let _ = self.transport.send_report(Report::Error {
+            job: Some(job),
+            shard: self.shard,
+            round,
+            message,
+        });
+    }
+
+    /// Event loop; returns when [`Ctl::Shutdown`] arrives or the leader
+    /// goes away.  Job-scoped failures retire the job and keep the
+    /// worker serving its other tenants.
     ///
-    /// `Ok(())` means a clean [`Ctl::Shutdown`] lifecycle; every other
-    /// exit returns the failure as `Err`, so a worker *process* can
-    /// translate abnormal termination into a nonzero exit code (thread
-    /// spawns ignore the value — the leader already learned of the
-    /// failure through the report channel).
+    /// `Ok(())` means a clean [`Ctl::Shutdown`] lifecycle with no job
+    /// failures; every other exit returns the (first) failure as `Err`,
+    /// so a worker *process* can translate abnormal termination into a
+    /// nonzero exit code (thread spawns ignore the value — the leader
+    /// already learned of the failure through the report channel).
     pub fn run(mut self) -> Result<(), String> {
         loop {
             let msg = match self.transport.recv_ctl() {
@@ -149,37 +247,82 @@ impl ShardWorker {
                 Err(e) => return Err(format!("control link lost: {e}")),
             };
             match msg {
-                Ctl::RunBatch {
-                    start_round,
-                    rounds,
-                    seed,
-                    plans,
-                } => match self.run_batch(start_round, rounds, seed, &plans) {
-                    Ok(reports) => {
-                        let sent = self.transport.send_report(Report::Batch {
+                Ctl::OpenJob {
+                    job,
+                    lo,
+                    algo,
+                    nodes,
+                } => {
+                    if self.jobs.contains_key(&job) || self.retired.contains(&job) {
+                        self.job_failed(job, None, format!("job {job} already opened"));
+                        continue;
+                    }
+                    match PairAlgorithm::parse(&algo) {
+                        Some(a) => self.install_job(job, lo, nodes, a),
+                        None => {
+                            self.job_failed(job, None, format!("unknown algorithm '{algo}'"));
+                        }
+                    }
+                }
+                Ctl::CloseJob { job } => {
+                    if let Some(mut js) = self.jobs.remove(&job) {
+                        self.retired.insert(job);
+                        self.stash.retain(|&(j, _, _), _| j != job);
+                        let sent = self.transport.send_report(Report::Final {
+                            job,
                             shard: self.shard,
-                            rounds: reports,
+                            nodes: std::mem::take(&mut js.nodes),
                         });
                         if let Err(e) = sent {
                             return Err(format!("report link lost: {e}"));
                         }
                     }
-                    Err((round, message)) => {
-                        let _ = self.transport.send_report(Report::Error {
-                            shard: self.shard,
-                            round: Some(round),
-                            message: message.clone(),
-                        });
-                        return Err(format!("failed at round {round}: {message}"));
+                    // late CloseJob for a failed job: nothing to say
+                }
+                Ctl::RunBatch {
+                    job,
+                    start_round,
+                    rounds,
+                    seed,
+                    plans,
+                } => {
+                    let Some(mut js) = self.jobs.remove(&job) else {
+                        if !self.retired.contains(&job) {
+                            self.job_failed(job, None, format!("batch for unknown job {job}"));
+                        }
+                        continue;
+                    };
+                    match self.run_batch(job, &mut js, start_round, rounds, seed, &plans) {
+                        Ok(reports) => {
+                            self.jobs.insert(job, js);
+                            let sent = self.transport.send_report(Report::Batch {
+                                job,
+                                shard: self.shard,
+                                rounds: reports,
+                            });
+                            if let Err(e) = sent {
+                                return Err(format!("report link lost: {e}"));
+                            }
+                        }
+                        Err((round, message)) => {
+                            self.job_failed(job, Some(round), message);
+                        }
                     }
-                },
-                Ctl::PollWeights => {
-                    let weights = self
+                }
+                Ctl::PollWeights { job } => {
+                    let Some(js) = self.jobs.get(&job) else {
+                        if !self.retired.contains(&job) {
+                            self.job_failed(job, None, format!("weight poll for unknown job {job}"));
+                        }
+                        continue;
+                    };
+                    let weights = js
                         .nodes
                         .iter()
                         .map(|node| node.iter().map(|l| l.weight).sum())
                         .collect();
                     let sent = self.transport.send_report(Report::Weights {
+                        job,
                         shard: self.shard,
                         weights,
                     });
@@ -188,50 +331,55 @@ impl ShardWorker {
                     }
                 }
                 Ctl::Shutdown => {
-                    let _ = self.transport.send_report(Report::Final {
-                        shard: self.shard,
-                        nodes: std::mem::take(&mut self.nodes),
-                    });
-                    return Ok(());
+                    let jobs = std::mem::take(&mut self.jobs);
+                    for (job, mut js) in jobs {
+                        let _ = self.transport.send_report(Report::Final {
+                            job,
+                            shard: self.shard,
+                            nodes: std::mem::take(&mut js.nodes),
+                        });
+                    }
+                    return match self.first_failure.take() {
+                        Some(why) => Err(why),
+                        None => Ok(()),
+                    };
                 }
             }
         }
     }
 
-    /// Execute one batch of rounds; on failure, names the round that
-    /// died.  Panics inside a round (including injected faults) are
-    /// caught and converted into the same `(round, message)` error shape
-    /// so the leader's fail-stop contract survives mid-batch.
+    /// Execute one batch of rounds of one job; on failure, names the
+    /// round that died.  Panics inside a round (including injected
+    /// faults) are caught and converted into the same `(round, message)`
+    /// error shape so the leader's fail-stop contract survives
+    /// mid-batch.
     fn run_batch(
         &mut self,
+        job: u32,
+        js: &mut JobState,
         start_round: usize,
         rounds: usize,
         seed: u64,
         plans: &[Arc<RoundPlan>],
     ) -> Result<Vec<RoundReport>, (usize, String)> {
         let d = plans.len();
-        let wait = peer_timeout(rounds);
+        let wait = self.peer_wait.unwrap_or_else(|| peer_timeout(rounds));
         // At most one lookup-table build per color per batch, shared by
         // every round of that color; filled lazily so a lock-step B=1
         // batch builds exactly the one color it runs.
         let shard = self.shard;
         let mut tasks: Vec<Option<ColorTask<'_>>> = (0..d).map(|_| None).collect();
-        // Peer messages that arrived ahead of our pipeline position,
-        // keyed (round, edge).  An Offer and a Settle can never collide:
-        // for a given (round, edge) this shard is either the master
-        // (receives the Offer) or the slave (receives the Settle).
-        let mut stash: BTreeMap<(usize, usize), ShardMsg> = BTreeMap::new();
         let mut reports = Vec::with_capacity(rounds);
         for round in start_round..start_round + rounds {
             let c = round % d;
             let task = tasks[c]
                 .get_or_insert_with(|| ColorTask::new(&plans[c].per_shard[shard]));
             let caught = catch_unwind(AssertUnwindSafe(|| {
-                self.run_round(seed, round, task, wait, &mut stash)
+                self.run_round(job, js, seed, round, task, wait)
             }));
             match caught {
                 Ok(Ok((movements, peer_msgs))) => {
-                    let (min_weight, max_weight) = self.extremes();
+                    let (min_weight, max_weight) = extremes(js);
                     reports.push(RoundReport {
                         round,
                         movements,
@@ -254,23 +402,25 @@ impl ShardWorker {
     /// edges this shard mastered and the number of peer messages sent.
     fn run_round(
         &mut self,
+        job: u32,
+        js: &mut JobState,
         seed: u64,
         round: usize,
         task: &ColorTask<'_>,
         wait: Duration,
-        stash: &mut BTreeMap<(usize, usize), ShardMsg>,
     ) -> Result<(usize, usize), String> {
-        if self.fail_at_round == Some(round) {
+        if self.fault == Some((job, round)) {
             panic!("injected fault at round {round}");
         }
         let mut peer_msgs = 0usize;
         // State 1 — post offers.  Transport sends never block
-        // indefinitely (unbounded queues; socket buffers drained by
-        // reader threads), so no ordering between shards can deadlock.
+        // indefinitely (unbounded queues; buffered nonblocking socket
+        // writes), so no ordering between shards can deadlock.
         for &(edge, v, master) in &task.plan.slave {
-            let (mobile, pinned) = drain_mobile(&mut self.nodes[v as usize - self.lo]);
+            let (mobile, pinned) = drain_mobile(&mut js.nodes[v as usize - js.lo]);
             peer_msgs += 1;
             let offer = ShardMsg::Offer {
+                job,
                 round,
                 edge,
                 loads: mobile,
@@ -287,16 +437,18 @@ impl ShardWorker {
         let mut movements = 0usize;
         for &(edge, u, v) in &task.plan.local {
             let mut rng = Pcg64::for_edge(seed, round, edge);
-            movements += self.balance_local(&mut rng, u, v);
+            movements += balance_local(js, &mut rng, u, v);
         }
         // State 3 — collect: serve master edges as offers arrive and
         // absorb the settles for slave edges, starting with anything a
         // faster peer already stashed for this round.  Messages for
-        // later rounds of the batch are stashed in turn.
+        // later rounds, or for other jobs (even ones this worker has
+        // not opened yet), are stashed in turn; traffic for retired
+        // jobs is dropped.
         let mut pending_masters = task.masters.len();
         let mut pending_slaves = task.slaves.len();
         while pending_masters > 0 || pending_slaves > 0 {
-            let msg = match take_stashed(stash, round) {
+            let msg = match take_stashed(&mut self.stash, job, round) {
                 Some(m) => m,
                 None => match self.transport.recv_peer(wait) {
                     Ok(m) => m,
@@ -311,11 +463,22 @@ impl ShardWorker {
                     }
                 },
             };
-            let (msg_round, msg_edge) = match &msg {
-                ShardMsg::Offer { round, edge, .. } | ShardMsg::Settle { round, edge, .. } => {
-                    (*round, *edge)
+            let (msg_job, msg_round, msg_edge) = match &msg {
+                ShardMsg::Offer {
+                    job, round, edge, ..
                 }
+                | ShardMsg::Settle {
+                    job, round, edge, ..
+                } => (*job, *round, *edge),
             };
+            if msg_job != job {
+                if !self.retired.contains(&msg_job) {
+                    // another tenant's traffic (possibly for a job whose
+                    // OpenJob is still queued on the control link)
+                    self.stash.insert((msg_job, msg_round, msg_edge), msg);
+                }
+                continue;
+            }
             if msg_round != round {
                 if msg_round < round {
                     return Err(format!(
@@ -325,7 +488,7 @@ impl ShardWorker {
                 }
                 // a peer is running ahead in the pipeline; hold its
                 // message until this shard reaches that round
-                stash.insert((msg_round, msg_edge), msg);
+                self.stash.insert((msg_job, msg_round, msg_edge), msg);
                 continue;
             }
             match msg {
@@ -340,8 +503,16 @@ impl ShardWorker {
                         .get(&edge)
                         .ok_or_else(|| format!("offer for unmastered edge {edge}"))?;
                     let mut rng = Pcg64::for_edge(seed, round, edge);
-                    movements +=
-                        self.balance_master(&mut rng, round, edge, u, (loads, pinned), slave)?;
+                    movements += self.balance_master(
+                        js,
+                        &mut rng,
+                        job,
+                        round,
+                        edge,
+                        u,
+                        (loads, pinned),
+                        slave,
+                    )?;
                     peer_msgs += 1; // the settle just sent
                     pending_masters -= 1;
                 }
@@ -352,7 +523,7 @@ impl ShardWorker {
                         .ok_or_else(|| format!("settle for unslaved edge {edge}"))?;
                     // pinned loads stayed put in state 1; the settled
                     // mobile loads are appended, exactly like the engines.
-                    self.nodes[v as usize - self.lo].extend(loads);
+                    js.nodes[v as usize - js.lo].extend(loads);
                     pending_slaves -= 1;
                 }
             }
@@ -360,29 +531,14 @@ impl ShardWorker {
         Ok((movements, peer_msgs))
     }
 
-    /// Rebalance an intra-shard edge in place.  Pool order (u then v),
-    /// pinned handling and RNG consumption mirror `balance_pair` exactly.
-    fn balance_local(&mut self, rng: &mut Pcg64, u: u32, v: u32) -> usize {
-        let (ui, vi) = (u as usize - self.lo, v as usize - self.lo);
-        let (u_node, v_node) = two_mut(&mut self.nodes, ui, vi);
-        let (u_mobile, u_pinned) = drain_mobile(u_node);
-        let (v_mobile, v_pinned) = drain_mobile(v_node);
-        let pool: Vec<(Load, u8)> = u_mobile
-            .into_iter()
-            .map(|l| (l, 0))
-            .chain(v_mobile.into_iter().map(|l| (l, 1)))
-            .collect();
-        let out = balance_pool(pool, [u_pinned, v_pinned], self.algo, rng);
-        u_node.extend(out.to_u);
-        v_node.extend(out.to_v);
-        out.movements
-    }
-
     /// Rebalance a cross-shard edge from the slave's offer; returns the
     /// movement count after sending the settle.
+    #[allow(clippy::too_many_arguments)]
     fn balance_master(
         &mut self,
+        js: &mut JobState,
         rng: &mut Pcg64,
+        job: u32,
         round: usize,
         edge: usize,
         u: u32,
@@ -390,16 +546,17 @@ impl ShardWorker {
         slave: usize,
     ) -> Result<usize, String> {
         let (their_loads, their_pinned) = offer;
-        let u_node = &mut self.nodes[u as usize - self.lo];
+        let u_node = &mut js.nodes[u as usize - js.lo];
         let (u_mobile, u_pinned) = drain_mobile(u_node);
         let pool: Vec<(Load, u8)> = u_mobile
             .into_iter()
             .map(|l| (l, 0))
             .chain(their_loads.into_iter().map(|l| (l, 1)))
             .collect();
-        let out = balance_pool(pool, [u_pinned, their_pinned], self.algo, rng);
+        let out = balance_pool(pool, [u_pinned, their_pinned], js.algo, rng);
         u_node.extend(out.to_u);
         let settle = ShardMsg::Settle {
+            job,
             round,
             edge,
             loads: out.to_v,
@@ -409,28 +566,50 @@ impl ShardWorker {
             .map_err(|e| format!("peer shard {slave} unreachable (settle, edge {edge}): {e}"))?;
         Ok(out.movements)
     }
-
-    /// `(min, max)` node weight over the shard's nodes; the leader folds
-    /// the shards' extremes into the global discrepancy (f64 min/max are
-    /// exactly associative, so the fold order cannot change the result).
-    fn extremes(&self) -> (f64, f64) {
-        let mut min = f64::INFINITY;
-        let mut max = f64::NEG_INFINITY;
-        for node in &self.nodes {
-            let w: f64 = node.iter().map(|l| l.weight).sum();
-            min = min.min(w);
-            max = max.max(w);
-        }
-        (min, max)
-    }
 }
 
-/// Pop the earliest stashed message belonging to `round`, if any.
+/// Rebalance an intra-shard edge in place.  Pool order (u then v),
+/// pinned handling and RNG consumption mirror `balance_pair` exactly.
+fn balance_local(js: &mut JobState, rng: &mut Pcg64, u: u32, v: u32) -> usize {
+    let (ui, vi) = (u as usize - js.lo, v as usize - js.lo);
+    let (u_node, v_node) = two_mut(&mut js.nodes, ui, vi);
+    let (u_mobile, u_pinned) = drain_mobile(u_node);
+    let (v_mobile, v_pinned) = drain_mobile(v_node);
+    let pool: Vec<(Load, u8)> = u_mobile
+        .into_iter()
+        .map(|l| (l, 0))
+        .chain(v_mobile.into_iter().map(|l| (l, 1)))
+        .collect();
+    let out = balance_pool(pool, [u_pinned, v_pinned], js.algo, rng);
+    u_node.extend(out.to_u);
+    v_node.extend(out.to_v);
+    out.movements
+}
+
+/// `(min, max)` node weight over the shard's nodes; the leader folds
+/// the shards' extremes into the global discrepancy (f64 min/max are
+/// exactly associative, so the fold order cannot change the result).
+fn extremes(js: &JobState) -> (f64, f64) {
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for node in &js.nodes {
+        let w: f64 = node.iter().map(|l| l.weight).sum();
+        min = min.min(w);
+        max = max.max(w);
+    }
+    (min, max)
+}
+
+/// Pop the earliest stashed message belonging to `(job, round)`, if any.
 fn take_stashed(
-    stash: &mut BTreeMap<(usize, usize), ShardMsg>,
+    stash: &mut BTreeMap<(u32, usize, usize), ShardMsg>,
+    job: u32,
     round: usize,
 ) -> Option<ShardMsg> {
-    let key = *stash.range((round, 0)..(round + 1, 0)).next()?.0;
+    let key = *stash
+        .range((job, round, 0)..(job, round + 1, 0))
+        .next()?
+        .0;
     stash.remove(&key)
 }
 
@@ -518,31 +697,45 @@ mod tests {
     }
 
     #[test]
-    fn stash_is_drained_in_round_order() {
-        let mut stash: BTreeMap<(usize, usize), ShardMsg> = BTreeMap::new();
+    fn stash_is_drained_in_job_and_round_order() {
+        let mut stash: BTreeMap<(u32, usize, usize), ShardMsg> = BTreeMap::new();
         stash.insert(
-            (3, 1),
+            (0, 3, 1),
             ShardMsg::Settle {
+                job: 0,
                 round: 3,
                 edge: 1,
                 loads: vec![],
             },
         );
         stash.insert(
-            (2, 5),
+            (0, 2, 5),
             ShardMsg::Offer {
+                job: 0,
                 round: 2,
                 edge: 5,
                 loads: vec![],
                 pinned: 0.0,
             },
         );
-        assert!(take_stashed(&mut stash, 1).is_none());
-        let m = take_stashed(&mut stash, 2).expect("round-2 message stashed");
-        assert!(matches!(m, ShardMsg::Offer { round: 2, edge: 5, .. }));
-        assert!(take_stashed(&mut stash, 2).is_none());
-        let m = take_stashed(&mut stash, 3).expect("round-3 message stashed");
-        assert!(matches!(m, ShardMsg::Settle { round: 3, edge: 1, .. }));
+        // same (round, edge) under a different job must not collide
+        stash.insert(
+            (1, 2, 5),
+            ShardMsg::Settle {
+                job: 1,
+                round: 2,
+                edge: 5,
+                loads: vec![],
+            },
+        );
+        assert!(take_stashed(&mut stash, 0, 1).is_none());
+        let m = take_stashed(&mut stash, 0, 2).expect("round-2 message stashed");
+        assert!(matches!(m, ShardMsg::Offer { job: 0, round: 2, edge: 5, .. }));
+        assert!(take_stashed(&mut stash, 0, 2).is_none());
+        let m = take_stashed(&mut stash, 0, 3).expect("round-3 message stashed");
+        assert!(matches!(m, ShardMsg::Settle { job: 0, round: 3, edge: 1, .. }));
+        let m = take_stashed(&mut stash, 1, 2).expect("job-1 message stashed");
+        assert!(matches!(m, ShardMsg::Settle { job: 1, round: 2, edge: 5, .. }));
         assert!(stash.is_empty());
     }
 

@@ -28,6 +28,7 @@ pub mod config;
 pub mod graph;
 pub mod load;
 pub mod runtime;
+pub mod service;
 pub mod experiments;
 pub mod theory;
 pub mod util;

@@ -14,8 +14,10 @@ use bcm_dlb::experiments::{figures, scaling, validate, SweepParams};
 use bcm_dlb::graph::{round_matrix, spectral, Topology};
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
 use bcm_dlb::runtime::{default_artifacts_dir, DeviceAlgo, Runtime};
+use bcm_dlb::service::{self, ServeOptions, Server};
 use bcm_dlb::theory;
 use bcm_dlb::util::error::Result;
+use bcm_dlb::util::json::Json;
 use bcm_dlb::util::rng::Pcg64;
 use bcm_dlb::util::stats::Welford;
 use bcm_dlb::util::table::{f, Table};
@@ -49,6 +51,8 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "run" => cmd_run(args),
         "cluster-worker" => cmd_cluster_worker(args),
+        "serve" => cmd_serve(args),
+        "submit" => cmd_submit(args),
         "scale" => cmd_scale(args),
         "sweep" => cmd_sweep(args),
         "fig1" | "fig2" | "fig3" | "fig4" | "fig5" => cmd_fig(args),
@@ -109,6 +113,58 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
             .collect();
     }
     Ok(cfg)
+}
+
+/// `bcm-dlb serve`: the multi-tenant balancer service — accept JSON job
+/// specs over a socket and run them concurrently on one shared shard
+/// pool, streaming per-round reports back as JSON lines.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    let opts = ServeOptions {
+        listen: args
+            .get("listen")
+            .unwrap_or(cfg.serve_listen.as_str())
+            .to_string(),
+        max_jobs: args
+            .get_usize("max-jobs", cfg.serve_max_jobs)
+            .map_err(|e| anyhow!(e))?,
+        shards: args.get_usize("shards", 0).map_err(|e| anyhow!(e))?,
+        max_conns: args.get_usize("max-conns", 64).map_err(|e| anyhow!(e))?,
+    };
+    if opts.max_jobs == 0 {
+        return Err(anyhow!("--max-jobs must be >= 1"));
+    }
+    let mut server = Server::bind(opts)?;
+    println!("serving on {}", server.local_addr());
+    server.run()
+}
+
+/// `bcm-dlb submit`: send one job spec (built from the usual run flags)
+/// to a serve instance and stream its event lines to stdout.  Exits
+/// nonzero when the served job ends in an error event.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7412").to_string();
+    let line = if args.has("shutdown") {
+        r#"{"cmd":"shutdown"}"#.to_string()
+    } else {
+        let cfg = config_from_args(args)?;
+        let mut spec = cfg.to_json();
+        if args.has("verify") {
+            if let Json::Obj(o) = &mut spec {
+                o.insert("verify".to_string(), Json::Bool(true));
+            }
+        }
+        spec.to_string()
+    };
+    let mut out = std::io::stdout().lock();
+    if service::submit(&addr, &line, &mut out)? {
+        Ok(())
+    } else {
+        Err(anyhow!("the service reported a job error (see the event stream above)"))
+    }
 }
 
 /// `bcm-dlb cluster-worker`: serve one shard of a TCP cluster, either

@@ -1,0 +1,572 @@
+//! The multi-tenant balancer service behind `bcm-dlb serve`.
+//!
+//! One process, one thread, two event sources: a line-mode
+//! [`Poller`] carrying client connections, and a [`ShardPool`] running
+//! every accepted job on one shared set of shard workers.  The server
+//! alternates short turns over both — accept/parse job specs, schedule
+//! them onto the pool as slots free up, and stream each job's per-round
+//! reports back to its client as JSON lines the moment the pool
+//! surfaces them (via [`LineEmitter`], so no run's report stream is
+//! ever buffered whole).
+//!
+//! # Protocol (JSON lines over TCP)
+//!
+//! A client sends **one** line: either a job spec (the
+//! [`ExperimentConfig`] schema; unknown keys are ignored, plus
+//! `"verify": true` to have the service check the finished run against
+//! `bcm::Sequential`) or `{"cmd": "shutdown"}` to ask the service to
+//! finish its queue and exit.  The server answers with a stream of
+//! event lines, ending the connection after a terminal event:
+//!
+//! | line                                                        | meaning |
+//! |-------------------------------------------------------------|---------|
+//! | `{"event":"accepted"}`                                      | spec parsed; job queued |
+//! | `{"event":"start","job":J,"initial_discrepancy":D}`         | scheduled on the pool |
+//! | `{"event":"round","job":J,"round":R,"color":C,...}`         | one per round, streamed per batch |
+//! | `{"event":"done","job":J,"rounds":R,...,"verified":B}`      | terminal: run complete |
+//! | `{"event":"error","message":M}`                             | terminal: job or spec failed |
+//! | `{"event":"shutdown"}`                                      | terminal: drain acknowledged |
+//!
+//! Each job is seeded exactly like `bcm-dlb run` seeds its first
+//! repetition, so a served run's round stream is **bit-identical** to
+//! `Sequential` with the same spec — concurrency with other tenants
+//! cannot perturb it (per-job RNG streams and load slices; see
+//! `coordinator`).  Job failures are per-connection: one tenant's
+//! panic or dead peer errors that connection only.
+
+use crate::anyhow;
+use crate::balancer::PairAlgorithm;
+use crate::bcm::{Engine, RoundStats, Schedule, Sequential, StopRule};
+use crate::config::ExperimentConfig;
+use crate::coordinator::cluster::{JobEvent, JobSpec, ShardPool};
+use crate::coordinator::transport::poll::{Event, Poller};
+use crate::coordinator::transport::tcp::{connect_with_retry, DEFAULT_CONNECT_RETRIES};
+use crate::load::LoadState;
+use crate::util::error::Result;
+use crate::util::json::{Json, LineEmitter};
+use crate::util::rng::Pcg64;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
+
+/// How the server splits one loop iteration between its two event
+/// sources; small enough that neither side waits noticeably on the
+/// other.
+const CLIENT_POLL: Duration = Duration::from_millis(5);
+const POOL_POLL: Duration = Duration::from_millis(20);
+
+/// `bcm-dlb serve` knobs.
+pub struct ServeOptions {
+    /// Bind address (config key `serve.listen`).
+    pub listen: String,
+    /// Concurrent job slots (config key `serve.max_jobs`); further
+    /// submissions queue.
+    pub max_jobs: usize,
+    /// Pool worker count (`0` = one per core).
+    pub shards: usize,
+    /// Connection cap (active + queued); extras are refused at accept.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            listen: "127.0.0.1:7412".to_string(),
+            max_jobs: 4,
+            shards: 0,
+            max_conns: 64,
+        }
+    }
+}
+
+/// Everything needed to re-run a job against `bcm::Sequential` after
+/// the pool finishes it (`"verify": true` specs only).
+struct VerifySrc {
+    state: LoadState,
+    schedule: Schedule,
+    algo: PairAlgorithm,
+    sweeps: usize,
+    seed: u64,
+}
+
+/// A parsed spec waiting for a job slot.
+struct QueuedJob {
+    spec: JobSpec,
+    verify: Option<VerifySrc>,
+}
+
+/// Per-connection lifecycle.
+enum ConnState {
+    /// Waiting for the client's single spec line.
+    AwaitingSpec,
+    /// Spec parsed; waiting for a job slot.
+    Queued(Box<QueuedJob>),
+    /// Running as this pool job.
+    Running(u32),
+}
+
+struct ClientConn {
+    state: ConnState,
+    /// Terminal event sent; the connection is removed once its output
+    /// buffer drains.
+    done: bool,
+}
+
+/// The serve event loop: one poller for clients, one shard pool for
+/// jobs, one thread for everything.
+pub struct Server {
+    poller: Poller,
+    pool: ShardPool,
+    addr: SocketAddr,
+    max_jobs: usize,
+    max_conns: usize,
+    conns: BTreeMap<usize, ClientConn>,
+    /// Tokens of `Queued` connections, in arrival order.
+    pending: VecDeque<usize>,
+    /// Pool job id -> client token (`None` once the client vanished
+    /// mid-run; the job still completes, its events are discarded).
+    by_job: BTreeMap<u32, Option<usize>>,
+    /// Verification sources for running `--verify` jobs.
+    verify: BTreeMap<u32, VerifySrc>,
+    emitter: LineEmitter<Vec<u8>>,
+    shutting_down: bool,
+}
+
+impl Server {
+    /// Bind the listen socket and spawn the shard pool.  The server
+    /// does not serve until [`run`](Self::run).
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.listen)
+            .map_err(|e| anyhow!("serve: cannot bind {}: {e}", opts.listen))?;
+        let addr = listener.local_addr()?;
+        let mut poller = Poller::new();
+        poller.add_listener(listener)?;
+        Ok(Server {
+            poller,
+            pool: ShardPool::spawn(opts.shards),
+            addr,
+            max_jobs: opts.max_jobs.max(1),
+            max_conns: opts.max_conns.max(1),
+            conns: BTreeMap::new(),
+            pending: VecDeque::new(),
+            by_job: BTreeMap::new(),
+            verify: BTreeMap::new(),
+            emitter: LineEmitter::new(Vec::new()),
+            shutting_down: false,
+        })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports for tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until a client sends `{"cmd":"shutdown"}` and every
+    /// accepted job has drained.  `Err` means the pool itself failed.
+    pub fn run(&mut self) -> Result<()> {
+        let mut events = VecDeque::new();
+        loop {
+            // 1. client side: accepts, spec lines, hangups
+            self.poller.poll(CLIENT_POLL, &mut events);
+            while let Some(ev) = events.pop_front() {
+                self.handle_client_event(ev);
+            }
+            // 2. move queued specs onto free job slots
+            self.schedule_pending();
+            // 3. pool side: job progress -> client streams
+            let job_events = match self.pool.step(POOL_POLL) {
+                Ok(evs) => evs,
+                Err(e) => {
+                    // the pool is gone; tell every client before dying
+                    let toks: Vec<usize> = self.conns.keys().copied().collect();
+                    let msg = e.to_string();
+                    for tok in toks {
+                        self.fail_conn(tok, &msg);
+                    }
+                    self.flush_remaining();
+                    return Err(e);
+                }
+            };
+            for ev in job_events {
+                self.handle_job_event(ev);
+            }
+            // 4. reap connections whose terminal output has drained
+            self.reap_done();
+            // 5. drain-and-exit
+            if self.shutting_down && self.by_job.is_empty() && self.pending.is_empty() {
+                self.flush_remaining();
+                return self.pool.shutdown();
+            }
+        }
+    }
+
+    fn handle_client_event(&mut self, ev: Event) {
+        match ev {
+            Event::Accepted { stream, .. } => {
+                if self.conns.len() >= self.max_conns {
+                    drop(stream); // refuse: at capacity
+                    return;
+                }
+                if let Ok(tok) = self.poller.add_line_conn(stream) {
+                    self.conns.insert(
+                        tok,
+                        ClientConn {
+                            state: ConnState::AwaitingSpec,
+                            done: false,
+                        },
+                    );
+                }
+            }
+            Event::Line { token, line } => self.handle_line(token, &line),
+            Event::Frame { .. } => unreachable!("client connections are line mode"),
+            Event::Closed { token, .. } => {
+                if let Some(conn) = self.conns.remove(&token) {
+                    match conn.state {
+                        ConnState::Queued(_) => self.pending.retain(|&t| t != token),
+                        ConnState::Running(job) => {
+                            // the job runs to completion; drop its stream
+                            if let Some(slot) = self.by_job.get_mut(&job) {
+                                *slot = None;
+                            }
+                        }
+                        ConnState::AwaitingSpec => {}
+                    }
+                }
+                self.poller.remove(token);
+            }
+        }
+    }
+
+    fn handle_line(&mut self, token: usize, line: &str) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        if conn.done || !matches!(conn.state, ConnState::AwaitingSpec) {
+            self.fail_conn(token, "protocol: one spec line per connection");
+            return;
+        }
+        let parsed = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                self.fail_conn(token, &format!("bad job spec: {e}"));
+                return;
+            }
+        };
+        if parsed.get("cmd").as_str() == Some("shutdown") {
+            self.shutting_down = true;
+            self.send_event(token, &Json::obj(vec![("event", "shutdown".into())]));
+            self.finish_conn(token);
+            return;
+        }
+        if self.shutting_down {
+            self.fail_conn(token, "service is shutting down");
+            return;
+        }
+        match build_job(line, &parsed) {
+            Ok(queued) => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.state = ConnState::Queued(Box::new(queued));
+                    self.pending.push_back(token);
+                    self.send_event(token, &Json::obj(vec![("event", "accepted".into())]));
+                }
+            }
+            Err(e) => self.fail_conn(token, &format!("bad job spec: {e}")),
+        }
+    }
+
+    fn schedule_pending(&mut self) {
+        while self.by_job.len() < self.max_jobs {
+            let Some(token) = self.pending.pop_front() else {
+                return;
+            };
+            let Some(conn) = self.conns.get_mut(&token) else {
+                continue; // client hung up while queued
+            };
+            let ConnState::Queued(queued) =
+                std::mem::replace(&mut conn.state, ConnState::AwaitingSpec)
+            else {
+                continue;
+            };
+            let QueuedJob { spec, verify } = *queued;
+            match self.pool.open_job(spec) {
+                Ok(job) => {
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.state = ConnState::Running(job);
+                    }
+                    self.by_job.insert(job, Some(token));
+                    if let Some(v) = verify {
+                        self.verify.insert(job, v);
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    self.fail_conn(token, &msg);
+                }
+            }
+        }
+    }
+
+    fn handle_job_event(&mut self, ev: JobEvent) {
+        match ev {
+            JobEvent::Started {
+                job,
+                initial_discrepancy,
+            } => {
+                if let Some(&Some(token)) = self.by_job.get(&job) {
+                    self.send_event(
+                        token,
+                        &Json::obj(vec![
+                            ("event", "start".into()),
+                            ("job", (job as usize).into()),
+                            ("initial_discrepancy", initial_discrepancy.into()),
+                        ]),
+                    );
+                }
+            }
+            JobEvent::Rounds { job, stats } => {
+                if let Some(&Some(token)) = self.by_job.get(&job) {
+                    for s in &stats {
+                        self.send_event(token, &round_json(job, s));
+                    }
+                }
+            }
+            JobEvent::Finished { job, trace, state } => {
+                let token = self.by_job.remove(&job).flatten();
+                let verified = match self.verify.remove(&job) {
+                    None => false,
+                    Some(src) => {
+                        let mut seq_state = src.state;
+                        let seq_trace = Sequential.run(
+                            &mut seq_state,
+                            &src.schedule,
+                            src.algo,
+                            StopRule::sweeps(src.sweeps),
+                            src.seed,
+                        );
+                        if seq_trace != trace || seq_state != state {
+                            if let Some(token) = token {
+                                self.fail_conn(
+                                    token,
+                                    "served run diverged from the sequential reference",
+                                );
+                            }
+                            return;
+                        }
+                        true
+                    }
+                };
+                if let Some(token) = token {
+                    self.send_event(
+                        token,
+                        &Json::obj(vec![
+                            ("event", "done".into()),
+                            ("job", (job as usize).into()),
+                            ("rounds", trace.rounds.len().into()),
+                            ("final_discrepancy", trace.final_discrepancy().into()),
+                            ("movements", trace.total_movements().into()),
+                            ("verified", verified.into()),
+                        ]),
+                    );
+                    self.finish_conn(token);
+                }
+            }
+            JobEvent::Failed { job, error } => {
+                self.verify.remove(&job);
+                if let Some(Some(token)) = self.by_job.remove(&job) {
+                    self.fail_conn(token, &error);
+                }
+            }
+        }
+    }
+
+    /// Send a terminal error event and mark the connection done.
+    fn fail_conn(&mut self, token: usize, message: &str) {
+        self.send_event(
+            token,
+            &Json::obj(vec![
+                ("event", "error".into()),
+                ("message", message.into()),
+            ]),
+        );
+        self.finish_conn(token);
+    }
+
+    /// Mark a connection terminal; it is removed once its buffered
+    /// output drains ([`reap_done`](Self::reap_done)).
+    fn finish_conn(&mut self, token: usize) {
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.done = true;
+        }
+        // the client closes after the terminal line; don't surface its
+        // EOF as an error
+        self.poller.set_done(token);
+    }
+
+    fn reap_done(&mut self) {
+        // reap a terminal connection once its output drained — or as
+        // soon as its socket died (done suppresses the Closed event, so
+        // this sweep is what frees such slots)
+        let drained: Vec<usize> = self
+            .conns
+            .iter()
+            .filter(|(&t, c)| {
+                c.done && (self.poller.pending_tx(t) == 0 || self.poller.is_closed(t))
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for token in drained {
+            self.conns.remove(&token);
+            self.poller.remove(token);
+        }
+    }
+
+    /// Final flush before exit: give lingering output buffers a bounded
+    /// chance to drain.
+    fn flush_remaining(&mut self) {
+        let mut events = VecDeque::new();
+        for _ in 0..200 {
+            self.reap_done();
+            let waiting = self
+                .conns
+                .iter()
+                .any(|(&t, c)| c.done && self.poller.pending_tx(t) > 0 && !self.poller.is_closed(t));
+            if !waiting {
+                break;
+            }
+            self.poller.poll(Duration::from_millis(5), &mut events);
+            events.clear();
+        }
+    }
+
+    /// Render one JSON value as a line and queue it on the client's
+    /// socket (built through the streaming [`LineEmitter`]; memory
+    /// high-water is this single line).
+    fn send_event(&mut self, token: usize, v: &Json) {
+        self.emitter.get_mut().clear();
+        self.emitter
+            .emit(v)
+            .expect("writing to a Vec cannot fail");
+        let buf = std::mem::take(self.emitter.get_mut());
+        // a vanished client is handled by its Closed event; sends to it
+        // are best-effort
+        let _ = self.poller.send_bytes(token, &buf);
+        *self.emitter.get_mut() = buf;
+    }
+}
+
+/// One round's streamed report line.
+fn round_json(job: u32, s: &RoundStats) -> Json {
+    Json::obj(vec![
+        ("event", "round".into()),
+        ("job", (job as usize).into()),
+        ("round", s.round.into()),
+        ("color", s.color.into()),
+        ("discrepancy", s.discrepancy.into()),
+        ("movements", s.movements.into()),
+        ("edges", s.edges.into()),
+    ])
+}
+
+/// Build the pool job (and its verification source) from a spec line.
+/// Seeding mirrors `bcm-dlb run`'s first repetition exactly, so a
+/// served job reproduces `run --verify` bit-for-bit.
+fn build_job(line: &str, parsed: &Json) -> Result<QueuedJob> {
+    let cfg = ExperimentConfig::from_json_str(line)?;
+    let verify = parsed.get("verify").as_bool().unwrap_or(false);
+    let mut rng = Pcg64::new(cfg.seed);
+    let g = cfg.topology.build(cfg.n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        cfg.n,
+        cfg.loads_per_node,
+        &cfg.distribution,
+        cfg.mobility,
+        &mut rng,
+    );
+    let verify = verify.then(|| VerifySrc {
+        state: state.clone(),
+        schedule: schedule.clone(),
+        algo: cfg.algorithm,
+        sweeps: cfg.sweeps,
+        seed: cfg.seed,
+    });
+    Ok(QueuedJob {
+        spec: JobSpec {
+            state,
+            schedule,
+            algo: cfg.algorithm,
+            sweeps: cfg.sweeps,
+            seed: cfg.seed,
+            batch: cfg.batch_rounds,
+        },
+        verify,
+    })
+}
+
+/// `bcm-dlb submit`: send one spec line to a serve instance, stream its
+/// event lines to `out`, and report how the job ended.  `Ok(true)` is a
+/// clean terminal event (`done` / `shutdown`), `Ok(false)` a served
+/// `error`; transport problems are `Err`.
+pub fn submit(addr: &str, line: &str, out: &mut dyn Write) -> Result<bool> {
+    let mut stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
+        .map_err(|e| anyhow!("submit: cannot reach {addr}: {e}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let reader = BufReader::new(stream);
+    for got in reader.lines() {
+        let got = got.map_err(|e| anyhow!("submit: stream lost: {e}"))?;
+        writeln!(out, "{got}")?;
+        let v = Json::parse(&got)
+            .map_err(|e| anyhow!("submit: unparseable server line: {e}"))?;
+        match v.get("event").as_str() {
+            Some("done") | Some("shutdown") => return Ok(true),
+            Some("error") => return Ok(false),
+            _ => {}
+        }
+    }
+    Err(anyhow!("submit: connection closed before a terminal event"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_job_reads_spec_and_verify_flag() {
+        let line = r#"{"n":8,"loads_per_node":4,"sweeps":2,"seed":9,"verify":true}"#;
+        let parsed = Json::parse(line).unwrap();
+        let q = build_job(line, &parsed).unwrap();
+        assert_eq!(q.spec.state.n(), 8);
+        assert_eq!(q.spec.sweeps, 2);
+        assert_eq!(q.spec.seed, 9);
+        let v = q.verify.expect("verify source captured");
+        assert_eq!(v.state, q.spec.state);
+        assert_eq!(v.sweeps, 2);
+
+        let line = r#"{"n":8}"#;
+        let parsed = Json::parse(line).unwrap();
+        assert!(build_job(line, &parsed).unwrap().verify.is_none());
+
+        let parsed = Json::parse("{}").unwrap();
+        assert!(build_job(r#"{"n":1}"#, &parsed).is_err());
+    }
+
+    #[test]
+    fn round_lines_carry_the_full_roundstats() {
+        let s = RoundStats {
+            round: 3,
+            color: 1,
+            discrepancy: 2.5,
+            movements: 7,
+            edges: 4,
+        };
+        let v = round_json(9, &s);
+        assert_eq!(v.get("event").as_str(), Some("round"));
+        assert_eq!(v.get("job").as_usize(), Some(9));
+        assert_eq!(v.get("round").as_usize(), Some(3));
+        assert_eq!(v.get("discrepancy").as_f64(), Some(2.5));
+    }
+}

@@ -1,7 +1,17 @@
 //! Minimal JSON parser / emitter (serde is not vendored in this image).
 //!
 //! Supports the full JSON grammar minus exotic number forms; used for the
-//! AOT `artifacts/manifest.json`, experiment configs, and result files.
+//! AOT `artifacts/manifest.json`, experiment configs, result files, and
+//! the `bcm-dlb serve` job-spec protocol.
+//!
+//! Because `serve` parses attacker-adjacent input straight off a socket,
+//! the parser enforces the same hostile-input posture as the wire codec's
+//! length guards: nesting deeper than [`MAX_DEPTH`] and string/number
+//! tokens longer than [`MAX_TOKEN`] bytes are rejected with typed errors
+//! ([`JsonErrorKind`]) instead of recursing or allocating unboundedly.
+//! For the streaming side, [`LineEmitter`] writes one value per line
+//! through a reusable buffer, so emitting a long report stream never
+//! buffers more than the single value in flight.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -22,6 +32,7 @@ impl Json {
         let mut p = Parser {
             src: src.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -131,10 +142,34 @@ impl From<Vec<Json>> for Json {
     }
 }
 
+/// Maximum nesting depth the parser accepts.  Deep enough for any real
+/// config or result file; shallow enough that a `[[[[...` bomb off a
+/// socket cannot blow the stack (the parser is recursive-descent).
+pub const MAX_DEPTH: usize = 64;
+
+/// Maximum byte length of a single string or number token.  Mirrors the
+/// wire codec's hostile-length rejection: a forged multi-gigabyte token
+/// fails fast instead of driving allocation.
+pub const MAX_TOKEN: usize = 1 << 20;
+
+/// What class of failure a [`JsonError`] is — callers that serve
+/// untrusted input (the `serve` job-spec reader) distinguish malformed
+/// text from resource-limit rejections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// The text is not well-formed JSON.
+    Syntax,
+    /// Well-formed so far, but nested deeper than [`MAX_DEPTH`].
+    TooDeep,
+    /// A string or number token exceeds [`MAX_TOKEN`] bytes.
+    TokenTooLong,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
+    pub kind: JsonErrorKind,
 }
 
 impl fmt::Display for JsonError {
@@ -148,14 +183,33 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     src: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
+        self.err_kind(JsonErrorKind::Syntax, msg)
+    }
+
+    fn err_kind(&self, kind: JsonErrorKind, msg: &str) -> JsonError {
         JsonError {
             pos: self.pos,
             msg: msg.to_string(),
+            kind,
         }
+    }
+
+    /// Guard a recursion step ([`MAX_DEPTH`]); callers pair it with
+    /// `self.depth -= 1` on the way out.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err_kind(
+                JsonErrorKind::TooDeep,
+                &format!("nesting deeper than {MAX_DEPTH} levels"),
+            ));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -207,6 +261,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.object_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -231,6 +292,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.array_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
@@ -253,6 +321,12 @@ impl<'a> Parser<'a> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
+            if s.len() > MAX_TOKEN {
+                return Err(self.err_kind(
+                    JsonErrorKind::TokenTooLong,
+                    &format!("string longer than {MAX_TOKEN} bytes"),
+                ));
+            }
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
                 Some(b'"') => return Ok(s),
@@ -320,6 +394,12 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        if self.pos - start > MAX_TOKEN {
+            return Err(self.err_kind(
+                JsonErrorKind::TokenTooLong,
+                &format!("number longer than {MAX_TOKEN} bytes"),
+            ));
+        }
         let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)
@@ -351,7 +431,46 @@ impl fmt::Display for Json {
     }
 }
 
-fn write_json(v: &Json, out: &mut String) {
+/// Streaming JSON-lines emitter: one value per `emit`, rendered through
+/// a single reusable buffer and flushed to the sink immediately.  The
+/// high-water memory is the largest *single* value emitted, never the
+/// whole stream — this is what `bcm-dlb serve` uses to stream per-round
+/// reports without buffering a run's worth of output.
+pub struct LineEmitter<W: std::io::Write> {
+    sink: W,
+    buf: String,
+}
+
+impl<W: std::io::Write> LineEmitter<W> {
+    /// Wrap a sink.
+    pub fn new(sink: W) -> LineEmitter<W> {
+        LineEmitter {
+            sink,
+            buf: String::new(),
+        }
+    }
+
+    /// Render `v` and write it to the sink as one `\n`-terminated line.
+    pub fn emit(&mut self, v: &Json) -> std::io::Result<()> {
+        self.buf.clear();
+        write_json(v, &mut self.buf);
+        self.buf.push('\n');
+        self.sink.write_all(self.buf.as_bytes())
+    }
+
+    /// Borrow the underlying sink.
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.sink
+    }
+
+    /// Unwrap back into the sink.
+    pub fn into_inner(self) -> W {
+        self.sink
+    }
+}
+
+/// Render `v` into `out` (compact form, deterministic key order).
+pub fn write_json(v: &Json, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(true) => out.push_str("true"),
@@ -461,5 +580,91 @@ mod tests {
         let s = "quote\" slash\\ nl\n tab\t ctl\u{0001}";
         let v = Json::Str(s.to_string());
         assert_eq!(Json::parse(&v.to_string()).unwrap().as_str().unwrap(), s);
+    }
+
+    #[test]
+    fn depth_limit_rejects_nesting_bombs() {
+        // a bare "[[[[..." prefix must fail fast, not recurse to a
+        // stack overflow
+        let bomb = "[".repeat(MAX_DEPTH * 4);
+        assert_eq!(Json::parse(&bomb).unwrap_err().kind, JsonErrorKind::TooDeep);
+        // exactly at the limit still parses; one past it does not
+        let at = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&at).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert_eq!(Json::parse(&over).unwrap_err().kind, JsonErrorKind::TooDeep);
+        // mixed nesting counts both kinds of container
+        let mixed = "{\"a\":".repeat(MAX_DEPTH + 1) + "1" + &"}".repeat(MAX_DEPTH + 1);
+        assert_eq!(
+            Json::parse(&mixed).unwrap_err().kind,
+            JsonErrorKind::TooDeep
+        );
+    }
+
+    #[test]
+    fn token_limit_rejects_oversized_strings_and_numbers() {
+        let s = format!("\"{}\"", "a".repeat(MAX_TOKEN + 2));
+        assert_eq!(
+            Json::parse(&s).unwrap_err().kind,
+            JsonErrorKind::TokenTooLong
+        );
+        let n = "1".repeat(MAX_TOKEN + 2);
+        assert_eq!(
+            Json::parse(&n).unwrap_err().kind,
+            JsonErrorKind::TokenTooLong
+        );
+        // ordinary errors stay Syntax
+        assert_eq!(Json::parse("{").unwrap_err().kind, JsonErrorKind::Syntax);
+    }
+
+    #[test]
+    fn fuzz_truncated_and_mutated_specs_never_panic() {
+        use crate::util::rng::Pcg64;
+        // a realistic serve job spec (ASCII, so every byte index is a
+        // char boundary)
+        let spec = r#"{"n":64,"graph":"ring","algo":"sorted:quick","sweeps":4,"seed":7,"batch":2,"serve":{"listen":"127.0.0.1:0","max_jobs":2},"verify":true}"#;
+        assert!(Json::parse(spec).is_ok());
+        // every truncation must error cleanly, never panic or hang
+        for cut in 0..spec.len() {
+            assert!(Json::parse(&spec[..cut]).is_err() || cut == 0);
+        }
+        let mut rng = Pcg64::new(0x5e2_ce11);
+        // random byte mutations of the spec
+        for _ in 0..500 {
+            let mut bytes = spec.as_bytes().to_vec();
+            let flips = 1 + (rng.next_u64() % 4) as usize;
+            for _ in 0..flips {
+                let i = (rng.next_u64() % bytes.len() as u64) as usize;
+                bytes[i] = (rng.next_u64() & 0xff) as u8;
+            }
+            if let Ok(s) = std::str::from_utf8(&bytes) {
+                let _ = Json::parse(s); // outcome is free; crashing is not
+            }
+        }
+        // pure garbage lines of the kind a confused client might send
+        for _ in 0..200 {
+            let len = (rng.next_u64() % 80) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0x7f) as u8).collect();
+            if let Ok(s) = std::str::from_utf8(&bytes) {
+                let _ = Json::parse(s);
+            }
+        }
+    }
+
+    #[test]
+    fn line_emitter_streams_one_value_per_line() {
+        let mut em = LineEmitter::new(Vec::new());
+        em.emit(&Json::obj(vec![("round", Json::from(0usize))]))
+            .unwrap();
+        em.emit(&Json::obj(vec![("round", Json::from(1usize))]))
+            .unwrap();
+        let out = String::from_utf8(em.into_inner()).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().get("round").as_usize(),
+            Some(1)
+        );
+        assert!(out.ends_with('\n'));
     }
 }

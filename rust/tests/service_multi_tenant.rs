@@ -1,0 +1,230 @@
+//! Multi-tenant determinism: several independent jobs sharing one
+//! [`ShardPool`] must each be bit-identical to a solo `bcm::Sequential`
+//! run, one tenant's failure must not perturb the others, and the
+//! `serve` loopback path must stream and verify end to end.
+
+use bcm_dlb::balancer::PairAlgorithm;
+use bcm_dlb::bcm::{Engine, RoundStats, RunTrace, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::{JobEvent, JobSpec, ShardPool};
+use bcm_dlb::graph::Topology;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::service::{submit, ServeOptions, Server};
+use bcm_dlb::util::json::Json;
+use bcm_dlb::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// A tenant's spec plus everything needed to re-run it solo.
+struct Tenant {
+    spec: JobSpec,
+    state: LoadState,
+    schedule: Schedule,
+    algo: PairAlgorithm,
+    sweeps: usize,
+    seed: u64,
+}
+
+/// Build a tenant exactly like `bcm-dlb run`'s first repetition.
+fn tenant(topo: &str, n: usize, algo: &str, sweeps: usize, seed: u64, batch: usize) -> Tenant {
+    let topo = Topology::parse(topo).expect("test topology");
+    let algo = PairAlgorithm::parse(algo).expect("test algorithm");
+    let mut rng = Pcg64::new(seed);
+    let g = topo.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        8,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    Tenant {
+        spec: JobSpec {
+            state: state.clone(),
+            schedule: schedule.clone(),
+            algo,
+            sweeps,
+            seed,
+            batch,
+        },
+        state,
+        schedule,
+        algo,
+        sweeps,
+        seed,
+    }
+}
+
+fn solo_reference(t: &Tenant) -> (RunTrace, LoadState) {
+    let mut state = t.state.clone();
+    let trace = Sequential.run(
+        &mut state,
+        &t.schedule,
+        t.algo,
+        StopRule::sweeps(t.sweeps),
+        t.seed,
+    );
+    (trace, state)
+}
+
+#[derive(Default)]
+struct Outcome {
+    initial: Option<f64>,
+    rounds: Vec<RoundStats>,
+    finished: Option<(RunTrace, LoadState)>,
+    failed: Option<String>,
+}
+
+impl Outcome {
+    fn terminal(&self) -> bool {
+        self.finished.is_some() || self.failed.is_some()
+    }
+}
+
+/// Drive the pool until every job in `ids` reaches a terminal event.
+fn drive(pool: &mut ShardPool, ids: &[u32]) -> BTreeMap<u32, Outcome> {
+    let mut out: BTreeMap<u32, Outcome> = ids.iter().map(|&id| (id, Outcome::default())).collect();
+    while out.values().any(|o| !o.terminal()) {
+        let events = pool.step(Duration::from_millis(50)).expect("pool healthy");
+        for ev in events {
+            match ev {
+                JobEvent::Started {
+                    job,
+                    initial_discrepancy,
+                } => out.get_mut(&job).unwrap().initial = Some(initial_discrepancy),
+                JobEvent::Rounds { job, stats } => {
+                    out.get_mut(&job).unwrap().rounds.extend(stats)
+                }
+                JobEvent::Finished { job, trace, state } => {
+                    out.get_mut(&job).unwrap().finished = Some((trace, state))
+                }
+                JobEvent::Failed { job, error } => {
+                    out.get_mut(&job).unwrap().failed = Some(error)
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn concurrent_jobs_are_bit_identical_to_solo_sequential() {
+    // three tenants with different topologies, algorithms, seeds, and
+    // batch sizes, interleaved on one three-worker pool
+    let tenants = vec![
+        tenant("ring", 24, "greedy", 3, 11, 1),
+        tenant("torus2d", 16, "sorted:quick", 2, 7, 0),
+        tenant("complete", 12, "random", 2, 42, 2),
+    ];
+    let refs: Vec<(RunTrace, LoadState)> = tenants.iter().map(solo_reference).collect();
+
+    let mut pool = ShardPool::spawn(3);
+    let mut ids = Vec::new();
+    for t in tenants {
+        ids.push(pool.open_job(t.spec).expect("job opens"));
+    }
+    assert_eq!(pool.jobs_active(), ids.len());
+    let out = drive(&mut pool, &ids);
+
+    for (id, (seq_trace, seq_state)) in ids.iter().zip(&refs) {
+        let o = &out[id];
+        assert_eq!(o.failed, None, "job {id} failed");
+        let (trace, state) = o.finished.as_ref().expect("finished");
+        assert_eq!(trace, seq_trace, "job {id} trace diverged from Sequential");
+        assert_eq!(state, seq_state, "job {id} final state diverged");
+        // the streamed Rounds events are the trace, delivered incrementally
+        assert_eq!(o.rounds, trace.rounds, "job {id} stream != trace");
+        assert_eq!(o.initial, Some(trace.initial_discrepancy));
+    }
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn one_tenant_failing_mid_batch_does_not_poison_the_others() {
+    let survivor = tenant("ring", 24, "sorted:quick", 3, 5, 1);
+    let doomed = tenant("torus2d", 16, "greedy", 3, 6, 1);
+    let survivor_ref = solo_reference(&survivor);
+
+    // ids are assigned from 1 in open order: survivor=1, doomed=2.
+    // Inject a panic on shard 0 at (job 2, round 1); surviving shards of
+    // job 2 notice via the shortened peer wait and self-retire.
+    let mut pool = ShardPool::spawn_tuned(2, Some((0, 2, 1)), Some(Duration::from_millis(250)));
+    let id_s = pool.open_job(survivor.spec).expect("survivor opens");
+    let id_d = pool.open_job(doomed.spec).expect("doomed opens");
+    assert_eq!((id_s, id_d), (1, 2));
+
+    let out = drive(&mut pool, &[id_s, id_d]);
+
+    let err = out[&id_d].failed.as_ref().expect("doomed job fails");
+    assert!(
+        err.contains("injected fault") || err.contains("timed out waiting for peer"),
+        "unexpected failure: {err}"
+    );
+    assert!(out[&id_d].finished.is_none());
+
+    let o = &out[&id_s];
+    assert_eq!(o.failed, None, "survivor poisoned: {:?}", o.failed);
+    let (trace, state) = o.finished.as_ref().expect("survivor finishes");
+    assert_eq!(trace, &survivor_ref.0, "survivor trace diverged");
+    assert_eq!(state, &survivor_ref.1, "survivor state diverged");
+
+    // the pool stays serviceable for new tenants after the failure
+    let again = tenant("ring", 24, "sorted:quick", 3, 5, 1);
+    let id3 = pool.open_job(again.spec).expect("pool accepts new jobs");
+    let out = drive(&mut pool, &[id3]);
+    let (trace, _) = out[&id3].finished.as_ref().expect("new job finishes");
+    assert_eq!(trace, &survivor_ref.0);
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn serve_loopback_streams_verified_jobs_concurrently() {
+    let mut server = Server::bind(ServeOptions {
+        listen: "127.0.0.1:0".to_string(),
+        max_jobs: 2,
+        shards: 2,
+        max_conns: 8,
+    })
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    let server = std::thread::spawn(move || server.run());
+
+    // two concurrent clients, each asking the service to verify the
+    // streamed run against Sequential
+    let clients: Vec<_> = [3u64, 9u64]
+        .into_iter()
+        .map(|seed| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let line = format!(
+                    r#"{{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":{seed},"verify":true}}"#
+                );
+                let mut out = Vec::new();
+                let ok = submit(&addr, &line, &mut out).expect("submit transport ok");
+                (ok, String::from_utf8(out).unwrap())
+            })
+        })
+        .collect();
+
+    for c in clients {
+        let (ok, log) = c.join().unwrap();
+        assert!(ok, "job errored:\n{log}");
+        let events: Vec<Json> = log.lines().map(|l| Json::parse(l).expect("valid json")).collect();
+        assert_eq!(events[0].get("event").as_str(), Some("accepted"));
+        assert_eq!(events[1].get("event").as_str(), Some("start"));
+        let rounds = events
+            .iter()
+            .filter(|e| e.get("event").as_str() == Some("round"))
+            .count();
+        let done = events.last().unwrap();
+        assert_eq!(done.get("event").as_str(), Some("done"));
+        assert_eq!(done.get("verified").as_bool(), Some(true));
+        assert_eq!(done.get("rounds").as_usize(), Some(rounds));
+        assert!(rounds > 0, "no per-round lines streamed");
+    }
+
+    let mut out = Vec::new();
+    assert!(submit(&addr, r#"{"cmd":"shutdown"}"#, &mut out).expect("shutdown submit"));
+    assert!(String::from_utf8(out).unwrap().contains("\"event\":\"shutdown\""));
+    server.join().unwrap().expect("server exits cleanly");
+}

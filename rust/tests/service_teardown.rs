@@ -1,0 +1,164 @@
+//! Teardown regressions: shutdown must be idempotent, must release the
+//! listen port immediately, and must leave no lingering I/O threads —
+//! the poller runs all socket I/O on the calling thread, so after
+//! shutdown the process is back to exactly its pre-spawn thread count.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Engine, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::transport::tcp::LeaderListener;
+use bcm_dlb::coordinator::{Cluster, JobEvent, JobSpec, ShardPool};
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+const ALGO: PairAlgorithm = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+
+fn init_scenario(n: usize, seed: u64) -> (LoadState, Schedule) {
+    let mut rng = Pcg64::new(seed);
+    let g = Graph::random_connected(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        8,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    (state, schedule)
+}
+
+fn spawn_workers(addr: &str, k: usize) -> Vec<Child> {
+    (0..k)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_bcm-dlb"))
+                .args(["cluster-worker", "--connect", addr, "--retry", "40"])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a cluster-worker process")
+        })
+        .collect()
+}
+
+fn run_one_job(pool: &mut ShardPool) {
+    let (state, schedule) = init_scenario(16, 3);
+    let mut seq_state = state.clone();
+    let seq_trace = Sequential.run(&mut seq_state, &schedule, ALGO, StopRule::sweeps(2), 7);
+    let id = pool
+        .open_job(JobSpec {
+            state,
+            schedule,
+            algo: ALGO,
+            sweeps: 2,
+            seed: 7,
+            batch: 1,
+        })
+        .expect("job opens");
+    loop {
+        for ev in pool.step(Duration::from_millis(50)).expect("pool healthy") {
+            match ev {
+                JobEvent::Finished { job, trace, state } => {
+                    assert_eq!(job, id);
+                    assert_eq!(trace, seq_trace);
+                    assert_eq!(state, seq_state);
+                    return;
+                }
+                JobEvent::Failed { error, .. } => panic!("job failed: {error}"),
+                _ => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_shutdown_is_idempotent() {
+    let mut pool = ShardPool::spawn(2);
+    run_one_job(&mut pool);
+    pool.shutdown().expect("first shutdown");
+    pool.shutdown().expect("second shutdown is a no-op");
+    // a shut-down pool refuses new work instead of wedging
+    let (state, schedule) = init_scenario(16, 3);
+    let err = pool
+        .open_job(JobSpec {
+            state,
+            schedule,
+            algo: ALGO,
+            sweeps: 1,
+            seed: 1,
+            batch: 1,
+        })
+        .expect_err("open_job on a down pool")
+        .to_string();
+    assert!(err.contains("shut down"), "unexpected error: {err}");
+    // Drop after explicit shutdown must not double-join or panic.
+    drop(pool);
+}
+
+#[test]
+fn tcp_shutdown_releases_the_port_for_immediate_rebind() {
+    let (state0, schedule) = init_scenario(16, 11);
+    let mut seq_state = state0.clone();
+    let seq_trace = Sequential.run(&mut seq_state, &schedule, ALGO, StopRule::sweeps(2), 9);
+
+    let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader");
+    let addr = listener.local_addr().expect("local addr").to_string();
+
+    // two full lifecycles on the SAME port, back to back: lifecycle 1
+    // must have released it synchronously at shutdown
+    run_tcp_cycle(listener, &addr, &state0, &schedule, &seq_trace, &seq_state);
+    let relisten = LeaderListener::bind(&addr).expect("immediate rebind of the leader port");
+    run_tcp_cycle(relisten, &addr, &state0, &schedule, &seq_trace, &seq_state);
+}
+
+fn run_tcp_cycle(
+    listener: LeaderListener,
+    addr: &str,
+    state0: &LoadState,
+    schedule: &Schedule,
+    seq_trace: &bcm_dlb::bcm::RunTrace,
+    seq_state: &LoadState,
+) {
+    let mut workers = spawn_workers(addr, 2);
+    let mut cluster = Cluster::spawn_tcp(state0.clone(), ALGO, 2, listener).expect("tcp spawn");
+    let trace = cluster.run_seeded(schedule, 2, 9).expect("tcp run");
+    let fin = cluster.shutdown().expect("tcp shutdown");
+    assert_eq!(&trace, seq_trace);
+    assert_eq!(&fin, seq_state);
+    for w in &mut workers {
+        let status = w.wait().expect("waiting for worker");
+        assert!(status.success(), "worker exited nonzero");
+    }
+}
+
+/// Count this process's kernel threads.
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task").expect("procfs").count()
+}
+
+#[test]
+#[cfg(target_os = "linux")]
+fn no_lingering_threads_after_pool_shutdown() {
+    // Other tests in this binary run on sibling threads, so measure
+    // relative to a baseline taken right before the spawn and allow the
+    // count to settle with a bounded retry.
+    let baseline = thread_count();
+    let mut pool = ShardPool::spawn(4);
+    run_one_job(&mut pool);
+    assert!(
+        thread_count() > baseline,
+        "pool workers should be visible in /proc/self/task"
+    );
+    pool.shutdown().expect("shutdown");
+    let mut last = 0;
+    for _ in 0..100 {
+        last = thread_count();
+        if last <= baseline {
+            return; // every worker thread is gone
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("thread count stuck at {last} (baseline {baseline}) after shutdown");
+}

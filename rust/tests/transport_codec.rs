@@ -61,19 +61,38 @@ fn gen_plan(rng: &mut Pcg64) -> RoundPlan {
     RoundPlan::build(&pairs, &map)
 }
 
+/// A job id palette covering the classic single-job id 0, small service
+/// ids, and the full u32 range.
+fn gen_job(rng: &mut Pcg64) -> u32 {
+    match rng.below(4) {
+        0 => 0,
+        1 => 1 + rng.below(8) as u32,
+        2 => u32::MAX,
+        _ => rng.next_u64() as u32,
+    }
+}
+
 fn gen_ctl(rng: &mut Pcg64, variant: usize) -> Ctl {
-    match variant % 3 {
+    match variant % 5 {
         0 => {
             let d = 1 + rng.below(4);
             let plans: Vec<Arc<RoundPlan>> = (0..d).map(|_| Arc::new(gen_plan(rng))).collect();
             Ctl::RunBatch {
+                job: gen_job(rng),
                 start_round: rng.below(1 << 20),
                 rounds: 1 + rng.below(64),
                 seed: rng.next_u64(),
                 plans: Arc::new(plans),
             }
         }
-        1 => Ctl::PollWeights,
+        1 => Ctl::PollWeights { job: gen_job(rng) },
+        2 => Ctl::OpenJob {
+            job: gen_job(rng),
+            lo: rng.below(1 << 16),
+            algo: ["greedy", "sorted:quick", "random"][rng.below(3)].to_string(),
+            nodes: (0..rng.below(10)).map(|_| gen_loads(rng)).collect(),
+        },
+        3 => Ctl::CloseJob { job: gen_job(rng) },
         _ => Ctl::Shutdown,
     }
 }
@@ -81,12 +100,14 @@ fn gen_ctl(rng: &mut Pcg64, variant: usize) -> Ctl {
 fn gen_peer(rng: &mut Pcg64, variant: usize) -> ShardMsg {
     match variant % 2 {
         0 => ShardMsg::Offer {
+            job: gen_job(rng),
             round: rng.below(1 << 16),
             edge: rng.below(1 << 16),
             loads: gen_loads(rng),
             pinned: gen_weight(rng),
         },
         _ => ShardMsg::Settle {
+            job: gen_job(rng),
             round: rng.below(1 << 16),
             edge: rng.below(1 << 16),
             loads: gen_loads(rng),
@@ -97,6 +118,7 @@ fn gen_peer(rng: &mut Pcg64, variant: usize) -> ShardMsg {
 fn gen_report(rng: &mut Pcg64, variant: usize) -> Report {
     match variant % 4 {
         0 => Report::Batch {
+            job: gen_job(rng),
             shard: rng.below(16),
             rounds: (0..rng.below(8))
                 .map(|i| RoundReport {
@@ -109,14 +131,19 @@ fn gen_report(rng: &mut Pcg64, variant: usize) -> Report {
                 .collect(),
         },
         1 => Report::Weights {
+            job: gen_job(rng),
             shard: rng.below(16),
             weights: (0..rng.below(20)).map(|_| gen_weight(rng)).collect(),
         },
         2 => Report::Final {
+            job: gen_job(rng),
             shard: rng.below(16),
             nodes: (0..rng.below(10)).map(|_| gen_loads(rng)).collect(),
         },
         _ => Report::Error {
+            // None = worker-fatal, Some = job-fatal; both shapes must
+            // survive the wire
+            job: if rng.coin() { Some(gen_job(rng)) } else { None },
             shard: rng.below(16),
             round: if rng.coin() { Some(rng.below(1 << 16)) } else { None },
             message: gen_string(rng),
@@ -237,7 +264,7 @@ fn prop_version_skew_and_bad_kind_are_rejected() {
 
 #[test]
 fn corrupt_length_cannot_cause_huge_allocation() {
-    let frame = encode_frame(&WireMsg::Ctl(Ctl::PollWeights));
+    let frame = encode_frame(&WireMsg::Ctl(Ctl::PollWeights { job: 0 }));
     let mut bad = frame;
     // claim a ~4 GiB payload; the decoder must refuse before allocating
     bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
