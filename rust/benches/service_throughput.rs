@@ -79,6 +79,7 @@ fn make_tenant(n: usize, sweeps: usize, seed: u64) -> (JobSpec, RunTrace) {
             sweeps,
             seed,
             batch: 0,
+            checkpoint_every: 0,
         },
         seq_trace,
     )

@@ -88,6 +88,15 @@ COMMANDS
                                 in with cluster-worker --connect ADDR)
                  [--peers A,B,...]  tcp leader dials these listening
                                 workers instead (cluster-worker --listen)
+                 [--checkpoint-every R]  leader keeps load-state
+                                checkpoints at batch boundaries every R
+                                rounds and recovers from worker loss by
+                                rejoin or shard reassignment (0 = off,
+                                classic fail-stop; see OPERATIONS.md)
+                 [--rejoin-wait MS]  how long recovery waits for a
+                                restarted worker before reassigning its
+                                shard to the survivors (def. 5000; 0 =
+                                reassign immediately)
                  [--verify]     rerun Sequential and assert the cluster
                                 trace/state are bit-identical
                  [--trace-out FILE.csv]  per-round time series (rep 0)
@@ -96,6 +105,11 @@ COMMANDS
                  --connect HOST:PORT  dial the leader
                  --listen HOST:PORT   await the leader's dial-in
                  [--retry N]    connect attempts, 250 ms apart (def. 40)
+                 [--fault-exit ROUND]  kill this process (exit 3) at the
+                                start of round ROUND — simulates a crash
+                                for recovery drills and tests
+                 a relaunched worker rejoins a checkpointed leader's
+                 recovery window automatically (OPERATIONS.md §rejoin)
   serve          multi-tenant balancer service: accepts JSON job specs
                  over a socket, runs them concurrently on one shared
                  shard pool, streams per-round reports back as JSON lines

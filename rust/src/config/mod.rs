@@ -59,6 +59,22 @@ pub struct ExperimentConfig {
     /// (config key `serve.max_jobs`, flag `--max-jobs`); further
     /// submissions queue until a slot frees.
     pub serve_max_jobs: usize,
+    /// Cluster checkpoint cadence in rounds (config key
+    /// `checkpoint_every`, flag `--checkpoint-every`): the leader asks
+    /// every worker to stream back its shard's load state at the first
+    /// batch boundary at least this many rounds past the previous
+    /// checkpoint.  `0` (the default) disables checkpointing and keeps
+    /// the classic fail-stop cluster: any worker failure aborts the
+    /// run.  With a cadence set, a worker failure triggers the recovery
+    /// contract (`DESIGN.md` §8, `OPERATIONS.md`) instead — results are
+    /// bit-identical either way.
+    pub checkpoint_every: usize,
+    /// How long the leader waits for a restarted worker to rejoin a
+    /// dead shard before reassigning its nodes to the survivors
+    /// (config key `rejoin_wait_ms`, flag `--rejoin-wait`), in
+    /// milliseconds.  `0` skips the rejoin window and reassigns
+    /// immediately.  Only consulted when `checkpoint_every > 0`.
+    pub rejoin_wait_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -82,6 +98,8 @@ impl Default for ExperimentConfig {
             peers: Vec::new(),
             serve_listen: "127.0.0.1:7412".to_string(),
             serve_max_jobs: 4,
+            checkpoint_every: 0,
+            rejoin_wait_ms: 5000,
         }
     }
 }
@@ -154,6 +172,12 @@ impl ExperimentConfig {
                 })
                 .collect::<Result<Vec<String>>>()?;
         }
+        if let Some(x) = v.get("checkpoint_every").as_usize() {
+            cfg.checkpoint_every = x;
+        }
+        if let Some(x) = v.get("rejoin_wait_ms").as_u64() {
+            cfg.rejoin_wait_ms = x;
+        }
         let serve = v.get("serve");
         if let Some(s) = serve.get("listen").as_str() {
             cfg.serve_listen = s.to_string();
@@ -189,6 +213,8 @@ impl ExperimentConfig {
             ("shards", self.shards.into()),
             ("batch_rounds", self.batch_rounds.into()),
             ("transport", self.transport.name().into()),
+            ("checkpoint_every", self.checkpoint_every.into()),
+            ("rejoin_wait_ms", (self.rejoin_wait_ms as usize).into()),
             ("listen", self.listen.clone().into()),
             (
                 "peers",
@@ -292,6 +318,23 @@ mod tests {
         assert_eq!(back.serve_listen, cfg.serve_listen);
         assert_eq!(back.serve_max_jobs, cfg.serve_max_jobs);
         assert!(ExperimentConfig::from_json_str(r#"{"serve": {"max_jobs": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn recovery_keys_parse_roundtrip_and_default() {
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.checkpoint_every, 0); // 0 = off, classic fail-stop
+        assert_eq!(cfg.rejoin_wait_ms, 5000);
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"checkpoint_every": 32, "rejoin_wait_ms": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 32);
+        assert_eq!(cfg.rejoin_wait_ms, 250);
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.checkpoint_every, cfg.checkpoint_every);
+        assert_eq!(back.rejoin_wait_ms, cfg.rejoin_wait_ms);
     }
 
     #[test]

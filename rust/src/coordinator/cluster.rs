@@ -34,7 +34,7 @@ use crate::bcm::{RoundStats, RunTrace, Schedule};
 use crate::load::{Load, LoadState};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -46,6 +46,20 @@ use std::time::{Duration, Instant};
 /// timeout so a genuine fault is blamed on the right shard and round.
 const ROUND_TIMEOUT: Duration = Duration::from_secs(60);
 const SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long a recovery drains already-queued reports before deciding
+/// which workers are actually gone — long enough for the EOF of a
+/// killed process to surface, short enough to not stall a replay.
+const RECOVERY_DRAIN: Duration = Duration::from_millis(300);
+
+/// Checkpoints retained per job: the latest plus one predecessor, so a
+/// failure *during* checkpoint collection still leaves a complete
+/// earlier snapshot to resume from.
+const CKPT_RING: usize = 2;
+
+/// Default wait for a replacement worker before falling back to shard
+/// reassignment (the `--rejoin-wait` knob).
+pub const DEFAULT_REJOIN_WAIT: Duration = Duration::from_secs(5);
 
 /// `ROUND_TIMEOUT` scaled to a batch of `rounds` rounds.
 fn batch_timeout(rounds: usize) -> Duration {
@@ -75,6 +89,14 @@ fn carve(state: &mut LoadState, map: &ShardMap) -> Vec<Vec<Vec<Load>>> {
                 .collect()
         })
         .collect()
+}
+
+/// Clone a state's per-node load lists — the round-0 entry of the
+/// checkpoint ring, taken before the state is carved away to the
+/// workers (DESIGN.md §8: every job can always resume from *some*
+/// checkpoint, even before the first periodic one lands).
+fn flatten(state: &LoadState) -> Vec<Vec<Load>> {
+    (0..state.n()).map(|v| state.node(v).to_vec()).collect()
 }
 
 /// Build the per-worker `Init` payloads of a TCP spawn.
@@ -125,8 +147,31 @@ pub struct Cluster {
     /// Shards that reported a fatal error and exited (they will send no
     /// `Final` on shutdown).
     dead: Vec<bool>,
-    /// First worker failure seen, re-surfaced by `shutdown`.
+    /// First worker failure seen, re-surfaced by `shutdown` (cleared by
+    /// a successful recovery).
     failure: Option<String>,
+    /// Algorithm every worker runs, needed to reopen a recovered epoch.
+    algo: PairAlgorithm,
+    /// Current epoch: the wire-level job id all traffic is tagged with.
+    /// Starts at 0 (the classic single-job id) and increments per
+    /// recovery, so stale reports of an aborted epoch are filtered
+    /// instead of drained.
+    epoch: u32,
+    /// Batch-boundary checkpoint cadence in rounds (0 = off: the
+    /// classic fail-stop behavior, and the default).
+    checkpoint_every: usize,
+    /// How long a recovery waits for a replacement worker before
+    /// reassigning the dead worker's shard to the survivors.
+    rejoin_wait: Duration,
+    /// Checkpoint ring: `(resume round, full per-node load lists)`,
+    /// newest last, capped at [`CKPT_RING`].  Seeded with the initial
+    /// state at spawn (resume round 0).
+    ckpts: VecDeque<(usize, Vec<Vec<Load>>)>,
+    /// Dead shards a recovery already reassigned away (a rejoined shard
+    /// is simply marked live again instead).
+    handled: Vec<bool>,
+    /// Recoveries performed, capped to rule out a replay loop.
+    recoveries: usize,
 }
 
 impl Cluster {
@@ -174,6 +219,7 @@ impl Cluster {
     ) -> Cluster {
         let map = ShardMap::new(state.n(), shards);
         let k = map.shards();
+        let baseline = flatten(&state);
         let shard_nodes = carve(&mut state, &map);
         let (leader, workers) = local::pair(k);
         let mut handles = Vec::with_capacity(k);
@@ -184,6 +230,9 @@ impl Cluster {
                 if fs == s {
                     worker.set_fault(0, fr);
                 }
+                // a fault strands the victim's peers mid-round; cap
+                // their collect wait so the test resolves quickly
+                worker.set_peer_wait(Duration::from_millis(500));
             }
             handles.push(std::thread::spawn(move || {
                 // a worker's failure already reached the leader as a
@@ -192,16 +241,9 @@ impl Cluster {
                 let _ = worker.run();
             }));
         }
-        let dead = vec![false; k];
-        Cluster {
-            map,
-            transport: Box::new(leader),
-            handles,
-            stats: MessageStats::default(),
-            batch_rounds: 0,
-            dead,
-            failure: None,
-        }
+        let mut cluster = Self::from_transport(map, Box::new(leader), algo, baseline);
+        cluster.handles = handles;
+        cluster
     }
 
     /// Spawn a cluster whose workers are separate OS processes speaking
@@ -232,9 +274,10 @@ impl Cluster {
                 state.n()
             ));
         }
+        let baseline = flatten(&state);
         let inits = tcp_inits(&mut state, &map, algo);
         let transport = TcpLeader::accept(listener, inits)?;
-        Ok(Self::from_transport(map, Box::new(transport)))
+        Ok(Self::from_transport(map, Box::new(transport), algo, baseline))
     }
 
     /// Spawn a TCP cluster by dialing one listening worker per entry of
@@ -256,21 +299,36 @@ impl Cluster {
                 state.n()
             ));
         }
+        let baseline = flatten(&state);
         let inits = tcp_inits(&mut state, &map, algo);
         let transport = TcpLeader::connect(peers, inits)?;
-        Ok(Self::from_transport(map, Box::new(transport)))
+        Ok(Self::from_transport(map, Box::new(transport), algo, baseline))
     }
 
-    fn from_transport(map: ShardMap, transport: Box<dyn LeaderTransport>) -> Cluster {
-        let dead = vec![false; map.shards()];
+    fn from_transport(
+        map: ShardMap,
+        transport: Box<dyn LeaderTransport>,
+        algo: PairAlgorithm,
+        baseline: Vec<Vec<Load>>,
+    ) -> Cluster {
+        let k = map.shards();
+        let mut ckpts = VecDeque::with_capacity(CKPT_RING);
+        ckpts.push_back((0, baseline));
         Cluster {
             map,
             transport,
             handles: Vec::new(),
             stats: MessageStats::default(),
             batch_rounds: 0,
-            dead,
+            dead: vec![false; k],
             failure: None,
+            algo,
+            epoch: 0,
+            checkpoint_every: 0,
+            rejoin_wait: DEFAULT_REJOIN_WAIT,
+            ckpts,
+            handled: vec![false; k],
+            recoveries: 0,
         }
     }
 
@@ -329,6 +387,59 @@ impl Cluster {
         resolve_batch_rounds(self.batch_rounds, self.n())
     }
 
+    /// Set the batch-boundary checkpoint cadence in rounds (the
+    /// `--checkpoint-every` knob, config key `checkpoint_every`).
+    /// `0` — the default — disables checkpointing entirely: failures
+    /// keep the classic fail-stop semantics and no extra message ever
+    /// travels.  With a cadence `c > 0`, every batch whose end crosses
+    /// `c` rounds since the last snapshot asks each worker to follow
+    /// its `Report::Batch` with a `Report::Checkpoint` of its slice,
+    /// and a worker death or mid-batch failure replays from the newest
+    /// complete snapshot instead of poisoning the run (DESIGN.md §8).
+    pub fn set_checkpoint_every(&mut self, rounds: usize) {
+        self.checkpoint_every = rounds;
+    }
+
+    /// The configured checkpoint cadence (`0` = off).
+    pub fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+
+    /// Set how long a recovery holds the cluster open for a replacement
+    /// worker before reassigning the dead shard to the survivors (the
+    /// `--rejoin-wait` knob; `Duration::ZERO` skips the rejoin window
+    /// and reassigns immediately).  Only consulted when a worker dies
+    /// and checkpointing is on; defaults to [`DEFAULT_REJOIN_WAIT`].
+    pub fn set_rejoin_wait(&mut self, wait: Duration) {
+        self.rejoin_wait = wait;
+    }
+
+    /// Shards still serving traffic (a reassigned-away shard stays in
+    /// the map with an empty range but receives nothing).
+    fn live_shards(&self) -> Vec<usize> {
+        (0..self.map.shards()).filter(|&s| !self.dead[s]).collect()
+    }
+
+    /// Does the batch ending at `end_round` owe a checkpoint?
+    fn checkpoint_due(&self, end_round: usize) -> bool {
+        self.checkpoint_every > 0
+            && end_round
+                - self
+                    .ckpts
+                    .back()
+                    .map(|&(r, _)| r)
+                    .unwrap_or(0)
+                >= self.checkpoint_every
+    }
+
+    /// Push an assembled checkpoint onto the bounded ring.
+    fn store_checkpoint(&mut self, resume_round: usize, nodes: Vec<Vec<Load>>) {
+        while self.ckpts.len() >= CKPT_RING {
+            self.ckpts.pop_front();
+        }
+        self.ckpts.push_back((resume_round, nodes));
+    }
+
     /// Leader-side message accounting since spawn.
     pub fn message_stats(&self) -> MessageStats {
         self.stats
@@ -351,6 +462,15 @@ impl Cluster {
     /// `bcm::Sequential::run(.., StopRule::sweeps(sweeps), seed)` for any
     /// shard count and any batch size
     /// ([`set_batch_rounds`](Self::set_batch_rounds)).
+    ///
+    /// With checkpointing on
+    /// ([`set_checkpoint_every`](Self::set_checkpoint_every)), a worker
+    /// death or mid-batch failure no longer fails the run: the cluster
+    /// recovers — replacement rejoin, or shard reassignment onto the
+    /// survivors — and replays from the newest checkpoint under a fresh
+    /// epoch id.  Replay draws the very same `(seed, round, edge)` RNG
+    /// streams, so the trace and final state stay bit-identical to
+    /// `bcm::Sequential` across any number of recoveries.
     pub fn run_seeded(
         &mut self,
         schedule: &Schedule,
@@ -360,8 +480,9 @@ impl Cluster {
         assert_eq!(schedule.n(), self.n(), "state/schedule size mismatch");
         let d = schedule.period();
         // one classification per color, shared across sweeps and batches
-        // (zero-copy per dispatch: workers receive Arcs)
-        let plans: Arc<Vec<Arc<RoundPlan>>> = Arc::new(
+        // (zero-copy per dispatch: workers receive Arcs); rebuilt by a
+        // recovery that reassigns shards
+        let mut plans: Arc<Vec<Arc<RoundPlan>>> = Arc::new(
             (0..d)
                 .map(|c| Arc::new(RoundPlan::build(schedule.matching(c), &self.map)))
                 .collect(),
@@ -376,9 +497,20 @@ impl Cluster {
         while start < total {
             let b = batch.min(total - start);
             let colors = schedule.lookahead_colors(start, b);
-            let stats = self.batch_with_plans(start, &colors, seed, &plans)?;
-            trace.rounds.extend(stats);
-            start += b;
+            match self.batch_with_plans(start, &colors, seed, &plans) {
+                Ok(stats) => {
+                    trace.rounds.extend(stats);
+                    start += b;
+                }
+                Err(e) => {
+                    // replay is bit-identical, so dropping the rounds at
+                    // and after the resume point and re-collecting them
+                    // rebuilds the exact same trace
+                    let resume = self.recover(schedule, &mut plans, e)?;
+                    trace.rounds.truncate(resume);
+                    start = resume;
+                }
+            }
         }
         Ok(trace)
     }
@@ -447,14 +579,17 @@ impl Cluster {
         }
         self.stats.rounds += b;
         self.stats.batches += 1;
-        // dispatch: one RunBatch per shard covers all b rounds
-        for s in 0..self.map.shards() {
+        let live = self.live_shards();
+        let want_ckpt = self.checkpoint_due(start_round + b);
+        // dispatch: one RunBatch per live shard covers all b rounds
+        for &s in &live {
             let msg = Ctl::RunBatch {
-                job: 0,
+                job: self.epoch,
                 start_round,
                 rounds: b,
                 seed,
                 plans: plans.clone(),
+                checkpoint: want_ckpt,
             };
             if let Err(e) = self.transport.send_ctl(s, msg) {
                 let msg = format!("control link closed before batch at round {start_round}: {e}");
@@ -462,14 +597,24 @@ impl Cluster {
             }
             self.stats.ctl_sent += 1;
         }
-        // collect: one coalesced report per shard, folded per round
+        // collect: one coalesced report per live shard — plus, when a
+        // checkpoint is due, one snapshot slice per live shard riding
+        // right behind it (FIFO keeps the pair ordered) — folded per
+        // round.  Reports tagged with an aborted epoch are the tail of
+        // a recovered failure and are skipped.
         let mut movements = vec![0usize; b];
         let mut min = vec![f64::INFINITY; b];
         let mut max = vec![f64::NEG_INFINITY; b];
+        let mut parts: Vec<Option<Vec<Vec<Load>>>> = vec![None; self.map.shards()];
+        let mut pending_batches = live.len();
+        let mut pending_ckpts = if want_ckpt { live.len() } else { 0 };
         let wait = batch_timeout(b);
-        for _ in 0..self.map.shards() {
+        while pending_batches > 0 || pending_ckpts > 0 {
             match self.recv_report("batch reports", wait)? {
-                Report::Batch { job: _, shard, rounds } => {
+                Report::Batch { job, shard, rounds } => {
+                    if job != self.epoch {
+                        continue;
+                    }
                     if rounds.len() != b {
                         return Err(anyhow!(
                             "shard {shard} reported {} rounds for a {b}-round batch \
@@ -490,9 +635,29 @@ impl Cluster {
                         max[i] = max[i].max(r.max_weight);
                         self.stats.peer_msgs += r.peer_msgs;
                     }
+                    pending_batches -= 1;
+                }
+                Report::Checkpoint {
+                    job,
+                    shard,
+                    round,
+                    nodes,
+                } => {
+                    if job != self.epoch {
+                        continue;
+                    }
+                    if round + 1 != start_round + b {
+                        return Err(anyhow!(
+                            "shard {shard} checkpointed round {round} inside the batch \
+                             ending at round {}",
+                            start_round + b - 1
+                        ));
+                    }
+                    parts[shard] = Some(nodes);
+                    pending_ckpts = pending_ckpts.saturating_sub(1);
                 }
                 Report::Error {
-                    job: _,
+                    job,
                     shard,
                     round,
                     message,
@@ -501,14 +666,36 @@ impl Cluster {
                         Some(r) => format!("failed at round {r}: {message}"),
                         None => message,
                     };
-                    return Err(self.worker_error(shard, msg));
+                    if self.checkpoint_every == 0 {
+                        // classic fail-stop: every error is terminal
+                        return Err(self.worker_error(shard, msg));
+                    }
+                    match job {
+                        // tail of an epoch an earlier recovery aborted
+                        Some(j) if j != self.epoch => continue,
+                        // the job died but the worker lives on (it
+                        // retired the epoch): replay on this membership
+                        Some(_) => return Err(anyhow!("cluster worker {shard}: {msg}")),
+                        // the worker itself is gone
+                        None => return Err(self.worker_error(shard, msg)),
+                    }
                 }
-                other => {
-                    return Err(anyhow!(
-                        "unexpected report during batch at round {start_round}: {other:?}"
-                    ))
+                // stale Weights/Final of an aborted epoch
+                _ => continue,
+            }
+        }
+        if want_ckpt {
+            let mut snapshot: Vec<Vec<Load>> = vec![Vec::new(); self.n()];
+            for &s in &live {
+                let Some(nodes) = parts[s].take() else {
+                    return Err(anyhow!("shard {s} delivered no checkpoint slice"));
+                };
+                let lo = self.map.range(s).start;
+                for (i, loads) in nodes.into_iter().enumerate() {
+                    snapshot[lo + i] = loads;
                 }
             }
+            self.store_checkpoint(start_round + b, snapshot);
         }
         Ok((0..b)
             .map(|i| RoundStats {
@@ -538,27 +725,43 @@ impl Cluster {
     }
 
     fn poll_weights_inner(&mut self) -> Result<Vec<f64>> {
-        for s in 0..self.map.shards() {
-            if let Err(e) = self.transport.send_ctl(s, Ctl::PollWeights { job: 0 }) {
+        let live = self.live_shards();
+        for &s in &live {
+            if let Err(e) = self
+                .transport
+                .send_ctl(s, Ctl::PollWeights { job: self.epoch })
+            {
                 let msg = format!("control link closed during weight poll: {e}");
                 return Err(self.worker_error(s, msg));
             }
             self.stats.ctl_sent += 1;
         }
         let mut w = vec![0.0f64; self.n()];
-        for _ in 0..self.map.shards() {
+        let mut pending = live.len();
+        while pending > 0 {
             match self.recv_report("weight reports", ROUND_TIMEOUT)? {
-                Report::Weights { job: _, shard, weights } => {
+                Report::Weights { job, shard, weights } => {
+                    if job != self.epoch {
+                        continue;
+                    }
                     let range = self.map.range(shard);
                     debug_assert_eq!(weights.len(), range.len());
                     w[range].copy_from_slice(&weights);
+                    pending -= 1;
                 }
                 Report::Error {
-                    job: _,
+                    job,
                     shard,
                     round: _,
                     message,
-                } => return Err(self.worker_error(shard, message)),
+                } => {
+                    if self.checkpoint_every > 0 && job.is_some_and(|j| j != self.epoch) {
+                        continue;
+                    }
+                    return Err(self.worker_error(shard, message));
+                }
+                // stale Batch/Checkpoint tail of an aborted epoch
+                _ if self.checkpoint_every > 0 => continue,
                 other => return Err(anyhow!("unexpected report while polling weights: {other:?}")),
             }
         }
@@ -581,6 +784,135 @@ impl Cluster {
         }
     }
 
+    /// Recover from a failed batch: abort the poisoned epoch, mend the
+    /// membership (replacement rejoin or shard reassignment, DESIGN.md
+    /// §8), reopen the run under a fresh epoch id seeded from the newest
+    /// checkpoint, and return the round to replay from.
+    ///
+    /// With checkpointing off the original error is simply returned and
+    /// the classic fail-stop semantics apply unchanged.
+    fn recover(
+        &mut self,
+        schedule: &Schedule,
+        plans: &mut Arc<Vec<Arc<RoundPlan>>>,
+        err: Error,
+    ) -> Result<usize> {
+        if self.checkpoint_every == 0 {
+            return Err(err);
+        }
+        self.recoveries += 1;
+        if self.recoveries > 2 * self.map.shards() + 2 {
+            return Err(err.context("recovery limit exceeded, failing stop"));
+        }
+        // Drain the report plane so every casualty of this incident is
+        // classified before membership decisions are made: an untagged
+        // error (or a synthesized connection-loss) marks its worker
+        // dead, everything else is the stale tail of the aborted epoch.
+        loop {
+            match self.transport.recv_report(RECOVERY_DRAIN) {
+                Ok(Report::Error { job: None, shard, .. }) => self.dead[shard] = true,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        let old = self.epoch;
+        self.epoch += 1;
+        // retire the aborted epoch on every survivor (also clears the
+        // job-tagged failure a survivor may have recorded against it)
+        for s in self.live_shards() {
+            self.stats.ctl_sent += 1;
+            if self.transport.send_ctl(s, Ctl::AbortJob { job: old }).is_err() {
+                self.dead[s] = true;
+            }
+        }
+        let (resume, snapshot) = {
+            let (r, nodes) = self
+                .ckpts
+                .back()
+                .expect("checkpoint ring is seeded at spawn");
+            (*r, nodes.clone())
+        };
+        // mend the membership: hold the door open for a replacement of
+        // each newly dead shard, else fold its range onto the survivors
+        let casualties: Vec<usize> = (0..self.map.shards())
+            .filter(|&s| self.dead[s] && !self.handled[s])
+            .collect();
+        let mut remapped = false;
+        for s in casualties {
+            let replacement = if self.rejoin_wait > Duration::ZERO {
+                self.transport
+                    .await_rejoin(s, resume, self.rejoin_wait)
+                    .unwrap_or(None)
+            } else {
+                None
+            };
+            if let Some(addr) = replacement {
+                self.dead[s] = false;
+                // survivors re-dial the replacement's fresh peer listener
+                for p in self.live_shards() {
+                    if p == s {
+                        continue;
+                    }
+                    self.stats.ctl_sent += 1;
+                    let remesh = Ctl::Remesh {
+                        shard: s,
+                        addr: addr.clone(),
+                    };
+                    if self.transport.send_ctl(p, remesh).is_err() {
+                        self.dead[p] = true;
+                    }
+                }
+            } else {
+                self.map = self.map.reassign(s, &self.dead);
+                self.handled[s] = true;
+                remapped = true;
+                // an empty address is the demesh order: survivors drop
+                // their link to the reassigned-away shard and purge its
+                // queued connection-loss events
+                for p in self.live_shards() {
+                    self.stats.ctl_sent += 1;
+                    let demesh = Ctl::Remesh {
+                        shard: s,
+                        addr: String::new(),
+                    };
+                    if self.transport.send_ctl(p, demesh).is_err() {
+                        self.dead[p] = true;
+                    }
+                }
+            }
+        }
+        let live = self.live_shards();
+        if live.is_empty() {
+            return Err(err.context("no live shard remains to recover onto"));
+        }
+        if remapped {
+            *plans = Arc::new(
+                (0..schedule.period())
+                    .map(|c| Arc::new(RoundPlan::build(schedule.matching(c), &self.map)))
+                    .collect(),
+            );
+        }
+        // reopen the run under the fresh epoch: every live shard —
+        // including a rejoined replacement, which carries no state —
+        // receives its slice of the newest checkpoint
+        for s in live {
+            let range = self.map.range(s);
+            let open = Ctl::OpenJob {
+                job: self.epoch,
+                lo: range.start,
+                algo: self.algo.name(),
+                nodes: range.map(|v| snapshot[v].clone()).collect(),
+            };
+            self.stats.ctl_sent += 1;
+            if self.transport.send_ctl(s, open).is_err() {
+                self.dead[s] = true;
+            }
+        }
+        // un-poison the cluster: the run resumes from the checkpoint
+        self.failure = None;
+        Ok(resume)
+    }
+
     /// Shut the cluster down, join every worker, and reassemble the final
     /// `LoadState`.  Worker panics and protocol violations surface as
     /// errors instead of being silently discarded.
@@ -599,20 +931,24 @@ impl Cluster {
         }
         let mut state = LoadState::empty(map.n());
         let mut first_err: Option<Error> = failure.map(Error::msg);
-        // shards that already died reported their error and send no Final
-        let mut expected = dead.iter().filter(|&&d| !d).count();
-        let mut got = 0usize;
+        // shards that already died reported their error and send no
+        // Final; per-shard tracking keeps a late synthesized conn-lost
+        // error for one of them from counting a live shard out
+        let mut settled = dead.clone();
         let mut timed_out = false;
-        while got < expected {
+        while settled.iter().any(|&s| !s) {
             match transport.recv_report(SHUTDOWN_TIMEOUT) {
                 Ok(Report::Final { job: _, shard, nodes }) => {
+                    if settled[shard] {
+                        continue;
+                    }
                     let lo = map.range(shard).start;
                     for (i, loads) in nodes.into_iter().enumerate() {
                         for l in loads {
                             state.push(lo + i, l);
                         }
                     }
-                    got += 1;
+                    settled[shard] = true;
                 }
                 Ok(Report::Error {
                     job: _,
@@ -620,6 +956,9 @@ impl Cluster {
                     round,
                     message,
                 }) => {
+                    if settled[shard] {
+                        continue;
+                    }
                     // that worker exits without sending a Final
                     first_err.get_or_insert_with(|| match round {
                         Some(r) => {
@@ -627,7 +966,7 @@ impl Cluster {
                         }
                         None => anyhow!("cluster worker {shard}: {message}"),
                     });
-                    expected = expected.saturating_sub(1);
+                    settled[shard] = true;
                 }
                 // stale Batch/Weights reports can remain queued when a
                 // run was aborted mid-batch; drain them
@@ -675,6 +1014,13 @@ pub struct JobSpec {
     /// Rounds per control message (`0` = auto, see
     /// [`resolve_batch_rounds`]).
     pub batch: usize,
+    /// Batch-boundary checkpoint cadence in rounds (`0` = off, the
+    /// classic fail-stop semantics).  With a cadence, a failure inside
+    /// this job's batch is recovered by replaying from the newest
+    /// checkpoint under a fresh wire id — the tenant sees
+    /// [`JobEvent::Recovering`] instead of [`JobEvent::Failed`], and the
+    /// trace stays bit-identical to `bcm::Sequential`.
+    pub checkpoint_every: usize,
 }
 
 /// Progress surfaced by [`ShardPool::step`], in job-lifecycle order:
@@ -714,6 +1060,19 @@ pub enum JobEvent {
         /// What went wrong, naming the shard and round where known.
         error: String,
     },
+    /// A failure inside this job's batch was recovered from a
+    /// checkpoint (`JobSpec::checkpoint_every > 0`): the job paused,
+    /// its epoch was aborted and reopened, and rounds replay from
+    /// `round`.  Not terminal — `Rounds` resume where the tenant left
+    /// off (replayed duplicates are suppressed) and the job still ends
+    /// in exactly one `Finished` / `Failed`.  Other jobs on the pool
+    /// never see this event.
+    Recovering {
+        /// Pool-assigned job id.
+        job: u32,
+        /// First round being replayed (the newest checkpoint's cut).
+        round: usize,
+    },
 }
 
 /// What a pool job is waiting for.
@@ -728,7 +1087,10 @@ enum JobPhase {
     /// batch (or the close, once all rounds ran).
     Ready,
     /// A dispatched batch: `pending` shards still owe their
-    /// `Report::Batch`, folded per round into the vectors.
+    /// `Report::Batch`, folded per round into the vectors.  When the
+    /// batch was dispatched with `ckpt` set, each shard also owes a
+    /// `Report::Checkpoint` slice (`ckpt_pending` outstanding,
+    /// assembled from `parts` once both counters drain).
     Batch {
         start: usize,
         b: usize,
@@ -738,6 +1100,9 @@ enum JobPhase {
         movements: Vec<usize>,
         min: Vec<f64>,
         max: Vec<f64>,
+        ckpt: bool,
+        ckpt_pending: usize,
+        parts: Vec<Option<Vec<Vec<Load>>>>,
     },
     /// `CloseJob` sent: `pending` shards still owe their `Final`,
     /// merged into `state`.
@@ -752,6 +1117,7 @@ struct PoolJob {
     map: ShardMap,
     schedule: Schedule,
     plans: Arc<Vec<Arc<RoundPlan>>>,
+    algo: PairAlgorithm,
     seed: u64,
     batch: usize,
     total: usize,
@@ -762,6 +1128,26 @@ struct PoolJob {
     /// Fail-stop deadline for the current pending phase, renewed on
     /// every report absorbed for this job.
     deadline: Instant,
+    /// Checkpoint cadence in rounds (`0` = off, classic fail-stop).
+    checkpoint_every: usize,
+    /// Wire-protocol job id of the current epoch.  Starts equal to the
+    /// pool-assigned id; every recovery retires it and mints a fresh
+    /// one, so a stale report of an aborted epoch can never be
+    /// mistaken for current traffic.  Tenants only ever see the stable
+    /// pool id.
+    wire: u32,
+    /// Newest-first bounded ring of `(resume round, full snapshot)`
+    /// checkpoints; seeded with the initial state when the cadence is
+    /// on, so a failure before the first checkpoint replays from round
+    /// 0.
+    ckpts: VecDeque<(usize, Vec<Vec<Load>>)>,
+    /// Rounds already surfaced to the tenant as `JobEvent::Rounds` —
+    /// the high-water mark that suppresses duplicate events while a
+    /// recovery replays.
+    emitted: usize,
+    /// Recoveries performed for this job, capped against a failure
+    /// that reproduces deterministically on every replay.
+    recoveries: usize,
 }
 
 impl PoolJob {
@@ -887,6 +1273,7 @@ impl ShardPool {
             sweeps,
             seed,
             batch,
+            checkpoint_every,
         } = spec;
         let n = state.n();
         if schedule.n() != n {
@@ -898,6 +1285,10 @@ impl ShardPool {
         let job = self.next_job;
         self.next_job += 1;
         let map = ShardMap::new(n, self.shards);
+        let mut ckpts = VecDeque::with_capacity(CKPT_RING);
+        if checkpoint_every > 0 {
+            ckpts.push_back((0, flatten(&state)));
+        }
         let shard_nodes = carve(&mut state, &map);
         for (s, nodes) in shard_nodes.into_iter().enumerate() {
             let open = Ctl::OpenJob {
@@ -926,6 +1317,7 @@ impl ShardPool {
                 map,
                 schedule,
                 plans,
+                algo,
                 seed,
                 batch: resolve_batch_rounds(batch, n),
                 total: sweeps * d,
@@ -939,6 +1331,11 @@ impl ShardPool {
                     weights: vec![0.0; n],
                 },
                 deadline: Instant::now() + ROUND_TIMEOUT,
+                checkpoint_every,
+                wire: job,
+                ckpts,
+                emitted: 0,
+                recoveries: 0,
             },
         );
         Ok(job)
@@ -1014,7 +1411,7 @@ impl ShardPool {
         if job.next >= job.total {
             for s in 0..m {
                 self.transport
-                    .send_ctl(s, Ctl::CloseJob { job: id })
+                    .send_ctl(s, Ctl::CloseJob { job: job.wire })
                     .map_err(|e| anyhow!("control link to shard {s} closed: {e}"))?;
             }
             job.phase = JobPhase::Closing {
@@ -1031,13 +1428,17 @@ impl ShardPool {
         let edges = (0..b)
             .map(|i| job.plans[(start + i) % d].edges)
             .collect();
+        let ckpt = job.checkpoint_every > 0
+            && (start + b) - job.ckpts.back().map(|&(r, _)| r).unwrap_or(0)
+                >= job.checkpoint_every;
         for s in 0..m {
             let msg = Ctl::RunBatch {
-                job: id,
+                job: job.wire,
                 start_round: start,
                 rounds: b,
                 seed: job.seed,
                 plans: job.plans.clone(),
+                checkpoint: ckpt,
             };
             self.transport
                 .send_ctl(s, msg)
@@ -1052,15 +1453,29 @@ impl ShardPool {
             movements: vec![0; b],
             min: vec![f64::INFINITY; b],
             max: vec![f64::NEG_INFINITY; b],
+            ckpt,
+            ckpt_pending: if ckpt { m } else { 0 },
+            parts: vec![None; m],
         };
         job.deadline = Instant::now() + batch_timeout(b);
         Ok(())
     }
 
+    /// The pool job currently speaking wire id `wire`, with its stable
+    /// pool id.  `None` for the tail of an already-failed or aborted
+    /// epoch (e.g. a surviving peer's timeout self-report).
+    fn job_by_wire(&mut self, wire: u32) -> Option<(u32, &mut PoolJob)> {
+        self.jobs
+            .iter_mut()
+            .find(|(_, j)| j.wire == wire)
+            .map(|(&pid, j)| (pid, j))
+    }
+
     /// Fold one worker report into its job, staging any completed
-    /// lifecycle events.  Reports for unknown job ids are dropped: they
-    /// are the tail of an already-failed job (e.g. a surviving peer's
-    /// timeout self-report).  `Err` poisons the pool.
+    /// lifecycle events.  Reports are routed by *wire* id — a job that
+    /// recovered speaks a fresh one — and reports for unknown wire ids
+    /// are dropped: they are the tail of an already-failed or aborted
+    /// epoch.  `Err` poisons the pool.
     fn route(&mut self, report: Report, events: &mut Vec<JobEvent>) -> Result<()> {
         match report {
             Report::Error {
@@ -1075,13 +1490,18 @@ impl ShardPool {
                 round,
                 message,
             } => {
-                if self.jobs.remove(&id).is_some() {
-                    let error = match round {
-                        Some(r) => format!("shard {shard} failed at round {r}: {message}"),
-                        None => format!("shard {shard}: {message}"),
-                    };
-                    events.push(JobEvent::Failed { job: id, error });
+                let Some((pid, job)) = self.job_by_wire(id) else {
+                    return Ok(());
+                };
+                if job.checkpoint_every > 0 && !job.ckpts.is_empty() {
+                    return self.recover_job(pid, events);
                 }
+                self.jobs.remove(&pid);
+                let error = match round {
+                    Some(r) => format!("shard {shard} failed at round {r}: {message}"),
+                    None => format!("shard {shard}: {message}"),
+                };
+                events.push(JobEvent::Failed { job: pid, error });
                 Ok(())
             }
             Report::Weights {
@@ -1089,12 +1509,12 @@ impl ShardPool {
                 shard,
                 weights,
             } => {
-                let Some(job) = self.jobs.get_mut(&id) else {
+                let Some((pid, job)) = self.job_by_wire(id) else {
                     return Ok(());
                 };
                 job.deadline = Instant::now() + ROUND_TIMEOUT;
                 let JobPhase::Weights { pending, weights: w } = &mut job.phase else {
-                    return Err(anyhow!("unexpected weight report for job {id}"));
+                    return Err(anyhow!("unexpected weight report for job {pid}"));
                 };
                 let range = job.map.range(shard);
                 debug_assert_eq!(weights.len(), range.len());
@@ -1108,7 +1528,7 @@ impl ShardPool {
                     job.trace.rounds.reserve(job.total);
                     job.phase = JobPhase::Ready;
                     events.push(JobEvent::Started {
-                        job: id,
+                        job: pid,
                         initial_discrepancy: disc,
                     });
                 }
@@ -1119,26 +1539,25 @@ impl ShardPool {
                 shard,
                 rounds,
             } => {
-                let Some(job) = self.jobs.get_mut(&id) else {
+                let Some((pid, job)) = self.job_by_wire(id) else {
                     return Ok(());
                 };
                 job.deadline = Instant::now() + batch_timeout(job.batch);
                 let JobPhase::Batch {
                     start,
                     b,
-                    colors,
-                    edges,
                     pending,
                     movements,
                     min,
                     max,
+                    ..
                 } = &mut job.phase
                 else {
-                    return Err(anyhow!("unexpected batch report for job {id}"));
+                    return Err(anyhow!("unexpected batch report for job {pid}"));
                 };
                 if rounds.len() != *b {
                     return Err(anyhow!(
-                        "shard {shard} reported {} rounds for a {b}-round batch of job {id} \
+                        "shard {shard} reported {} rounds for a {b}-round batch of job {pid} \
                          starting at round {start}",
                         rounds.len()
                     ));
@@ -1147,7 +1566,7 @@ impl ShardPool {
                     if r.round != *start + i {
                         return Err(anyhow!(
                             "shard {shard} report out of order: round {} at slot {i} of the \
-                             batch of job {id} starting at round {start}",
+                             batch of job {pid} starting at round {start}",
                             r.round
                         ));
                     }
@@ -1156,34 +1575,50 @@ impl ShardPool {
                     max[i] = max[i].max(r.max_weight);
                 }
                 *pending -= 1;
-                if *pending == 0 {
-                    let stats: Vec<RoundStats> = (0..*b)
-                        .map(|i| RoundStats {
-                            round: *start + i,
-                            color: colors[i],
-                            discrepancy: max[i] - min[i],
-                            movements: movements[i],
-                            edges: edges[i],
-                        })
-                        .collect();
-                    job.next = *start + *b;
-                    job.trace.rounds.extend(stats.iter().cloned());
-                    job.phase = JobPhase::Ready;
-                    events.push(JobEvent::Rounds { job: id, stats });
+                complete_batch(pid, job, events)
+            }
+            Report::Checkpoint {
+                job: id,
+                shard,
+                round,
+                nodes,
+            } => {
+                let Some((pid, job)) = self.job_by_wire(id) else {
+                    return Ok(());
+                };
+                job.deadline = Instant::now() + batch_timeout(job.batch);
+                let JobPhase::Batch {
+                    start,
+                    b,
+                    ckpt_pending,
+                    parts,
+                    ..
+                } = &mut job.phase
+                else {
+                    return Err(anyhow!("unexpected checkpoint report for job {pid}"));
+                };
+                if round + 1 != *start + *b {
+                    return Err(anyhow!(
+                        "shard {shard} checkpointed round {round} inside the batch of job \
+                         {pid} ending at round {}",
+                        *start + *b - 1
+                    ));
                 }
-                Ok(())
+                parts[shard] = Some(nodes);
+                *ckpt_pending -= 1;
+                complete_batch(pid, job, events)
             }
             Report::Final {
                 job: id,
                 shard,
                 nodes,
             } => {
-                let Some(job) = self.jobs.get_mut(&id) else {
+                let Some((pid, job)) = self.job_by_wire(id) else {
                     return Ok(());
                 };
                 job.deadline = Instant::now() + SHUTDOWN_TIMEOUT;
                 let JobPhase::Closing { pending, state } = &mut job.phase else {
-                    return Err(anyhow!("unexpected final report for job {id}"));
+                    return Err(anyhow!("unexpected final report for job {pid}"));
                 };
                 let lo = job.map.range(shard).start;
                 for (i, loads) in nodes.into_iter().enumerate() {
@@ -1193,12 +1628,12 @@ impl ShardPool {
                 }
                 *pending -= 1;
                 if *pending == 0 {
-                    let job = self.jobs.remove(&id).expect("job vanished mid-close");
+                    let job = self.jobs.remove(&pid).expect("job vanished mid-close");
                     let JobPhase::Closing { state, .. } = job.phase else {
                         unreachable!("checked above");
                     };
                     events.push(JobEvent::Finished {
-                        job: id,
+                        job: pid,
                         trace: job.trace,
                         state,
                     });
@@ -1206,6 +1641,64 @@ impl ShardPool {
                 Ok(())
             }
         }
+    }
+
+    /// Recover one pool job from its newest checkpoint: retire the
+    /// failed epoch on every worker, reopen the job under a fresh wire
+    /// id seeded with the snapshot, and replay.  The tenant sees a
+    /// single [`JobEvent::Recovering`]; replayed `Rounds` duplicates
+    /// are suppressed by the `emitted` high-water mark.  A job that
+    /// keeps failing is eventually declared [`JobEvent::Failed`].
+    fn recover_job(&mut self, pid: u32, events: &mut Vec<JobEvent>) -> Result<()> {
+        let wire = self.next_job;
+        let shards = self.shards;
+        let job = self.jobs.get_mut(&pid).expect("recovery of unknown job");
+        let old = job.wire;
+        job.recoveries += 1;
+        if job.recoveries > 2 * shards + 2 {
+            for s in 0..job.shards() {
+                // best effort: workers drop what they still hold
+                let _ = self.transport.send_ctl(s, Ctl::AbortJob { job: old });
+            }
+            self.jobs.remove(&pid);
+            events.push(JobEvent::Failed {
+                job: pid,
+                error: "recovery limit exceeded: the job fails on every replay".to_string(),
+            });
+            return Ok(());
+        }
+        self.next_job += 1;
+        job.wire = wire;
+        let (resume, snapshot) = job
+            .ckpts
+            .back()
+            .cloned()
+            .expect("recover_job without a checkpoint");
+        job.next = resume;
+        job.trace.rounds.truncate(resume);
+        job.phase = JobPhase::Ready;
+        job.deadline = Instant::now() + ROUND_TIMEOUT;
+        let m = job.shards();
+        for s in 0..m {
+            self.transport
+                .send_ctl(s, Ctl::AbortJob { job: old })
+                .map_err(|e| anyhow!("control link to shard {s} closed: {e}"))?;
+            let range = job.map.range(s);
+            let open = Ctl::OpenJob {
+                job: wire,
+                lo: range.start,
+                algo: job.algo.name(),
+                nodes: range.map(|v| snapshot[v].clone()).collect(),
+            };
+            self.transport
+                .send_ctl(s, open)
+                .map_err(|e| anyhow!("control link to shard {s} closed: {e}"))?;
+        }
+        events.push(JobEvent::Recovering {
+            job: pid,
+            round: resume,
+        });
+        Ok(())
     }
 
     /// Shut the pool down and join every worker; idempotent (a second
@@ -1244,6 +1737,79 @@ impl ShardPool {
         }
         Ok(())
     }
+}
+
+/// Finish a pool batch once *both* its counters drained: fold the
+/// per-round stats into the trace, assemble and store the checkpoint
+/// when one was requested, and surface the rounds the tenant has not
+/// seen yet (a replay's duplicates are cut by the `emitted` mark).
+fn complete_batch(pid: u32, job: &mut PoolJob, events: &mut Vec<JobEvent>) -> Result<()> {
+    let (pending, ckpt_pending) = match &job.phase {
+        JobPhase::Batch {
+            pending,
+            ckpt_pending,
+            ..
+        } => (*pending, *ckpt_pending),
+        _ => return Err(anyhow!("batch completion outside a batch for job {pid}")),
+    };
+    if pending > 0 || ckpt_pending > 0 {
+        return Ok(());
+    }
+    let JobPhase::Batch {
+        start,
+        b,
+        colors,
+        edges,
+        movements,
+        min,
+        max,
+        ckpt,
+        parts,
+        ..
+    } = std::mem::replace(&mut job.phase, JobPhase::Ready)
+    else {
+        unreachable!("checked above");
+    };
+    let stats: Vec<RoundStats> = (0..b)
+        .map(|i| RoundStats {
+            round: start + i,
+            color: colors[i],
+            discrepancy: max[i] - min[i],
+            movements: movements[i],
+            edges: edges[i],
+        })
+        .collect();
+    if ckpt {
+        let mut snapshot: Vec<Vec<Load>> = vec![Vec::new(); job.map.n()];
+        for (s, part) in parts.into_iter().enumerate() {
+            let Some(nodes) = part else {
+                return Err(anyhow!("shard {s} delivered no checkpoint slice for job {pid}"));
+            };
+            let lo = job.map.range(s).start;
+            for (i, loads) in nodes.into_iter().enumerate() {
+                snapshot[lo + i] = loads;
+            }
+        }
+        while job.ckpts.len() >= CKPT_RING {
+            job.ckpts.pop_front();
+        }
+        job.ckpts.push_back((start + b, snapshot));
+    }
+    job.next = start + b;
+    job.trace.rounds.extend(stats.iter().cloned());
+    let fresh: Vec<RoundStats> = if job.emitted >= start + b {
+        Vec::new()
+    } else {
+        stats[job.emitted.saturating_sub(start)..].to_vec()
+    };
+    job.emitted = job.emitted.max(start + b);
+    if !fresh.is_empty() {
+        events.push(JobEvent::Rounds {
+            job: pid,
+            stats: fresh,
+        });
+    }
+    Ok(())
 }
 
 impl Drop for ShardPool {
@@ -1488,6 +2054,56 @@ mod tests {
         // fail-stop: the poisoned cluster refuses further rounds and
         // re-surfaces the failure on shutdown
         assert!(cluster.run_seeded(&schedule, 1, 5).is_err());
+        assert!(cluster.shutdown().is_err());
+    }
+
+    #[test]
+    fn checkpointed_recovery_replays_bit_identical() {
+        // The recovery contract (DESIGN.md §8): with a checkpoint
+        // cadence set, a mid-run failure no longer fails the run — the
+        // epoch is aborted and replayed from the newest checkpoint, and
+        // because every edge draws from `Pcg64::for_edge(seed, round,
+        // edge)` the replay rebuilds the exact rounds the failure
+        // destroyed.  Trace and final state stay bit-identical to the
+        // sequential reference.
+        let (state0, schedule, _) = init(8, 20, Mobility::Full, 13);
+        let seed = 99;
+        let sweeps = 3;
+        let mut seq_state = state0.clone();
+        let seq_trace = Sequential.run(
+            &mut seq_state,
+            &schedule,
+            PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+            StopRule::sweeps(sweeps),
+            seed,
+        );
+        let fail_round = 5;
+        assert!(sweeps * schedule.period() > fail_round, "fault round never reached");
+        let mut cluster =
+            Cluster::spawn_with_fault(state0, WorkerAlgo::SortedGreedy, 2, (0, fail_round));
+        cluster.set_checkpoint_every(2);
+        assert_eq!(cluster.checkpoint_every(), 2);
+        let trace = cluster
+            .run_seeded(&schedule, sweeps, seed)
+            .expect("checkpointed run must survive the injected fault");
+        let fin = cluster.shutdown().unwrap();
+        assert_eq!(trace, seq_trace, "replayed trace diverged");
+        assert_eq!(fin, seq_state, "replayed state diverged");
+    }
+
+    #[test]
+    fn fault_without_checkpointing_keeps_fail_stop() {
+        // checkpoint_every = 0 (the default) must preserve the classic
+        // contract byte for byte: the same spawn as above, but the run
+        // fails and the cluster poisons.
+        let (state0, schedule, _) = init(8, 20, Mobility::Full, 13);
+        let mut cluster =
+            Cluster::spawn_with_fault(state0, WorkerAlgo::SortedGreedy, 2, (0, 5));
+        let err = cluster
+            .run_seeded(&schedule, 3, 99)
+            .expect_err("fail-stop contract broken")
+            .to_string();
+        assert!(err.contains("round 5"), "error does not name the round: {err}");
         assert!(cluster.shutdown().is_err());
     }
 

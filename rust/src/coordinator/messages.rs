@@ -80,11 +80,37 @@ pub enum Ctl {
         /// zero-copy across shards and batches); round `r` executes
         /// `plans[r % plans.len()]`.
         plans: Arc<Vec<Arc<RoundPlan>>>,
+        /// When set, the worker follows its [`Report::Batch`] with a
+        /// [`Report::Checkpoint`] snapshotting the job's slice as it
+        /// stands after the batch's last round.  FIFO report links make
+        /// the pair arrive in order, so the leader always knows which
+        /// round a checkpoint describes.
+        checkpoint: bool,
     },
     /// Report one job's per-node weights to the leader.
     PollWeights {
         /// Job whose weights to report.
         job: u32,
+    },
+    /// Unconditionally retire a job with **no reply**: purge its state
+    /// and stash, clear any failure already recorded against it, keep
+    /// serving other jobs.  Idempotent — aborting an unknown or already
+    /// retired job is a no-op.  This is the recovery primitive: the
+    /// leader aborts the failed epoch everywhere before replaying it
+    /// from a checkpoint under a fresh job id (`DESIGN.md` §8).
+    AbortJob {
+        /// Job to retire.
+        job: u32,
+    },
+    /// Re-establish the peer link to `shard` at `addr`: drop the old
+    /// (dead) connection and dial the rejoined worker's fresh peer
+    /// listener.  Sent by the leader to every survivor after a rejoin;
+    /// survivor-to-survivor links are untouched (`DESIGN.md` §8).
+    Remesh {
+        /// Shard whose peer link to replace.
+        shard: usize,
+        /// The rejoined worker's new peer listener address.
+        addr: String,
     },
     /// Terminate and return every open job's final load lists.
     Shutdown,
@@ -172,6 +198,25 @@ pub enum Report {
         shard: usize,
         /// Weight of each node the shard owns, in node order.
         weights: Vec<f64>,
+    },
+    /// Snapshot of one job's shard slice after a batch whose
+    /// [`Ctl::RunBatch`] had `checkpoint` set.  Sent immediately after
+    /// the batch's [`Report::Batch`] on the same FIFO link; the leader
+    /// assembles the per-shard slices of a round into a full
+    /// recovery image (`DESIGN.md` §8).  Batch boundaries are globally
+    /// consistent cut points — every peer exchange of the batch's
+    /// rounds has drained before the worker reports — so the assembled
+    /// image equals `bcm::Sequential`'s state after the same round.
+    Checkpoint {
+        /// Job the snapshot belongs to.
+        job: u32,
+        /// Reporting shard.
+        shard: usize,
+        /// Global index of the last executed round the snapshot
+        /// reflects (the batch's `start_round + rounds - 1`).
+        round: usize,
+        /// Per-node load lists of the shard's slice, in node order.
+        nodes: Vec<Vec<Load>>,
     },
     /// Final load lists of one job's shard slice (in response to
     /// [`Ctl::CloseJob`] or, for every open job, [`Ctl::Shutdown`]).

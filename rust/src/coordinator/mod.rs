@@ -29,10 +29,22 @@
 //!
 //! # Failure model
 //!
-//! Fail-stop: a worker failure (dead peer, protocol violation, or a
-//! caught panic) is reported to the leader with the round it occurred
-//! in, poisons the cluster against further rounds, and re-surfaces from
-//! [`Cluster::shutdown`].
+//! By default fail-stop: a worker failure (dead peer, protocol
+//! violation, or a caught panic) is reported to the leader with the
+//! round it occurred in, poisons the cluster against further rounds,
+//! and re-surfaces from [`Cluster::shutdown`].  With a checkpoint
+//! cadence set ([`Cluster::set_checkpoint_every`], flag
+//! `--checkpoint-every`), workers stream load-state checkpoints to the
+//! leader at batch boundaries and a failure triggers recovery instead:
+//! the leader aborts the current wire job, waits
+//! [`Cluster::set_rejoin_wait`] for a restarted worker to reclaim the
+//! dead shard, otherwise reassigns its node range onto the survivors
+//! ([`ShardMap::reassign`]), then replays from the last checkpoint.
+//! Replay is bit-identical to an undisturbed run because every edge
+//! draws from counter-based RNG streams keyed only on `(seed, round,
+//! edge)` — no RNG state lives in the lost worker.  The full recovery
+//! contract is specified in `DESIGN.md` §8 and the operational
+//! procedures in `OPERATIONS.md`.
 //!
 //! # Transports
 //!

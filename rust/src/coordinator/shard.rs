@@ -58,6 +58,44 @@ impl ShardMap {
     pub fn range(&self, s: usize) -> Range<usize> {
         self.starts[s]..self.starts[s + 1]
     }
+
+    /// Repartition after shard `lost` leaves the cluster: its contiguous
+    /// node range is merged into the nearest surviving neighbor (left
+    /// first, right if no survivor sits left of it) and `lost`'s own
+    /// range becomes empty.  `dead[s]` marks shards that cannot inherit
+    /// — `lost` itself plus any shard already lost in an earlier
+    /// reassignment (their ranges are empty, so contiguity survives
+    /// repeated deaths).  Shard indices are stable: survivors keep
+    /// their identity and the coordinator simply stops routing to
+    /// shards with empty ranges (an empty range puts no edges in any
+    /// [`RoundPlan`]), which is what lets recovery rebuild plans
+    /// without renumbering workers.
+    ///
+    /// Panics if no live shard remains to inherit the range.
+    pub fn reassign(&self, lost: usize, dead: &[bool]) -> ShardMap {
+        let k = self.shards();
+        assert!(lost < k, "reassign: no shard {lost}");
+        assert_eq!(dead.len(), k, "reassign: liveness vector length");
+        let mut starts = self.starts.clone();
+        if let Some(heir) = (0..lost).rev().find(|&s| !dead[s]) {
+            // the nearest live left neighbor absorbs: every boundary
+            // between it and lost's end slides right (the shards in
+            // between are already empty from earlier reassignments)
+            for b in &mut starts[heir + 1..=lost] {
+                *b = self.starts[lost + 1];
+            }
+        } else {
+            let heir = (lost + 1..k)
+                .find(|&s| !dead[s])
+                .expect("reassign: no surviving shard to inherit");
+            // the nearest live right neighbor absorbs: every boundary
+            // between lost and it slides left
+            for b in &mut starts[lost + 1..=heir] {
+                *b = self.starts[lost];
+            }
+        }
+        ShardMap { starts }
+    }
 }
 
 /// Resolve a shard-count knob: `0` = one shard per available core.
@@ -188,6 +226,55 @@ mod tests {
         }
         assert_eq!(total, 16);
         assert_eq!(cross, 4);
+    }
+
+    #[test]
+    fn reassign_merges_into_nearest_live_neighbor() {
+        let m = ShardMap::new(10, 3); // 0..4, 4..7, 7..10
+        // middle shard dies: left neighbor inherits
+        let r = m.reassign(1, &[false, true, false]);
+        assert_eq!(r.range(0), 0..7);
+        assert!(r.range(1).is_empty());
+        assert_eq!(r.range(2), 7..10);
+        assert_eq!(r.n(), 10);
+        // shard 0 dies: right neighbor inherits
+        let r = m.reassign(0, &[true, false, false]);
+        assert!(r.range(0).is_empty());
+        assert_eq!(r.range(1), 0..7);
+        assert_eq!(r.range(2), 7..10);
+        // every node still maps to a non-empty owning shard
+        for v in 0..10 {
+            let s = r.shard_of(v);
+            assert!(r.range(s).contains(&v), "node {v} mapped to shard {s}");
+            assert_ne!(s, 0, "node {v} mapped to the dead shard");
+        }
+    }
+
+    #[test]
+    fn reassign_survives_sequential_deaths() {
+        let m = ShardMap::new(12, 4); // 0..3, 3..6, 6..9, 9..12
+        let mut dead = vec![false; 4];
+        dead[1] = true;
+        let r1 = m.reassign(1, &dead); // shard 0 takes 3..6
+        assert_eq!(r1.range(0), 0..6);
+        dead[0] = true;
+        let r2 = r1.reassign(0, &dead); // shard 2 is nearest live heir
+        assert!(r2.range(0).is_empty());
+        assert!(r2.range(1).is_empty());
+        assert_eq!(r2.range(2), 0..9);
+        assert_eq!(r2.range(3), 9..12);
+        for v in 0..12 {
+            let s = r2.shard_of(v);
+            assert!(!dead[s], "node {v} mapped to dead shard {s}");
+            assert!(r2.range(s).contains(&v));
+        }
+        // plans built against the reassigned map route nothing to the
+        // dead shards
+        let plan = RoundPlan::build(&[(0, 4), (8, 10), (2, 3)], &r2);
+        assert!(plan.per_shard[0].local.is_empty() && plan.per_shard[0].master.is_empty());
+        assert!(plan.per_shard[1].local.is_empty() && plan.per_shard[1].master.is_empty());
+        assert!(plan.per_shard[0].slave.is_empty() && plan.per_shard[1].slave.is_empty());
+        assert_eq!(plan.edges, 3);
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub const FRAME_MAGIC: u32 = 0x574D_4342;
 /// Current wire protocol version; bumped on any incompatible change.
 /// Version 2 added the job id carried by every data-plane message plus
 /// the `OpenJob`/`CloseJob` control frames of the multi-tenant service.
+/// The elastic extension (checkpoint / rejoin / remesh frames, kinds
+/// 15–17, and the widened `Hello`/`Init` handshake) stays within v2:
+/// the new frames and fields only ever travel between endpoints that
+/// both already speak them.
 pub const WIRE_VERSION: u16 = 2;
 
 /// Frame header size in bytes (magic + version + kind + reserved +
@@ -65,6 +69,9 @@ mod kind {
     pub const PEER_HELLO: u8 = 12;
     pub const CTL_OPEN_JOB: u8 = 13;
     pub const CTL_CLOSE_JOB: u8 = 14;
+    pub const REPORT_CHECKPOINT: u8 = 15;
+    pub const CTL_ABORT_JOB: u8 = 16;
+    pub const CTL_REMESH: u8 = 17;
 }
 
 /// Everything that can travel over a cluster TCP link: the three
@@ -82,6 +89,13 @@ pub enum WireMsg {
     Hello {
         /// `host:port` the worker accepts peer connections on.
         peer_addr: String,
+        /// Rejoin token: `None` for a fresh (or restarted) worker,
+        /// `Some(t)` when reclaiming a shard with a token previously
+        /// issued by the leader's `Init`.  A restarted process has no
+        /// memory of its token and sends `None`; the leader only
+        /// accepts the claim while it is waiting out a dead shard's
+        /// rejoin window (`DESIGN.md` §8).
+        rejoin: Option<u64>,
     },
     /// Leader -> worker, the reply to [`WireMsg::Hello`] once every
     /// worker has connected: the worker's identity and initial state.
@@ -112,6 +126,19 @@ pub struct Init {
     /// Peer-mesh listener address of every worker, indexed by shard
     /// (entry `shard` is this worker's own address).
     pub peers: Vec<String>,
+    /// True when this `Init` re-admits a worker into a running cluster:
+    /// the worker accepts its `shards - 1` surviving peers (who are
+    /// told to dial it via `Ctl::Remesh`) instead of dialing lower
+    /// shards itself, and it skips the job-0 install — state arrives
+    /// through `Ctl::OpenJob` carrying the checkpoint slice.
+    pub rejoin: bool,
+    /// First round the worker will be asked to execute (0 for a fresh
+    /// cluster; the checkpoint round + 1 on rejoin).  Informational —
+    /// every `RunBatch` names its rounds explicitly.
+    pub resume_round: usize,
+    /// Leader-issued identity token for this shard; a future `Hello`
+    /// carrying it as `rejoin: Some(token)` reclaims the shard.
+    pub token: u64,
 }
 
 /// A decode failure; each frame defect maps to a distinct variant.
@@ -272,6 +299,7 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             rounds,
             seed,
             plans,
+            checkpoint,
         }) => {
             put_u32(&mut b, *job);
             put_usize(&mut b, *start_round);
@@ -281,11 +309,21 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             for p in plans.iter() {
                 put_round_plan(&mut b, p);
             }
+            put_bool(&mut b, *checkpoint);
             kind::CTL_RUN_BATCH
         }
         WireMsg::Ctl(Ctl::PollWeights { job }) => {
             put_u32(&mut b, *job);
             kind::CTL_POLL_WEIGHTS
+        }
+        WireMsg::Ctl(Ctl::AbortJob { job }) => {
+            put_u32(&mut b, *job);
+            kind::CTL_ABORT_JOB
+        }
+        WireMsg::Ctl(Ctl::Remesh { shard, addr }) => {
+            put_usize(&mut b, *shard);
+            put_str(&mut b, addr);
+            kind::CTL_REMESH
         }
         WireMsg::Ctl(Ctl::Shutdown) => kind::CTL_SHUTDOWN,
         WireMsg::Peer(ShardMsg::Offer {
@@ -340,6 +378,26 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             }
             kind::REPORT_WEIGHTS
         }
+        WireMsg::Report(Report::Checkpoint {
+            job,
+            shard,
+            round,
+            nodes,
+        }) => {
+            put_u32(&mut b, *job);
+            put_usize(&mut b, *shard);
+            put_usize(&mut b, *round);
+            // declared slice size: the total load count across all
+            // nodes, cross-checked by the decoder against the loads
+            // the payload actually carries
+            let total: u64 = nodes.iter().map(|n| n.len() as u64).sum();
+            put_u64(&mut b, total);
+            put_usize(&mut b, nodes.len());
+            for node in nodes {
+                put_loads(&mut b, node);
+            }
+            kind::REPORT_CHECKPOINT
+        }
         WireMsg::Report(Report::Final { job, shard, nodes }) => {
             put_u32(&mut b, *job);
             put_usize(&mut b, *shard);
@@ -373,8 +431,15 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             put_str(&mut b, message);
             kind::REPORT_ERROR
         }
-        WireMsg::Hello { peer_addr } => {
+        WireMsg::Hello { peer_addr, rejoin } => {
             put_str(&mut b, peer_addr);
+            match rejoin {
+                Some(t) => {
+                    put_bool(&mut b, true);
+                    put_u64(&mut b, *t);
+                }
+                None => put_bool(&mut b, false),
+            }
             kind::HELLO
         }
         WireMsg::Init(init) => {
@@ -390,6 +455,9 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
             for p in &init.peers {
                 put_str(&mut b, p);
             }
+            put_bool(&mut b, init.rejoin);
+            put_usize(&mut b, init.resume_round);
+            put_u64(&mut b, init.token);
             kind::INIT
         }
         WireMsg::PeerHello { shard } => {
@@ -578,15 +646,22 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
             for _ in 0..n {
                 plans.push(Arc::new(c.round_plan()?));
             }
+            let checkpoint = c.bool()?;
             WireMsg::Ctl(Ctl::RunBatch {
                 job,
                 start_round,
                 rounds,
                 seed,
                 plans: Arc::new(plans),
+                checkpoint,
             })
         }
         kind::CTL_POLL_WEIGHTS => WireMsg::Ctl(Ctl::PollWeights { job: c.u32()? }),
+        kind::CTL_ABORT_JOB => WireMsg::Ctl(Ctl::AbortJob { job: c.u32()? }),
+        kind::CTL_REMESH => WireMsg::Ctl(Ctl::Remesh {
+            shard: c.usize()?,
+            addr: c.str()?,
+        }),
         kind::CTL_SHUTDOWN => WireMsg::Ctl(Ctl::Shutdown),
         kind::PEER_OFFER => WireMsg::Peer(ShardMsg::Offer {
             job: c.u32()?,
@@ -631,6 +706,40 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 weights,
             })
         }
+        kind::REPORT_CHECKPOINT => {
+            let job = c.u32()?;
+            let shard = c.usize()?;
+            let round = c.usize()?;
+            let declared = c.u64()?;
+            // the declared slice size must fit the frame before any
+            // allocation happens (17 bytes per load minimum) ...
+            match declared.checked_mul(17) {
+                Some(need) if need <= c.remaining() as u64 => {}
+                _ => return Err(CodecError::Malformed("length prefix overruns frame")),
+            }
+            let n = c.vec_len(8)?;
+            let mut nodes = Vec::with_capacity(n);
+            let mut total = 0u64;
+            for _ in 0..n {
+                let node = c.loads()?;
+                total += node.len() as u64;
+                nodes.push(node);
+            }
+            // ... and must agree with the loads the payload actually
+            // carried: a frame whose header promises one slice size but
+            // delivers another is corrupt, not trusted
+            if total != declared {
+                return Err(CodecError::Malformed(
+                    "checkpoint declared slice size disagrees with payload",
+                ));
+            }
+            WireMsg::Report(Report::Checkpoint {
+                job,
+                shard,
+                round,
+                nodes,
+            })
+        }
         kind::REPORT_FINAL => {
             let job = c.u32()?;
             let shard = c.usize()?;
@@ -653,9 +762,11 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 message,
             })
         }
-        kind::HELLO => WireMsg::Hello {
-            peer_addr: c.str()?,
-        },
+        kind::HELLO => {
+            let peer_addr = c.str()?;
+            let rejoin = if c.bool()? { Some(c.u64()?) } else { None };
+            WireMsg::Hello { peer_addr, rejoin }
+        }
         kind::INIT => {
             let shard = c.usize()?;
             let shards = c.usize()?;
@@ -671,6 +782,9 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
             for _ in 0..np {
                 peers.push(c.str()?);
             }
+            let rejoin = c.bool()?;
+            let resume_round = c.usize()?;
+            let token = c.u64()?;
             WireMsg::Init(Init {
                 shard,
                 shards,
@@ -678,6 +792,9 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 algo,
                 nodes,
                 peers,
+                rejoin,
+                resume_round,
+                token,
             })
         }
         kind::PEER_HELLO => WireMsg::PeerHello { shard: c.usize()? },
@@ -792,10 +909,26 @@ mod tests {
             algo: "sorted:quick".into(),
             nodes: vec![vec![Load::new(1, 2.5)], vec![]],
         }));
+        roundtrip(WireMsg::Ctl(Ctl::AbortJob { job: 12 }));
+        roundtrip(WireMsg::Ctl(Ctl::Remesh {
+            shard: 1,
+            addr: "10.0.0.5:4512".into(),
+        }));
         roundtrip(WireMsg::PeerHello { shard: 3 });
         roundtrip(WireMsg::Hello {
             peer_addr: "127.0.0.1:4510".into(),
+            rejoin: None,
         });
+        roundtrip(WireMsg::Hello {
+            peer_addr: "127.0.0.1:4510".into(),
+            rejoin: Some(0xDEAD_BEEF_u64),
+        });
+        roundtrip(WireMsg::Report(Report::Checkpoint {
+            job: 2,
+            shard: 1,
+            round: 63,
+            nodes: vec![vec![Load::new(5, 1.25)], vec![], vec![Load::pinned(6, 0.5)]],
+        }));
         roundtrip(WireMsg::Report(Report::Error {
             job: Some(4),
             shard: 2,
@@ -853,6 +986,7 @@ mod tests {
     fn corruption_version_kind_and_trailing_are_rejected() {
         let msg = WireMsg::Hello {
             peer_addr: "10.0.0.1:9".into(),
+            rejoin: None,
         };
         let frame = encode_frame(&msg);
 
@@ -918,6 +1052,47 @@ mod tests {
         frame.extend_from_slice(&payload);
         assert_eq!(
             decode_frame(&frame).unwrap_err(),
+            CodecError::Malformed("length prefix overruns frame")
+        );
+    }
+
+    /// Build a Checkpoint frame by hand with `declared` as its slice
+    /// size; `nodes` is the payload it actually carries.
+    fn checkpoint_frame(declared: u64, nodes: &[Vec<Load>]) -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 3); // job
+        put_usize(&mut payload, 0); // shard
+        put_usize(&mut payload, 9); // round
+        put_u64(&mut payload, declared);
+        put_usize(&mut payload, nodes.len());
+        for node in nodes {
+            put_loads(&mut payload, node);
+        }
+        let mut frame = Vec::new();
+        put_u32(&mut frame, FRAME_MAGIC);
+        put_u16(&mut frame, WIRE_VERSION);
+        put_u8(&mut frame, kind::REPORT_CHECKPOINT);
+        put_u8(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    #[test]
+    fn checkpoint_declared_size_must_match_payload() {
+        let nodes = vec![vec![Load::new(1, 2.0), Load::new(2, 3.0)], vec![Load::new(3, 1.0)]];
+        // the honest frame decodes
+        assert!(decode_frame(&checkpoint_frame(3, &nodes)).is_ok());
+        // a declared size disagreeing with the carried loads is rejected
+        assert_eq!(
+            decode_frame(&checkpoint_frame(2, &nodes)).unwrap_err(),
+            CodecError::Malformed("checkpoint declared slice size disagrees with payload")
+        );
+        // a hostile declared size larger than the frame can hold is
+        // rejected before any allocation
+        assert_eq!(
+            decode_frame(&checkpoint_frame(u64::MAX / 32, &nodes)).unwrap_err(),
             CodecError::Malformed("length prefix overruns frame")
         );
     }

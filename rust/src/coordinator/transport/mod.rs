@@ -117,6 +117,24 @@ pub trait LeaderTransport: Send {
 
     /// Receive the next report from any worker, waiting at most `wait`.
     fn recv_report(&mut self, wait: Duration) -> Result<Report, TransportError>;
+
+    /// Wait up to `wait` for a replacement worker to claim the dead
+    /// shard `shard` (the rejoin half of the recovery contract,
+    /// `DESIGN.md` §8).  On success the replacement is fully
+    /// re-handshaken — ready for `Ctl` traffic — and its fresh
+    /// peer-mesh listener address is returned so the leader can
+    /// `Ctl::Remesh` the survivors.  `Ok(None)` means no replacement
+    /// appeared (or the backend does not support rejoin, the default:
+    /// local workers are threads and cannot be restarted from outside).
+    fn await_rejoin(
+        &mut self,
+        shard: usize,
+        resume_round: usize,
+        wait: Duration,
+    ) -> Result<Option<String>, TransportError> {
+        let _ = (shard, resume_round, wait);
+        Ok(None)
+    }
 }
 
 /// A shard worker's endpoint: the control inbox, the report channel
@@ -140,6 +158,15 @@ pub trait WorkerTransport: Send {
     /// Receive the next peer message from any shard, waiting at most
     /// `wait`.
     fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError>;
+
+    /// Replace the peer link to `shard` with a fresh connection to
+    /// `addr` (the survivor half of a rejoin, driven by `Ctl::Remesh`).
+    /// The default is a no-op `Ok`: local channels never die, so there
+    /// is nothing to re-establish.
+    fn remesh_peer(&mut self, shard: usize, addr: &str) -> Result<(), TransportError> {
+        let _ = (shard, addr);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -615,6 +615,7 @@ mod tests {
         // queueing in the poller
         let msg = WireMsg::Hello {
             peer_addr: "x".repeat(4096),
+            rejoin: None,
         };
         let mut queued = 0;
         for _ in 0..4096 {

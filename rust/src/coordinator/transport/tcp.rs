@@ -65,6 +65,7 @@ use crate::coordinator::shard::{RoundPlan, ShardPlan};
 use crate::coordinator::worker::ShardWorker;
 use crate::load::Load;
 use crate::util::error::{Context, Result};
+use crate::util::rng::Pcg64;
 use std::collections::VecDeque;
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -151,6 +152,16 @@ fn read_frame_timed(stream: &mut TcpStream, what: &str) -> Result<WireMsg> {
     Ok(msg)
 }
 
+/// Mint a leader-issued worker identity token (`Init::token`).  Not a
+/// secret — just an identifier distinct per (process, issue order) so a
+/// stale replacement claiming an already-refilled shard is refused.
+fn fresh_token(shard: usize) -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static ISSUED: AtomicU64 = AtomicU64::new(0);
+    let seq = ISSUED.fetch_add(1, Ordering::Relaxed);
+    Pcg64::new((u64::from(std::process::id()) << 32) ^ seq).next_u64() ^ shard as u64
+}
+
 // ---------------------------------------------------------------- leader
 
 /// The leader's bound-but-not-yet-accepting socket.  Binding is split
@@ -200,12 +211,32 @@ pub struct TcpLeader {
     /// Reports decoded but not yet handed to the caller.
     queue: VecDeque<Report>,
     events: VecDeque<Event>,
+    /// The accept socket, retained past the initial handshake so a
+    /// replacement worker can dial in and rejoin (`--connect` clusters).
+    listener: Option<TcpListener>,
+    /// Worker listen addresses of a `--listen` cluster (`None` entries
+    /// on accept-mode clusters): rejoin redials the restarted worker.
+    dial_addrs: Vec<Option<String>>,
+    /// Current peer-mesh listener address per shard; a reassigned-away
+    /// shard's entry is cleared so a later rejoiner knows not to expect
+    /// a mesh connection from it.
+    peer_addrs: Vec<String>,
+    /// Original first-node id per shard (informational in a rejoin
+    /// `Init`: the rejoiner's state arrives via `Ctl::OpenJob`).
+    los: Vec<usize>,
+    /// Algorithm name shipped in every `Init`.
+    algo: String,
+    /// Identity token issued to the current occupant of each shard.
+    idents: Vec<u64>,
 }
 
 impl TcpLeader {
     /// Accept `inits.len()` workers on `listener`, then complete the
     /// handshake (collect `Hello`s, send `Init`s, register the sockets
-    /// with the poller).
+    /// with the poller).  The listener stays open afterwards so
+    /// replacement workers can rejoin ([`await_rejoin`]).
+    ///
+    /// [`await_rejoin`]: LeaderTransport::await_rejoin
     pub fn accept(listener: LeaderListener, inits: Vec<InitPayload>) -> Result<TcpLeader> {
         let k = inits.len();
         let mut conns = Vec::with_capacity(k);
@@ -217,12 +248,13 @@ impl TcpLeader {
             )?;
             conns.push(stream);
         }
-        Self::handshake(conns, inits)
+        Self::handshake(conns, inits, Some(listener.listener), vec![None; k])
     }
 
     /// Dial one listening worker per address (workers started with
     /// `cluster-worker --listen`), then complete the handshake.  Worker
-    /// `i` of `addrs` becomes shard `i`.
+    /// `i` of `addrs` becomes shard `i`; a dead worker restarted on the
+    /// same address can be redialed for rejoin.
     pub fn connect(addrs: &[String], inits: Vec<InitPayload>) -> Result<TcpLeader> {
         assert_eq!(addrs.len(), inits.len(), "one address per shard");
         let mut conns = Vec::with_capacity(addrs.len());
@@ -231,16 +263,23 @@ impl TcpLeader {
                 .with_context(|| format!("dialing cluster worker {addr}"))?;
             conns.push(stream);
         }
-        Self::handshake(conns, inits)
+        let dials = addrs.iter().map(|a| Some(a.clone())).collect();
+        Self::handshake(conns, inits, None, dials)
     }
 
-    fn handshake(mut conns: Vec<TcpStream>, inits: Vec<InitPayload>) -> Result<TcpLeader> {
+    fn handshake(
+        mut conns: Vec<TcpStream>,
+        inits: Vec<InitPayload>,
+        listener: Option<TcpListener>,
+        dial_addrs: Vec<Option<String>>,
+    ) -> Result<TcpLeader> {
         let k = conns.len();
-        // collect every worker's peer-mesh address
+        // collect every worker's peer-mesh address (a rejoin claim in a
+        // first handshake is meaningless and ignored)
         let mut peer_addrs = Vec::with_capacity(k);
         for (i, stream) in conns.iter_mut().enumerate() {
             match read_frame_timed(stream, &format!("Hello from worker {i}"))? {
-                WireMsg::Hello { peer_addr } => peer_addrs.push(peer_addr),
+                WireMsg::Hello { peer_addr, rejoin: _ } => peer_addrs.push(peer_addr),
                 other => {
                     return Err(anyhow!(
                         "worker {i} handshake: expected Hello, got {other:?}"
@@ -248,8 +287,13 @@ impl TcpLeader {
                 }
             }
         }
+        let los: Vec<usize> = inits.iter().map(|i| i.lo).collect();
+        let algo = inits.first().map(|i| i.algo.clone()).unwrap_or_default();
+        let mut idents = Vec::with_capacity(k);
         // ship each worker its identity, initial nodes, and the mesh map
         for (shard, (stream, init)) in conns.iter_mut().zip(inits).enumerate() {
+            let token = fresh_token(shard);
+            idents.push(token);
             let msg = WireMsg::Init(Init {
                 shard,
                 shards: k,
@@ -257,6 +301,9 @@ impl TcpLeader {
                 algo: init.algo,
                 nodes: init.nodes,
                 peers: peer_addrs.clone(),
+                rejoin: false,
+                resume_round: 0,
+                token,
             });
             write_frame(stream, &msg)
                 .with_context(|| format!("sending Init to worker {shard}"))?;
@@ -278,7 +325,62 @@ impl TcpLeader {
             done: vec![false; k],
             queue: VecDeque::new(),
             events: VecDeque::new(),
+            listener,
+            dial_addrs,
+            peer_addrs,
+            los,
+            algo,
+            idents,
         })
+    }
+
+    /// Complete a replacement worker's rejoin handshake on an
+    /// established connection: read its `Hello`, validate any identity
+    /// claim, send a rejoin `Init`, and splice the socket into the dead
+    /// shard's slot.  Returns the replacement's peer-listener address.
+    fn rehandshake(
+        &mut self,
+        mut stream: TcpStream,
+        shard: usize,
+        resume_round: usize,
+    ) -> Result<String> {
+        let (peer_addr, claim) =
+            match read_frame_timed(&mut stream, "Hello from a rejoining worker")? {
+                WireMsg::Hello { peer_addr, rejoin } => (peer_addr, rejoin),
+                other => return Err(anyhow!("rejoin handshake: expected Hello, got {other:?}")),
+            };
+        if let Some(tok) = claim {
+            if tok != self.idents[shard] {
+                return Err(anyhow!(
+                    "rejoin handshake: stale identity token for shard {shard}"
+                ));
+            }
+        }
+        let token = fresh_token(shard);
+        self.peer_addrs[shard] = peer_addr.clone();
+        let msg = WireMsg::Init(Init {
+            shard,
+            shards: self.tokens.len(),
+            lo: self.los[shard],
+            algo: self.algo.clone(),
+            // the rejoiner's load slice arrives via Ctl::OpenJob with
+            // the checkpoint; the Init ships only identity and topology
+            nodes: Vec::new(),
+            peers: self.peer_addrs.clone(),
+            rejoin: true,
+            resume_round,
+            token,
+        });
+        write_frame(&mut stream, &msg).context("sending rejoin Init")?;
+        self.poller.remove(self.tokens[shard]);
+        let tok = self
+            .poller
+            .add_frame_conn(stream)
+            .context("registering the rejoined worker socket")?;
+        self.tokens[shard] = tok;
+        self.done[shard] = false;
+        self.idents[shard] = token;
+        Ok(peer_addr)
     }
 
     fn shard_of(&self, token: usize) -> Option<usize> {
@@ -302,7 +404,17 @@ impl TcpLeader {
                 }
                 match msg {
                     WireMsg::Report(report) => {
-                        if matches!(report, Report::Final { .. } | Report::Error { .. }) {
+                        // A `Final` or an *untagged* error ends the
+                        // worker's lifecycle by protocol.  A job-tagged
+                        // error only retires that job: the worker stays
+                        // connected (it may serve other tenants, or the
+                        // recovered epoch that replaces the failed one).
+                        let terminal = match &report {
+                            Report::Final { .. } => true,
+                            Report::Error { job, .. } => job.is_none(),
+                            _ => false,
+                        };
+                        if terminal {
                             self.done[shard] = true;
                             self.poller.set_done(token);
                         }
@@ -358,6 +470,7 @@ impl LeaderTransport for TcpLeader {
                 rounds,
                 seed,
                 plans,
+                checkpoint,
             } => {
                 let sliced: Vec<Arc<RoundPlan>> = plans
                     .iter()
@@ -377,6 +490,7 @@ impl LeaderTransport for TcpLeader {
                     rounds,
                     seed,
                     plans: Arc::new(sliced),
+                    checkpoint,
                 }
             }
             other => other,
@@ -406,6 +520,46 @@ impl LeaderTransport for TcpLeader {
             self.poller.poll(deadline - now, &mut self.events);
             while let Some(ev) = self.events.pop_front() {
                 self.absorb(ev);
+            }
+        }
+    }
+
+    fn await_rejoin(
+        &mut self,
+        shard: usize,
+        resume_round: usize,
+        wait: Duration,
+    ) -> Result<Option<String>, TransportError> {
+        let deadline = Instant::now() + wait;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let remaining = deadline - now;
+            // accept-mode clusters wait for the replacement to dial in;
+            // connect-mode clusters redial the restarted worker's
+            // listen address
+            let stream = if let Some(listener) = &self.listener {
+                match accept_with_deadline(listener, remaining, "a rejoining worker") {
+                    Ok(s) => s,
+                    Err(_) => return Ok(None),
+                }
+            } else if let Some(addr) = self.dial_addrs[shard].clone() {
+                let retries =
+                    (remaining.as_millis() / CONNECT_RETRY_DELAY.as_millis()).max(1) as usize;
+                match connect_with_retry(&addr, retries) {
+                    Ok(s) => s,
+                    Err(_) => return Ok(None),
+                }
+            } else {
+                return Ok(None);
+            };
+            // a malformed or stale claimant burns its connection, not
+            // the window: keep listening until the deadline
+            match self.rehandshake(stream, shard, resume_round) {
+                Ok(addr) => return Ok(Some(addr)),
+                Err(_) => continue,
             }
         }
     }
@@ -572,10 +726,36 @@ impl WorkerTransport for TcpWorker {
             self.pump(deadline - now);
         }
     }
+
+    fn remesh_peer(&mut self, shard: usize, addr: &str) -> Result<(), TransportError> {
+        // drop the dead link and purge its queued loss events either
+        // way; an empty address means the shard was reassigned away and
+        // no replacement link exists
+        if let Some(old) = self.peer_toks[shard].take() {
+            self.poller.remove(old);
+        }
+        self.peer_q
+            .retain(|e| !matches!(e, PeerEvent::Gone { peer, .. } if *peer == shard));
+        if addr.is_empty() {
+            return Ok(());
+        }
+        let mut stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES).map_err(|e| {
+            TransportError::Closed(format!("dialing rejoined shard {shard} at {addr}: {e}"))
+        })?;
+        write_frame(&mut stream, &WireMsg::PeerHello { shard: self.shard }).map_err(|e| {
+            TransportError::Closed(format!("greeting rejoined shard {shard}: {e}"))
+        })?;
+        let tok = self.poller.add_frame_conn(stream).map_err(|e| {
+            TransportError::Closed(format!("registering the rejoined peer socket: {e}"))
+        })?;
+        self.peer_toks[shard] = Some(tok);
+        Ok(())
+    }
 }
 
 /// Everything a worker process learned from its `Init` frame, needed to
-/// install the bootstrap job (job 0) on the [`ShardWorker`].
+/// install the bootstrap job (job 0) on the [`ShardWorker`] — or, on a
+/// rejoin, to skip that install and wait for the recovery `OpenJob`.
 pub struct WorkerSeed {
     /// Assigned shard index.
     pub shard: usize,
@@ -585,13 +765,23 @@ pub struct WorkerSeed {
     pub lo: usize,
     /// Algorithm name (`PairAlgorithm::parse` spelling).
     pub algo: String,
-    /// Initial per-node load lists.
+    /// Initial per-node load lists (empty on a rejoin: the recovered
+    /// slice arrives via `Ctl::OpenJob` with the checkpoint).
     pub nodes: Vec<Vec<Load>>,
+    /// This handshake re-admitted the worker into a running cluster.
+    pub rejoin: bool,
+    /// Round the recovered epoch resumes from (informational).
+    pub resume_round: usize,
 }
 
 /// Complete a worker's side of the handshake over an established leader
 /// connection: bind the peer listener, send `Hello`, await `Init`,
 /// build the mesh, and register every socket with the worker's poller.
+///
+/// A rejoin `Init` inverts the mesh bootstrap: the survivors are told to
+/// dial the rejoiner (`Ctl::Remesh`), so the rejoiner dials nobody and
+/// accepts one connection per *live* peer (the `Init` peer table marks
+/// reassigned-away shards with an empty address).
 fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
     leader.set_nodelay(true).ok();
     // the peer listener lives on whatever interface reaches the leader
@@ -599,8 +789,14 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
     let peer_listener =
         TcpListener::bind((ip, 0)).context("binding the worker's peer-mesh listener")?;
     let my_addr = peer_listener.local_addr()?.to_string();
-    write_frame(&mut leader, &WireMsg::Hello { peer_addr: my_addr })
-        .context("sending Hello to the leader")?;
+    write_frame(
+        &mut leader,
+        &WireMsg::Hello {
+            peer_addr: my_addr,
+            rejoin: None,
+        },
+    )
+    .context("sending Hello to the leader")?;
     let init = match read_frame_timed(&mut leader, "Init from the leader")? {
         WireMsg::Init(init) => init,
         other => return Err(anyhow!("handshake: expected Init, got {other:?}")),
@@ -612,27 +808,62 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
             init.peers.len()
         ));
     }
-    // mesh: dial every lower shard, accept every higher one, so each
-    // unordered pair of shards shares exactly one socket
     let mut peers: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
-    for (p, addr) in init.peers.iter().enumerate().take(me) {
-        let mut stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
-            .with_context(|| format!("dialing peer shard {p} at {addr}"))?;
-        write_frame(&mut stream, &WireMsg::PeerHello { shard: me })
-            .with_context(|| format!("greeting peer shard {p}"))?;
-        peers[p] = Some(stream);
-    }
-    for _ in me + 1..k {
-        let mut stream =
-            accept_with_deadline(&peer_listener, HANDSHAKE_TIMEOUT, "a peer-mesh connection")?;
-        match read_frame_timed(&mut stream, "PeerHello")? {
-            WireMsg::PeerHello { shard } if shard < k && shard > me && peers[shard].is_none() => {
-                peers[shard] = Some(stream);
+    if init.rejoin {
+        // rejoin mesh: every live survivor dials us (driven by the
+        // leader's Ctl::Remesh); reassigned-away shards have an empty
+        // peer-table entry and no link
+        let expected = init
+            .peers
+            .iter()
+            .enumerate()
+            .filter(|&(p, a)| p != me && !a.is_empty())
+            .count();
+        for _ in 0..expected {
+            let mut stream = accept_with_deadline(
+                &peer_listener,
+                HANDSHAKE_TIMEOUT,
+                "a remeshing survivor",
+            )?;
+            match read_frame_timed(&mut stream, "PeerHello")? {
+                WireMsg::PeerHello { shard }
+                    if shard < k && shard != me && peers[shard].is_none() =>
+                {
+                    peers[shard] = Some(stream);
+                }
+                WireMsg::PeerHello { shard } => {
+                    return Err(anyhow!("remesh: unexpected PeerHello from shard {shard}"))
+                }
+                other => return Err(anyhow!("remesh: expected PeerHello, got {other:?}")),
             }
-            WireMsg::PeerHello { shard } => {
-                return Err(anyhow!("mesh: unexpected PeerHello from shard {shard}"))
+        }
+    } else {
+        // first mesh: dial every lower shard, accept every higher one,
+        // so each unordered pair of shards shares exactly one socket
+        for (p, addr) in init.peers.iter().enumerate().take(me) {
+            let mut stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
+                .with_context(|| format!("dialing peer shard {p} at {addr}"))?;
+            write_frame(&mut stream, &WireMsg::PeerHello { shard: me })
+                .with_context(|| format!("greeting peer shard {p}"))?;
+            peers[p] = Some(stream);
+        }
+        for _ in me + 1..k {
+            let mut stream = accept_with_deadline(
+                &peer_listener,
+                HANDSHAKE_TIMEOUT,
+                "a peer-mesh connection",
+            )?;
+            match read_frame_timed(&mut stream, "PeerHello")? {
+                WireMsg::PeerHello { shard }
+                    if shard < k && shard > me && peers[shard].is_none() =>
+                {
+                    peers[shard] = Some(stream);
+                }
+                WireMsg::PeerHello { shard } => {
+                    return Err(anyhow!("mesh: unexpected PeerHello from shard {shard}"))
+                }
+                other => return Err(anyhow!("mesh: expected PeerHello, got {other:?}")),
             }
-            other => return Err(anyhow!("mesh: expected PeerHello, got {other:?}")),
         }
     }
     // every socket goes nonblocking under one poller; the worker thread
@@ -667,6 +898,8 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
         lo: init.lo,
         algo: init.algo,
         nodes: init.nodes,
+        rejoin: init.rejoin,
+        resume_round: init.resume_round,
     };
     Ok((transport, seed))
 }
@@ -675,36 +908,50 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
 
 /// Serve one cluster run as a worker process, dialing the leader at
 /// `addr` (the `bcm-dlb cluster-worker --connect` entry point).
-/// Returns after the cluster shuts down.
-pub fn serve_connect(addr: &str, retries: usize) -> Result<()> {
+/// Returns after the cluster shuts down.  `fault_exit` is the hidden
+/// `--fault-exit` recovery-test hook: hard-exit the process at the
+/// start of that global round.
+pub fn serve_connect(addr: &str, retries: usize, fault_exit: Option<usize>) -> Result<()> {
     let leader = connect_with_retry(addr, retries)
         .with_context(|| format!("connecting to cluster leader {addr}"))?;
-    serve(leader)
+    serve(leader, fault_exit)
 }
 
 /// Serve one cluster run as a worker process, listening on `addr` for
 /// the leader's dial-in (the `bcm-dlb cluster-worker --listen` entry
 /// point, paired with the leader's `peers` list).
-pub fn serve_listen(addr: &str) -> Result<()> {
+pub fn serve_listen(addr: &str, fault_exit: Option<usize>) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding worker socket {addr}"))?;
     let leader = accept_with_deadline(&listener, HANDSHAKE_TIMEOUT, "the cluster leader")?;
-    serve(leader)
+    serve(leader, fault_exit)
 }
 
-fn serve(leader: TcpStream) -> Result<()> {
+fn serve(leader: TcpStream, fault_exit: Option<usize>) -> Result<()> {
     let (transport, seed) = worker_handshake(leader)?;
     let algo = PairAlgorithm::parse(&seed.algo)
         .with_context(|| format!("leader sent unknown algorithm '{}'", seed.algo))?;
-    eprintln!(
-        "cluster-worker: shard {}/{} serving nodes {}..{}",
-        seed.shard,
-        seed.shards,
-        seed.lo,
-        seed.lo + seed.nodes.len()
-    );
+    if seed.rejoin {
+        eprintln!(
+            "cluster-worker: shard {}/{} rejoined, resuming from round {}",
+            seed.shard, seed.shards, seed.resume_round
+        );
+    } else {
+        eprintln!(
+            "cluster-worker: shard {}/{} serving nodes {}..{}",
+            seed.shard,
+            seed.shards,
+            seed.lo,
+            seed.lo + seed.nodes.len()
+        );
+    }
     let mut worker = ShardWorker::new(Box::new(transport));
-    worker.install_job(0, seed.lo, seed.nodes, algo);
+    if !seed.rejoin {
+        worker.install_job(0, seed.lo, seed.nodes, algo);
+    }
+    if let Some(round) = fault_exit {
+        worker.set_fault_exit(round);
+    }
     // only a clean Ctl::Shutdown lifecycle exits 0 — scripts and
     // orchestrators keyed on the exit code must see failures
     worker

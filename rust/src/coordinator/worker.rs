@@ -131,15 +131,24 @@ pub struct ShardWorker {
     stash: BTreeMap<(u32, usize, usize), ShardMsg>,
     /// Fault injection for tests: panic at the start of this job's
     /// global round, exercising the mid-batch failure contract.  Always
-    /// `None` in production spawns.
+    /// `None` in production spawns, and **one-shot** — the fault is
+    /// consumed when it fires, so a recovery replay of the same round
+    /// does not re-trigger it.
     fault: Option<(u32, usize)>,
     /// Test override for the peer-collect wait (production uses
     /// `peer_timeout(batch)`).
     peer_wait: Option<Duration>,
-    /// First job failure, kept so a worker *process* exits nonzero
-    /// after an abnormal lifecycle even though it served other jobs to
-    /// completion.
-    first_failure: Option<String>,
+    /// Fault injection for recovery tests: hard-exit the whole *process*
+    /// at the start of this global round (any job) — to the leader it is
+    /// indistinguishable from `kill -9`.  Only reachable through the
+    /// hidden `cluster-worker --fault-exit` flag.
+    fault_exit: Option<usize>,
+    /// First job failure (tagged with its job), kept so a worker
+    /// *process* exits nonzero after an abnormal lifecycle even though
+    /// it served other jobs to completion.  Cleared by a later
+    /// [`Ctl::AbortJob`] for the same job: an aborted epoch was
+    /// recovered by the leader, so the lifecycle ends clean.
+    first_failure: Option<(u32, String)>,
 }
 
 /// One color's resolved work for a shard: the plan slice plus the
@@ -183,6 +192,7 @@ impl ShardWorker {
             stash: BTreeMap::new(),
             fault: None,
             peer_wait: None,
+            fault_exit: None,
             first_failure: None,
         }
     }
@@ -206,6 +216,14 @@ impl ShardWorker {
         self.peer_wait = Some(wait);
     }
 
+    /// Test hook behind `cluster-worker --fault-exit`: kill the whole
+    /// process at the start of global round `round`, simulating
+    /// `kill -9` for the recovery smoke tests.
+    #[doc(hidden)]
+    pub fn set_fault_exit(&mut self, round: usize) {
+        self.fault_exit = Some(round);
+    }
+
     /// Retire a job: drop its state and purge its stashed traffic.
     fn retire(&mut self, job: u32) {
         self.jobs.remove(&job);
@@ -220,7 +238,7 @@ impl ShardWorker {
             None => message.clone(),
         };
         if self.first_failure.is_none() {
-            self.first_failure = Some(rendered);
+            self.first_failure = Some((job, rendered));
         }
         self.retire(job);
         let _ = self.transport.send_report(Report::Error {
@@ -285,6 +303,7 @@ impl ShardWorker {
                     rounds,
                     seed,
                     plans,
+                    checkpoint,
                 } => {
                     let Some(mut js) = self.jobs.remove(&job) else {
                         if !self.retired.contains(&job) {
@@ -294,6 +313,11 @@ impl ShardWorker {
                     };
                     match self.run_batch(job, &mut js, start_round, rounds, seed, &plans) {
                         Ok(reports) => {
+                            // the snapshot is taken after the batch's last
+                            // round, before any later batch can touch the
+                            // slice; FIFO reports keep it ordered right
+                            // behind its Batch
+                            let snapshot = checkpoint.then(|| js.nodes.clone());
                             self.jobs.insert(job, js);
                             let sent = self.transport.send_report(Report::Batch {
                                 job,
@@ -302,6 +326,17 @@ impl ShardWorker {
                             });
                             if let Err(e) = sent {
                                 return Err(format!("report link lost: {e}"));
+                            }
+                            if let Some(nodes) = snapshot {
+                                let sent = self.transport.send_report(Report::Checkpoint {
+                                    job,
+                                    shard: self.shard,
+                                    round: start_round + rounds - 1,
+                                    nodes,
+                                });
+                                if let Err(e) = sent {
+                                    return Err(format!("report link lost: {e}"));
+                                }
                             }
                         }
                         Err((round, message)) => {
@@ -330,6 +365,26 @@ impl ShardWorker {
                         return Err(format!("report link lost: {e}"));
                     }
                 }
+                Ctl::AbortJob { job } => {
+                    // unconditional, reply-free retire: the leader is
+                    // recovering this epoch and will reopen it under a
+                    // fresh id — a failure recorded against it no
+                    // longer makes the lifecycle abnormal
+                    self.retire(job);
+                    if matches!(self.first_failure, Some((j, _)) if j == job) {
+                        self.first_failure = None;
+                    }
+                }
+                Ctl::Remesh { shard, addr } => {
+                    // a dead peer rejoined: replace the broken link with
+                    // a fresh dial of its new listener.  Failing here is
+                    // worker-fatal — a half-meshed worker cannot serve
+                    // the resumed epoch, and exiting lets the leader
+                    // recover around this worker too.
+                    if let Err(e) = self.transport.remesh_peer(shard, &addr) {
+                        return Err(format!("remesh to shard {shard} at {addr} failed: {e}"));
+                    }
+                }
                 Ctl::Shutdown => {
                     let jobs = std::mem::take(&mut self.jobs);
                     for (job, mut js) in jobs {
@@ -340,7 +395,7 @@ impl ShardWorker {
                         });
                     }
                     return match self.first_failure.take() {
-                        Some(why) => Err(why),
+                        Some((_, why)) => Err(why),
                         None => Ok(()),
                     };
                 }
@@ -409,7 +464,16 @@ impl ShardWorker {
         task: &ColorTask<'_>,
         wait: Duration,
     ) -> Result<(usize, usize), String> {
+        if self.fault_exit == Some(round) {
+            // simulate `kill -9`: no report, no socket shutdown — the
+            // leader and the peers just see the connections drop
+            eprintln!("cluster-worker: injected process exit at round {round}");
+            std::process::exit(3);
+        }
         if self.fault == Some((job, round)) {
+            // consume the fault first: a recovery replay of this round
+            // must not die again
+            self.fault = None;
             panic!("injected fault at round {round}");
         }
         let mut peer_msgs = 0usize;

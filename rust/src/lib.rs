@@ -17,8 +17,11 @@
 //!   rebalance lowered AOT to HLO-text artifacts, executed at runtime via
 //!   PJRT (`runtime` module).  Python never runs on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory and experiment index
+//! (§8 specifies the cluster's checkpoint/rejoin/reassign recovery
+//! contract), `OPERATIONS.md` for the operator handbook — deploy
+//! modes, failure matrix, and recovery drills — and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
 
 pub mod balancer;
 pub mod coordinator;

@@ -112,6 +112,12 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
             .filter(|s| !s.is_empty())
             .collect();
     }
+    cfg.checkpoint_every = args
+        .get_usize("checkpoint-every", cfg.checkpoint_every)
+        .map_err(|e| anyhow!(e))?;
+    cfg.rejoin_wait_ms = args
+        .get_u64("rejoin-wait", cfg.rejoin_wait_ms)
+        .map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -174,9 +180,15 @@ fn cmd_cluster_worker(args: &Args) -> Result<()> {
     let retries = args
         .get_usize("retry", DEFAULT_CONNECT_RETRIES)
         .map_err(|e| anyhow!(e))?;
+    // --fault-exit R: crash drill — the worker process exits(3) at the
+    // start of round R, simulating a kill -9 for recovery tests.
+    let fault_exit = match args.get("fault-exit") {
+        None => None,
+        Some(_) => Some(args.get_usize("fault-exit", 0).map_err(|e| anyhow!(e))?),
+    };
     match (args.get("connect"), args.get("listen")) {
-        (Some(addr), None) => tcp::serve_connect(addr, retries),
-        (None, Some(addr)) => tcp::serve_listen(addr),
+        (Some(addr), None) => tcp::serve_connect(addr, retries, fault_exit),
+        (None, Some(addr)) => tcp::serve_listen(addr, fault_exit),
         _ => Err(anyhow!(
             "cluster-worker needs exactly one of --connect or --listen\n\n{USAGE}"
         )),
@@ -262,6 +274,8 @@ fn cmd_run(args: &Args) -> Result<()> {
                 }
             };
             cluster.set_batch_rounds(cfg.batch_rounds);
+            cluster.set_checkpoint_every(cfg.checkpoint_every);
+            cluster.set_rejoin_wait(std::time::Duration::from_millis(cfg.rejoin_wait_ms));
             let seed = cfg.seed.wrapping_add(rep as u64);
             let t = cluster.run_seeded(&schedule, cfg.sweeps, seed)?;
             let final_state = cluster.shutdown()?;

@@ -23,6 +23,7 @@
 //! | `{"event":"accepted"}`                                      | spec parsed; job queued |
 //! | `{"event":"start","job":J,"initial_discrepancy":D}`         | scheduled on the pool |
 //! | `{"event":"round","job":J,"round":R,"color":C,...}`         | one per round, streamed per batch |
+//! | `{"event":"recover","job":J,"round":R}`                      | worker lost; job replays from round `R` (`checkpoint_every > 0` specs only) |
 //! | `{"event":"done","job":J,"rounds":R,...,"verified":B}`      | terminal: run complete |
 //! | `{"event":"error","message":M}`                             | terminal: job or spec failed |
 //! | `{"event":"shutdown"}`                                      | terminal: drain acknowledged |
@@ -331,6 +332,18 @@ impl Server {
                     }
                 }
             }
+            JobEvent::Recovering { job, round } => {
+                if let Some(&Some(token)) = self.by_job.get(&job) {
+                    self.send_event(
+                        token,
+                        &Json::obj(vec![
+                            ("event", "recover".into()),
+                            ("job", (job as usize).into()),
+                            ("round", round.into()),
+                        ]),
+                    );
+                }
+            }
             JobEvent::Finished { job, trace, state } => {
                 let token = self.by_job.remove(&job).flatten();
                 let verified = match self.verify.remove(&job) {
@@ -499,6 +512,7 @@ fn build_job(line: &str, parsed: &Json) -> Result<QueuedJob> {
             sweeps: cfg.sweeps,
             seed: cfg.seed,
             batch: cfg.batch_rounds,
+            checkpoint_every: cfg.checkpoint_every,
         },
         verify,
     })

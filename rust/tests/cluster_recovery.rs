@@ -1,0 +1,251 @@
+//! Elastic recovery tests: a worker killed mid-run (`--fault-exit`,
+//! the simulated `kill -9`) must not fail a checkpointed run.  Both
+//! recovery paths — a replacement process rejoining the dead shard,
+//! and the leader reassigning its node range onto the survivors — must
+//! finish with a trace and final state **bit-identical** to
+//! `bcm::Sequential`, and the multi-tenant [`ShardPool`] must pause
+//! and replay only the affected job.  The recovery contract under test
+//! is DESIGN.md §8; the operator-facing procedures are OPERATIONS.md.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Engine, RunTrace, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::transport::tcp::LeaderListener;
+use bcm_dlb::coordinator::{Cluster, JobEvent, JobSpec, ShardPool};
+use bcm_dlb::graph::{Graph, Topology};
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const ALGO: PairAlgorithm = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+
+fn init_scenario(n: usize, per_node: usize, seed: u64) -> (LoadState, Schedule) {
+    let mut rng = Pcg64::new(seed);
+    let g = Graph::random_connected(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        per_node,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    (state, schedule)
+}
+
+fn sequential_reference(
+    state0: &LoadState,
+    schedule: &Schedule,
+    sweeps: usize,
+    seed: u64,
+) -> (RunTrace, LoadState) {
+    let mut state = state0.clone();
+    let trace = Sequential.run(&mut state, schedule, ALGO, StopRule::sweeps(sweeps), seed);
+    (trace, state)
+}
+
+/// Spawn one `cluster-worker` process dialing the leader; `fault_exit`
+/// makes it simulate a crash (`exit 3`) at the start of that round.
+fn spawn_worker(addr: &str, fault_exit: Option<usize>) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_bcm-dlb"));
+    cmd.args(["cluster-worker", "--connect", addr, "--retry", "80"]);
+    if let Some(round) = fault_exit {
+        cmd.args(["--fault-exit", &round.to_string()]);
+    }
+    cmd.stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning a cluster-worker process")
+}
+
+#[test]
+fn killed_worker_rejoins_and_the_run_stays_bit_identical() {
+    let (state0, schedule) = init_scenario(16, 6, 21);
+    let (sweeps, seed) = (3usize, 9u64);
+    let (seq_trace, seq_state) = sequential_reference(&state0, &schedule, sweeps, seed);
+    assert!(
+        seq_trace.rounds.len() > 6,
+        "scenario too short to crash at round 5 and still have work left"
+    );
+
+    let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let mut victim = spawn_worker(&addr, Some(5));
+    let mut peer = spawn_worker(&addr, None);
+    let mut cluster =
+        Cluster::spawn_tcp(state0.clone(), ALGO, 2, listener).expect("tcp spawn");
+    // The replacement dials in now and parks in the listen backlog; the
+    // leader only accepts it once the victim dies and the rejoin window
+    // of the recovery opens.
+    let mut replacement = spawn_worker(&addr, None);
+    cluster.set_batch_rounds(1);
+    cluster.set_checkpoint_every(2);
+    cluster.set_rejoin_wait(Duration::from_secs(20));
+
+    let trace = cluster
+        .run_seeded(&schedule, sweeps, seed)
+        .expect("a checkpointed run must survive the crash");
+    let fin = cluster.shutdown().expect("clean shutdown after recovery");
+    assert_eq!(trace, seq_trace, "rejoin replay diverged from Sequential");
+    assert_eq!(fin, seq_state, "final state diverged after rejoin");
+
+    // exit-code contract (OPERATIONS.md): the simulated crash exits 3,
+    // every worker that served to the end exits 0
+    assert_eq!(victim.wait().expect("victim").code(), Some(3));
+    assert!(peer.wait().expect("peer").success(), "survivor exited nonzero");
+    assert!(
+        replacement.wait().expect("replacement").success(),
+        "replacement exited nonzero"
+    );
+}
+
+#[test]
+fn dead_shard_is_reassigned_to_survivors_bit_identically() {
+    let (state0, schedule) = init_scenario(18, 5, 33);
+    let (sweeps, seed) = (3usize, 13u64);
+    let (seq_trace, seq_state) = sequential_reference(&state0, &schedule, sweeps, seed);
+    assert!(seq_trace.rounds.len() > 5);
+
+    let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let mut victim = spawn_worker(&addr, Some(4));
+    let mut peers = vec![spawn_worker(&addr, None), spawn_worker(&addr, None)];
+    let mut cluster =
+        Cluster::spawn_tcp(state0.clone(), ALGO, 3, listener).expect("tcp spawn");
+    cluster.set_batch_rounds(1);
+    cluster.set_checkpoint_every(2);
+    // no rejoin window: the dead shard's nodes go straight to the
+    // survivors and the run replays on the shrunken membership
+    cluster.set_rejoin_wait(Duration::ZERO);
+
+    let trace = cluster
+        .run_seeded(&schedule, sweeps, seed)
+        .expect("reassignment must carry the run to completion");
+    let fin = cluster.shutdown().expect("clean shutdown after reassignment");
+    assert_eq!(trace, seq_trace, "reassignment replay diverged from Sequential");
+    assert_eq!(fin, seq_state, "final state diverged after reassignment");
+
+    assert_eq!(victim.wait().expect("victim").code(), Some(3));
+    for (i, p) in peers.iter_mut().enumerate() {
+        assert!(p.wait().expect("peer").success(), "survivor {i} exited nonzero");
+    }
+}
+
+// ------------------------------------------------------- shard pool
+
+/// A pool tenant plus its solo sequential reference.
+fn tenant(
+    topo: &str,
+    n: usize,
+    sweeps: usize,
+    seed: u64,
+    checkpoint_every: usize,
+) -> (JobSpec, RunTrace, LoadState) {
+    let topo = Topology::parse(topo).expect("test topology");
+    let mut rng = Pcg64::new(seed);
+    let g = topo.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        8,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let mut seq_state = state.clone();
+    let seq_trace =
+        Sequential.run(&mut seq_state, &schedule, ALGO, StopRule::sweeps(sweeps), seed);
+    (
+        JobSpec {
+            state,
+            schedule,
+            algo: ALGO,
+            sweeps,
+            seed,
+            batch: 1,
+            checkpoint_every,
+        },
+        seq_trace,
+        seq_state,
+    )
+}
+
+#[derive(Default)]
+struct Outcome {
+    rounds: Vec<bcm_dlb::bcm::RoundStats>,
+    recoveries: Vec<usize>,
+    finished: Option<(RunTrace, LoadState)>,
+    failed: Option<String>,
+}
+
+/// Drive the pool until every job in `ids` reaches a terminal event.
+fn drive(pool: &mut ShardPool, ids: &[u32]) -> BTreeMap<u32, Outcome> {
+    let mut out: BTreeMap<u32, Outcome> =
+        ids.iter().map(|&id| (id, Outcome::default())).collect();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while out.values().any(|o| o.finished.is_none() && o.failed.is_none()) {
+        assert!(Instant::now() < deadline, "pool jobs did not settle in time");
+        for ev in pool.step(Duration::from_millis(50)).expect("pool healthy") {
+            match ev {
+                JobEvent::Started { .. } => {}
+                JobEvent::Rounds { job, stats } => {
+                    out.get_mut(&job).unwrap().rounds.extend(stats)
+                }
+                JobEvent::Recovering { job, round } => {
+                    out.get_mut(&job).unwrap().recoveries.push(round)
+                }
+                JobEvent::Finished { job, trace, state } => {
+                    out.get_mut(&job).unwrap().finished = Some((trace, state))
+                }
+                JobEvent::Failed { job, error } => {
+                    out.get_mut(&job).unwrap().failed = Some(error)
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn pool_recovers_one_tenant_while_others_run_undisturbed() {
+    // ids are assigned from 1 in open order: steady=1, flaky=2.  The
+    // injected panic hits shard 0 of wire job 2 at round 1; only the
+    // flaky tenant — which opted into checkpointing — may notice.
+    let (steady_spec, steady_trace, steady_state) = tenant("ring", 24, 3, 5, 0);
+    let (flaky_spec, flaky_trace, flaky_state) = tenant("torus2d", 16, 3, 6, 1);
+
+    let mut pool =
+        ShardPool::spawn_tuned(2, Some((0, 2, 1)), Some(Duration::from_millis(250)));
+    let id_steady = pool.open_job(steady_spec).expect("steady opens");
+    let id_flaky = pool.open_job(flaky_spec).expect("flaky opens");
+    assert_eq!((id_steady, id_flaky), (1, 2));
+
+    let out = drive(&mut pool, &[id_steady, id_flaky]);
+
+    // the flaky tenant recovered instead of failing, and its replayed
+    // run is still bit-identical to Sequential
+    let flaky = &out[&id_flaky];
+    assert_eq!(flaky.failed, None, "flaky tenant failed: {:?}", flaky.failed);
+    assert!(
+        !flaky.recoveries.is_empty(),
+        "the injected crash should surface as a Recovering event"
+    );
+    let (trace, state) = flaky.finished.as_ref().expect("flaky finishes");
+    assert_eq!(trace, &flaky_trace, "flaky trace diverged after recovery");
+    assert_eq!(state, &flaky_state, "flaky state diverged after recovery");
+    // replay must not duplicate streamed rounds: the event stream is
+    // exactly the trace, delivered incrementally
+    assert_eq!(flaky.rounds, trace.rounds, "replay duplicated Rounds events");
+
+    // the steady tenant never saw any of it
+    let steady = &out[&id_steady];
+    assert_eq!(steady.failed, None, "steady tenant poisoned");
+    assert!(steady.recoveries.is_empty(), "steady tenant saw a recovery");
+    let (trace, state) = steady.finished.as_ref().expect("steady finishes");
+    assert_eq!(trace, &steady_trace);
+    assert_eq!(state, &steady_state);
+    assert_eq!(steady.rounds, trace.rounds);
+
+    pool.shutdown().expect("clean shutdown");
+}

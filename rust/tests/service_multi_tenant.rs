@@ -46,6 +46,7 @@ fn tenant(topo: &str, n: usize, algo: &str, sweeps: usize, seed: u64, batch: usi
             sweeps,
             seed,
             batch,
+            checkpoint_every: 0,
         },
         state,
         schedule,
@@ -101,6 +102,7 @@ fn drive(pool: &mut ShardPool, ids: &[u32]) -> BTreeMap<u32, Outcome> {
                 JobEvent::Failed { job, error } => {
                     out.get_mut(&job).unwrap().failed = Some(error)
                 }
+                JobEvent::Recovering { .. } => {}
             }
         }
     }

@@ -54,6 +54,7 @@ fn run_one_job(pool: &mut ShardPool) {
             sweeps: 2,
             seed: 7,
             batch: 1,
+            checkpoint_every: 0,
         })
         .expect("job opens");
     loop {
@@ -88,6 +89,7 @@ fn pool_shutdown_is_idempotent() {
             sweeps: 1,
             seed: 1,
             batch: 1,
+            checkpoint_every: 0,
         })
         .expect_err("open_job on a down pool")
         .to_string();

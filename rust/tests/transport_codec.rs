@@ -73,7 +73,7 @@ fn gen_job(rng: &mut Pcg64) -> u32 {
 }
 
 fn gen_ctl(rng: &mut Pcg64, variant: usize) -> Ctl {
-    match variant % 5 {
+    match variant % 7 {
         0 => {
             let d = 1 + rng.below(4);
             let plans: Vec<Arc<RoundPlan>> = (0..d).map(|_| Arc::new(gen_plan(rng))).collect();
@@ -83,6 +83,7 @@ fn gen_ctl(rng: &mut Pcg64, variant: usize) -> Ctl {
                 rounds: 1 + rng.below(64),
                 seed: rng.next_u64(),
                 plans: Arc::new(plans),
+                checkpoint: rng.coin(),
             }
         }
         1 => Ctl::PollWeights { job: gen_job(rng) },
@@ -93,6 +94,12 @@ fn gen_ctl(rng: &mut Pcg64, variant: usize) -> Ctl {
             nodes: (0..rng.below(10)).map(|_| gen_loads(rng)).collect(),
         },
         3 => Ctl::CloseJob { job: gen_job(rng) },
+        4 => Ctl::AbortJob { job: gen_job(rng) },
+        5 => Ctl::Remesh {
+            shard: rng.below(16),
+            // "" = demesh (reassignment); non-empty = rejoin re-dial
+            addr: gen_string(rng),
+        },
         _ => Ctl::Shutdown,
     }
 }
@@ -116,7 +123,13 @@ fn gen_peer(rng: &mut Pcg64, variant: usize) -> ShardMsg {
 }
 
 fn gen_report(rng: &mut Pcg64, variant: usize) -> Report {
-    match variant % 4 {
+    match variant % 5 {
+        4 => Report::Checkpoint {
+            job: gen_job(rng),
+            shard: rng.below(16),
+            round: rng.below(1 << 16),
+            nodes: (0..rng.below(10)).map(|_| gen_loads(rng)).collect(),
+        },
         0 => Report::Batch {
             job: gen_job(rng),
             shard: rng.below(16),
@@ -161,6 +174,8 @@ fn gen_wire(rng: &mut Pcg64, variant: usize) -> WireMsg {
         _ => match (variant / 4) % 3 {
             0 => WireMsg::Hello {
                 peer_addr: gen_string(rng),
+                // None = fresh worker, Some = reclaiming a dead shard
+                rejoin: rng.coin().then(|| rng.next_u64()),
             },
             1 => WireMsg::PeerHello {
                 shard: rng.below(16),
@@ -172,6 +187,9 @@ fn gen_wire(rng: &mut Pcg64, variant: usize) -> WireMsg {
                 algo: "sorted:quick".to_string(),
                 nodes: (0..rng.below(12)).map(|_| gen_loads(rng)).collect(),
                 peers: (0..rng.below(5)).map(|_| gen_string(rng)).collect(),
+                rejoin: rng.coin(),
+                resume_round: rng.below(1 << 16),
+                token: rng.next_u64(),
             }),
         },
     }
@@ -275,11 +293,54 @@ fn corrupt_length_cannot_cause_huge_allocation() {
 }
 
 #[test]
+fn checkpoint_declared_slice_size_is_cross_checked() {
+    // A Checkpoint frame carries a declared total-load count ahead of
+    // its node slices; a peer that lies about it (truncation bug,
+    // hostile sender) must be rejected, not trusted.  Tamper with the
+    // declared u64 of an honestly encoded frame and re-seal the
+    // checksum so only the cross-check can catch it.
+    let msg = WireMsg::Report(Report::Checkpoint {
+        job: 7,
+        shard: 2,
+        round: 41,
+        nodes: vec![
+            vec![Load::new(1, 2.0), Load::new(2, 0.5)],
+            vec![Load::new(3, 1.25)],
+        ],
+    });
+    let frame = encode_frame(&msg);
+    assert_eq!(decode_frame(&frame).unwrap().0, msg);
+    // payload layout: job u32, shard u64, round u64, declared u64
+    let at = HEADER_LEN + 4 + 8 + 8;
+    let mut reseal = |declared: u64| {
+        let mut bad = frame.clone();
+        bad[at..at + 8].copy_from_slice(&declared.to_le_bytes());
+        let crc = crc32(&bad[HEADER_LEN..]);
+        bad[12..16].copy_from_slice(&crc.to_le_bytes());
+        decode_frame(&bad).unwrap_err()
+    };
+    // understates and overstates both fail the cross-check
+    for lie in [0u64, 2, 4] {
+        assert_eq!(
+            reseal(lie),
+            CodecError::Malformed("checkpoint declared slice size disagrees with payload"),
+            "declared {lie} for 3 carried loads"
+        );
+    }
+    // an absurd declared size is refused before any allocation
+    assert_eq!(
+        reseal(u64::MAX / 16),
+        CodecError::Malformed("length prefix overruns frame")
+    );
+}
+
+#[test]
 fn checksum_is_stable_across_runs() {
     // the CRC is part of the wire contract: a different implementation
     // on the other end must compute the same value
     let frame = encode_frame(&WireMsg::Hello {
         peer_addr: "192.168.1.9:6000".into(),
+        rejoin: None,
     });
     let payload = &frame[HEADER_LEN..];
     let stored = u32::from_le_bytes([frame[12], frame[13], frame[14], frame[15]]);
