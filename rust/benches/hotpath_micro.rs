@@ -5,17 +5,29 @@
 //!   2. device-path (PJRT) batched round latency per bucket
 //!   3. the sequential engine's full-round throughput
 //!   4. the distributed cluster's round latency
+//!   5. the per-stage split of one round — **edge solve** (gather +
+//!      decide on the reusable scratch), **weight reduction** (the
+//!      cached-totals min/max fold), **migration apply** (arena
+//!      write-back) — so a regression names the stage that caused it.
 //!
 //! Results feed EXPERIMENTS.md §Perf.
+//!
+//! `-- --smoke` (or `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates to a
+//! seconds-long run: section 1 plus the per-stage split at n = 256,
+//! skipping the device and cluster sections (CI exercises those through
+//! their own benches).  Smoke runs enforce the perf-regression floors
+//! in `bench_floor.toml` (section `[hotpath_micro.smoke]`); `--no-floor`
+//! bypasses the gate on hosts known to be slower than the floor assumes.
 
-use bcm_dlb::balancer::{balance_pair, PairAlgorithm, SortAlgo};
+use bcm_dlb::balancer::{balance_pair, decide_pool, EdgeScratch, PairAlgorithm, SortAlgo};
 use bcm_dlb::bcm::{balance_round, Schedule};
 use bcm_dlb::coordinator::{Cluster, WorkerAlgo};
 use bcm_dlb::graph::Topology;
 use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
 use bcm_dlb::runtime::{solve_batch, DeviceAlgo, EdgeProblem, Runtime};
 use bcm_dlb::util::rng::Pcg64;
-use bcm_dlb::util::table::{f, Table};
+use bcm_dlb::util::table::Table;
+use std::path::Path;
 use std::time::Instant;
 
 fn bench<T>(iters: usize, mut body: impl FnMut() -> T) -> f64 {
@@ -28,7 +40,38 @@ fn bench<T>(iters: usize, mut body: impl FnMut() -> T) -> f64 {
     start.elapsed().as_secs_f64() / iters as f64
 }
 
+/// Read `key` from `[section]` of the checked-in floor file (the same
+/// toml-subset parser as `cluster_sharded`).
+fn read_floor(path: &Path, section: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut in_section = false;
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            in_section = name.trim() == section;
+        } else if in_section {
+            if let Some((k, v)) = line.split_once('=') {
+                if k.trim() == key {
+                    return v.trim().parse().ok();
+                }
+            }
+        }
+    }
+    None
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || env_flag("BCM_DLB_SMOKE")
+        || env_flag("BCM_DLB_QUICK");
     let mut t = Table::new(
         "hot-path microbenchmarks",
         &["benchmark", "time/op", "throughput"],
@@ -51,7 +94,9 @@ fn main() {
         let v: Vec<Load> = (0..50)
             .map(|i| Load::new(100 + i, rng.uniform(0.0, 100.0)))
             .collect();
-        let s = bench(2000, || balance_pair(&u, &v, algo, &mut rng));
+        let s = bench(if smoke { 200 } else { 2000 }, || {
+            balance_pair(&u, &v, algo, &mut rng)
+        });
         t.row(vec![
             label.into(),
             format!("{:.2} us", s * 1e6),
@@ -60,7 +105,7 @@ fn main() {
     }
 
     // 2. one full sequential-engine round on the paper's largest setting
-    {
+    if !smoke {
         let mut rng = Pcg64::new(2);
         let g = Topology::RandomConnected.build(128, &mut rng);
         let schedule = Schedule::from_graph(&g);
@@ -87,7 +132,9 @@ fn main() {
 
     // 3. PJRT device path (if artifacts are built)
     let dir = bcm_dlb::runtime::default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
+    if smoke {
+        eprintln!("smoke mode — skipping PJRT and cluster sections");
+    } else if dir.join("manifest.json").exists() {
         let mut rt = Runtime::new(&dir).expect("runtime");
         rt.warm_entry("balance_two_bin").expect("warm");
         for (b, m) in [(64usize, 100usize), (64, 200), (8, 500)] {
@@ -125,7 +172,7 @@ fn main() {
     }
 
     // 4. distributed cluster round latency (n=64)
-    {
+    if !smoke {
         let mut rng = Pcg64::new(4);
         let g = Topology::RandomConnected.build(64, &mut rng);
         let schedule = Schedule::from_graph(&g);
@@ -153,7 +200,123 @@ fn main() {
         ]);
     }
 
+    // 5. per-stage split of the round hot path (DESIGN.md §9)
+    //
+    // Solve and apply are timed separately: the decisions for the whole
+    // matching are computed once, then replayed — apply_edge is
+    // idempotent for a fixed (pool, dest), so the write-back can be
+    // re-timed on a steady arena without re-deciding.
+    let (solve_eps, reduce_nps, apply_eps) = {
+        let mut rng = Pcg64::new(6);
+        let n = if smoke { 256 } else { 4096 };
+        let g = Topology::RandomConnected.build(n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            n,
+            50,
+            &WeightDistribution::paper_section6(),
+            Mobility::Full,
+            &mut rng,
+        );
+        let pairs = schedule.matching(0).to_vec();
+        let algo = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+        let seed = 99u64;
+        let iters = if smoke { 40 } else { 200 };
+
+        // stage: edge solve — gather + decide on the reusable scratch,
+        // no write-back (the state is untouched, so pools are stable)
+        let mut scratch = EdgeScratch::new();
+        let s_solve = bench(iters, || {
+            let mut movements = 0usize;
+            for (e, &(u, v)) in pairs.iter().enumerate() {
+                let mut r = Pcg64::for_edge(seed, 0, e);
+                let gth = state.gather_edge(u as usize, v as usize, &mut scratch.pool);
+                movements +=
+                    decide_pool(&mut scratch.pool, &mut scratch.dest, gth.base, algo, &mut r)
+                        .movements;
+            }
+            movements
+        });
+        t.row(vec![
+            format!("stage: edge solve n={n} L/n=50 ({} edges)", pairs.len()),
+            format!("{:.1} us/round", s_solve * 1e6),
+            format!("{:.0} kedges/s", pairs.len() as f64 / s_solve / 1e3),
+        ]);
+
+        // stage: weight reduction — the per-round O(n) discrepancy fold
+        // over the cached totals column
+        let s_reduce = bench(if smoke { 2000 } else { 5000 }, || state.weight_extremes());
+        t.row(vec![
+            format!("stage: weight reduction n={n} (cached totals)"),
+            format!("{:.2} us/fold", s_reduce * 1e6),
+            format!("{:.0} Mnodes/s", n as f64 / s_reduce / 1e6),
+        ]);
+
+        // stage: migration apply — replay precomputed decisions into the
+        // arena (first replay settles segment caps; bench() warms up)
+        let plans: Vec<_> = pairs
+            .iter()
+            .enumerate()
+            .map(|(e, &(u, v))| {
+                let mut r = Pcg64::for_edge(seed, 0, e);
+                let mut pool = Vec::new();
+                let mut dest = Vec::new();
+                let gth = state.gather_edge(u as usize, v as usize, &mut pool);
+                decide_pool(&mut pool, &mut dest, gth.base, algo, &mut r);
+                (pool, dest)
+            })
+            .collect();
+        let s_apply = bench(iters, || {
+            for (e, &(u, v)) in pairs.iter().enumerate() {
+                let (pool, dest) = &plans[e];
+                state.apply_edge(u as usize, v as usize, pool, dest);
+            }
+        });
+        t.row(vec![
+            format!("stage: migration apply n={n} (arena write-back)"),
+            format!("{:.1} us/round", s_apply * 1e6),
+            format!("{:.0} kedges/s", pairs.len() as f64 / s_apply / 1e3),
+        ]);
+        (
+            pairs.len() as f64 / s_solve,
+            n as f64 / s_reduce,
+            pairs.len() as f64 / s_apply,
+        )
+    };
+
     println!("{}", t.render());
-    t.write_csv(std::path::Path::new("results/hotpath_micro.csv")).ok();
-    let _ = f(0.0, 0); // keep table::f linked for formatting parity
+    t.write_csv(Path::new("results/hotpath_micro.csv")).ok();
+
+    if smoke && !args.iter().any(|a| a == "--no-floor") {
+        let floor_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_floor.toml");
+        let mut failed = false;
+        for (key, measured, unit) in [
+            ("min_solve_edges_per_s", solve_eps, "edge solves/s"),
+            ("min_reduce_nodes_per_s", reduce_nps, "reduced nodes/s"),
+            ("min_apply_edges_per_s", apply_eps, "edge applies/s"),
+        ] {
+            match read_floor(&floor_path, "hotpath_micro.smoke", key) {
+                Some(floor) if measured < floor => {
+                    eprintln!(
+                        "hotpath_micro: FLOOR FAILED — {measured:.0} {unit} is below \
+                         the bench_floor.toml floor of {floor:.0}"
+                    );
+                    failed = true;
+                }
+                Some(floor) => {
+                    eprintln!("hotpath_micro: floor ok — {measured:.0} {unit} >= {floor:.0}");
+                }
+                None => {
+                    eprintln!(
+                        "hotpath_micro: no {key} in {} (use --no-floor to bypass deliberately)",
+                        floor_path.display()
+                    );
+                    failed = true;
+                }
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    }
 }

@@ -8,5 +8,8 @@ pub mod refine;
 pub mod sorting;
 
 pub use offline::{greedy, lightest_bin, random_place, sorted_greedy, Placement};
-pub use pair::{balance_pair, balance_pool, PairAlgorithm, PairOutcome};
+pub use pair::{
+    apply_is_noop, balance_pair, balance_pool, decide_pool, EdgeDecision, EdgeScratch,
+    PairAlgorithm, PairOutcome,
+};
 pub use sorting::SortAlgo;

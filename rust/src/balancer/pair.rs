@@ -73,6 +73,38 @@ impl PairAlgorithm {
     }
 }
 
+/// Caller-owned, reusable per-edge working memory: the mobile pool and
+/// the per-entry destination column [`decide_pool`] fills.  One scratch
+/// per worker makes the whole edge solve allocation-free in steady
+/// state — the buffers grow to the largest edge seen and are then
+/// reused forever (pinned by `tests/alloc_budget.rs`).
+#[derive(Debug, Default)]
+pub struct EdgeScratch {
+    /// The pooled mobile loads, each tagged with its current bin
+    /// (0 = u, 1 = v), in arrival order (u's loads then v's).
+    pub pool: Vec<(Load, u8)>,
+    /// Destination bin per pool entry, parallel to `pool` (filled by
+    /// [`decide_pool`]; entries are 0 = u, 1 = v).
+    pub dest: Vec<u8>,
+}
+
+impl EdgeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// The scalar outcome of one edge decision ([`decide_pool`]); the load
+/// routing itself lives in the caller's `dest` column.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeDecision {
+    /// Number of loads whose host changed (the paper's communication-cost
+    /// metric alpha, §6.2).
+    pub movements: usize,
+    /// |weight(u) − weight(v)| after the rebalance, counting pinned loads.
+    pub local_discrepancy: f64,
+}
+
 /// Rebalance a matched edge.
 ///
 /// `u_loads` / `v_loads` are each node's full load lists (mobile +
@@ -112,43 +144,82 @@ pub fn balance_pair(
 /// loads in arrival order (u's then v's), each tagged with its current
 /// bin (0 = u, 1 = v); `base` holds the bins' pinned weight sums.
 ///
-/// This is the primitive behind [`balance_pair`], exposed so the sharded
-/// coordinator can rebalance a cross-shard edge from an `Offer` message
-/// (the slave ships its mobile loads and pre-summed pinned weight) while
-/// consuming the per-edge RNG stream *exactly* as the in-process engines
-/// do — the orientation flip is always the stream's first draw.  Keeping
-/// one code path here is what makes cluster runs bit-identical to
-/// `bcm::Sequential`.
+/// This is the classic allocating façade over [`decide_pool`], kept for
+/// the sharded coordinator's message paths and for tests; the hot paths
+/// call [`decide_pool`] with a reusable [`EdgeScratch`] instead.  Both
+/// consume the per-edge RNG stream *exactly* alike — the orientation
+/// flip is always the stream's first draw — which is what keeps cluster
+/// runs bit-identical to `bcm::Sequential`.
 pub fn balance_pool(
     mut pool: Vec<(Load, u8)>,
-    mut base: [f64; 2],
+    base: [f64; 2],
     algo: PairAlgorithm,
     rng: &mut Pcg64,
 ) -> PairOutcome {
-    // Random orientation: swap bin labels with probability 1/2.
-    let flip = rng.coin();
-    if flip {
-        base.swap(0, 1);
-        for (_, h) in pool.iter_mut() {
-            *h ^= 1;
+    let mut dest = Vec::with_capacity(pool.len());
+    let d = decide_pool(&mut pool, &mut dest, base, algo, rng);
+    let mut to_u = Vec::new();
+    let mut to_v = Vec::new();
+    for (i, &(l, _)) in pool.iter().enumerate() {
+        if dest[i] == 0 {
+            to_u.push(l);
+        } else {
+            to_v.push(l);
         }
     }
+    PairOutcome {
+        to_u,
+        to_v,
+        movements: d.movements,
+        local_discrepancy: d.local_discrepancy,
+    }
+}
+
+/// The allocation-free two-bin solve: decide a destination bin for every
+/// pool entry, writing it to the parallel `dest` column instead of
+/// copying loads into staging vectors.
+///
+/// Bitwise identical to the historical `balance_pool`, which *toggled*
+/// every tag and *swapped* the base sums on a heads orientation flip and
+/// un-swapped the outputs at the end.  Here the flip stays logical: with
+/// `f = flip as u8`, logical bin `b` is physical bin `b ^ f`, so the
+/// base sums are read flipped, every host tag is read as `tag ^ f`, and
+/// every decided logical bin is written back as `k ^ f`.  The RNG
+/// stream is consumed in exactly the historical order (the flip coin
+/// first, then — for `Random` — one draw per pool entry in pool order),
+/// the placement comparisons see identical f64 values, and the
+/// un-flipped outputs match because `^ f` is its own inverse.  The
+/// `SortedGreedy` sort permutes `pool` in place; tags ride along
+/// untouched, and since the sort compares weights only, the permutation
+/// is the same one the tag-toggled implementation produced.
+pub fn decide_pool(
+    pool: &mut [(Load, u8)],
+    dest: &mut Vec<u8>,
+    base: [f64; 2],
+    algo: PairAlgorithm,
+    rng: &mut Pcg64,
+) -> EdgeDecision {
+    dest.clear();
+    dest.reserve(pool.len());
+    // Random orientation: swap bin labels with probability 1/2.
+    let f = u8::from(rng.coin());
+    let fi = f as usize;
 
     if let PairAlgorithm::SortedGreedy(sort) = algo {
-        sort.sort_desc_pairs(&mut pool);
+        sort.sort_desc_pairs(pool);
     }
 
-    let mut sums = base;
-    let mut to: [Vec<Load>; 2] = [Vec::new(), Vec::new()];
+    // Logical-bin sums, i.e. sums[b] tracks physical bin b ^ f.
+    let mut sums = [base[fi], base[1 - fi]];
     let mut movements = 0usize;
     if algo == PairAlgorithm::GreedyIncremental {
         // Bins start at the status quo; one arrival-order pass relocates
         // a load only when that strictly shrinks the imbalance.
-        for (l, h) in &pool {
-            sums[*h as usize] += l.weight;
+        for &(l, h) in pool.iter() {
+            sums[(h ^ f) as usize] += l.weight;
         }
-        for (load, host) in pool {
-            let h = host as usize;
+        for &(load, host) in pool.iter() {
+            let h = (host ^ f) as usize;
             let o = 1 - h;
             let k = if sums[h] - sums[o] > load.weight {
                 sums[h] -= load.weight;
@@ -158,33 +229,43 @@ pub fn balance_pool(
             } else {
                 h
             };
-            to[k].push(load);
+            dest.push(k as u8 ^ f);
         }
     } else {
-        for (load, host) in pool {
+        for &(load, host) in pool.iter() {
             let k = match algo {
                 PairAlgorithm::Random => rng.below(2),
                 _ => usize::from(sums[1] < sums[0]),
             };
             sums[k] += load.weight;
-            if k != host as usize {
+            if k != (host ^ f) as usize {
                 movements += 1;
             }
-            to[k].push(load);
+            dest.push(k as u8 ^ f);
         }
     }
 
-    let [mut bin0, mut bin1] = to;
-    if flip {
-        std::mem::swap(&mut bin0, &mut bin1);
-        sums.swap(0, 1);
-    }
-    PairOutcome {
-        to_u: bin0,
-        to_v: bin1,
+    EdgeDecision {
         movements,
+        // |a - b| is orientation-invariant, so the logical sums serve.
         local_discrepancy: (sums[0] - sums[1]).abs(),
     }
+}
+
+/// Whether an edge decision provably rewrites both endpoints to exactly
+/// their current content, letting the caller skip the write-back.
+///
+/// True requires: no load changed host, both endpoints already store
+/// every pinned load before any mobile one (so the pinned-compaction
+/// part of a write-back is the identity — guaranteed from each node's
+/// first write-back on), and the algorithm did not permute the pool
+/// (`SortedGreedy` re-sorts, so even a zero-movement edge rewrites its
+/// mobile loads in a new order there).
+pub fn apply_is_noop(algo: PairAlgorithm, movements: usize, partitioned: [bool; 2]) -> bool {
+    movements == 0
+        && partitioned[0]
+        && partitioned[1]
+        && !matches!(algo, PairAlgorithm::SortedGreedy(_))
 }
 
 impl super::sorting::Keyed for (Load, u8) {

@@ -19,7 +19,7 @@
 
 use super::schedule::Schedule;
 use super::trace::{RoundStats, RunTrace};
-use crate::balancer::{balance_pair, PairAlgorithm};
+use crate::balancer::{apply_is_noop, decide_pool, EdgeScratch, PairAlgorithm};
 use crate::load::LoadState;
 use crate::util::rng::Pcg64;
 
@@ -90,11 +90,16 @@ impl Engine for Sequential {
         stop: StopRule,
         seed: u64,
     ) -> RunTrace {
+        // One scratch for the whole run: after the first few rounds the
+        // pool/dest buffers have grown to the largest edge and the loop
+        // stops allocating (tests/alloc_budget.rs).
+        let mut scratch = EdgeScratch::new();
         drive(state, schedule, stop, |state, pairs, round| {
             let mut movements = 0usize;
             for (e, &(u, v)) in pairs.iter().enumerate() {
                 let mut rng = Pcg64::for_edge(seed, round, e);
-                movements += balance_edge(state, u as usize, v as usize, algo, &mut rng);
+                movements +=
+                    balance_edge_with(state, u as usize, v as usize, algo, &mut rng, &mut scratch);
             }
             movements
         })
@@ -179,16 +184,21 @@ pub fn run(
     stop: StopRule,
     rng: &mut Pcg64,
 ) -> RunTrace {
+    let mut scratch = EdgeScratch::new();
     drive(state, schedule, stop, |state, pairs, _round| {
         let mut movements = 0usize;
         for &(u, v) in pairs {
-            movements += balance_edge(state, u as usize, v as usize, algo, rng);
+            movements += balance_edge_with(state, u as usize, v as usize, algo, rng, &mut scratch);
         }
         movements
     })
 }
 
 /// Rebalance one matched edge in place; returns the movement count.
+///
+/// Convenience wrapper over [`balance_edge_with`] that pays a fresh
+/// [`EdgeScratch`] per call — fine for one-off edges and tests; round
+/// loops should hold a scratch and call [`balance_edge_with`].
 pub fn balance_edge(
     state: &mut LoadState,
     u: usize,
@@ -196,14 +206,33 @@ pub fn balance_edge(
     algo: PairAlgorithm,
     rng: &mut Pcg64,
 ) -> usize {
-    let out = balance_pair(state.node(u), state.node(v), algo, rng);
-    // replace the mobile loads on both sides (pinned loads stay put)
-    let _ = state.take_mobile(u);
-    let _ = state.take_mobile(v);
-    let movements = out.movements;
-    state.give(u, out.to_u);
-    state.give(v, out.to_v);
-    movements
+    let mut scratch = EdgeScratch::new();
+    balance_edge_with(state, u, v, algo, rng, &mut scratch)
+}
+
+/// Rebalance one matched edge through a caller-owned [`EdgeScratch`] —
+/// the zero-allocation hot path (DESIGN.md §9).
+///
+/// Gathers both endpoints' mobile loads into the scratch pool, decides
+/// a destination per load (`decide_pool` — bitwise the historical
+/// `balance_pair` placement and RNG stream), and writes the result
+/// back in place.  When the decision provably changes nothing
+/// (`apply_is_noop`) the write-back is skipped entirely, so a
+/// no-movement `GreedyIncremental` edge touches no state at all.
+pub fn balance_edge_with(
+    state: &mut LoadState,
+    u: usize,
+    v: usize,
+    algo: PairAlgorithm,
+    rng: &mut Pcg64,
+    scratch: &mut EdgeScratch,
+) -> usize {
+    let gather = state.gather_edge(u, v, &mut scratch.pool);
+    let decision = decide_pool(&mut scratch.pool, &mut scratch.dest, gather.base, algo, rng);
+    if !apply_is_noop(algo, decision.movements, gather.partitioned) {
+        state.apply_edge(u, v, &scratch.pool, &scratch.dest);
+    }
+    decision.movements
 }
 
 #[cfg(test)]

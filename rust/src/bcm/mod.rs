@@ -10,8 +10,8 @@ pub mod trace;
 
 pub use device_engine::{balance_round, run_device};
 pub use diffusion::Diffusion;
-pub use engine::{balance_edge, run, Engine, Sequential, StopRule};
-pub use parallel::{parallel_round, Parallel};
+pub use engine::{balance_edge, balance_edge_with, run, Engine, Sequential, StopRule};
+pub use parallel::{parallel_round, parallel_round_ctx, Parallel, RoundCtx};
 pub use random_matching::{random_maximal_matching, run_rmm};
 pub use schedule::Schedule;
 pub use trace::{RoundStats, RunTrace};

@@ -3,9 +3,20 @@
 //! Edges within a color class are vertex-disjoint (a matching), so the
 //! class can be applied concurrently — the execution model the protocol
 //! actually prescribes, which the sequential engine merely simulates.
-//! `LoadState::split_pairs` hands each edge a mutable view of exactly its
-//! two endpoint load lists; the views are partitioned over
-//! `std::thread::scope` workers and balanced in parallel.
+//! `LoadState::split_pairs` validates the matching and hands out
+//! [`EdgeViews`](crate::load::EdgeViews): raw per-edge access to the
+//! arena segments, partitioned
+//! over `std::thread::scope` workers and balanced in parallel.  Each
+//! worker owns a reusable [`EdgeScratch`], so a steady-state round
+//! allocates nothing (`tests/alloc_budget.rs`).
+//!
+//! An edge whose write-back would overflow a segment's capacity cannot
+//! relocate from a worker (relocation moves the arena frontier, which
+//! is shared); such edges are **deferred** — the worker stages the
+//! decided pool and the main thread applies them after the join, in
+//! ascending edge order, through the owning `&mut LoadState`.  The
+//! deferred write-back is the same pure function of the decision as the
+//! in-place one, so the result is identical to sequential application.
 //!
 //! Determinism: edge `e` of round `t` draws all of its randomness from
 //! `Pcg64::for_edge(seed, t, e)` — a counter-based stream keyed on values,
@@ -14,10 +25,10 @@
 //! [`Sequential`](super::engine::Sequential) for every thread count
 //! (asserted by `tests/property_invariants.rs`).
 
-use super::engine::{drive_with, Engine, StopRule};
+use super::engine::{balance_edge_with, drive_with, Engine, StopRule};
 use super::schedule::Schedule;
 use super::trace::RunTrace;
-use crate::balancer::{balance_pair, PairAlgorithm};
+use crate::balancer::{apply_is_noop, decide_pool, EdgeScratch, PairAlgorithm};
 use crate::load::{Load, LoadState};
 use crate::util::rng::Pcg64;
 
@@ -63,17 +74,65 @@ impl Engine for Parallel {
         seed: u64,
     ) -> RunTrace {
         let threads = self.thread_count();
-        // The same worker pool also fans out the per-round discrepancy
-        // reduction — the O(n) term that would otherwise cap speedup.
+        // One context for the whole run: per-worker scratches and the
+        // matching-validation buffer warm up once, then every round
+        // reuses them allocation-free.  The same worker pool also fans
+        // out the per-round discrepancy reduction — the O(n) term that
+        // would otherwise cap speedup.
+        let mut ctx = RoundCtx::new(threads);
         drive_with(state, schedule, stop, threads, |state, pairs, round| {
-            parallel_round(state, pairs, round, algo, seed, threads)
+            parallel_round_ctx(state, pairs, round, algo, seed, threads, &mut ctx)
         })
+    }
+}
+
+/// An edge whose in-place write-back was refused (segment overflow),
+/// staged for application by the arena owner after the join.
+struct Deferred {
+    u: u32,
+    v: u32,
+    pool: Vec<(Load, u8)>,
+    dest: Vec<u8>,
+}
+
+/// Reusable cross-round working memory of [`parallel_round_ctx`]: one
+/// [`EdgeScratch`] + deferred-edge buffer + movement slot per worker,
+/// plus the matching-validation buffer.  Created once per run; after
+/// warm-up, rounds draw on it without allocating.
+pub struct RoundCtx {
+    scratches: Vec<EdgeScratch>,
+    deferred: Vec<Vec<Deferred>>,
+    moved: Vec<usize>,
+    seen: Vec<bool>,
+}
+
+impl RoundCtx {
+    pub fn new(threads: usize) -> Self {
+        let mut ctx = RoundCtx {
+            scratches: Vec::new(),
+            deferred: Vec::new(),
+            moved: Vec::new(),
+            seen: Vec::new(),
+        };
+        ctx.ensure(threads.max(1));
+        ctx
+    }
+
+    fn ensure(&mut self, workers: usize) {
+        while self.scratches.len() < workers {
+            self.scratches.push(EdgeScratch::new());
+            self.deferred.push(Vec::new());
+            self.moved.push(0);
+        }
     }
 }
 
 /// Apply one matching with up to `threads` workers; returns the movement
 /// count.  Bit-identical to the per-edge sequential application for any
 /// `threads >= 1`.
+///
+/// Convenience wrapper that pays a fresh [`RoundCtx`] per call; round
+/// loops should hold a context and call [`parallel_round_ctx`].
 pub fn parallel_round(
     state: &mut LoadState,
     pairs: &[(u32, u32)],
@@ -82,53 +141,104 @@ pub fn parallel_round(
     seed: u64,
     threads: usize,
 ) -> usize {
+    let mut ctx = RoundCtx::new(threads);
+    parallel_round_ctx(state, pairs, round, algo, seed, threads, &mut ctx)
+}
+
+/// [`parallel_round`] drawing on a caller-owned [`RoundCtx`] — the
+/// steady-state zero-allocation round loop.
+#[allow(clippy::too_many_arguments)]
+pub fn parallel_round_ctx(
+    state: &mut LoadState,
+    pairs: &[(u32, u32)],
+    round: usize,
+    algo: PairAlgorithm,
+    seed: u64,
+    threads: usize,
+    ctx: &mut RoundCtx,
+) -> usize {
     let threads = threads.max(1).min(pairs.len());
     if threads <= 1 {
         // One worker (or <= 1 edge): skip thread setup, same arithmetic.
+        ctx.ensure(1);
+        let scratch = &mut ctx.scratches[0];
         let mut movements = 0usize;
         for (e, &(u, v)) in pairs.iter().enumerate() {
             let mut rng = Pcg64::for_edge(seed, round, e);
-            movements += super::engine::balance_edge(state, u as usize, v as usize, algo, &mut rng);
+            movements += balance_edge_with(state, u as usize, v as usize, algo, &mut rng, scratch);
         }
         return movements;
     }
-    let mut slots = state.split_pairs(pairs);
     let chunk = pairs.len().div_ceil(threads);
+    let workers = pairs.len().div_ceil(chunk);
+    ctx.ensure(workers);
+    for d in ctx.deferred.iter_mut() {
+        d.clear();
+    }
+    let views = state.split_pairs(pairs, &mut ctx.seen);
     std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for (ci, part) in slots.chunks_mut(chunk).enumerate() {
-            let offset = ci * chunk;
-            handles.push(scope.spawn(move || {
+        let views = &views;
+        let mut rest_s = &mut ctx.scratches[..];
+        let mut rest_d = &mut ctx.deferred[..];
+        let mut rest_m = &mut ctx.moved[..];
+        for wi in 0..workers {
+            let (scratch, rs) = rest_s.split_first_mut().expect("scratch per worker");
+            rest_s = rs;
+            let (defer, rd) = rest_d.split_first_mut().expect("deferred buf per worker");
+            rest_d = rd;
+            let (moved_slot, rm) = rest_m.split_first_mut().expect("movement slot per worker");
+            rest_m = rm;
+            let lo = wi * chunk;
+            let hi = (lo + chunk).min(pairs.len());
+            // No handle vector: the scope joins every worker on exit and
+            // the results land in the pre-split per-worker slots, which
+            // keeps the spawn loop itself allocation-free.
+            scope.spawn(move || {
                 let mut movements = 0usize;
-                for (i, (u_loads, v_loads)) in part.iter_mut().enumerate() {
-                    let mut rng = Pcg64::for_edge(seed, round, offset + i);
-                    movements += balance_slot(u_loads, v_loads, algo, &mut rng);
+                for e in lo..hi {
+                    let (u, v) = views.pair(e);
+                    let mut rng = Pcg64::for_edge(seed, round, e);
+                    // SAFETY: workers partition the edge indices, so no
+                    // edge is gathered or applied concurrently; edges of
+                    // one matching are vertex-disjoint (validated by
+                    // split_pairs).
+                    let gather = unsafe { views.gather(e, &mut scratch.pool) };
+                    let decision = decide_pool(
+                        &mut scratch.pool,
+                        &mut scratch.dest,
+                        gather.base,
+                        algo,
+                        &mut rng,
+                    );
+                    movements += decision.movements;
+                    if apply_is_noop(algo, decision.movements, gather.partitioned) {
+                        continue;
+                    }
+                    // SAFETY: as above.
+                    if !unsafe { views.try_apply(e, &scratch.pool, &scratch.dest) } {
+                        defer.push(Deferred {
+                            u,
+                            v,
+                            pool: scratch.pool.clone(),
+                            dest: scratch.dest.clone(),
+                        });
+                    }
                 }
-                movements
-            }));
+                *moved_slot = movements;
+            });
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("parallel BCM worker panicked"))
-            .sum()
-    })
-}
-
-/// Rebalance one matched edge through its split views; returns the
-/// movement count.  Mirrors `engine::balance_edge` exactly: pinned loads
-/// keep their order, the rebalanced mobile loads are appended.
-fn balance_slot(
-    u_loads: &mut Vec<Load>,
-    v_loads: &mut Vec<Load>,
-    algo: PairAlgorithm,
-    rng: &mut Pcg64,
-) -> usize {
-    let out = balance_pair(u_loads, v_loads, algo, rng);
-    u_loads.retain(|l| !l.mobile);
-    v_loads.retain(|l| !l.mobile);
-    u_loads.extend(out.to_u);
-    v_loads.extend(out.to_v);
-    out.movements
+    });
+    drop(views);
+    // Deferred write-backs (segment overflow) are applied by the arena
+    // owner in ascending edge order — worker chunks are contiguous, so
+    // worker order *is* edge order — which reproduces the sequential
+    // engine's relocation sequence exactly.
+    for defer in ctx.deferred.iter_mut().take(workers) {
+        for d in defer.drain(..) {
+            state.apply_edge(d.u as usize, d.v as usize, &d.pool, &d.dest);
+        }
+    }
+    ctx.moved[..workers].iter().sum()
 }
 
 #[cfg(test)]
@@ -203,10 +313,31 @@ mod tests {
     }
 
     #[test]
+    fn round_ctx_is_reusable_across_rounds_and_thread_counts() {
+        // The same context must serve rounds at different worker counts
+        // (it grows on demand) without perturbing results.
+        let (state0, schedule) = setup(16, 12, Mobility::Full, 9);
+        let algo = PairAlgorithm::Greedy;
+        let mut a = state0.clone();
+        let mut b = state0.clone();
+        let mut ctx = RoundCtx::new(1);
+        for round in 0..6 {
+            let pairs = schedule.matching(round);
+            let ma = parallel_round_ctx(&mut a, pairs, round, algo, 5, 1 + round % 4, &mut ctx);
+            let mb = parallel_round(&mut b, pairs, round, algo, 5, 2);
+            assert_eq!(ma, mb, "movement count diverged at round {round}");
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn threaded_metrics_reduction_keeps_traces_identical_at_scale() {
         // n large enough that `discrepancy_threaded` takes the chunked
         // path inside the parallel engine while the sequential reference
-        // still folds scalar — the traces must stay bit-identical.
+        // still folds scalar — the traces must stay bit-identical.  With
+        // loads drawn from the paper distribution the node sizes churn,
+        // so this also exercises segment relocation and the deferred
+        // write-back path at scale.
         let n = 2 * crate::load::state::REDUCE_CHUNK_MIN;
         let mut rng = Pcg64::new(5);
         let g = Graph::ring(n);

@@ -83,11 +83,7 @@ pub fn resolve_batch_rounds(batch: usize, n: usize) -> usize {
 /// exclusively; the leader keeps only the empty husk).
 fn carve(state: &mut LoadState, map: &ShardMap) -> Vec<Vec<Vec<Load>>> {
     (0..map.shards())
-        .map(|s| {
-            map.range(s)
-                .map(|v| std::mem::take(state.node_mut(v)))
-                .collect()
-        })
+        .map(|s| map.range(s).map(|v| state.take_node(v)).collect())
         .collect()
 }
 

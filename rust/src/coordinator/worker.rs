@@ -4,7 +4,9 @@
 //! Owns its nodes' load lists exclusively; all interaction goes through
 //! its [`WorkerTransport`] (in-process channels or TCP sockets — the
 //! round loop cannot tell).  Intra-shard edges are solved locally through the same
-//! [`balance_pool`] primitive the engines use; for a cross-shard edge the
+//! [`decide_pool`] primitive the engines use, on a reusable
+//! [`EdgeScratch`] owned by the worker (no per-edge allocation); for a
+//! cross-shard edge the
 //! owner of `u` is the edge master — the slave ships `v`'s mobile loads
 //! ([`ShardMsg::Offer`]), the master solves the two-bin problem and ships
 //! `v`'s share back ([`ShardMsg::Settle`]).  Every edge draws its
@@ -55,7 +57,7 @@
 use super::messages::{Ctl, Report, RoundReport, ShardMsg};
 use super::shard::{RoundPlan, ShardPlan};
 use super::transport::{TransportError, WorkerTransport};
-use crate::balancer::{balance_pool, PairAlgorithm, SortAlgo};
+use crate::balancer::{apply_is_noop, decide_pool, EdgeScratch, PairAlgorithm, SortAlgo};
 use crate::load::Load;
 use crate::util::rng::Pcg64;
 use std::collections::{BTreeMap, BTreeSet};
@@ -149,6 +151,10 @@ pub struct ShardWorker {
     /// [`Ctl::AbortJob`] for the same job: an aborted epoch was
     /// recovered by the leader, so the lifecycle ends clean.
     first_failure: Option<(u32, String)>,
+    /// Reusable edge working memory, shared by every job's local and
+    /// master edges (one edge is solved at a time); warms up to the
+    /// largest pool seen and then serves rounds allocation-free.
+    scratch: EdgeScratch,
 }
 
 /// One color's resolved work for a shard: the plan slice plus the
@@ -194,6 +200,7 @@ impl ShardWorker {
             peer_wait: None,
             fault_exit: None,
             first_failure: None,
+            scratch: EdgeScratch::new(),
         }
     }
 
@@ -347,7 +354,8 @@ impl ShardWorker {
                 Ctl::PollWeights { job } => {
                     let Some(js) = self.jobs.get(&job) else {
                         if !self.retired.contains(&job) {
-                            self.job_failed(job, None, format!("weight poll for unknown job {job}"));
+                            let why = format!("weight poll for unknown job {job}");
+                            self.job_failed(job, None, why);
                         }
                         continue;
                     };
@@ -501,7 +509,7 @@ impl ShardWorker {
         let mut movements = 0usize;
         for &(edge, u, v) in &task.plan.local {
             let mut rng = Pcg64::for_edge(seed, round, edge);
-            movements += balance_local(js, &mut rng, u, v);
+            movements += balance_local(js, &mut self.scratch, &mut rng, u, v);
         }
         // State 3 — collect: serve master edges as offers arrive and
         // absorb the settles for slave edges, starting with anything a
@@ -611,43 +619,113 @@ impl ShardWorker {
     ) -> Result<usize, String> {
         let (their_loads, their_pinned) = offer;
         let u_node = &mut js.nodes[u as usize - js.lo];
-        let (u_mobile, u_pinned) = drain_mobile(u_node);
-        let pool: Vec<(Load, u8)> = u_mobile
-            .into_iter()
-            .map(|l| (l, 0))
-            .chain(their_loads.into_iter().map(|l| (l, 1)))
-            .collect();
-        let out = balance_pool(pool, [u_pinned, their_pinned], js.algo, rng);
-        u_node.extend(out.to_u);
+        let scratch = &mut self.scratch;
+        scratch.pool.clear();
+        let (u_pinned, u_part) = gather_from(u_node, 0, &mut scratch.pool);
+        scratch.pool.extend(their_loads.iter().map(|&l| (l, 1)));
+        let decision = decide_pool(
+            &mut scratch.pool,
+            &mut scratch.dest,
+            [u_pinned, their_pinned],
+            js.algo,
+            rng,
+        );
+        // The slave's side is trivially partitioned — its offer carries
+        // mobile loads only.  When nothing moved (and no sort permuted
+        // the pool), `u` is untouched and the offer bounces straight
+        // back in arrival order: the settle reuses the offer's own Vec.
+        let loads = if apply_is_noop(js.algo, decision.movements, [u_part, true]) {
+            their_loads
+        } else {
+            retain_pinned(u_node);
+            let mut back = Vec::with_capacity(their_loads.len());
+            for (&(l, _), &d) in scratch.pool.iter().zip(scratch.dest.iter()) {
+                if d == 0 {
+                    u_node.push(l);
+                } else {
+                    back.push(l);
+                }
+            }
+            back
+        };
         let settle = ShardMsg::Settle {
             job,
             round,
             edge,
-            loads: out.to_v,
+            loads,
         };
         self.transport
             .send_peer(slave, settle)
             .map_err(|e| format!("peer shard {slave} unreachable (settle, edge {edge}): {e}"))?;
-        Ok(out.movements)
+        Ok(decision.movements)
     }
 }
 
-/// Rebalance an intra-shard edge in place.  Pool order (u then v),
-/// pinned handling and RNG consumption mirror `balance_pair` exactly.
-fn balance_local(js: &mut JobState, rng: &mut Pcg64, u: u32, v: u32) -> usize {
+/// Rebalance an intra-shard edge in place, on the worker's reusable
+/// scratch.  Pool order (u then v), pinned handling and RNG consumption
+/// mirror `balance_pair` exactly; the write-back (pinned compacted in
+/// order, then the routed pool entries in pool order) reproduces the
+/// historical `drain + extend` layout bit for bit.
+fn balance_local(
+    js: &mut JobState,
+    scratch: &mut EdgeScratch,
+    rng: &mut Pcg64,
+    u: u32,
+    v: u32,
+) -> usize {
     let (ui, vi) = (u as usize - js.lo, v as usize - js.lo);
     let (u_node, v_node) = two_mut(&mut js.nodes, ui, vi);
-    let (u_mobile, u_pinned) = drain_mobile(u_node);
-    let (v_mobile, v_pinned) = drain_mobile(v_node);
-    let pool: Vec<(Load, u8)> = u_mobile
-        .into_iter()
-        .map(|l| (l, 0))
-        .chain(v_mobile.into_iter().map(|l| (l, 1)))
-        .collect();
-    let out = balance_pool(pool, [u_pinned, v_pinned], js.algo, rng);
-    u_node.extend(out.to_u);
-    v_node.extend(out.to_v);
-    out.movements
+    scratch.pool.clear();
+    let (u_pinned, u_part) = gather_from(u_node, 0, &mut scratch.pool);
+    let (v_pinned, v_part) = gather_from(v_node, 1, &mut scratch.pool);
+    let decision = decide_pool(
+        &mut scratch.pool,
+        &mut scratch.dest,
+        [u_pinned, v_pinned],
+        js.algo,
+        rng,
+    );
+    if !apply_is_noop(js.algo, decision.movements, [u_part, v_part]) {
+        retain_pinned(u_node);
+        retain_pinned(v_node);
+        for (&(l, _), &d) in scratch.pool.iter().zip(scratch.dest.iter()) {
+            if d == 0 {
+                u_node.push(l);
+            } else {
+                v_node.push(l);
+            }
+        }
+    }
+    decision.movements
+}
+
+/// Append `node`'s mobile loads to `pool` tagged `tag`.  Returns the
+/// pinned weight sum — folded in node order, exactly the fold
+/// `drain_mobile` (and the engines' `gather_edge`) performs — and
+/// whether the node is already partitioned pinned-prefix-first, the
+/// precondition for skipping a no-move write-back.
+fn gather_from(node: &[Load], tag: u8, pool: &mut Vec<(Load, u8)>) -> (f64, bool) {
+    let mut pinned = 0.0f64;
+    let mut saw_mobile = false;
+    let mut partitioned = true;
+    for &l in node {
+        if l.mobile {
+            saw_mobile = true;
+            pool.push((l, tag));
+        } else {
+            if saw_mobile {
+                partitioned = false;
+            }
+            pinned += l.weight;
+        }
+    }
+    (pinned, partitioned)
+}
+
+/// Drop a node's mobile loads in place, keeping the pinned ones in
+/// order — the write-back prefix every balanced node starts with.
+fn retain_pinned(node: &mut Vec<Load>) {
+    node.retain(|l| !l.mobile);
 }
 
 /// `(min, max)` node weight over the shard's nodes; the leader folds
@@ -694,16 +772,20 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 fn drain_mobile(node: &mut Vec<Load>) -> (Vec<Load>, f64) {
     let mut mobile = Vec::with_capacity(node.len());
     let mut pinned_w = 0.0f64;
-    let mut kept = Vec::new();
-    for l in node.drain(..) {
+    let mut w = 0usize;
+    // single pass, single allocation: pinned loads compact forward in
+    // place while the mobiles stream out
+    for r in 0..node.len() {
+        let l = node[r];
         if l.mobile {
             mobile.push(l);
         } else {
             pinned_w += l.weight;
-            kept.push(l);
+            node[w] = l;
+            w += 1;
         }
     }
-    *node = kept;
+    node.truncate(w);
     (mobile, pinned_w)
 }
 

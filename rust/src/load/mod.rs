@@ -7,4 +7,4 @@ pub mod state;
 
 pub use distribution::WeightDistribution;
 pub use item::Load;
-pub use state::{LoadState, Mobility, PairSlots};
+pub use state::{EdgeGather, EdgeViews, LoadState, Mobility, NodeIter, NodeView};

@@ -1,0 +1,169 @@
+//! The zero-allocation contract of the hot path (DESIGN.md §9): after a
+//! warm-up sweep, a steady-state BCM round performs **zero** heap
+//! allocations — the arena rewrites segments in place, the edge scratch
+//! is reused, and the trace/reduction read cached totals.
+//!
+//! A counting `#[global_allocator]` wraps `System` and counts every
+//! allocation event (alloc / alloc_zeroed / realloc).  The whole
+//! contract lives in a single `#[test]` so no concurrent test can
+//! perturb the global counter.
+//!
+//! The workload is an equal-weight ring: every edge pools 16 unit
+//! loads and splits them 8/8, so node sizes never leave their segment
+//! caps — the steady state the slack is designed around.  (Random
+//! weights migrate loads across cap boundaries, which legitimately
+//! relocates segments; that path is exercised by the property tests,
+//! not this budget.)
+
+use bcm_dlb::balancer::{EdgeScratch, PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{balance_edge_with, parallel_round_ctx, RoundCtx, Schedule};
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{Load, LoadState};
+use bcm_dlb::util::rng::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOC_EVENTS.load(Ordering::SeqCst)
+}
+
+/// `per_node` unit-weight mobile loads on each of `n` nodes.
+fn equal_state(n: usize, per_node: usize) -> LoadState {
+    let mut s = LoadState::empty(n);
+    let mut id = 0u64;
+    for v in 0..n {
+        for _ in 0..per_node {
+            s.push(v, Load::new(id, 1.0));
+            id += 1;
+        }
+    }
+    s
+}
+
+fn seq_sweeps(
+    state: &mut LoadState,
+    schedule: &Schedule,
+    algo: PairAlgorithm,
+    rounds: std::ops::Range<usize>,
+    seed: u64,
+    scratch: &mut EdgeScratch,
+) {
+    for round in rounds {
+        for (e, &(u, v)) in schedule.matching(round).iter().enumerate() {
+            let mut rng = Pcg64::for_edge(seed, round, e);
+            balance_edge_with(state, u as usize, v as usize, algo, &mut rng, scratch);
+        }
+    }
+}
+
+#[test]
+fn steady_state_rounds_allocate_nothing() {
+    let n = 64;
+    let per_node = 8;
+    let seed = 0xA110_C8;
+    let g = Graph::ring(n);
+    let schedule = Schedule::from_graph(&g);
+    let d = schedule.period();
+    // Merge/Flash sorts use scratch buffers by design; Quick is in-place.
+    let algos = [
+        PairAlgorithm::Greedy,
+        PairAlgorithm::GreedyIncremental,
+        PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+    ];
+
+    for algo in algos {
+        // --- sequential engine loop ---
+        let mut state = equal_state(n, per_node);
+        let mut scratch = EdgeScratch::new();
+        seq_sweeps(&mut state, &schedule, algo, 0..d, seed, &mut scratch);
+        let before = allocs();
+        seq_sweeps(&mut state, &schedule, algo, d..3 * d, seed, &mut scratch);
+        assert_eq!(
+            allocs() - before,
+            0,
+            "sequential steady-state rounds allocated ({algo:?})"
+        );
+
+        // --- parallel round, single worker (no thread spawns) ---
+        let mut state = equal_state(n, per_node);
+        let mut ctx = RoundCtx::new(1);
+        for round in 0..d {
+            let pairs = schedule.matching(round);
+            parallel_round_ctx(&mut state, pairs, round, algo, seed, 1, &mut ctx);
+        }
+        let before = allocs();
+        for round in d..3 * d {
+            let pairs = schedule.matching(round);
+            parallel_round_ctx(&mut state, pairs, round, algo, seed, 1, &mut ctx);
+        }
+        assert_eq!(
+            allocs() - before,
+            0,
+            "1-worker parallel steady-state rounds allocated ({algo:?})"
+        );
+
+        // --- parallel round, two workers ---
+        // Spawning OS threads inherently allocates (thread packets,
+        // boxed closures), so the budget here is: no more events than a
+        // scope of the same shape spawning *empty* closures — i.e. the
+        // round work itself contributes zero.
+        let mut state = equal_state(n, per_node);
+        let mut ctx = RoundCtx::new(2);
+        for round in 0..d {
+            let pairs = schedule.matching(round);
+            parallel_round_ctx(&mut state, pairs, round, algo, seed, 2, &mut ctx);
+        }
+        let spawn_shape = || {
+            std::thread::scope(|scope| {
+                for _ in 0..2 {
+                    scope.spawn(|| {});
+                }
+            })
+        };
+        spawn_shape(); // warm any lazy thread-runtime state
+        let before = allocs();
+        for _ in 0..2 * d {
+            spawn_shape();
+        }
+        let baseline = allocs() - before;
+        let before = allocs();
+        for round in d..3 * d {
+            let pairs = schedule.matching(round);
+            parallel_round_ctx(&mut state, pairs, round, algo, seed, 2, &mut ctx);
+        }
+        let spent = allocs() - before;
+        assert!(
+            spent <= baseline,
+            "2-worker rounds allocated beyond the bare spawn overhead \
+             ({algo:?}: {spent} events vs {baseline} baseline)"
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! Seed-sweep properties of the SoA arena `LoadState`: the arena (and
+//! the scratch-based edge path on top of it) must round-trip the
+//! historical per-node-`Vec` semantics exactly — same load orders, same
+//! pinning, and cached weight totals bitwise equal to a fresh in-order
+//! fold at all times.
+//!
+//! Same harness idiom as `property_invariants.rs` (which is left
+//! untouched as the frozen pre-arena contract): each property runs over
+//! many deterministic seeds and reports the failing seed.
+
+use bcm_dlb::balancer::{EdgeScratch, PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{
+    balance_edge_with, parallel_round, Engine, Parallel, Schedule, Sequential, StopRule,
+};
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+
+/// Run `prop` over `cases` seeds; panic with the seed on failure.
+fn forall(name: &str, cases: u64, prop: impl Fn(&mut Pcg64)) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::new(0xA2E4_0000 + seed);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_dist(rng: &mut Pcg64) -> WeightDistribution {
+    match rng.below(4) {
+        0 => WeightDistribution::Uniform { lo: 0.0, hi: 100.0 },
+        1 => WeightDistribution::Exponential { mean: 10.0 },
+        2 => WeightDistribution::Normal { mean: 20.0, std: 8.0 },
+        _ => WeightDistribution::Pareto { scale: 1.0, alpha: 2.5 },
+    }
+}
+
+fn random_algo(rng: &mut Pcg64) -> PairAlgorithm {
+    match rng.below(4) {
+        0 => PairAlgorithm::Greedy,
+        1 => PairAlgorithm::GreedyIncremental,
+        2 => PairAlgorithm::SortedGreedy(SortAlgo::Quick),
+        _ => PairAlgorithm::Random,
+    }
+}
+
+/// The cached per-node totals stay bitwise equal to a fresh left fold
+/// of the node's weights — after thousands of migrations, relocations
+/// and compactions, not just after construction.
+#[test]
+fn prop_cached_totals_bitwise_equal_fresh_fold_after_migrations() {
+    forall("totals 0 ULP", 15, |rng| {
+        let n = 12 + rng.below(20);
+        let g = Graph::random_connected(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let mobility = if rng.coin() { Mobility::Full } else { Mobility::Partial };
+        let mut state = LoadState::init_uniform_counts(
+            n,
+            2 + rng.below(12),
+            &random_dist(rng),
+            mobility,
+            rng,
+        );
+        let algo = random_algo(rng);
+        let seed = rng.next_u64();
+        Sequential.run(&mut state, &schedule, algo, StopRule::sweeps(40), seed);
+        for v in 0..state.n() {
+            let fresh = state
+                .node(v)
+                .iter()
+                .map(|l| l.weight)
+                .fold(0.0f64, |acc, w| acc + w);
+            assert_eq!(
+                state.node_weight(v).to_bits(),
+                fresh.to_bits(),
+                "cached total of node {v} drifted from the in-order fold"
+            );
+        }
+    });
+}
+
+/// Partial-mobility pinning round-trips the old semantics: pinned loads
+/// never change node, weight, or relative order, no matter how much the
+/// mobile loads around them migrate (sequentially or in parallel).
+#[test]
+fn prop_pinned_loads_never_move() {
+    forall("pinning", 15, |rng| {
+        let n = 8 + rng.below(16);
+        let g = Graph::random_connected(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            n,
+            2 + rng.below(10),
+            &random_dist(rng),
+            Mobility::Partial,
+            rng,
+        );
+        let pinned_before: Vec<(usize, u64, u64)> = (0..n)
+            .flat_map(|v| {
+                state
+                    .node(v)
+                    .iter()
+                    .filter(|l| !l.mobile)
+                    .map(move |l| (v, l.id, l.weight.to_bits()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        assert!(!pinned_before.is_empty(), "Partial mobility must pin something");
+        let ids_before = state.all_ids();
+        let algo = random_algo(rng);
+        let threads = 1 + rng.below(4);
+        let seed = rng.next_u64();
+        Parallel::new(threads).run(&mut state, &schedule, algo, StopRule::sweeps(8), seed);
+        let pinned_after: Vec<(usize, u64, u64)> = (0..n)
+            .flat_map(|v| {
+                state
+                    .node(v)
+                    .iter()
+                    .filter(|l| !l.mobile)
+                    .map(move |l| (v, l.id, l.weight.to_bits()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        assert_eq!(pinned_before, pinned_after, "a pinned load moved or reordered");
+        assert_eq!(state.all_ids(), ids_before, "loads were lost or duplicated");
+    });
+}
+
+/// The raw `EdgeViews` path (split_pairs → gather/try_apply, including
+/// the deferred-relocation fallback) produces states and movement
+/// counts identical to the owner's gather_edge/apply_edge on random
+/// matchings.
+#[test]
+fn prop_edge_views_match_owner_application() {
+    forall("views == owner", 30, |rng| {
+        let n = 6 + rng.below(20);
+        let mut state = LoadState::init_uniform_counts(
+            n,
+            1 + rng.below(10),
+            &random_dist(rng),
+            if rng.coin() { Mobility::Full } else { Mobility::Partial },
+            rng,
+        );
+        if rng.coin() {
+            // skew one node so write-backs overflow caps and defer
+            for i in 0..32u64 {
+                state.push(0, Load::new(1_000_000 + i, 0.25));
+            }
+        }
+        // a random matching: shuffle the vertices, pair them up
+        let mut verts: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut verts);
+        let pairs: Vec<(u32, u32)> = verts.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+        let algo = random_algo(rng);
+        let seed = rng.next_u64();
+        let round = rng.below(1000);
+        let mut via_views = state.clone();
+        let threads = 1 + rng.below(4);
+        let mv = parallel_round(&mut via_views, &pairs, round, algo, seed, threads);
+        let mut scratch = EdgeScratch::new();
+        let mut mo = 0usize;
+        for (e, &(u, v)) in pairs.iter().enumerate() {
+            let mut edge_rng = Pcg64::for_edge(seed, round, e);
+            mo += balance_edge_with(
+                &mut state,
+                u as usize,
+                v as usize,
+                algo,
+                &mut edge_rng,
+                &mut scratch,
+            );
+        }
+        assert_eq!(mv, mo, "movement counts diverged");
+        assert_eq!(via_views, state, "states diverged");
+    });
+}
+
+/// The arena mirrors a plain `Vec<Vec<Load>>` model through arbitrary
+/// interleavings of push / take_mobile+give / take_node — same
+/// sequences, same totals (to the bit), same disjoint slot ranges.
+#[test]
+fn prop_arena_matches_vec_model_under_mixed_ops() {
+    forall("arena == Vec model", 40, |rng| {
+        let n = 1 + rng.below(8);
+        let mut s = LoadState::empty(n);
+        let mut model: Vec<Vec<Load>> = vec![Vec::new(); n];
+        let mut next = 0u64;
+        for _ in 0..400 {
+            let v = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    let mut l = Load::new(next, rng.uniform(0.0, 10.0));
+                    l.mobile = rng.next_f64() < 0.8;
+                    next += 1;
+                    s.push(v, l);
+                    model[v].push(l);
+                }
+                1 => {
+                    let got = s.take_mobile(v);
+                    let want: Vec<Load> =
+                        model[v].iter().copied().filter(|l| l.mobile).collect();
+                    model[v].retain(|l| !l.mobile);
+                    assert_eq!(got, want, "take_mobile order diverged");
+                    let to = rng.below(n);
+                    s.give(to, got.iter().copied());
+                    model[to].extend(got);
+                }
+                2 => {
+                    let got = s.take_node(v);
+                    assert_eq!(got, model[v], "take_node order diverged");
+                    model[v].clear();
+                }
+                _ => {
+                    assert_eq!(s.node(v).to_vec(), model[v]);
+                    let fresh: f64 =
+                        model[v].iter().map(|l| l.weight).fold(0.0f64, |acc, w| acc + w);
+                    assert_eq!(
+                        s.node_weight(v).to_bits(),
+                        fresh.to_bits(),
+                        "cached total drifted mid-sequence"
+                    );
+                }
+            }
+        }
+        for v in 0..n {
+            assert_eq!(s.node(v).to_vec(), model[v], "final content of node {v}");
+        }
+        assert_eq!(s.total_loads(), model.iter().map(|m| m.len()).sum::<usize>());
+    });
+}
