@@ -80,6 +80,7 @@ fn make_tenant(n: usize, sweeps: usize, seed: u64) -> (JobSpec, RunTrace) {
             seed,
             batch: 0,
             checkpoint_every: 0,
+            churn: None,
         },
         seq_trace,
     )

@@ -1,0 +1,210 @@
+//! Dynamic-workload throughput: churning rounds/s of the
+//! `service-traffic` generator driven through every executor — the
+//! sequential engine, the parallel engine, and the sharded cluster.
+//!
+//! Every executor's trace and final state are checked bit-identical
+//! against `bcm::Sequential` before its time is reported, so this bench
+//! doubles as the churn-determinism smoke test at bench scale: churn
+//! application (arena inserts, modular departures, drift rescales) must
+//! not cost determinism at any thread or shard count.
+//!
+//! `cargo bench --bench service_traffic` runs the n=1024 scenario;
+//! `-- --smoke` (or `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates to
+//! n=128, 1 sweep for CI.  Smoke runs enforce the
+//! `[service_traffic.smoke] min_rounds_per_s` floor from
+//! `bench_floor.toml`; `-- --no-floor` skips the gate.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Parallel, RunTrace, Schedule, Sequential};
+use bcm_dlb::graph::Topology;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::util::table::{f, Table};
+use bcm_dlb::workload::{
+    run_dynamic_cluster, run_dynamic_engine, sustained_stats, TrafficConfig,
+};
+use std::path::Path;
+
+const ALGO: PairAlgorithm = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+const SEED: u64 = 2013;
+
+fn read_floor(path: &Path, section: &str, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut in_section = false;
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            in_section = name.trim() == section;
+        } else if in_section {
+            if let Some((k, v)) = line.split_once('=') {
+                if k.trim() == key {
+                    return v.trim().parse().ok();
+                }
+            }
+        }
+    }
+    None
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scenario seeded exactly like `bcm-dlb run --workload service-traffic`.
+fn scenario(n: usize, sweeps: usize) -> (Schedule, LoadState, usize) {
+    let mut rng = Pcg64::new(SEED);
+    let g = Topology::Torus2d.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        10,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let rounds = sweeps * schedule.period();
+    (schedule, state, rounds)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || env_flag("BCM_DLB_SMOKE")
+        || env_flag("BCM_DLB_QUICK");
+    let (n, sweeps) = if smoke { (128, 1) } else { (1024, 2) };
+    let cfg = TrafficConfig::default();
+    let (schedule, state0, rounds) = scenario(n, sweeps);
+    eprintln!(
+        "service_traffic: torus2d n={n}, {rounds} churning rounds, \
+         arrival_rate={}, pareto_alpha={}{}",
+        cfg.arrival_rate,
+        cfg.pareto_alpha,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // the sequential reference first: its trace/state gate the others
+    let mut seq_state = state0.clone();
+    let start = std::time::Instant::now();
+    let seq_trace = run_dynamic_engine(
+        &Sequential,
+        &mut seq_state,
+        &schedule,
+        ALGO,
+        &cfg,
+        rounds,
+        SEED,
+    );
+    let seq_secs = start.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "service-traffic churning throughput (every executor verified vs Sequential)",
+        &["executor", "rounds", "secs", "rounds/s", "sustained_mean"],
+    );
+    let mut best_rps: f64 = 0.0;
+    let mut failed = false;
+    let mut record = |name: &str, trace: &RunTrace, secs: f64| {
+        let rps = trace.rounds.len() as f64 / secs.max(1e-12);
+        best_rps = best_rps.max(rps);
+        let s = sustained_stats(trace, rounds / 2);
+        t.row(vec![
+            name.to_string(),
+            trace.rounds.len().to_string(),
+            f(secs, 3),
+            f(rps, 0),
+            f(s.mean, 4),
+        ]);
+    };
+    record("sequential", &seq_trace, seq_secs);
+
+    for threads in [2usize, 0] {
+        let name = if threads == 0 {
+            "parallel/auto".to_string()
+        } else {
+            format!("parallel/{threads}")
+        };
+        let mut state = state0.clone();
+        let start = std::time::Instant::now();
+        let trace = run_dynamic_engine(
+            &Parallel::new(threads),
+            &mut state,
+            &schedule,
+            ALGO,
+            &cfg,
+            rounds,
+            SEED,
+        );
+        let secs = start.elapsed().as_secs_f64();
+        if trace != seq_trace || state != seq_state {
+            eprintln!("service_traffic: {name} diverged from Sequential under churn");
+            failed = true;
+            continue;
+        }
+        record(&name, &trace, secs);
+    }
+
+    for shards in [2usize, 0] {
+        let name = if shards == 0 {
+            "cluster/auto".to_string()
+        } else {
+            format!("cluster/{shards}")
+        };
+        let start = std::time::Instant::now();
+        match run_dynamic_cluster(state0.clone(), &schedule, ALGO, &cfg, rounds, SEED, shards)
+        {
+            Ok((trace, fin)) => {
+                let secs = start.elapsed().as_secs_f64();
+                if trace != seq_trace || fin != seq_state {
+                    eprintln!(
+                        "service_traffic: {name} diverged from Sequential under churn"
+                    );
+                    failed = true;
+                    continue;
+                }
+                record(&name, &trace, secs);
+            }
+            Err(e) => {
+                eprintln!("service_traffic: {name} failed: {e}");
+                failed = true;
+            }
+        }
+    }
+
+    println!("{}", t.render());
+    t.write_csv(Path::new("results/service_traffic_bench.csv")).ok();
+
+    if smoke && !args.iter().any(|a| a == "--no-floor") {
+        let floor_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_floor.toml");
+        match read_floor(&floor_path, "service_traffic.smoke", "min_rounds_per_s") {
+            Some(floor) if best_rps < floor => {
+                eprintln!(
+                    "REGRESSION: best churning throughput {} rounds/s is below the \
+                     bench_floor.toml floor of {} rounds/s",
+                    f(best_rps, 0),
+                    f(floor, 0)
+                );
+                failed = true;
+            }
+            Some(floor) => {
+                eprintln!(
+                    "perf floor ok: {} rounds/s >= {} rounds/s floor",
+                    f(best_rps, 0),
+                    f(floor, 0)
+                );
+            }
+            None => {
+                eprintln!(
+                    "REGRESSION GATE BROKEN: no parsable [service_traffic.smoke] \
+                     min_rounds_per_s in {} (use --no-floor to bypass deliberately)",
+                    floor_path.display()
+                );
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -71,6 +71,28 @@ pub trait Engine {
         stop: StopRule,
         seed: u64,
     ) -> RunTrace;
+
+    /// Run exactly `rounds` rounds of a *dynamic* workload: before each
+    /// round's matching is applied, `churn(state, round)` mutates the
+    /// load population (arrivals, departures, cost drift — see
+    /// `workload::service_traffic`).
+    ///
+    /// The trace's `initial_discrepancy` is recorded before any churn,
+    /// and each round's stats after that round's matching.  There is no
+    /// plateau rule: a churning system never converges, so the round
+    /// count is the contract.  The determinism guarantee of [`run`]
+    /// carries over unchanged — the churn hook is called at the same
+    /// round boundaries by every engine, so engines fed the same hook
+    /// stream stay bit-identical.
+    fn run_dynamic(
+        &self,
+        state: &mut LoadState,
+        schedule: &Schedule,
+        algo: PairAlgorithm,
+        rounds: usize,
+        seed: u64,
+        churn: &mut dyn FnMut(&mut LoadState, usize),
+    ) -> RunTrace;
 }
 
 /// The single-threaded [`Engine`]: edges applied in matching order, each
@@ -95,6 +117,27 @@ impl Engine for Sequential {
         // stops allocating (tests/alloc_budget.rs).
         let mut scratch = EdgeScratch::new();
         drive(state, schedule, stop, |state, pairs, round| {
+            let mut movements = 0usize;
+            for (e, &(u, v)) in pairs.iter().enumerate() {
+                let mut rng = Pcg64::for_edge(seed, round, e);
+                movements +=
+                    balance_edge_with(state, u as usize, v as usize, algo, &mut rng, &mut scratch);
+            }
+            movements
+        })
+    }
+
+    fn run_dynamic(
+        &self,
+        state: &mut LoadState,
+        schedule: &Schedule,
+        algo: PairAlgorithm,
+        rounds: usize,
+        seed: u64,
+        churn: &mut dyn FnMut(&mut LoadState, usize),
+    ) -> RunTrace {
+        let mut scratch = EdgeScratch::new();
+        drive_dynamic_with(state, schedule, rounds, 1, churn, |state, pairs, round| {
             let mut movements = 0usize;
             for (e, &(u, v)) in pairs.iter().enumerate() {
                 let mut rng = Pcg64::for_edge(seed, round, e);
@@ -168,6 +211,44 @@ pub(crate) fn drive_with(
             }
         }
         last_sweep_disc = disc;
+    }
+    trace
+}
+
+/// The dynamic-workload sibling of [`drive_with`]: run exactly `rounds`
+/// rounds (no plateau rule — a churning system never converges), calling
+/// `churn(state, round)` before each round's matching is applied.
+///
+/// `initial_discrepancy` is recorded before any churn so the trace
+/// cleanly separates the starting imbalance from what the arrival
+/// process injects.  Like [`drive_with`], the per-round discrepancy
+/// reduction may fan out over `reduce_threads` workers without changing
+/// a single bit of the trace.
+pub(crate) fn drive_dynamic_with(
+    state: &mut LoadState,
+    schedule: &Schedule,
+    rounds: usize,
+    reduce_threads: usize,
+    churn: &mut dyn FnMut(&mut LoadState, usize),
+    mut round_fn: impl FnMut(&mut LoadState, &[(u32, u32)], usize) -> usize,
+) -> RunTrace {
+    assert_eq!(state.n(), schedule.n(), "state/schedule size mismatch");
+    let mut trace = RunTrace {
+        initial_discrepancy: state.discrepancy_threaded(reduce_threads),
+        rounds: Vec::new(),
+    };
+    let d = schedule.period();
+    for round in 0..rounds {
+        churn(state, round);
+        let pairs = schedule.matching(round);
+        let movements = round_fn(state, pairs, round);
+        trace.rounds.push(RoundStats {
+            round,
+            color: round % d,
+            discrepancy: state.discrepancy_threaded(reduce_threads),
+            movements,
+            edges: pairs.len(),
+        });
     }
     trace
 }

@@ -25,7 +25,7 @@
 //! [`Sequential`](super::engine::Sequential) for every thread count
 //! (asserted by `tests/property_invariants.rs`).
 
-use super::engine::{balance_edge_with, drive_with, Engine, StopRule};
+use super::engine::{balance_edge_with, drive_dynamic_with, drive_with, Engine, StopRule};
 use super::schedule::Schedule;
 use super::trace::RunTrace;
 use crate::balancer::{apply_is_noop, decide_pool, EdgeScratch, PairAlgorithm};
@@ -81,6 +81,22 @@ impl Engine for Parallel {
         // would otherwise cap speedup.
         let mut ctx = RoundCtx::new(threads);
         drive_with(state, schedule, stop, threads, |state, pairs, round| {
+            parallel_round_ctx(state, pairs, round, algo, seed, threads, &mut ctx)
+        })
+    }
+
+    fn run_dynamic(
+        &self,
+        state: &mut LoadState,
+        schedule: &Schedule,
+        algo: PairAlgorithm,
+        rounds: usize,
+        seed: u64,
+        churn: &mut dyn FnMut(&mut LoadState, usize),
+    ) -> RunTrace {
+        let threads = self.thread_count();
+        let mut ctx = RoundCtx::new(threads);
+        drive_dynamic_with(state, schedule, rounds, threads, churn, |state, pairs, round| {
             parallel_round_ctx(state, pairs, round, algo, seed, threads, &mut ctx)
         })
     }

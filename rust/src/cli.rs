@@ -58,6 +58,18 @@ impl Args {
         }
     }
 
+    /// A float-valued flag; `None` when absent (callers that need a
+    /// default overlay it themselves).
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -97,6 +109,19 @@ COMMANDS
                                 restarted worker before reassigning its
                                 shard to the survivors (def. 5000; 0 =
                                 reassign immediately)
+                 [--workload service-traffic]  dynamic mode: churn the
+                                load set between rounds (arrivals with
+                                Pareto costs, departures, cost drift) and
+                                report sustained discrepancy over a
+                                trailing window plus cumulative migration
+                                traffic (E14; results/e14_*.csv); runs
+                                sweeps x period rounds
+                 [--arrival-rate R]  mean arrivals/node/round (def. 1.0;
+                                requires --workload)
+                 [--pareto-alpha A]  arrival-cost tail index, > 1
+                                (def. 2.5; requires --workload)
+                 [--hotspot-every H] rounds between hotspot bursts (0 =
+                                off; def. 32; requires --workload)
                  [--verify]     rerun Sequential and assert the cluster
                                 trace/state are bit-identical
                  [--trace-out FILE.csv]  per-round time series (rep 0)
@@ -181,6 +206,15 @@ mod tests {
         assert_eq!(a.get_usize("missing", 8).unwrap(), 8);
         let bad = parse(&["run", "--n", "abc"]);
         assert!(bad.get_usize("n", 8).is_err());
+    }
+
+    #[test]
+    fn float_getter() {
+        let a = parse(&["run", "--arrival-rate", "2.5"]);
+        assert_eq!(a.get_f64("arrival-rate").unwrap(), Some(2.5));
+        assert_eq!(a.get_f64("missing").unwrap(), None);
+        let bad = parse(&["run", "--arrival-rate", "lots"]);
+        assert!(bad.get_f64("arrival-rate").is_err());
     }
 
     #[test]

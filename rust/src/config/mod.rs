@@ -10,6 +10,11 @@ use crate::load::{Mobility, WeightDistribution};
 use crate::anyhow;
 use crate::util::error::Result;
 use crate::util::json::Json;
+use crate::workload::service_traffic::TrafficConfig;
+
+/// The only dynamic workload currently understood by `workload` /
+/// `--workload`.
+pub const WORKLOAD_SERVICE_TRAFFIC: &str = "service-traffic";
 
 /// One protocol experiment.
 #[derive(Clone, Debug)]
@@ -75,6 +80,26 @@ pub struct ExperimentConfig {
     /// milliseconds.  `0` skips the rejoin window and reassigns
     /// immediately.  Only consulted when `checkpoint_every > 0`.
     pub rejoin_wait_ms: u64,
+    /// Dynamic workload selector (config key `workload`, flag
+    /// `--workload`).  `None` (the default) balances the classic static
+    /// load set; [`WORKLOAD_SERVICE_TRAFFIC`] runs the churning
+    /// service-traffic generator between rounds
+    /// (`workload::service_traffic`) for `sweeps` full schedule sweeps.
+    /// Results stay bit-identical across threads/shards/batch either
+    /// way.
+    pub workload: Option<String>,
+    /// Override of [`TrafficConfig::arrival_rate`] (key/flag
+    /// `arrival_rate` / `--arrival-rate`); only legal with a
+    /// `workload`.
+    pub arrival_rate: Option<f64>,
+    /// Override of [`TrafficConfig::pareto_alpha`] (key/flag
+    /// `pareto_alpha` / `--pareto-alpha`); only legal with a
+    /// `workload`.
+    pub pareto_alpha: Option<f64>,
+    /// Override of [`TrafficConfig::hotspot_every`] (key/flag
+    /// `hotspot_every` / `--hotspot-every`); only legal with a
+    /// `workload`.
+    pub hotspot_every: Option<usize>,
 }
 
 impl Default for ExperimentConfig {
@@ -100,6 +125,10 @@ impl Default for ExperimentConfig {
             serve_max_jobs: 4,
             checkpoint_every: 0,
             rejoin_wait_ms: 5000,
+            workload: None,
+            arrival_rate: None,
+            pareto_alpha: None,
+            hotspot_every: None,
         }
     }
 }
@@ -188,17 +217,74 @@ impl ExperimentConfig {
             }
             cfg.serve_max_jobs = x;
         }
+        if let Some(s) = v.get("workload").as_str() {
+            if s != WORKLOAD_SERVICE_TRAFFIC {
+                return Err(anyhow!(
+                    "config: unknown workload '{s}' (expected '{WORKLOAD_SERVICE_TRAFFIC}')"
+                ));
+            }
+            cfg.workload = Some(s.to_string());
+        }
+        if let Some(x) = v.get("arrival_rate").as_f64() {
+            cfg.arrival_rate = Some(x);
+        }
+        if let Some(x) = v.get("pareto_alpha").as_f64() {
+            cfg.pareto_alpha = Some(x);
+        }
+        if let Some(x) = v.get("hotspot_every").as_usize() {
+            cfg.hotspot_every = Some(x);
+        }
         if cfg.n < 2 {
             return Err(anyhow!("config: n must be >= 2"));
         }
         if cfg.loads_per_node == 0 {
             return Err(anyhow!("config: loads_per_node must be >= 1"));
         }
+        cfg.validate_workload()?;
         Ok(cfg)
     }
 
+    /// Reject churn knobs without a workload, and knob values outside
+    /// the generator's domain.  Invoked by every parse path; `main`
+    /// re-invokes it after flag overlays.
+    pub fn validate_workload(&self) -> Result<()> {
+        if self.workload.is_none() {
+            for (knob, set) in [
+                ("arrival_rate", self.arrival_rate.is_some()),
+                ("pareto_alpha", self.pareto_alpha.is_some()),
+                ("hotspot_every", self.hotspot_every.is_some()),
+            ] {
+                if set {
+                    return Err(anyhow!(
+                        "config: {knob} requires workload '{WORKLOAD_SERVICE_TRAFFIC}'"
+                    ));
+                }
+            }
+            return Ok(());
+        }
+        let t = self.traffic().expect("workload is set");
+        t.validate().map_err(|m| anyhow!("config: {m}"))
+    }
+
+    /// The resolved churn generator config: defaults overridden by the
+    /// explicit knobs.  `None` when no `workload` is selected.
+    pub fn traffic(&self) -> Option<TrafficConfig> {
+        self.workload.as_deref()?;
+        let mut t = TrafficConfig::default();
+        if let Some(x) = self.arrival_rate {
+            t.arrival_rate = x;
+        }
+        if let Some(x) = self.pareto_alpha {
+            t.pareto_alpha = x;
+        }
+        if let Some(x) = self.hotspot_every {
+            t.hotspot_every = x;
+        }
+        Some(t)
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("topology", self.topology.name().into()),
             ("n", self.n.into()),
             ("loads_per_node", self.loads_per_node.into()),
@@ -227,7 +313,22 @@ impl ExperimentConfig {
                     ("max_jobs", self.serve_max_jobs.into()),
                 ]),
             ),
-        ])
+        ];
+        // optional workload keys are omitted when unset so a static
+        // config round-trips to a static config
+        if let Some(w) = &self.workload {
+            fields.push(("workload", w.clone().into()));
+        }
+        if let Some(x) = self.arrival_rate {
+            fields.push(("arrival_rate", x.into()));
+        }
+        if let Some(x) = self.pareto_alpha {
+            fields.push(("pareto_alpha", x.into()));
+        }
+        if let Some(x) = self.hotspot_every {
+            fields.push(("hotspot_every", x.into()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -355,6 +456,60 @@ mod tests {
         assert!(ExperimentConfig::from_json_str(r#"{"n": 1}"#).is_err());
         assert!(ExperimentConfig::from_json_str(r#"{"loads_per_node": 0}"#).is_err());
         assert!(ExperimentConfig::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn workload_keys_parse_roundtrip_and_default() {
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert!(cfg.workload.is_none());
+        assert!(cfg.traffic().is_none());
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"workload": "service-traffic", "arrival_rate": 2.5,
+                "pareto_alpha": 1.5, "hotspot_every": 16}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.as_deref(), Some(WORKLOAD_SERVICE_TRAFFIC));
+        let t = cfg.traffic().unwrap();
+        assert_eq!(t.arrival_rate, 2.5);
+        assert_eq!(t.pareto_alpha, 1.5);
+        assert_eq!(t.hotspot_every, 16);
+        // unset knobs keep the generator defaults
+        assert_eq!(t.depart_rate, TrafficConfig::default().depart_rate);
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.workload, cfg.workload);
+        assert_eq!(back.arrival_rate, cfg.arrival_rate);
+        assert_eq!(back.pareto_alpha, cfg.pareto_alpha);
+        assert_eq!(back.hotspot_every, cfg.hotspot_every);
+        // static configs serialize without workload keys
+        let text = ExperimentConfig::default().to_json().to_string();
+        assert!(!text.contains("workload"), "unexpected workload key: {text}");
+    }
+
+    #[test]
+    fn workload_rejections() {
+        // unknown workload name
+        assert!(ExperimentConfig::from_json_str(r#"{"workload": "batch"}"#).is_err());
+        // churn knobs without a workload
+        for knob in [
+            r#"{"arrival_rate": 2.0}"#,
+            r#"{"pareto_alpha": 3.0}"#,
+            r#"{"hotspot_every": 8}"#,
+        ] {
+            assert!(
+                ExperimentConfig::from_json_str(knob).is_err(),
+                "accepted churn knob without workload: {knob}"
+            );
+        }
+        // knob values outside the generator's domain
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"workload": "service-traffic", "pareto_alpha": 1.0}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"workload": "service-traffic", "arrival_rate": -1.0}"#
+        )
+        .is_err());
     }
 
     #[test]

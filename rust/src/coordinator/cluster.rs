@@ -34,6 +34,7 @@ use crate::bcm::{RoundStats, RunTrace, Schedule};
 use crate::load::{Load, LoadState};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Pcg64;
+use crate::workload::service_traffic::{id_high_water, ops_for_round, ChurnOp, TrafficConfig};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -764,6 +765,43 @@ impl Cluster {
         Ok(w)
     }
 
+    /// Ship one round's churn ops to the shards that own their target
+    /// nodes (`workload::service_traffic`).  Reply-free: the FIFO
+    /// control link orders each slice ahead of the next
+    /// [`run_round_seeded`](Self::run_round_seeded), so that round
+    /// balances the post-churn state on every shard.  Callers drive
+    /// churning runs round-by-round; this path does not participate in
+    /// checkpoint recovery.
+    pub fn apply_churn(&mut self, ops: &[ChurnOp]) -> Result<()> {
+        self.check_failed()?;
+        let result = self.apply_churn_inner(ops);
+        self.poison_on_err(result)
+    }
+
+    fn apply_churn_inner(&mut self, ops: &[ChurnOp]) -> Result<()> {
+        for s in self.live_shards() {
+            let range = self.map.range(s);
+            let slice: Vec<ChurnOp> = ops
+                .iter()
+                .filter(|op| range.contains(&(op.node() as usize)))
+                .copied()
+                .collect();
+            if slice.is_empty() {
+                continue;
+            }
+            let msg = Ctl::ApplyChurn {
+                job: self.epoch,
+                ops: slice,
+            };
+            if let Err(e) = self.transport.send_ctl(s, msg) {
+                let why = format!("control link closed during churn: {e}");
+                return Err(self.worker_error(s, why));
+            }
+            self.stats.ctl_sent += 1;
+        }
+        Ok(())
+    }
+
     fn recv_report(&mut self, what: &str, wait: Duration) -> Result<Report> {
         match self.transport.recv_report(wait) {
             Ok(r) => {
@@ -1017,6 +1055,16 @@ pub struct JobSpec {
     /// [`JobEvent::Recovering`] instead of [`JobEvent::Failed`], and the
     /// trace stays bit-identical to `bcm::Sequential`.
     pub checkpoint_every: usize,
+    /// When set, the job runs the dynamic `service_traffic` workload:
+    /// before each round the pool ships every shard its slice of the
+    /// round's churn-op stream ([`Ctl::ApplyChurn`]).  Churning jobs are
+    /// dispatched round-by-round (`batch` is forced to 1 — churn is a
+    /// round-boundary mutation) and their trace is bit-identical to
+    /// `bcm::Sequential::run_dynamic` under the same config and seed.
+    /// Recovery still works: the op stream is a pure function of
+    /// `(config, seed, round, n)`, so a replay from a checkpoint
+    /// regenerates exactly the ops the failed epoch applied.
+    pub churn: Option<TrafficConfig>,
 }
 
 /// Progress surfaced by [`ShardPool::step`], in job-lifecycle order:
@@ -1137,6 +1185,15 @@ struct PoolJob {
     /// on, so a failure before the first checkpoint replays from round
     /// 0.
     ckpts: VecDeque<(usize, Vec<Vec<Load>>)>,
+    /// Dynamic-workload config; `Some` makes every dispatch precede its
+    /// (single-round) batch with the round's churn ops.
+    churn: Option<TrafficConfig>,
+    /// One past the largest load id the job has ever hosted: the
+    /// carved-away initial `next_id` folded with every generated
+    /// arrival id.  Restored onto the reassembled final state so a
+    /// churning pool job's state is bit-identical to the engines',
+    /// which bump `next_id` even for arrivals that later depart.
+    next_id_hw: u64,
     /// Rounds already surfaced to the tenant as `JobEvent::Rounds` —
     /// the high-water mark that suppresses duplicate events while a
     /// recovery replays.
@@ -1270,8 +1327,10 @@ impl ShardPool {
             seed,
             batch,
             checkpoint_every,
+            churn,
         } = spec;
         let n = state.n();
+        let next_id_hw = state.next_id();
         if schedule.n() != n {
             return Err(anyhow!(
                 "job state has {n} nodes but its schedule covers {}",
@@ -1315,7 +1374,13 @@ impl ShardPool {
                 plans,
                 algo,
                 seed,
-                batch: resolve_batch_rounds(batch, n),
+                // churn mutates state at round boundaries, so churning
+                // jobs go round-by-round
+                batch: if churn.is_some() {
+                    1
+                } else {
+                    resolve_batch_rounds(batch, n)
+                },
                 total: sweeps * d,
                 next: 0,
                 trace: RunTrace {
@@ -1330,6 +1395,8 @@ impl ShardPool {
                 checkpoint_every,
                 wire: job,
                 ckpts,
+                churn,
+                next_id_hw,
                 emitted: 0,
                 recoveries: 0,
             },
@@ -1427,6 +1494,31 @@ impl ShardPool {
         let ckpt = job.checkpoint_every > 0
             && (start + b) - job.ckpts.back().map(|&(r, _)| r).unwrap_or(0)
                 >= job.checkpoint_every;
+        if let Some(cfg) = &job.churn {
+            // regenerated (not stored) so a recovery replay re-derives
+            // exactly the ops the failed epoch applied
+            debug_assert_eq!(b, 1, "churning jobs dispatch round-by-round");
+            let ops = ops_for_round(cfg, job.seed, start, job.map.n());
+            job.next_id_hw = job.next_id_hw.max(id_high_water(&ops));
+            for s in 0..m {
+                let range = job.map.range(s);
+                let slice: Vec<ChurnOp> = ops
+                    .iter()
+                    .filter(|op| range.contains(&(op.node() as usize)))
+                    .copied()
+                    .collect();
+                if slice.is_empty() {
+                    continue;
+                }
+                let msg = Ctl::ApplyChurn {
+                    job: job.wire,
+                    ops: slice,
+                };
+                self.transport
+                    .send_ctl(s, msg)
+                    .map_err(|e| anyhow!("control link to shard {s} closed: {e}"))?;
+            }
+        }
         for s in 0..m {
             let msg = Ctl::RunBatch {
                 job: job.wire,
@@ -1625,9 +1717,12 @@ impl ShardPool {
                 *pending -= 1;
                 if *pending == 0 {
                     let job = self.jobs.remove(&pid).expect("job vanished mid-close");
-                    let JobPhase::Closing { state, .. } = job.phase else {
+                    let JobPhase::Closing { mut state, .. } = job.phase else {
                         unreachable!("checked above");
                     };
+                    // reassembly only sees surviving loads; the engines
+                    // bump next_id for every arrival, departed or not
+                    state.reserve_ids(job.next_id_hw);
                     events.push(JobEvent::Finished {
                         job: pid,
                         trace: job.trace,

@@ -33,6 +33,7 @@
 
 use super::shard::RoundPlan;
 use crate::load::Load;
+use crate::workload::service_traffic::ChurnOp;
 use std::sync::Arc;
 
 /// Leader -> worker control messages.
@@ -91,6 +92,21 @@ pub enum Ctl {
     PollWeights {
         /// Job whose weights to report.
         job: u32,
+    },
+    /// Apply a churn-op slice to one job's node lists **before** the
+    /// next balancing round (`workload::service_traffic`).  The leader
+    /// slices the round's global op stream per shard and sends only each
+    /// shard's ops, on the same FIFO control link as the following
+    /// [`Ctl::RunBatch`] — ordering, not acknowledgement, is what makes
+    /// the round see the post-churn state, so no reply is sent.  Op
+    /// application is deterministic (`apply_ops_nodes` mirrors the
+    /// engine-side `apply_ops` bit-for-bit), preserving the cluster's
+    /// bit-identity with `bcm::Sequential` under churn.
+    ApplyChurn {
+        /// Job whose node lists to mutate.
+        job: u32,
+        /// This shard's slice of the round's op stream, in stream order.
+        ops: Vec<ChurnOp>,
     },
     /// Unconditionally retire a job with **no reply**: purge its state
     /// and stash, clear any failure already recorded against it, keep

@@ -29,6 +29,7 @@
 use crate::coordinator::messages::{Ctl, Report, RoundReport, ShardMsg};
 use crate::coordinator::shard::{RoundPlan, ShardPlan};
 use crate::load::Load;
+use crate::workload::service_traffic::ChurnOp;
 use std::fmt;
 use std::io::{Read, Write};
 use std::sync::Arc;
@@ -42,7 +43,9 @@ pub const FRAME_MAGIC: u32 = 0x574D_4342;
 /// The elastic extension (checkpoint / rejoin / remesh frames, kinds
 /// 15–17, and the widened `Hello`/`Init` handshake) stays within v2:
 /// the new frames and fields only ever travel between endpoints that
-/// both already speak them.
+/// both already speak them.  The churn frame (`ApplyChurn`, kind 18)
+/// follows the same rule: only a leader driving a dynamic workload
+/// emits it.
 pub const WIRE_VERSION: u16 = 2;
 
 /// Frame header size in bytes (magic + version + kind + reserved +
@@ -72,6 +75,14 @@ mod kind {
     pub const REPORT_CHECKPOINT: u8 = 15;
     pub const CTL_ABORT_JOB: u8 = 16;
     pub const CTL_REMESH: u8 = 17;
+    pub const CTL_APPLY_CHURN: u8 = 18;
+}
+
+/// Per-op tag bytes inside a [`kind::CTL_APPLY_CHURN`] payload.
+mod churn_tag {
+    pub const ARRIVE: u8 = 0;
+    pub const DEPART: u8 = 1;
+    pub const DRIFT: u8 = 2;
 }
 
 /// Everything that can travel over a cluster TCP link: the three
@@ -315,6 +326,32 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
         WireMsg::Ctl(Ctl::PollWeights { job }) => {
             put_u32(&mut b, *job);
             kind::CTL_POLL_WEIGHTS
+        }
+        WireMsg::Ctl(Ctl::ApplyChurn { job, ops }) => {
+            put_u32(&mut b, *job);
+            put_usize(&mut b, ops.len());
+            for op in ops {
+                match *op {
+                    ChurnOp::Arrive { node, id, weight } => {
+                        put_u8(&mut b, churn_tag::ARRIVE);
+                        put_u32(&mut b, node);
+                        put_u64(&mut b, id);
+                        put_f64(&mut b, weight);
+                    }
+                    ChurnOp::Depart { node, k } => {
+                        put_u8(&mut b, churn_tag::DEPART);
+                        put_u32(&mut b, node);
+                        put_u64(&mut b, k);
+                    }
+                    ChurnOp::Drift { node, k, factor } => {
+                        put_u8(&mut b, churn_tag::DRIFT);
+                        put_u32(&mut b, node);
+                        put_u64(&mut b, k);
+                        put_f64(&mut b, factor);
+                    }
+                }
+            }
+            kind::CTL_APPLY_CHURN
         }
         WireMsg::Ctl(Ctl::AbortJob { job }) => {
             put_u32(&mut b, *job);
@@ -657,6 +694,33 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
             })
         }
         kind::CTL_POLL_WEIGHTS => WireMsg::Ctl(Ctl::PollWeights { job: c.u32()? }),
+        kind::CTL_APPLY_CHURN => {
+            let job = c.u32()?;
+            // smallest op = tag(1) + node(4) + k(8)
+            let n = c.vec_len(13)?;
+            let mut ops = Vec::with_capacity(n);
+            for _ in 0..n {
+                let op = match c.u8()? {
+                    churn_tag::ARRIVE => ChurnOp::Arrive {
+                        node: c.u32()?,
+                        id: c.u64()?,
+                        weight: c.f64()?,
+                    },
+                    churn_tag::DEPART => ChurnOp::Depart {
+                        node: c.u32()?,
+                        k: c.u64()?,
+                    },
+                    churn_tag::DRIFT => ChurnOp::Drift {
+                        node: c.u32()?,
+                        k: c.u64()?,
+                        factor: c.f64()?,
+                    },
+                    _ => return Err(CodecError::Malformed("bad churn op tag")),
+                };
+                ops.push(op);
+            }
+            WireMsg::Ctl(Ctl::ApplyChurn { job, ops })
+        }
         kind::CTL_ABORT_JOB => WireMsg::Ctl(Ctl::AbortJob { job: c.u32()? }),
         kind::CTL_REMESH => WireMsg::Ctl(Ctl::Remesh {
             shard: c.usize()?,
@@ -910,6 +974,26 @@ mod tests {
             nodes: vec![vec![Load::new(1, 2.5)], vec![]],
         }));
         roundtrip(WireMsg::Ctl(Ctl::AbortJob { job: 12 }));
+        roundtrip(WireMsg::Ctl(Ctl::ApplyChurn { job: 7, ops: vec![] }));
+        roundtrip(WireMsg::Ctl(Ctl::ApplyChurn {
+            job: 7,
+            ops: vec![
+                ChurnOp::Arrive {
+                    node: 3,
+                    id: (9u64 << 40) | (3 << 16) | 2,
+                    weight: 1.625,
+                },
+                ChurnOp::Depart {
+                    node: 0,
+                    k: u64::MAX,
+                },
+                ChurnOp::Drift {
+                    node: 11,
+                    k: 42,
+                    factor: 0.875,
+                },
+            ],
+        }));
         roundtrip(WireMsg::Ctl(Ctl::Remesh {
             shard: 1,
             addr: "10.0.0.5:4512".into(),
@@ -1032,6 +1116,47 @@ mod tests {
         let crc = crc32(&bad[HEADER_LEN..]);
         bad[12..16].copy_from_slice(&crc.to_le_bytes());
         assert_eq!(decode_frame(&bad).unwrap_err(), CodecError::Trailing);
+    }
+
+    #[test]
+    fn bad_churn_tag_is_malformed() {
+        // an ApplyChurn op with an unknown tag byte is rejected; the
+        // per-op minimum (13 bytes) also bounds hostile op counts
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0); // job
+        put_usize(&mut payload, 1); // op count
+        put_u8(&mut payload, 9); // unknown tag
+        put_u32(&mut payload, 0); // node
+        put_u64(&mut payload, 0); // k
+        let mut frame = Vec::new();
+        put_u32(&mut frame, FRAME_MAGIC);
+        put_u16(&mut frame, WIRE_VERSION);
+        put_u8(&mut frame, kind::CTL_APPLY_CHURN);
+        put_u8(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(
+            decode_frame(&frame).unwrap_err(),
+            CodecError::Malformed("bad churn op tag")
+        );
+
+        // hostile op count claiming more ops than the frame carries
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0); // job
+        put_usize(&mut payload, u64::MAX as usize); // op count
+        let mut frame = Vec::new();
+        put_u32(&mut frame, FRAME_MAGIC);
+        put_u16(&mut frame, WIRE_VERSION);
+        put_u8(&mut frame, kind::CTL_APPLY_CHURN);
+        put_u8(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(
+            decode_frame(&frame).unwrap_err(),
+            CodecError::Malformed("length prefix overruns frame")
+        );
     }
 
     #[test]

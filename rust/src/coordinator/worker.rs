@@ -373,6 +373,23 @@ impl ShardWorker {
                         return Err(format!("report link lost: {e}"));
                     }
                 }
+                Ctl::ApplyChurn { job, ops } => {
+                    // reply-free by design: FIFO ordering on the control
+                    // link guarantees the next RunBatch sees the
+                    // post-churn lists
+                    let Some(js) = self.jobs.get_mut(&job) else {
+                        if !self.retired.contains(&job) {
+                            let why = format!("churn for unknown job {job}");
+                            self.job_failed(job, None, why);
+                        }
+                        continue;
+                    };
+                    crate::workload::service_traffic::apply_ops_nodes(
+                        &mut js.nodes,
+                        js.lo,
+                        &ops,
+                    );
+                }
                 Ctl::AbortJob { job } => {
                     // unconditional, reply-free retire: the leader is
                     // recovering this epoch and will reopen it under a

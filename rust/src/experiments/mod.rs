@@ -1,12 +1,15 @@
-//! Paper experiment drivers (E1–E8) plus the engine-scaling study (E11):
-//! shared by the CLI and the benches.
+//! Paper experiment drivers (E1–E8), the engine-scaling study (E11),
+//! and the dynamic service-traffic study (E14): shared by the CLI and
+//! the benches.
 
 pub mod common;
+pub mod dynamic;
 pub mod figures;
 pub mod scaling;
 pub mod validate;
 
 pub use common::{find, run_cell, run_sweep, CellStats, SweepParams, Variant};
+pub use dynamic::{run_dynamic_experiment, DynamicCell, DynamicReport, E14_CSV};
 pub use scaling::{
     large_scenarios, run_scaling, scaling_table, ScalingReport, ScalingScenario,
     ThreadMeasurement,

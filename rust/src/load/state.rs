@@ -528,6 +528,79 @@ impl LoadState {
         }
     }
 
+    /// The next id [`push`](Self::push) would consider fresh — the
+    /// high-water mark over every id this state has ever stored.
+    pub fn next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Raise the id high-water mark to at least `next` without storing a
+    /// load.  Used when a state is reassembled from surviving loads
+    /// (cluster shutdown) but the original run also *saw* ids that have
+    /// since departed: equality with the reference state requires the
+    /// same high-water mark, not just the same survivors.
+    pub fn reserve_ids(&mut self, next: u64) {
+        self.next_id = self.next_id.max(next);
+    }
+
+    /// Remove the `k % mobile-count`-th mobile load of node v (by
+    /// occurrence order), preserving the relative order of everything
+    /// else — the churn `Depart` op.  No-op returning `None` when the
+    /// node has no mobile load.  The cached total is re-folded so it
+    /// stays bitwise equal to a fresh in-order fold.
+    pub fn remove_mobile_mod(&mut self, v: usize, k: u64) -> Option<Load> {
+        let seg = self.segs[v];
+        let mobiles = (0..seg.len).filter(|&i| self.bit(seg.start + i)).count();
+        if mobiles == 0 {
+            return None;
+        }
+        let target = (k % mobiles as u64) as usize;
+        let mut seen = 0usize;
+        let mut at = usize::MAX;
+        for i in 0..seg.len {
+            if self.bit(seg.start + i) {
+                if seen == target {
+                    at = i;
+                    break;
+                }
+                seen += 1;
+            }
+        }
+        debug_assert_ne!(at, usize::MAX);
+        let s = seg.start + at;
+        let out = Load {
+            id: self.ids[s],
+            weight: self.weights[s],
+            mobile: true,
+        };
+        for i in at + 1..seg.len {
+            let s = seg.start + i;
+            self.ids[s - 1] = self.ids[s];
+            self.weights[s - 1] = self.weights[s];
+            let b = self.bit(s);
+            self.set_bit(s - 1, b);
+        }
+        self.segs[v].len -= 1;
+        self.refold_total(v);
+        Some(out)
+    }
+
+    /// Scale the weight of the `k % len`-th load of node v by `factor`
+    /// in place — the churn `Drift` op.  No-op returning `false` when
+    /// the node is empty.  Multiplication is a single IEEE-754 rounding,
+    /// so the result is bitwise deterministic; the cached total is
+    /// re-folded afterwards.
+    pub fn scale_load_mod(&mut self, v: usize, k: u64, factor: f64) -> bool {
+        let seg = self.segs[v];
+        if seg.len == 0 {
+            return false;
+        }
+        let s = seg.start + (k % seg.len as u64) as usize;
+        self.weights[s] *= factor;
+        self.refold_total(v);
+        true
+    }
+
     /// Sorted ids across the whole network (conservation checks).
     pub fn all_ids(&self) -> Vec<u64> {
         let mut ids: Vec<u64> = Vec::with_capacity(self.total_loads());

@@ -10,7 +10,7 @@ use bcm_dlb::config::ExperimentConfig;
 use bcm_dlb::coordinator::transport::tcp::{self, LeaderListener, DEFAULT_CONNECT_RETRIES};
 use bcm_dlb::coordinator::transport::TransportKind;
 use bcm_dlb::coordinator::Cluster;
-use bcm_dlb::experiments::{figures, scaling, validate, SweepParams};
+use bcm_dlb::experiments::{figures, run_dynamic_experiment, scaling, validate, SweepParams, E14_CSV};
 use bcm_dlb::graph::{round_matrix, spectral, Topology};
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
 use bcm_dlb::runtime::{default_artifacts_dir, DeviceAlgo, Runtime};
@@ -21,7 +21,10 @@ use bcm_dlb::util::json::Json;
 use bcm_dlb::util::rng::Pcg64;
 use bcm_dlb::util::stats::Welford;
 use bcm_dlb::util::table::{f, Table};
-use bcm_dlb::workload::{run_driver, DlbPolicy, ParticleSim};
+use bcm_dlb::workload::{
+    run_driver, run_dynamic_cluster, run_dynamic_engine, sustained_stats, DlbPolicy, ParticleSim,
+    TrafficConfig,
+};
 use std::path::Path;
 
 fn main() {
@@ -118,6 +121,26 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.rejoin_wait_ms = args
         .get_u64("rejoin-wait", cfg.rejoin_wait_ms)
         .map_err(|e| anyhow!(e))?;
+    if let Some(w) = args.get("workload") {
+        if w != bcm_dlb::config::WORKLOAD_SERVICE_TRAFFIC {
+            return Err(anyhow!(
+                "bad --workload '{w}' (expected '{}')",
+                bcm_dlb::config::WORKLOAD_SERVICE_TRAFFIC
+            ));
+        }
+        cfg.workload = Some(w.to_string());
+    }
+    if let Some(r) = args.get_f64("arrival-rate").map_err(|e| anyhow!(e))? {
+        cfg.arrival_rate = Some(r);
+    }
+    if let Some(a) = args.get_f64("pareto-alpha").map_err(|e| anyhow!(e))? {
+        cfg.pareto_alpha = Some(a);
+    }
+    if args.get("hotspot-every").is_some() {
+        cfg.hotspot_every = Some(args.get_usize("hotspot-every", 0).map_err(|e| anyhow!(e))?);
+    }
+    // flags may have added churn knobs to a workload-less file config
+    cfg.validate_workload()?;
     Ok(cfg)
 }
 
@@ -197,6 +220,9 @@ fn cmd_cluster_worker(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
+    if let Some(tcfg) = cfg.traffic() {
+        return cmd_run_dynamic(args, &cfg, &tcfg);
+    }
     println!("config: {}", cfg.to_json());
     let mut init_d = Welford::new();
     let mut final_d = Welford::new();
@@ -363,6 +389,161 @@ fn cmd_run(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// The dynamic branch of `bcm-dlb run`: `--workload service-traffic`
+/// churns the load set between balancing rounds (seeded arrivals with
+/// Pareto costs, departures, cost drift) and reports *sustained*
+/// discrepancy over the trailing half of the run plus cumulative
+/// migration traffic, then appends the full E14 protocol comparison
+/// (results/e14_service_traffic.csv).
+fn cmd_run_dynamic(args: &Args, cfg: &ExperimentConfig, tcfg: &TrafficConfig) -> Result<()> {
+    println!("config: {}", cfg.to_json());
+    if cfg.use_device {
+        return Err(anyhow!(
+            "--workload service-traffic runs on the host engines (drop --device)"
+        ));
+    }
+    if cfg.transport == TransportKind::Tcp {
+        return Err(anyhow!(
+            "--workload service-traffic supports the local cluster transport only"
+        ));
+    }
+    let use_cluster = args.has("cluster");
+    if cfg.threads != 1 && use_cluster {
+        eprintln!(
+            "warning: --threads {} is ignored on the --cluster path (use --shards)",
+            cfg.threads
+        );
+    }
+    let mut mean_d = Welford::new();
+    let mut p99_d = Welford::new();
+    let mut max_d = Welford::new();
+    let mut moves = Welford::new();
+    let mut e14_shape = (0usize, 0usize); // (rounds, window) of rep 0
+    for rep in 0..cfg.reps {
+        let seed = cfg.seed.wrapping_add(rep as u64);
+        let mut rng = Pcg64::new(seed);
+        let g = cfg.topology.build(cfg.n, &mut rng);
+        let schedule = Schedule::from_graph(&g);
+        let state0 = LoadState::init_uniform_counts(
+            cfg.n,
+            cfg.loads_per_node,
+            &cfg.distribution,
+            cfg.mobility,
+            &mut rng,
+        );
+        let rounds = (cfg.sweeps * schedule.period()).max(1);
+        // the leading half of the run is the transient away from the
+        // static initial state; sustained metrics fold the trailing half
+        let window = (rounds / 2).max(1);
+        if rep == 0 {
+            e14_shape = (rounds, window);
+        }
+        let (trace, final_state) = if use_cluster {
+            run_dynamic_cluster(
+                state0.clone(),
+                &schedule,
+                cfg.algorithm,
+                tcfg,
+                rounds,
+                seed,
+                cfg.shards,
+            )?
+        } else {
+            let engine: Box<dyn Engine> = if cfg.threads == 1 {
+                Box::new(Sequential)
+            } else {
+                Box::new(Parallel::new(cfg.threads))
+            };
+            let mut state = state0.clone();
+            let trace = run_dynamic_engine(
+                engine.as_ref(),
+                &mut state,
+                &schedule,
+                cfg.algorithm,
+                tcfg,
+                rounds,
+                seed,
+            );
+            (trace, state)
+        };
+        if args.has("verify") {
+            let mut seq_state = state0.clone();
+            let seq_trace = run_dynamic_engine(
+                &Sequential,
+                &mut seq_state,
+                &schedule,
+                cfg.algorithm,
+                tcfg,
+                rounds,
+                seed,
+            );
+            if seq_trace != trace || seq_state != final_state {
+                return Err(anyhow!("churning run diverged from the sequential reference"));
+            }
+            println!("verified: churning trace and final state bit-identical to Sequential");
+        }
+        let s = sustained_stats(&trace, window);
+        mean_d.push(s.mean);
+        p99_d.push(s.p99);
+        max_d.push(s.max);
+        moves.push(s.movements as f64);
+        if rep == 0 {
+            if let Some(path) = args.get("trace-out") {
+                let mut t = Table::new(
+                    "per-round trace",
+                    &["round", "color", "discrepancy", "movements", "edges"],
+                );
+                for r in &trace.rounds {
+                    t.row(vec![
+                        r.round.to_string(),
+                        r.color.to_string(),
+                        f(r.discrepancy, 4),
+                        r.movements.to_string(),
+                        r.edges.to_string(),
+                    ]);
+                }
+                t.write_csv(Path::new(path))?;
+                println!("trace written to {path}");
+            }
+        }
+    }
+    let mut t = Table::new(
+        "sustained run summary (trailing-window)",
+        &["metric", "mean", "std", "min", "max"],
+    );
+    for (name, w) in [
+        ("sustained mean discrepancy", &mean_d),
+        ("sustained p99 discrepancy", &p99_d),
+        ("sustained max discrepancy", &max_d),
+        ("total movements", &moves),
+    ] {
+        t.row(vec![
+            name.into(),
+            f(w.mean(), 3),
+            f(w.std(), 3),
+            f(w.min(), 3),
+            f(w.max(), 3),
+        ]);
+    }
+    println!("{}", t.render());
+    // the E14 protocol comparison on the rep-0 scenario: BCM sorted /
+    // BCM greedy / diffusion under the identical churn stream
+    let (rounds, window) = e14_shape;
+    let report = run_dynamic_experiment(
+        &cfg.topology,
+        cfg.n,
+        cfg.loads_per_node,
+        rounds,
+        window,
+        cfg.seed,
+        tcfg,
+    );
+    println!("{}", report.table.render());
+    report.table.write_csv(Path::new(E14_CSV))?;
+    println!("E14 table written to {E14_CSV}");
     Ok(())
 }
 

@@ -46,6 +46,7 @@ use crate::load::LoadState;
 use crate::util::error::Result;
 use crate::util::json::{Json, LineEmitter};
 use crate::util::rng::Pcg64;
+use crate::workload::service_traffic::{run_dynamic_engine, TrafficConfig};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener};
@@ -89,6 +90,9 @@ struct VerifySrc {
     algo: PairAlgorithm,
     sweeps: usize,
     seed: u64,
+    /// Set for churning specs: the reference re-run applies the same
+    /// generated churn stream (`run_dynamic` instead of `run`).
+    churn: Option<TrafficConfig>,
 }
 
 /// A parsed spec waiting for a job slot.
@@ -350,13 +354,24 @@ impl Server {
                     None => false,
                     Some(src) => {
                         let mut seq_state = src.state;
-                        let seq_trace = Sequential.run(
-                            &mut seq_state,
-                            &src.schedule,
-                            src.algo,
-                            StopRule::sweeps(src.sweeps),
-                            src.seed,
-                        );
+                        let seq_trace = match &src.churn {
+                            None => Sequential.run(
+                                &mut seq_state,
+                                &src.schedule,
+                                src.algo,
+                                StopRule::sweeps(src.sweeps),
+                                src.seed,
+                            ),
+                            Some(cfg) => run_dynamic_engine(
+                                &Sequential,
+                                &mut seq_state,
+                                &src.schedule,
+                                src.algo,
+                                cfg,
+                                src.sweeps * src.schedule.period(),
+                                src.seed,
+                            ),
+                        };
                         if seq_trace != trace || seq_state != state {
                             if let Some(token) = token {
                                 self.fail_conn(
@@ -503,6 +518,7 @@ fn build_job(line: &str, parsed: &Json) -> Result<QueuedJob> {
         algo: cfg.algorithm,
         sweeps: cfg.sweeps,
         seed: cfg.seed,
+        churn: cfg.traffic(),
     });
     Ok(QueuedJob {
         spec: JobSpec {
@@ -513,6 +529,7 @@ fn build_job(line: &str, parsed: &Json) -> Result<QueuedJob> {
             seed: cfg.seed,
             batch: cfg.batch_rounds,
             checkpoint_every: cfg.checkpoint_every,
+            churn: cfg.traffic(),
         },
         verify,
     })

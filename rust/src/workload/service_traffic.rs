@@ -1,0 +1,688 @@
+//! `service_traffic`: a seeded dynamic workload simulating a service
+//! fleet under live traffic — the paper's premise of loads "that vary
+//! over time in an unpredictable way" made concrete (and the regime
+//! analyzed by Berenbrink et al., arXiv 2302.12201: loads arrive over
+//! time and the interesting metric is the *sustained* discrepancy, not
+//! the final one).
+//!
+//! Between balancing rounds the generator emits a [`ChurnOp`] stream:
+//!
+//! * **Arrivals** — per-node Poisson arrivals of new tasks whose costs
+//!   are heavy-tailed (Pareto, the classic request-cost model), with a
+//!   diurnal sinusoidal wave modulating the global rate and periodic
+//!   **hotspot bursts** multiplying the rate on an index-contiguous
+//!   node neighborhood (a viral shard, a tenant stampede).
+//! * **Departures** — tasks complete and leave; only mobile loads
+//!   depart (a pinned load models resident work that never finishes).
+//! * **Cost drift** — a resident task's cost is rescaled by a
+//!   multiplicative factor (cache warming, growing state).  Drift may
+//!   touch pinned loads too: immobility forbids *migration*, not cost
+//!   change.
+//!
+//! # Determinism contract
+//!
+//! The stream is a **pure function of `(config, seed, round, node)`**:
+//! node `v`'s ops for round `t` are drawn from the counter-based
+//! substream `Pcg64::keyed(&[seed, TRAFFIC_STREAM, t, v])`, never from
+//! engine state, thread count, or shard count.  Every executor —
+//! `bcm::Sequential`, `bcm::Parallel` at any thread count, the sharded
+//! `Cluster`/`ShardPool` at any shard count — therefore applies the
+//! bit-identical op sequence at the same round boundary, and because
+//! the op *application* below is also deterministic (single IEEE
+//! multiply for drift, order-preserving removal for departures), a
+//! churning run keeps the repo's bit-identity contract: same trace,
+//! same final `LoadState`, everywhere.  `tests/workload_churn.rs` pins
+//! this.
+//!
+//! Departure/drift victims are addressed by a **modular index** (`k mod
+//! mobile-count` / `k mod node-len`) rather than a load id: the
+//! interpretation depends on the node's current contents, which is safe
+//! precisely because all executors hold bit-identical state at every
+//! round boundary — and it keeps an op O(1) words on the wire.
+
+use crate::balancer::PairAlgorithm;
+use crate::bcm::{Engine, RunTrace, Schedule};
+use crate::coordinator::Cluster;
+use crate::load::{Load, LoadState};
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+/// Substream tag separating traffic draws from every other consumer of
+/// the run seed (the per-edge balancing streams use `Pcg64::for_edge`).
+const TRAFFIC_STREAM: u64 = 0x5345_5256_4943_45; // "SERVICE"
+
+/// Substream tag for the per-burst hotspot placement draw.
+const HOTSPOT_STREAM: u64 = 0x484f_5453_504f_54; // "HOTSPOT"
+
+/// Arrival ids pack `(round, node, seq)` into disjoint bit ranges so
+/// ids are unique across the whole run and never collide with the
+/// dense small ids of an initial state: `((round+1) << ROUND_SHIFT)`
+/// clears everything below 2^40.
+const ID_ROUND_SHIFT: u32 = 40;
+const ID_NODE_SHIFT: u32 = 16;
+
+/// One churn event, applied to the load state between rounds.
+///
+/// Ops travel the cluster wire inside [`Ctl::ApplyChurn`]
+/// (`coordinator::messages`), so the variants stay O(1) words each.
+///
+/// [`Ctl::ApplyChurn`]: crate::coordinator::messages::Ctl::ApplyChurn
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnOp {
+    /// A new mobile task of weight `weight` arrives on `node`.
+    Arrive {
+        /// Hosting node (global index).
+        node: u32,
+        /// Globally unique task id (see [`arrival_id`]).
+        id: u64,
+        /// Task cost, Pareto-distributed.
+        weight: f64,
+    },
+    /// The `(k mod mobile-count)`-th mobile load of `node` departs
+    /// (node order, counting mobiles only); a no-op when the node has
+    /// no mobile load.  Pinned loads never depart.
+    Depart {
+        /// Hosting node (global index).
+        node: u32,
+        /// Raw victim selector, reduced modulo the mobile count.
+        k: u64,
+    },
+    /// The `(k mod len)`-th load of `node` (mobile *or* pinned — drift
+    /// is cost change, not migration) has its weight multiplied by
+    /// `factor`; a no-op on an empty node.  A single IEEE
+    /// multiplication, so the result is bitwise deterministic.
+    Drift {
+        /// Hosting node (global index).
+        node: u32,
+        /// Raw victim selector, reduced modulo the node's load count.
+        k: u64,
+        /// Multiplicative cost factor (around 1.0).
+        factor: f64,
+    },
+}
+
+impl ChurnOp {
+    /// The global node index the op targets — what the cluster leader
+    /// slices per-shard op batches by.
+    pub fn node(&self) -> u32 {
+        match *self {
+            ChurnOp::Arrive { node, .. }
+            | ChurnOp::Depart { node, .. }
+            | ChurnOp::Drift { node, .. } => node,
+        }
+    }
+}
+
+/// Knobs of the service-traffic generator.  `Default` models a busy but
+/// stable fleet; the CLI exposes `arrival_rate`, `pareto_alpha` and
+/// `hotspot_every` (`--workload service-traffic`), the rest are fixed
+/// scenario shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficConfig {
+    /// Mean arrivals per node per round at the diurnal baseline.
+    pub arrival_rate: f64,
+    /// Pareto tail index of request costs (smaller = heavier tail;
+    /// must be > 1 for a finite mean).
+    pub pareto_alpha: f64,
+    /// Pareto scale (minimum request cost).
+    pub pareto_scale: f64,
+    /// Rounds per diurnal cycle (0 disables the wave).
+    pub diurnal_period: usize,
+    /// Relative amplitude of the diurnal wave in [0, 1): the rate
+    /// swings between `(1 - a)` and `(1 + a)` times the baseline.
+    pub diurnal_amplitude: f64,
+    /// A hotspot burst starts every this many rounds (0 = no bursts).
+    pub hotspot_every: usize,
+    /// Rounds a burst lasts (clamped to `hotspot_every`).
+    pub hotspot_rounds: usize,
+    /// Nodes in the burst's index-contiguous neighborhood (wraps).
+    pub hotspot_width: usize,
+    /// Arrival-rate multiplier inside a burst neighborhood.
+    pub hotspot_boost: f64,
+    /// Mean departures per node per round (follows the diurnal wave).
+    pub depart_rate: f64,
+    /// Mean cost-drift events per node per round.
+    pub drift_rate: f64,
+    /// Drift magnitude: factors are uniform in `[1 - m, 1 + m]`.
+    pub drift_mag: f64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            arrival_rate: 1.0,
+            pareto_alpha: 2.5,
+            pareto_scale: 1.0,
+            diurnal_period: 64,
+            diurnal_amplitude: 0.5,
+            hotspot_every: 32,
+            hotspot_rounds: 4,
+            hotspot_width: 4,
+            hotspot_boost: 8.0,
+            depart_rate: 0.9,
+            drift_rate: 0.25,
+            drift_mag: 0.2,
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// Validate the knob ranges; the config layer surfaces the message
+    /// to the user.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !(self.arrival_rate.is_finite() && self.arrival_rate >= 0.0) {
+            return Err(format!("arrival_rate must be >= 0, got {}", self.arrival_rate));
+        }
+        if !(self.pareto_alpha.is_finite() && self.pareto_alpha > 1.0) {
+            return Err(format!(
+                "pareto_alpha must be > 1 (finite mean), got {}",
+                self.pareto_alpha
+            ));
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amplitude) {
+            return Err(format!(
+                "diurnal_amplitude must be in [0, 1), got {}",
+                self.diurnal_amplitude
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The globally unique id of the `seq`-th arrival on `node` in `round`:
+/// disjoint bit ranges make collisions impossible (for `node < 2^24`
+/// and `seq < 2^16`, both enforced) and the `round + 1` offset keeps
+/// every arrival id above any plausible initial id.
+pub fn arrival_id(round: usize, node: u32, seq: u32) -> u64 {
+    debug_assert!(node < 1 << (ID_ROUND_SHIFT - ID_NODE_SHIFT));
+    debug_assert!(seq < 1 << ID_NODE_SHIFT);
+    ((round as u64 + 1) << ID_ROUND_SHIFT) | (u64::from(node) << ID_NODE_SHIFT) | u64::from(seq)
+}
+
+/// Knuth's product-of-uniforms Poisson sampler.  λ is clamped to 32 so
+/// a mis-tuned hotspot boost cannot spin the loop (and `exp(-32)` is
+/// still comfortably above f64 underflow).  Consumes a data-dependent
+/// number of draws — safe, because each `(round, node)` has its own
+/// keyed substream.
+fn poisson(rng: &mut Pcg64, lambda: f64) -> u32 {
+    let lambda = lambda.clamp(0.0, 32.0);
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let floor = (-lambda).exp();
+    let mut k = 0u32;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.next_f64();
+        if p <= floor {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// The diurnal modulation factor of round `t`: `1 + a·sin(2πt/T)`.
+fn diurnal(cfg: &TrafficConfig, round: usize) -> f64 {
+    if cfg.diurnal_period == 0 || cfg.diurnal_amplitude == 0.0 {
+        return 1.0;
+    }
+    let phase = 2.0 * std::f64::consts::PI * (round as f64) / (cfg.diurnal_period as f64);
+    1.0 + cfg.diurnal_amplitude * phase.sin()
+}
+
+/// The hotspot neighborhood active in `round`, if any: `(start, width)`
+/// of an index-contiguous (wrapping) node span.  The span's placement
+/// is drawn from a per-burst keyed substream, so it is independent of
+/// the per-node traffic draws.
+fn hotspot_span(cfg: &TrafficConfig, seed: u64, round: usize, n: usize) -> Option<(usize, usize)> {
+    if cfg.hotspot_every == 0 || cfg.hotspot_width == 0 || n == 0 {
+        return None;
+    }
+    let burst = round / cfg.hotspot_every;
+    let phase = round % cfg.hotspot_every;
+    if phase >= cfg.hotspot_rounds.clamp(1, cfg.hotspot_every) {
+        return None;
+    }
+    let mut rng = Pcg64::keyed(&[seed, HOTSPOT_STREAM, burst as u64]);
+    let start = rng.below(n);
+    Some((start, cfg.hotspot_width.min(n)))
+}
+
+/// Is node `v` inside the wrapping span `(start, width)` of an
+/// `n`-node index space?
+fn in_span(v: usize, start: usize, width: usize, n: usize) -> bool {
+    (v + n - start) % n < width
+}
+
+/// Generate the churn ops applied **before** round `round` of a run
+/// keyed by `seed`, over an `n`-node network.  Pure function of its
+/// arguments — see the module docs for the determinism contract.  Ops
+/// are emitted in node order, arrivals before departures before drift
+/// per node; executors must apply them in stream order.
+pub fn ops_for_round(
+    cfg: &TrafficConfig,
+    seed: u64,
+    round: usize,
+    n: usize,
+) -> Vec<ChurnOp> {
+    let mut ops = Vec::new();
+    let wave = diurnal(cfg, round);
+    let hot = hotspot_span(cfg, seed, round, n);
+    for v in 0..n {
+        let mut rng = Pcg64::keyed(&[seed, TRAFFIC_STREAM, round as u64, v as u64]);
+        let boost = match hot {
+            Some((start, width)) if in_span(v, start, width, n) => cfg.hotspot_boost,
+            _ => 1.0,
+        };
+        let arrivals = poisson(&mut rng, cfg.arrival_rate * wave * boost);
+        for seq in 0..arrivals {
+            let weight = rng.pareto(cfg.pareto_scale, cfg.pareto_alpha);
+            ops.push(ChurnOp::Arrive {
+                node: v as u32,
+                id: arrival_id(round, v as u32, seq),
+                weight,
+            });
+        }
+        let departures = poisson(&mut rng, cfg.depart_rate * wave);
+        for _ in 0..departures {
+            ops.push(ChurnOp::Depart {
+                node: v as u32,
+                k: rng.next_u64(),
+            });
+        }
+        let drifts = poisson(&mut rng, cfg.drift_rate);
+        for _ in 0..drifts {
+            let factor = rng.uniform(1.0 - cfg.drift_mag, 1.0 + cfg.drift_mag);
+            ops.push(ChurnOp::Drift {
+                node: v as u32,
+                k: rng.next_u64(),
+                factor,
+            });
+        }
+    }
+    ops
+}
+
+/// Apply an op stream to an arena `LoadState`, in stream order.  This
+/// is the engine-side executor; [`apply_ops_nodes`] is its bit-exact
+/// twin on the workers' plain per-node load lists.
+pub fn apply_ops(state: &mut LoadState, ops: &[ChurnOp]) {
+    for &op in ops {
+        match op {
+            ChurnOp::Arrive { node, id, weight } => {
+                state.push(node as usize, Load::new(id, weight));
+            }
+            ChurnOp::Depart { node, k } => {
+                state.remove_mobile_mod(node as usize, k);
+            }
+            ChurnOp::Drift { node, k, factor } => {
+                state.scale_load_mod(node as usize, k, factor);
+            }
+        }
+    }
+}
+
+/// Apply an op stream to a worker's node slice (`nodes[i]` holds global
+/// node `lo + i`), bit-identically to [`apply_ops`]: same victim
+/// selection (node-order modular indexing), same order-preserving
+/// removal, same single-multiply drift.  Ops for nodes outside the
+/// slice are the leader's bug; `debug_assert`ed.
+pub fn apply_ops_nodes(nodes: &mut [Vec<Load>], lo: usize, ops: &[ChurnOp]) {
+    for &op in ops {
+        let v = op.node() as usize;
+        debug_assert!(v >= lo && v - lo < nodes.len(), "churn op outside shard slice");
+        let node = &mut nodes[v - lo];
+        match op {
+            ChurnOp::Arrive { id, weight, .. } => node.push(Load::new(id, weight)),
+            ChurnOp::Depart { k, .. } => {
+                let mobiles = node.iter().filter(|l| l.mobile).count();
+                if mobiles == 0 {
+                    continue;
+                }
+                let target = (k % mobiles as u64) as usize;
+                let at = node
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.mobile)
+                    .nth(target)
+                    .map(|(i, _)| i)
+                    .expect("target < mobile count");
+                node.remove(at);
+            }
+            ChurnOp::Drift { k, factor, .. } => {
+                if node.is_empty() {
+                    continue;
+                }
+                let at = (k % node.len() as u64) as usize;
+                node[at].weight *= factor;
+            }
+        }
+    }
+}
+
+/// The id high-water mark of an op stream: one past the largest arrival
+/// id (0 when the stream has none).  Engines bump `LoadState::next_id`
+/// automatically on every push, including arrivals that later depart;
+/// a cluster reassembles its final state from *surviving* loads only,
+/// so the driver folds this mark over every round's ops and calls
+/// [`LoadState::reserve_ids`] to restore the bit-identical `next_id`.
+pub fn id_high_water(ops: &[ChurnOp]) -> u64 {
+    ops.iter()
+        .map(|op| match *op {
+            ChurnOp::Arrive { id, .. } => id + 1,
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Drive a churning run on an in-process engine: before each round the
+/// generator's ops for that round are applied, then the round balances
+/// as usual.  `trace.initial_discrepancy` reflects the pre-churn state.
+/// Any [`Engine`] yields the bit-identical trace and final state.
+pub fn run_dynamic_engine(
+    engine: &dyn Engine,
+    state: &mut LoadState,
+    schedule: &Schedule,
+    algo: PairAlgorithm,
+    cfg: &TrafficConfig,
+    rounds: usize,
+    seed: u64,
+) -> RunTrace {
+    let n = state.n();
+    let cfg = cfg.clone();
+    let mut churn = move |state: &mut LoadState, round: usize| {
+        let ops = ops_for_round(&cfg, seed, round, n);
+        apply_ops(state, &ops);
+    };
+    engine.run_dynamic(state, schedule, algo, rounds, seed, &mut churn)
+}
+
+/// Drive a churning run on a sharded [`Cluster`]: per round, the
+/// leader ships each shard its slice of the op stream
+/// (`Ctl::ApplyChurn`, FIFO-ordered ahead of the round's `RunBatch`)
+/// and executes the round; the final state's `next_id` is restored via
+/// [`id_high_water`].  Bit-identical to [`run_dynamic_engine`] with
+/// `bcm::Sequential` for every shard count — the property
+/// `tests/workload_churn.rs` pins.
+///
+/// Churning cluster runs are dispatched round-by-round (churn is a
+/// round-boundary mutation, so batching rounds under one control
+/// message cannot apply) and without checkpoint recovery — a worker
+/// failure fails the run.
+pub fn run_dynamic_cluster(
+    state: LoadState,
+    schedule: &Schedule,
+    algo: PairAlgorithm,
+    cfg: &TrafficConfig,
+    rounds: usize,
+    seed: u64,
+    shards: usize,
+) -> Result<(RunTrace, LoadState)> {
+    let n = state.n();
+    let mut hw = state.next_id();
+    let mut cluster = Cluster::spawn_with_algorithm(state, algo, shards);
+    let mut trace = RunTrace {
+        initial_discrepancy: cluster.poll_discrepancy()?,
+        rounds: Vec::with_capacity(rounds),
+    };
+    for round in 0..rounds {
+        let ops = ops_for_round(cfg, seed, round, n);
+        hw = hw.max(id_high_water(&ops));
+        cluster.apply_churn(&ops)?;
+        trace.rounds.push(cluster.run_round_seeded(schedule, round, seed)?);
+    }
+    let mut fin = cluster.shutdown()?;
+    fin.reserve_ids(hw);
+    Ok((trace, fin))
+}
+
+/// Sustained-discrepancy summary of a churning run (the E14 metrics):
+/// under open arrivals the discrepancy never converges, so the figure
+/// of merit is where it *settles* — mean, p99 and max over the trailing
+/// window — plus what keeping it there cost in migration traffic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SustainedStats {
+    /// Rounds actually covered by the window (≤ the requested window).
+    pub window: usize,
+    /// Mean discrepancy over the window.
+    pub mean: f64,
+    /// 99th-percentile discrepancy over the window (nearest-rank).
+    pub p99: f64,
+    /// Maximum discrepancy over the window.
+    pub max: f64,
+    /// Loads migrated across the **whole** run.
+    pub movements: usize,
+    /// Cumulative migration traffic across the whole run, counting each
+    /// moved load at its wire size (17 payload bytes: id + weight +
+    /// mobility, see the codec).
+    pub migration_bytes: u64,
+}
+
+/// Bytes one load occupies in a wire frame's payload (`put_load`).
+pub const LOAD_WIRE_BYTES: u64 = 17;
+
+/// Fold a trace into its [`SustainedStats`] over the trailing `window`
+/// rounds (clamped to the trace length; `window = 0` means the whole
+/// trace).
+pub fn sustained_stats(trace: &RunTrace, window: usize) -> SustainedStats {
+    let len = trace.rounds.len();
+    let w = if window == 0 { len } else { window.min(len) };
+    let tail = &trace.rounds[len - w..];
+    let mut discs: Vec<f64> = tail.iter().map(|r| r.discrepancy).collect();
+    discs.sort_by(f64::total_cmp);
+    let mean = if w == 0 {
+        0.0
+    } else {
+        discs.iter().sum::<f64>() / w as f64
+    };
+    // nearest-rank p99: the smallest value with at least 99% of the
+    // window at or below it
+    let p99 = if w == 0 {
+        0.0
+    } else {
+        let rank = ((w as f64) * 0.99).ceil() as usize;
+        discs[rank.clamp(1, w) - 1]
+    };
+    let max = discs.last().copied().unwrap_or(0.0);
+    let movements = trace.total_movements();
+    SustainedStats {
+        window: w,
+        mean,
+        p99,
+        max,
+        movements,
+        migration_bytes: movements as u64 * LOAD_WIRE_BYTES,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bcm::RoundStats;
+
+    fn cfg() -> TrafficConfig {
+        TrafficConfig::default()
+    }
+
+    #[test]
+    fn same_seed_same_stream_bitwise() {
+        for round in [0usize, 1, 31, 32, 63, 100] {
+            let a = ops_for_round(&cfg(), 42, round, 24);
+            let b = ops_for_round(&cfg(), 42, round, 24);
+            assert_eq!(a, b, "stream not reproducible at round {round}");
+            // PartialEq on f64 can equate distinct bit patterns through
+            // signed zeros; pin the exact bits too
+            for (x, y) in a.iter().zip(b.iter()) {
+                if let (
+                    ChurnOp::Arrive { weight: wa, .. },
+                    ChurnOp::Arrive { weight: wb, .. },
+                ) = (x, y)
+                {
+                    assert_eq!(wa.to_bits(), wb.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a: Vec<_> = (0..8).flat_map(|r| ops_for_round(&cfg(), 1, r, 24)).collect();
+        let b: Vec<_> = (0..8).flat_map(|r| ops_for_round(&cfg(), 2, r, 24)).collect();
+        assert!(!a.is_empty());
+        assert_ne!(a, b, "different seeds produced the same stream");
+    }
+
+    #[test]
+    fn arrival_ids_unique_across_rounds_and_nodes() {
+        let mut seen = std::collections::BTreeSet::new();
+        for round in 0..50 {
+            for op in ops_for_round(&cfg(), 7, round, 16) {
+                if let ChurnOp::Arrive { id, .. } = op {
+                    assert!(seen.insert(id), "duplicate arrival id {id}");
+                    assert!(id >= 1 << ID_ROUND_SHIFT, "arrival id {id} collides with small ids");
+                }
+            }
+        }
+        assert!(seen.len() > 100, "workload produced too few arrivals to test");
+    }
+
+    #[test]
+    fn poisson_sampler_tracks_its_mean() {
+        let mut rng = Pcg64::new(9);
+        for lambda in [0.5f64, 2.0, 8.0] {
+            let reps = 4000;
+            let total: u64 = (0..reps).map(|_| u64::from(poisson(&mut rng, lambda))).sum();
+            let mean = total as f64 / reps as f64;
+            assert!(
+                (mean - lambda).abs() < 0.2 * lambda + 0.1,
+                "poisson({lambda}) sample mean {mean}"
+            );
+        }
+        assert_eq!(poisson(&mut rng, 0.0), 0);
+        assert_eq!(poisson(&mut rng, -3.0), 0);
+    }
+
+    #[test]
+    fn hotspot_bursts_boost_a_contiguous_neighborhood() {
+        let mut c = cfg();
+        c.hotspot_every = 8;
+        c.hotspot_rounds = 2;
+        c.hotspot_width = 3;
+        let n = 32;
+        // burst rounds have a span; off-phase rounds do not
+        assert!(hotspot_span(&c, 5, 0, n).is_some());
+        assert!(hotspot_span(&c, 5, 1, n).is_some());
+        assert!(hotspot_span(&c, 5, 2, n).is_none());
+        let (start, width) = hotspot_span(&c, 5, 8, n).unwrap();
+        assert_eq!(width, 3);
+        assert!(start < n);
+        // membership wraps
+        assert!(in_span(start, start, width, n));
+        assert!(in_span((start + width - 1) % n, start, width, n));
+        assert!(!in_span((start + width) % n, start, width, n));
+        // disabling bursts removes the span everywhere
+        c.hotspot_every = 0;
+        assert!(hotspot_span(&c, 5, 0, n).is_none());
+    }
+
+    #[test]
+    fn arena_and_vec_executors_agree_bitwise() {
+        // Seed a state with a pinned load so departures must skip it
+        // and drift can hit it.
+        let n = 8;
+        let mut state = LoadState::empty(n);
+        let mut model: Vec<Vec<Load>> = vec![Vec::new(); n];
+        let mut id = 0u64;
+        for v in 0..n {
+            for j in 0..5 {
+                let l = if j == 2 {
+                    Load::pinned(id, 3.0 + v as f64)
+                } else {
+                    Load::new(id, 1.0 + j as f64)
+                };
+                state.push(v, l);
+                model[v].push(l);
+                id += 1;
+            }
+        }
+        for round in 0..40 {
+            let ops = ops_for_round(&cfg(), 11, round, n);
+            apply_ops(&mut state, &ops);
+            apply_ops_nodes(&mut model, 0, &ops);
+            for v in 0..n {
+                let arena: Vec<Load> = state.node(v).to_vec();
+                assert_eq!(arena.len(), model[v].len(), "node {v} length at round {round}");
+                for (a, m) in arena.iter().zip(model[v].iter()) {
+                    assert_eq!(a.id, m.id, "node {v} id order at round {round}");
+                    assert_eq!(
+                        a.weight.to_bits(),
+                        m.weight.to_bits(),
+                        "node {v} weight bits at round {round}"
+                    );
+                    assert_eq!(a.mobile, m.mobile);
+                }
+            }
+        }
+        // pinned loads never departed
+        for v in 0..n {
+            assert!(model[v].iter().any(|l| !l.mobile), "node {v} lost its pinned load");
+        }
+    }
+
+    #[test]
+    fn high_water_restores_next_id_parity() {
+        let ops = vec![
+            ChurnOp::Arrive { node: 0, id: arrival_id(3, 0, 0), weight: 1.0 },
+            ChurnOp::Depart { node: 1, k: 7 },
+            ChurnOp::Arrive { node: 2, id: arrival_id(3, 2, 1), weight: 2.0 },
+        ];
+        assert_eq!(id_high_water(&ops), arrival_id(3, 2, 1) + 1);
+        assert_eq!(id_high_water(&[]), 0);
+        let mut s = LoadState::empty(4);
+        s.reserve_ids(id_high_water(&ops));
+        assert_eq!(s.next_id(), arrival_id(3, 2, 1) + 1);
+    }
+
+    #[test]
+    fn sustained_stats_fold_the_trailing_window() {
+        let rounds: Vec<RoundStats> = (0..10)
+            .map(|i| RoundStats {
+                round: i,
+                color: 0,
+                discrepancy: (10 - i) as f64, // 10, 9, ..., 1
+                movements: 3,
+                edges: 4,
+            })
+            .collect();
+        let trace = RunTrace {
+            initial_discrepancy: 12.0,
+            rounds,
+        };
+        let s = sustained_stats(&trace, 4);
+        assert_eq!(s.window, 4);
+        assert_eq!(s.mean, (4.0 + 3.0 + 2.0 + 1.0) / 4.0);
+        assert_eq!(s.p99, 4.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.movements, 30);
+        assert_eq!(s.migration_bytes, 30 * LOAD_WIRE_BYTES);
+        // window 0 = whole trace; oversized window clamps
+        assert_eq!(sustained_stats(&trace, 0).window, 10);
+        assert_eq!(sustained_stats(&trace, 64).window, 10);
+        assert_eq!(sustained_stats(&trace, 0).max, 10.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut c = cfg();
+        assert!(c.validate().is_ok());
+        c.arrival_rate = -1.0;
+        assert!(c.validate().is_err());
+        c = cfg();
+        c.pareto_alpha = 1.0;
+        assert!(c.validate().is_err());
+        c = cfg();
+        c.diurnal_amplitude = 1.0;
+        assert!(c.validate().is_err());
+    }
+}

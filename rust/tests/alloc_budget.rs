@@ -20,6 +20,7 @@ use bcm_dlb::bcm::{balance_edge_with, parallel_round_ctx, RoundCtx, Schedule};
 use bcm_dlb::graph::Graph;
 use bcm_dlb::load::{Load, LoadState};
 use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::workload::{apply_ops, ops_for_round, TrafficConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -164,6 +165,49 @@ fn steady_state_rounds_allocate_nothing() {
             spent <= baseline,
             "2-worker rounds allocated beyond the bare spawn overhead \
              ({algo:?}: {spent} events vs {baseline} baseline)"
+        );
+    }
+
+    // --- churning steady state: an *amortized* budget ---
+    // Churn legitimately allocates: each round builds one op vector
+    // (O(log ops) doubling events) and arrivals can grow the arena or
+    // relocate segments past their caps (amortized O(1) events per op).
+    // What must NOT happen is a per-round cost proportional to n or to
+    // the resident load count — that would mean the arena re-materializes
+    // state instead of editing in place.  The budget below is generous
+    // in the constant but linear only in rounds and ops.
+    {
+        let algo = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+        let mut state = equal_state(n, per_node);
+        let cfg = TrafficConfig::default();
+        let wseed = 0xC4E2_17;
+        let mut scratch = EdgeScratch::new();
+        // warm-up: one full diurnal-free period of churn + sweeps
+        for round in 0..d {
+            let ops = ops_for_round(&cfg, wseed, round, n);
+            apply_ops(&mut state, &ops);
+            seq_sweeps(&mut state, &schedule, algo, round..round + 1, seed, &mut scratch);
+        }
+        let measured_rounds = 4 * d;
+        let before = allocs();
+        let mut total_ops = 0usize;
+        for round in d..d + measured_rounds {
+            let ops = ops_for_round(&cfg, wseed, round, n);
+            total_ops += ops.len();
+            apply_ops(&mut state, &ops);
+            seq_sweeps(&mut state, &schedule, algo, round..round + 1, seed, &mut scratch);
+        }
+        let spent = allocs() - before;
+        let budget = 16 * measured_rounds + 8 * total_ops;
+        assert!(
+            total_ops > 0,
+            "churn workload generated no ops; the budget test is vacuous"
+        );
+        assert!(
+            spent <= budget,
+            "churning rounds allocated {spent} events for {total_ops} ops over \
+             {measured_rounds} rounds (budget {budget}); churn cost must be \
+             amortized O(ops), not O(state)"
         );
     }
 }

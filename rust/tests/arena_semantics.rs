@@ -15,6 +15,7 @@ use bcm_dlb::bcm::{
 use bcm_dlb::graph::Graph;
 use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
 use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::workload::{apply_ops, apply_ops_nodes, ops_for_round, TrafficConfig};
 
 /// Run `prop` over `cases` seeds; panic with the seed on failure.
 fn forall(name: &str, cases: u64, prop: impl Fn(&mut Pcg64)) {
@@ -174,6 +175,156 @@ fn prop_edge_views_match_owner_application() {
         }
         assert_eq!(mv, mo, "movement counts diverged");
         assert_eq!(via_views, state, "states diverged");
+    });
+}
+
+/// Live churn interleaved with balancing sweeps: arrivals, departures
+/// and cost drift exercise the arena's insert / relocate / compact
+/// paths *between* migration rounds, and at every round boundary the
+/// cached per-node totals must still be bitwise equal to a fresh
+/// in-order fold, ids must stay unique, and pinned loads must stay put
+/// (drift may rescale their weight — immobility forbids migration, not
+/// cost change).
+#[test]
+fn prop_churned_sweeps_keep_totals_ids_and_pinning() {
+    forall("churn + sweeps invariants", 10, |rng| {
+        let n = 8 + rng.below(12);
+        let g = Graph::random_connected(n, rng);
+        let schedule = Schedule::from_graph(&g);
+        let mut state = LoadState::init_uniform_counts(
+            n,
+            2 + rng.below(8),
+            &random_dist(rng),
+            Mobility::Partial,
+            rng,
+        );
+        let pinned_ids: Vec<(usize, u64)> = (0..n)
+            .flat_map(|v| {
+                state
+                    .node(v)
+                    .iter()
+                    .filter(|l| !l.mobile)
+                    .map(move |l| (v, l.id))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        assert!(!pinned_ids.is_empty(), "Partial mobility must pin something");
+        let cfg = TrafficConfig {
+            arrival_rate: 2.0,
+            ..TrafficConfig::default()
+        };
+        let wseed = rng.next_u64();
+        let algo = random_algo(rng);
+        let seed = rng.next_u64();
+        let mut scratch = EdgeScratch::new();
+        for round in 0..4 * schedule.period() {
+            apply_ops(&mut state, &ops_for_round(&cfg, wseed, round, n));
+            for (e, &(u, v)) in schedule.matching(round).iter().enumerate() {
+                let mut edge_rng = Pcg64::for_edge(seed, round, e);
+                balance_edge_with(&mut state, u as usize, v as usize, algo, &mut edge_rng, &mut scratch);
+            }
+            // cached totals: 0 ULP against a fresh in-order fold
+            for v in 0..n {
+                let fresh = state
+                    .node(v)
+                    .iter()
+                    .map(|l| l.weight)
+                    .fold(0.0f64, |acc, w| acc + w);
+                assert_eq!(
+                    state.node_weight(v).to_bits(),
+                    fresh.to_bits(),
+                    "cached total of node {v} drifted at round {round}"
+                );
+            }
+            // ids unique after arrivals + departures
+            let ids = state.all_ids();
+            for w in ids.windows(2) {
+                assert!(w[0] != w[1], "duplicate id {} at round {round}", w[0]);
+            }
+        }
+        // pinned loads never migrated or departed
+        for &(v, id) in &pinned_ids {
+            assert!(
+                state.node(v).iter().any(|l| l.id == id && !l.mobile),
+                "pinned load {id} left node {v} under churn"
+            );
+        }
+        // PartialEq is layout-blind: a state rebuilt by fresh in-order
+        // pushes (a compact, never-relocated arena) equals the churned
+        // arena, whatever slot arrangement churn left behind
+        let mut rebuilt = LoadState::empty(n);
+        for v in 0..n {
+            for l in state.node(v).iter() {
+                rebuilt.push(v, *l);
+            }
+        }
+        rebuilt.reserve_ids(state.next_id());
+        assert_eq!(rebuilt, state, "PartialEq saw arena layout, not content");
+    });
+}
+
+/// The arena mirrors the plain `Vec<Vec<Load>>` model when churn ops
+/// are thrown into the mixed-op soup: [`apply_ops`] on the arena and
+/// [`apply_ops_nodes`] on the model must stay in lock-step through
+/// arbitrary interleavings with push / take_mobile+give / take_node.
+#[test]
+fn prop_arena_matches_vec_model_with_churn_in_the_mix() {
+    forall("arena == Vec model + churn", 25, |rng| {
+        let n = 1 + rng.below(6);
+        let mut s = LoadState::empty(n);
+        let mut model: Vec<Vec<Load>> = vec![Vec::new(); n];
+        let cfg = TrafficConfig {
+            arrival_rate: 2.0,
+            ..TrafficConfig::default()
+        };
+        let wseed = rng.next_u64();
+        let mut round = 0usize;
+        let mut next = 0u64;
+        for _ in 0..200 {
+            let v = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    let mut l = Load::new(next, rng.uniform(0.0, 10.0));
+                    l.mobile = rng.next_f64() < 0.8;
+                    next += 1;
+                    s.push(v, l);
+                    model[v].push(l);
+                }
+                1 => {
+                    let got = s.take_mobile(v);
+                    let want: Vec<Load> =
+                        model[v].iter().copied().filter(|l| l.mobile).collect();
+                    model[v].retain(|l| !l.mobile);
+                    assert_eq!(got, want, "take_mobile order diverged");
+                    let to = rng.below(n);
+                    s.give(to, got.iter().copied());
+                    model[to].extend(got);
+                }
+                2 => {
+                    let ops = ops_for_round(&cfg, wseed, round, n);
+                    round += 1;
+                    apply_ops(&mut s, &ops);
+                    apply_ops_nodes(&mut model, 0, &ops);
+                }
+                _ => {
+                    assert_eq!(s.node(v).to_vec(), model[v]);
+                    let fresh: f64 =
+                        model[v].iter().map(|l| l.weight).fold(0.0f64, |acc, w| acc + w);
+                    assert_eq!(
+                        s.node_weight(v).to_bits(),
+                        fresh.to_bits(),
+                        "cached total drifted mid-sequence"
+                    );
+                }
+            }
+        }
+        for v in 0..n {
+            assert_eq!(s.node(v).to_vec(), model[v], "final content of node {v}");
+            let fresh: f64 =
+                model[v].iter().map(|l| l.weight).fold(0.0f64, |acc, w| acc + w);
+            assert_eq!(s.node_weight(v).to_bits(), fresh.to_bits());
+        }
+        assert_eq!(s.total_loads(), model.iter().map(|m| m.len()).sum::<usize>());
     });
 }
 

@@ -165,6 +165,7 @@ fn tenant(
             seed,
             batch: 1,
             checkpoint_every,
+            churn: None,
         },
         seq_trace,
         seq_state,

@@ -166,6 +166,68 @@ fn scale_loads_ladder_emits_roofline() {
 }
 
 #[test]
+fn run_service_traffic_workload_verified() {
+    // dynamic mode end to end: churn + parallel engine + verify against
+    // the sequential dynamic reference, sustained metrics + E14 table
+    let (code, stdout, stderr) = run_cli(&[
+        "run", "--n", "8", "--loads", "6", "--reps", "1", "--sweeps", "2",
+        "--workload", "service-traffic", "--arrival-rate", "1.5",
+        "--threads", "2", "--verify",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("\"workload\":\"service-traffic\""));
+    assert!(stdout.contains("\"arrival_rate\":1.5"));
+    assert!(stdout.contains("verified: churning trace"), "no verify line: {stdout}");
+    assert!(stdout.contains("sustained mean discrepancy"));
+    assert!(stdout.contains("sustained p99 discrepancy"));
+    assert!(stdout.contains("migration_bytes"));
+    assert!(stdout.contains("e14_service_traffic.csv"), "no E14 csv: {stdout}");
+}
+
+#[test]
+fn run_service_traffic_on_cluster_verified() {
+    let (code, stdout, stderr) = run_cli(&[
+        "run", "--n", "8", "--loads", "6", "--reps", "1", "--sweeps", "2",
+        "--workload", "service-traffic", "--cluster", "--shards", "2", "--verify",
+    ]);
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("verified: churning trace"), "no verify line: {stdout}");
+    assert!(stdout.contains("sustained mean discrepancy"));
+}
+
+#[test]
+fn churn_knobs_require_the_workload_flag() {
+    for knob in [
+        &["run", "--n", "8", "--arrival-rate", "2.0"][..],
+        &["run", "--n", "8", "--pareto-alpha", "3.0"],
+        &["run", "--n", "8", "--hotspot-every", "16"],
+    ] {
+        let (code, _, stderr) = run_cli(knob);
+        assert_ne!(code, 0, "accepted {knob:?} without --workload");
+        assert!(stderr.contains("requires workload"), "stderr: {stderr}");
+    }
+}
+
+#[test]
+fn workload_flag_rejects_bad_values() {
+    let (code, _, stderr) = run_cli(&["run", "--n", "8", "--workload", "batch"]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("bad --workload"), "stderr: {stderr}");
+
+    let (code, _, stderr) = run_cli(&[
+        "run", "--n", "8", "--workload", "service-traffic", "--pareto-alpha", "1.0",
+    ]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("pareto_alpha"), "stderr: {stderr}");
+
+    let (code, _, stderr) = run_cli(&[
+        "run", "--n", "8", "--workload", "service-traffic", "--arrival-rate", "lots",
+    ]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("expects a number"), "stderr: {stderr}");
+}
+
+#[test]
 fn spectral_command() {
     let (code, stdout, _) = run_cli(&["spectral", "--topology", "ring", "--n", "8"]);
     assert_eq!(code, 0);

@@ -11,6 +11,7 @@ use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
 use bcm_dlb::service::{submit, ServeOptions, Server};
 use bcm_dlb::util::json::Json;
 use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::workload::{run_dynamic_engine, TrafficConfig};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -47,6 +48,7 @@ fn tenant(topo: &str, n: usize, algo: &str, sweeps: usize, seed: u64, batch: usi
             seed,
             batch,
             checkpoint_every: 0,
+            churn: None,
         },
         state,
         schedule,
@@ -65,6 +67,16 @@ fn solo_reference(t: &Tenant) -> (RunTrace, LoadState) {
         StopRule::sweeps(t.sweeps),
         t.seed,
     );
+    (trace, state)
+}
+
+/// The solo reference of a *churning* tenant: `Sequential` driven
+/// through the same per-round churn stream the pool ships its shards.
+fn churn_solo(t: &Tenant, cfg: &TrafficConfig) -> (RunTrace, LoadState) {
+    let mut state = t.state.clone();
+    let rounds = t.sweeps * t.schedule.period();
+    let trace =
+        run_dynamic_engine(&Sequential, &mut state, &t.schedule, t.algo, cfg, rounds, t.seed);
     (trace, state)
 }
 
@@ -180,6 +192,84 @@ fn one_tenant_failing_mid_batch_does_not_poison_the_others() {
 }
 
 #[test]
+fn churning_and_static_tenants_share_a_pool() {
+    // soak: one tenant under live service-traffic churn, one classic
+    // static tenant, interleaved on the same three-worker pool
+    let cfg = TrafficConfig::default();
+    let mut churned = tenant("torus2d", 16, "sorted:quick", 3, 21, 0);
+    churned.spec.churn = Some(cfg.clone());
+    let static_t = tenant("ring", 24, "greedy", 3, 22, 2);
+    let churn_ref = churn_solo(&churned, &cfg);
+    let static_ref = solo_reference(&static_t);
+
+    let mut pool = ShardPool::spawn(3);
+    let id_c = pool.open_job(churned.spec).expect("churning job opens");
+    let id_s = pool.open_job(static_t.spec).expect("static job opens");
+    let out = drive(&mut pool, &[id_c, id_s]);
+
+    // the churning tenant is bit-identical to its solo Sequential
+    // dynamic run — trace, streamed rounds, and reassembled final state
+    // (including the next_id high-water mark of departed arrivals)
+    let o = &out[&id_c];
+    assert_eq!(o.failed, None, "churning job failed");
+    let (trace, state) = o.finished.as_ref().expect("churning job finishes");
+    assert_eq!(trace, &churn_ref.0, "churning trace diverged from Sequential");
+    assert_eq!(state, &churn_ref.1, "churning final state diverged");
+    assert_eq!(o.rounds, trace.rounds, "churn stream != trace");
+    assert_eq!(o.initial, Some(trace.initial_discrepancy));
+
+    // the static neighbor is untouched by the churn traffic: identical
+    // to Sequential, and byte-identical to a pool run with no neighbor
+    let o = &out[&id_s];
+    assert_eq!(o.failed, None, "static job failed");
+    let (trace, state) = o.finished.as_ref().expect("static job finishes");
+    assert_eq!(trace, &static_ref.0, "static trace diverged from Sequential");
+    assert_eq!(state, &static_ref.1, "static final state diverged");
+    pool.shutdown().expect("clean shutdown");
+
+    let mut solo_pool = ShardPool::spawn(3);
+    let alone = tenant("ring", 24, "greedy", 3, 22, 2);
+    let id = solo_pool.open_job(alone.spec).expect("solo job opens");
+    let solo_out = drive(&mut solo_pool, &[id]);
+    let (solo_trace, solo_state) = solo_out[&id].finished.as_ref().expect("solo finishes");
+    assert_eq!(solo_trace, trace, "churning neighbor changed the static trace");
+    assert_eq!(solo_state, state, "churning neighbor changed the static state");
+    solo_pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn mid_churn_fault_poisons_only_its_tenant() {
+    // ids are assigned from 1 in open order: churning=1, static=2.
+    // Inject a panic on shard 0 at (job 1, round 2) — after churn ops
+    // for rounds 0..=2 have already mutated the shard's lists.
+    let cfg = TrafficConfig::default();
+    let mut churned = tenant("torus2d", 16, "greedy", 3, 31, 1);
+    churned.spec.churn = Some(cfg);
+    let static_t = tenant("ring", 24, "sorted:quick", 3, 32, 1);
+    let static_ref = solo_reference(&static_t);
+
+    let mut pool = ShardPool::spawn_tuned(2, Some((0, 1, 2)), Some(Duration::from_millis(250)));
+    let id_c = pool.open_job(churned.spec).expect("churning job opens");
+    let id_s = pool.open_job(static_t.spec).expect("static job opens");
+    assert_eq!((id_c, id_s), (1, 2));
+    let out = drive(&mut pool, &[id_c, id_s]);
+
+    let err = out[&id_c].failed.as_ref().expect("churning job fails");
+    assert!(
+        err.contains("injected fault") || err.contains("timed out waiting for peer"),
+        "unexpected failure: {err}"
+    );
+    assert!(out[&id_c].finished.is_none());
+
+    let o = &out[&id_s];
+    assert_eq!(o.failed, None, "static tenant poisoned: {:?}", o.failed);
+    let (trace, state) = o.finished.as_ref().expect("static tenant finishes");
+    assert_eq!(trace, &static_ref.0, "static trace diverged after neighbor fault");
+    assert_eq!(state, &static_ref.1, "static state diverged after neighbor fault");
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
 fn serve_loopback_streams_verified_jobs_concurrently() {
     let mut server = Server::bind(ServeOptions {
         listen: "127.0.0.1:0".to_string(),
@@ -191,18 +281,21 @@ fn serve_loopback_streams_verified_jobs_concurrently() {
     let addr = server.local_addr().to_string();
     let server = std::thread::spawn(move || server.run());
 
-    // two concurrent clients, each asking the service to verify the
-    // streamed run against Sequential
-    let clients: Vec<_> = [3u64, 9u64]
+    // three concurrent clients — two static, one under service-traffic
+    // churn — each asking the service to verify the streamed run
+    // against Sequential (the churning one against its dynamic twin)
+    let lines = [
+        r#"{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":3,"verify":true}"#,
+        r#"{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":9,"verify":true}"#,
+        r#"{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":5,"workload":"service-traffic","arrival_rate":1.5,"verify":true}"#,
+    ];
+    let clients: Vec<_> = lines
         .into_iter()
-        .map(|seed| {
+        .map(|line| {
             let addr = addr.clone();
             std::thread::spawn(move || {
-                let line = format!(
-                    r#"{{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":{seed},"verify":true}}"#
-                );
                 let mut out = Vec::new();
-                let ok = submit(&addr, &line, &mut out).expect("submit transport ok");
+                let ok = submit(&addr, line, &mut out).expect("submit transport ok");
                 (ok, String::from_utf8(out).unwrap())
             })
         })

@@ -55,6 +55,7 @@ fn run_one_job(pool: &mut ShardPool) {
             seed: 7,
             batch: 1,
             checkpoint_every: 0,
+            churn: None,
         })
         .expect("job opens");
     loop {
@@ -90,6 +91,7 @@ fn pool_shutdown_is_idempotent() {
             seed: 1,
             batch: 1,
             checkpoint_every: 0,
+            churn: None,
         })
         .expect_err("open_job on a down pool")
         .to_string();

@@ -1,0 +1,229 @@
+//! Churn-determinism suite for `workload::service_traffic`.
+//!
+//! The dynamic workload's pledge is the same one the engines make for
+//! static runs, extended to a changing ball set: the churn stream is a
+//! pure function of `(config, seed, round, node)`, and a churning run
+//! is bit-identical — trace *and* final state — across the sequential
+//! engine, the parallel engine at any thread count, and the sharded
+//! cluster at any shard count.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Parallel, Schedule, Sequential};
+use bcm_dlb::coordinator::resolve_shards;
+use bcm_dlb::graph::Topology;
+use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::workload::{
+    ops_for_round, run_dynamic_cluster, run_dynamic_engine, ChurnOp, TrafficConfig,
+};
+
+/// One deterministic scenario: graph, schedule and initial state all
+/// derived from `seed` exactly like `bcm-dlb run` derives them.
+fn scenario(seed: u64, n: usize, loads: usize) -> (Schedule, LoadState) {
+    let mut rng = Pcg64::new(seed);
+    let g = Topology::RandomConnected.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        loads,
+        &WeightDistribution::paper_section6(),
+        Mobility::Partial,
+        &mut rng,
+    );
+    (schedule, state)
+}
+
+#[test]
+fn churn_stream_is_bit_identical_for_a_seed() {
+    let cfg = TrafficConfig::default();
+    for round in [0usize, 1, 7, 31, 32, 100] {
+        let a = ops_for_round(&cfg, 99, round, 24);
+        let b = ops_for_round(&cfg, 99, round, 24);
+        assert_eq!(a, b, "stream not reproducible at round {round}");
+        // PartialEq on f64 admits -0.0 == 0.0; pin the bits too
+        for (x, y) in a.iter().zip(&b) {
+            if let (
+                ChurnOp::Arrive { weight: wx, .. },
+                ChurnOp::Arrive { weight: wy, .. },
+            ) = (x, y)
+            {
+                assert_eq!(wx.to_bits(), wy.to_bits());
+            }
+        }
+    }
+    // a different seed must diverge somewhere in the same horizon
+    let a: Vec<ChurnOp> = (0..16).flat_map(|r| ops_for_round(&cfg, 99, r, 24)).collect();
+    let b: Vec<ChurnOp> = (0..16).flat_map(|r| ops_for_round(&cfg, 100, r, 24)).collect();
+    assert_ne!(a, b, "seeds 99 and 100 produced identical streams");
+}
+
+#[test]
+fn churn_stream_is_independent_of_who_asks() {
+    // the generator is keyed on (seed, round, node) counters, never on
+    // shared RNG state, so slicing the horizon differently (as shards
+    // and engines do) can't change any op
+    let cfg = TrafficConfig::default();
+    let whole: Vec<Vec<ChurnOp>> = (0..12).map(|r| ops_for_round(&cfg, 7, r, 10)).collect();
+    // re-query out of order
+    for r in [11usize, 3, 0, 5, 11, 2] {
+        assert_eq!(ops_for_round(&cfg, 7, r, 10), whole[r]);
+    }
+    // per-node slices reassemble to the whole round
+    for (r, round_ops) in whole.iter().enumerate() {
+        for node in 0..10u32 {
+            let slice: Vec<&ChurnOp> =
+                round_ops.iter().filter(|op| op.node() == node).collect();
+            let again = ops_for_round(&cfg, 7, r, 10);
+            let slice2: Vec<&ChurnOp> =
+                again.iter().filter(|op| op.node() == node).collect();
+            assert_eq!(slice, slice2);
+        }
+    }
+}
+
+#[test]
+fn churning_run_is_bit_identical_across_all_executors() {
+    let cores = resolve_shards(0);
+    for (seed, n, algo) in [
+        (2013u64, 16usize, PairAlgorithm::SortedGreedy(SortAlgo::Quick)),
+        (7, 24, PairAlgorithm::Greedy),
+    ] {
+        let (schedule, state0) = scenario(seed, n, 12);
+        let rounds = 3 * schedule.period();
+        let cfg = TrafficConfig::default();
+
+        let mut seq_state = state0.clone();
+        let seq_trace = run_dynamic_engine(
+            &Sequential,
+            &mut seq_state,
+            &schedule,
+            algo,
+            &cfg,
+            rounds,
+            seed,
+        );
+        assert_eq!(seq_trace.rounds.len(), rounds);
+
+        for threads in [1usize, 2, cores] {
+            let mut state = state0.clone();
+            let trace = run_dynamic_engine(
+                &Parallel::new(threads),
+                &mut state,
+                &schedule,
+                algo,
+                &cfg,
+                rounds,
+                seed,
+            );
+            assert_eq!(trace, seq_trace, "trace diverged: threads={threads}");
+            assert_eq!(state, seq_state, "state diverged: threads={threads}");
+        }
+
+        for shards in [1usize, 2, cores] {
+            let (trace, fin) = run_dynamic_cluster(
+                state0.clone(),
+                &schedule,
+                algo,
+                &cfg,
+                rounds,
+                seed,
+                shards,
+            )
+            .unwrap();
+            assert_eq!(trace, seq_trace, "cluster trace diverged: shards={shards}");
+            assert_eq!(fin, seq_state, "cluster state diverged: shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn hotspot_heavy_churn_preserves_executor_identity() {
+    // aggressive knobs: frequent hotspot bursts, triple arrival rate,
+    // heavy tail — the regime that maximises arena insert/relocate
+    // pressure and per-shard op slicing
+    let cfg = TrafficConfig {
+        arrival_rate: 3.0,
+        pareto_alpha: 1.5,
+        hotspot_every: 4,
+        hotspot_rounds: 2,
+        ..TrafficConfig::default()
+    };
+    let (schedule, state0) = scenario(41, 12, 6);
+    let rounds = 4 * schedule.period();
+    let algo = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+
+    let mut seq_state = state0.clone();
+    let seq_trace = run_dynamic_engine(
+        &Sequential,
+        &mut seq_state,
+        &schedule,
+        algo,
+        &cfg,
+        rounds,
+        41,
+    );
+    // the stream must actually have grown the ball set past the static
+    // census for this regime to mean anything
+    assert!(seq_state.total_loads() > state0.total_loads());
+
+    let mut par_state = state0.clone();
+    let par_trace = run_dynamic_engine(
+        &Parallel::auto(),
+        &mut par_state,
+        &schedule,
+        algo,
+        &cfg,
+        rounds,
+        41,
+    );
+    assert_eq!(par_trace, seq_trace);
+    assert_eq!(par_state, seq_state);
+
+    let (ctrace, cfin) =
+        run_dynamic_cluster(state0, &schedule, algo, &cfg, rounds, 41, 3).unwrap();
+    assert_eq!(ctrace, seq_trace);
+    assert_eq!(cfin, seq_state);
+}
+
+#[test]
+fn drain_heavy_churn_survives_empty_nodes() {
+    // departures outpace arrivals: nodes routinely empty out, and the
+    // modular victim indexing must keep every executor in lock-step
+    // rather than panicking or skewing on short lists
+    let cfg = TrafficConfig {
+        arrival_rate: 0.2,
+        depart_rate: 3.0,
+        ..TrafficConfig::default()
+    };
+    let (schedule, state0) = scenario(17, 8, 2);
+    let rounds = 5 * schedule.period();
+    let algo = PairAlgorithm::Greedy;
+
+    let mut seq_state = state0.clone();
+    let seq_trace = run_dynamic_engine(
+        &Sequential,
+        &mut seq_state,
+        &schedule,
+        algo,
+        &cfg,
+        rounds,
+        17,
+    );
+    let mut par_state = state0.clone();
+    let par_trace = run_dynamic_engine(
+        &Parallel::new(2),
+        &mut par_state,
+        &schedule,
+        algo,
+        &cfg,
+        rounds,
+        17,
+    );
+    assert_eq!(par_trace, seq_trace);
+    assert_eq!(par_state, seq_state);
+
+    let (ctrace, cfin) =
+        run_dynamic_cluster(state0, &schedule, algo, &cfg, rounds, 17, 2).unwrap();
+    assert_eq!(ctrace, seq_trace);
+    assert_eq!(cfin, seq_state);
+}
