@@ -17,7 +17,9 @@
 //! skipping the device and cluster sections (CI exercises those through
 //! their own benches).  Smoke runs enforce the perf-regression floors
 //! in `bench_floor.toml` (section `[hotpath_micro.smoke]`); `--no-floor`
-//! bypasses the gate on hosts known to be slower than the floor assumes.
+//! bypasses the gate on hosts known to be slower than the floor assumes,
+//! and hosts with fewer cores than the recorded `pinned_cores` skip it
+//! automatically with a notice.
 
 use bcm_dlb::balancer::{balance_pair, decide_pool, EdgeScratch, PairAlgorithm, SortAlgo};
 use bcm_dlb::bcm::{balance_round, Schedule};
@@ -289,6 +291,20 @@ fn main() {
 
     if smoke && !args.iter().any(|a| a == "--no-floor") {
         let floor_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_floor.toml");
+        // floors were pinned on a `pinned_cores` container; a smaller
+        // host cannot hold them — skip with a notice instead of failing
+        let host_cores = std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1);
+        if let Some(p) = read_floor(&floor_path, "hotpath_micro.smoke", "pinned_cores") {
+            if (host_cores as f64) < p {
+                eprintln!(
+                    "hotpath_micro: floors SKIPPED — this host has {host_cores} core(s), \
+                     fewer than the bench_floor.toml pinned_cores the floors were pinned on"
+                );
+                return;
+            }
+        }
         let mut failed = false;
         for (key, measured, unit) in [
             ("min_solve_edges_per_s", solve_eps, "edge solves/s"),

@@ -11,7 +11,9 @@
 //! `-- --smoke` (or `BCM_DLB_SMOKE=1` / `BCM_DLB_QUICK=1`) derates to
 //! n=128, 1 sweep for CI.  Smoke runs enforce the
 //! `[service_throughput.smoke] min_rounds_per_s` floor from
-//! `bench_floor.toml`; `-- --no-floor` skips the gate.
+//! `bench_floor.toml`; `-- --no-floor` skips the gate, and hosts with
+//! fewer cores than the recorded `pinned_cores` skip it automatically
+//! with a notice.
 
 use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
 use bcm_dlb::bcm::{Engine, RunTrace, Schedule, Sequential, StopRule};
@@ -163,30 +165,48 @@ fn main() {
 
     if smoke && !args.iter().any(|a| a == "--no-floor") {
         let floor_path = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_floor.toml");
-        match read_floor(&floor_path, "service_throughput.smoke", "min_rounds_per_s") {
-            Some(floor) if best_rps < floor => {
-                eprintln!(
-                    "REGRESSION: best service throughput {} rounds/s is below the \
-                     bench_floor.toml floor of {} rounds/s",
-                    f(best_rps, 0),
-                    f(floor, 0)
-                );
-                failed = true;
-            }
-            Some(floor) => {
-                eprintln!(
-                    "perf floor ok: {} rounds/s >= {} rounds/s floor",
-                    f(best_rps, 0),
-                    f(floor, 0)
-                );
-            }
-            None => {
-                eprintln!(
-                    "REGRESSION GATE BROKEN: no parsable [service_throughput.smoke] \
-                     min_rounds_per_s in {} (use --no-floor to bypass deliberately)",
-                    floor_path.display()
-                );
-                failed = true;
+        // the floor was pinned on a `pinned_cores` container; a smaller
+        // host cannot hold it — skip with a notice instead of failing
+        let host_cores = std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(1);
+        let pinned = read_floor(&floor_path, "service_throughput.smoke", "pinned_cores");
+        let undersized = match pinned {
+            Some(p) => (host_cores as f64) < p,
+            None => false,
+        };
+        if undersized {
+            eprintln!(
+                "service_throughput: perf floor SKIPPED — this host has {host_cores} \
+                 core(s), fewer than the bench_floor.toml pinned_cores the floor was \
+                 pinned on"
+            );
+        } else {
+            match read_floor(&floor_path, "service_throughput.smoke", "min_rounds_per_s") {
+                Some(floor) if best_rps < floor => {
+                    eprintln!(
+                        "REGRESSION: best service throughput {} rounds/s is below the \
+                         bench_floor.toml floor of {} rounds/s",
+                        f(best_rps, 0),
+                        f(floor, 0)
+                    );
+                    failed = true;
+                }
+                Some(floor) => {
+                    eprintln!(
+                        "perf floor ok: {} rounds/s >= {} rounds/s floor",
+                        f(best_rps, 0),
+                        f(floor, 0)
+                    );
+                }
+                None => {
+                    eprintln!(
+                        "REGRESSION GATE BROKEN: no parsable [service_throughput.smoke] \
+                         min_rounds_per_s in {} (use --no-floor to bypass deliberately)",
+                        floor_path.display()
+                    );
+                    failed = true;
+                }
             }
         }
     }

@@ -96,6 +96,14 @@ COMMANDS
                  [--transport local|tcp]  cluster backend: in-process
                                 channels (default) or real sockets with
                                 cluster-worker processes
+                 [--hosts H]    two-tier hierarchical coordinator: H
+                                hosts x --shards-per-host in-process
+                                shard workers, shards partitioned
+                                cut-aware so cross-host traffic scales
+                                with the inter-host cut (0 = flat, the
+                                default; identical results at any H)
+                 [--shards-per-host K]  shard workers inside each host
+                                on the --hosts path (0 = one per core)
                  [--listen ADDR]  tcp leader bind address (workers dial
                                 in with cluster-worker --connect ADDR)
                  [--peers A,B,...]  tcp leader dials these listening
@@ -133,8 +141,19 @@ COMMANDS
                  [--fault-exit ROUND]  kill this process (exit 3) at the
                                 start of round ROUND — simulates a crash
                                 for recovery drills and tests
+                 [--no-pin]     skip the best-effort per-shard core
+                                pinning a two-tier host worker applies
+                 the worker auto-detects its role from the leader's
+                 init frame: a flat leader makes it one shard, a
+                 two-tier leader (run --hosts) makes it a whole host of
+                 in-process shards behind one egress socket
                  a relaunched worker rejoins a checkpointed leader's
                  recovery window automatically (OPERATIONS.md §rejoin)
+  launch         print the per-host command lines of a two-tier cluster
+                 --hosts A,B,C        host addresses, one worker each
+                 [--shards-per-host K] in-process shards per host (def. 1)
+                 [--port P]           worker listen port (def. 7411)
+                 [--no-pin]           forwarded to every worker line
   serve          multi-tenant balancer service: accepts JSON job specs
                  over a socket, runs them concurrently on one shared
                  shard pool, streams per-round reports back as JSON lines
@@ -148,6 +167,8 @@ COMMANDS
                  [--connect ADDR]   service address (def. 127.0.0.1:7412)
                  [--verify]     service reruns Sequential and asserts the
                                 streamed trace is bit-identical
+                 [--stats]      stream a service-side throughput snapshot
+                                ({\"event\":\"stats\",...}) before done
                  [--shutdown]   ask the service to drain and exit instead
                                 of submitting a job
   scale          sequential vs parallel engine vs sharded cluster

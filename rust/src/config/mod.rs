@@ -48,6 +48,19 @@ pub struct ExperimentConfig {
     /// default) or `tcp` (workers are separate `cluster-worker`
     /// processes).  Results are bit-identical across backends.
     pub transport: TransportKind,
+    /// Two-tier cluster host count (config key `hosts`, flag `--hosts`):
+    /// `0` (the default) keeps the flat one-worker-per-shard cluster;
+    /// `H > 0` runs the hierarchical coordinator — `H` cluster-worker
+    /// *hosts*, each hosting [`shards_per_host`](Self::shards_per_host)
+    /// in-process shard workers, with shards placed cut-aware
+    /// (`ShardMap::partition_tiered`) so cross-host wire traffic scales
+    /// with the inter-host cut.  Results are bit-identical to the flat
+    /// cluster and to `bcm::Sequential` for any `H`.
+    pub hosts: usize,
+    /// In-process shard workers per host on the two-tier path (config
+    /// key `shards_per_host`, flag `--shards-per-host`); `0` = one per
+    /// core.  Only consulted when [`hosts`](Self::hosts) `> 0`.
+    pub shards_per_host: usize,
     /// Leader bind address for `transport = tcp` (the `--listen` flag);
     /// workers dial in with `cluster-worker --connect`.
     pub listen: String,
@@ -119,6 +132,8 @@ impl Default for ExperimentConfig {
             shards: 0,
             batch_rounds: 0,
             transport: TransportKind::Local,
+            hosts: 0,
+            shards_per_host: 1,
             listen: "127.0.0.1:7411".to_string(),
             peers: Vec::new(),
             serve_listen: "127.0.0.1:7412".to_string(),
@@ -187,6 +202,12 @@ impl ExperimentConfig {
         if let Some(s) = v.get("transport").as_str() {
             cfg.transport =
                 TransportKind::parse(s).ok_or_else(|| anyhow!("bad transport '{s}'"))?;
+        }
+        if let Some(x) = v.get("hosts").as_usize() {
+            cfg.hosts = x;
+        }
+        if let Some(x) = v.get("shards_per_host").as_usize() {
+            cfg.shards_per_host = x;
         }
         if let Some(s) = v.get("listen").as_str() {
             cfg.listen = s.to_string();
@@ -299,6 +320,8 @@ impl ExperimentConfig {
             ("shards", self.shards.into()),
             ("batch_rounds", self.batch_rounds.into()),
             ("transport", self.transport.name().into()),
+            ("hosts", self.hosts.into()),
+            ("shards_per_host", self.shards_per_host.into()),
             ("checkpoint_every", self.checkpoint_every.into()),
             ("rejoin_wait_ms", (self.rejoin_wait_ms as usize).into()),
             ("listen", self.listen.clone().into()),
@@ -419,6 +442,21 @@ mod tests {
         assert_eq!(back.serve_listen, cfg.serve_listen);
         assert_eq!(back.serve_max_jobs, cfg.serve_max_jobs);
         assert!(ExperimentConfig::from_json_str(r#"{"serve": {"max_jobs": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn tier_keys_parse_roundtrip_and_default() {
+        let cfg = ExperimentConfig::from_json_str("{}").unwrap();
+        assert_eq!(cfg.hosts, 0); // 0 = flat cluster, no second tier
+        assert_eq!(cfg.shards_per_host, 1);
+        let cfg =
+            ExperimentConfig::from_json_str(r#"{"hosts": 3, "shards_per_host": 4}"#).unwrap();
+        assert_eq!(cfg.hosts, 3);
+        assert_eq!(cfg.shards_per_host, 4);
+        let text = cfg.to_json().to_string();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.hosts, cfg.hosts);
+        assert_eq!(back.shards_per_host, cfg.shards_per_host);
     }
 
     #[test]

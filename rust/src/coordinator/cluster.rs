@@ -24,8 +24,9 @@
 //! asserted by `tests/property_invariants.rs`.
 
 use super::messages::{Ctl, Report};
-use super::shard::{resolve_shards, RoundPlan, ShardMap};
+use super::shard::{resolve_shards, RoundPlan, ShardMap, TierLayout};
 use super::transport::tcp::{InitPayload, LeaderListener, TcpLeader};
+use super::transport::tiered::{CountingTieredWorker, HostSeed, TierTraffic, TieredLeader};
 use super::transport::{local, LeaderTransport, TransportError};
 use super::worker::{ShardWorker, WorkerAlgo};
 use crate::anyhow;
@@ -300,6 +301,147 @@ impl Cluster {
         let inits = tcp_inits(&mut state, &map, algo);
         let transport = TcpLeader::connect(peers, inits)?;
         Ok(Self::from_transport(map, Box::new(transport), algo, baseline))
+    }
+
+    /// Spawn the in-process twin of a two-tier deployment: the state is
+    /// partitioned by [`ShardMap::partition_tiered`] (host blocks placed
+    /// to minimize the inter-host cut of `edges`), each worker thread
+    /// classifies its peer sends against `layout`, and the returned
+    /// [`TierTraffic`] counts what the slow tier would carry — including
+    /// the exact wire bytes of each would-be `Mux` frame.  Routing
+    /// decisions match the real TCP two-tier cluster; results are
+    /// bit-identical to every other spawn (the tiered partition is just
+    /// another contiguous `ShardMap`).
+    pub fn spawn_tiered(
+        state: LoadState,
+        algo: PairAlgorithm,
+        layout: TierLayout,
+        edges: &[(u32, u32)],
+    ) -> (Cluster, Arc<TierTraffic>) {
+        Self::spawn_tiered_inner(state, algo, layout, edges, None)
+    }
+
+    /// Fault-injection twin of [`spawn_tiered`](Self::spawn_tiered) for
+    /// whole-host recovery tests: *every* shard of host `fault.0` panics
+    /// at the start of global round `fault.1`, the in-process analogue
+    /// of a host process dying with all its workers.
+    #[doc(hidden)]
+    pub fn spawn_tiered_with_fault(
+        state: LoadState,
+        algo: PairAlgorithm,
+        layout: TierLayout,
+        edges: &[(u32, u32)],
+        fault: (usize, usize),
+    ) -> (Cluster, Arc<TierTraffic>) {
+        Self::spawn_tiered_inner(state, algo, layout, edges, Some(fault))
+    }
+
+    fn spawn_tiered_inner(
+        mut state: LoadState,
+        algo: PairAlgorithm,
+        layout: TierLayout,
+        edges: &[(u32, u32)],
+        fault: Option<(usize, usize)>,
+    ) -> (Cluster, Arc<TierTraffic>) {
+        let map = ShardMap::partition_tiered(state.n(), &layout, edges);
+        let k = map.shards();
+        let baseline = flatten(&state);
+        let shard_nodes = carve(&mut state, &map);
+        let traffic = Arc::new(TierTraffic::default());
+        let (leader, workers) = local::pair(k);
+        let mut handles = Vec::with_capacity(k);
+        for (s, (inner, nodes)) in workers.into_iter().zip(shard_nodes).enumerate() {
+            let transport = CountingTieredWorker::new(inner, layout, traffic.clone());
+            let mut worker = ShardWorker::new(Box::new(transport));
+            worker.install_job(0, map.range(s).start, nodes, algo);
+            if let Some((fh, fr)) = fault {
+                if layout.host_of(s) == fh {
+                    worker.set_fault(0, fr);
+                }
+                // the dead host strands every survivor mid-round; cap
+                // their collect wait so the test resolves quickly
+                worker.set_peer_wait(Duration::from_millis(500));
+            }
+            handles.push(std::thread::spawn(move || {
+                let _ = worker.run();
+            }));
+        }
+        let mut cluster = Self::from_transport(map, Box::new(leader), algo, baseline);
+        cluster.handles = handles;
+        (cluster, traffic)
+    }
+
+    /// Spawn a real two-tier cluster: accept `layout.hosts` host
+    /// processes on `listener` (each `bcm-dlb cluster-worker` running
+    /// `layout.shards_per_host` in-process shard workers), partition the
+    /// state with [`ShardMap::partition_tiered`], and ship every host
+    /// its block of shard slices in one `HostInit`.
+    pub fn spawn_tcp_tiered(
+        state: LoadState,
+        algo: PairAlgorithm,
+        layout: TierLayout,
+        edges: &[(u32, u32)],
+        listener: LeaderListener,
+    ) -> Result<Cluster> {
+        let (map, baseline, seeds) = Self::tiered_seeds(state, layout, edges)?;
+        let transport = TieredLeader::accept(listener, layout, &algo.name(), seeds)?;
+        Ok(Self::from_transport(map, Box::new(transport), algo, baseline))
+    }
+
+    /// Spawn a two-tier cluster by dialing one listening host process
+    /// per entry of `peers` (`layout.hosts` entries, each started with
+    /// `bcm-dlb cluster-worker --listen`); host `i` gets shard block
+    /// `i`.
+    pub fn spawn_tcp_connect_tiered(
+        state: LoadState,
+        algo: PairAlgorithm,
+        layout: TierLayout,
+        edges: &[(u32, u32)],
+        peers: &[String],
+    ) -> Result<Cluster> {
+        if peers.len() != layout.hosts {
+            return Err(anyhow!(
+                "{} host addresses for a {}-host layout",
+                peers.len(),
+                layout.hosts
+            ));
+        }
+        let (map, baseline, seeds) = Self::tiered_seeds(state, layout, edges)?;
+        let transport = TieredLeader::connect(peers, layout, &algo.name(), seeds)?;
+        Ok(Self::from_transport(map, Box::new(transport), algo, baseline))
+    }
+
+    /// Partition and carve a state for a two-tier spawn: per host, the
+    /// block of `(first node, load slice)` pairs its `HostInit` ships.
+    fn tiered_seeds(
+        mut state: LoadState,
+        layout: TierLayout,
+        edges: &[(u32, u32)],
+    ) -> Result<(ShardMap, Vec<Vec<Load>>, Vec<HostSeed>)> {
+        if state.n() < layout.shards() {
+            return Err(anyhow!(
+                "a {}x{} tiered layout needs at least {} nodes, got {}",
+                layout.hosts,
+                layout.shards_per_host,
+                layout.shards(),
+                state.n()
+            ));
+        }
+        let map = ShardMap::partition_tiered(state.n(), &layout, edges);
+        let baseline = flatten(&state);
+        let mut carved = carve(&mut state, &map).into_iter();
+        let mut seeds = Vec::with_capacity(layout.hosts);
+        for h in 0..layout.hosts {
+            let shards = layout
+                .host_range(h)
+                .map(|s| {
+                    let nodes = carved.next().expect("carve yields one slice per shard");
+                    (map.range(s).start, nodes)
+                })
+                .collect();
+            seeds.push(HostSeed { shards });
+        }
+        Ok((map, baseline, seeds))
     }
 
     fn from_transport(

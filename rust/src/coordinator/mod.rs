@@ -57,7 +57,15 @@
 //! still bit-identical to `bcm::Sequential`.  Socket I/O runs entirely
 //! on the calling thread through a readiness [`transport::poll`]er —
 //! nonblocking sockets, incremental frame reassembly, buffered writes —
-//! so neither endpoint spawns per-connection helper threads.
+//! so neither endpoint spawns per-connection helper threads.  The
+//! [`transport::tiered`] backend composes the two into a hierarchy: one
+//! `cluster-worker` process per *host* runs several in-process shard
+//! workers ([`TierLayout`]), a per-process egress pump multiplexes all
+//! cross-host traffic onto the TCP host mesh, and
+//! [`ShardMap::partition_tiered`] places the shards to minimize the
+//! inter-host cut — so wire traffic scales with the slow-tier cut, not
+//! the global cut ([`Cluster::spawn_tiered`],
+//! [`Cluster::spawn_tcp_tiered`], DESIGN.md §10).
 //!
 //! # Multi-tenancy
 //!
@@ -81,6 +89,7 @@ pub mod transport;
 pub mod worker;
 
 pub use cluster::{resolve_batch_rounds, Cluster, JobEvent, JobSpec, MessageStats, ShardPool};
-pub use shard::{resolve_shards, RoundPlan, ShardMap, ShardPlan};
+pub use shard::{resolve_shards, RoundPlan, ShardMap, ShardPlan, TierLayout};
+pub use transport::tiered::TierTraffic;
 pub use transport::{LeaderTransport, TransportError, TransportKind, WorkerTransport};
 pub use worker::{ShardWorker, WorkerAlgo};

@@ -98,6 +98,165 @@ impl ShardMap {
     }
 }
 
+/// The two-tier shape of a hierarchical cluster: `hosts` processes, each
+/// running `shards_per_host` in-process shard workers.  Global shard
+/// indices are host-major — shard `s` lives on host `s / shards_per_host`
+/// — so a contiguous [`ShardMap`] automatically gives every host a
+/// contiguous super-range of nodes, and the inter-host cut is exactly
+/// the set of edges crossing a host-block boundary.
+///
+/// The layout is pure bookkeeping: it never changes which shard owns a
+/// node, only which *transport tier* a cross-shard edge's messages ride
+/// (shared-memory channels inside a host, TCP frames between hosts), so
+/// the determinism contract is untouched by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierLayout {
+    /// Number of worker processes (hosts or NUMA nodes).
+    pub hosts: usize,
+    /// In-process shard workers per host.
+    pub shards_per_host: usize,
+}
+
+impl TierLayout {
+    /// A layout of `hosts` x `shards_per_host` shards.  Both counts must
+    /// be at least 1.
+    pub fn new(hosts: usize, shards_per_host: usize) -> TierLayout {
+        assert!(hosts >= 1, "TierLayout: need at least one host");
+        assert!(
+            shards_per_host >= 1,
+            "TierLayout: need at least one shard per host"
+        );
+        TierLayout {
+            hosts,
+            shards_per_host,
+        }
+    }
+
+    /// Total shard count (`hosts * shards_per_host`).
+    pub fn shards(&self) -> usize {
+        self.hosts * self.shards_per_host
+    }
+
+    /// The host running global shard `s`.
+    pub fn host_of(&self, shard: usize) -> usize {
+        debug_assert!(shard < self.shards(), "shard {shard} out of layout");
+        shard / self.shards_per_host
+    }
+
+    /// The global shard indices hosted by `host`.
+    pub fn host_range(&self, host: usize) -> Range<usize> {
+        debug_assert!(host < self.hosts, "host {host} out of layout");
+        host * self.shards_per_host..(host + 1) * self.shards_per_host
+    }
+
+    /// Whether an edge between shards `a` and `b` crosses the slow tier.
+    pub fn is_inter_host(&self, a: usize, b: usize) -> bool {
+        self.host_of(a) != self.host_of(b)
+    }
+}
+
+impl ShardMap {
+    /// Topology-aware two-tier partition: place `layout.shards()`
+    /// contiguous shards so that the cut crossing the *host* boundaries
+    /// — the slow tier, where every edge costs a TCP frame — is
+    /// minimized, while intra-host shard boundaries stay at their even
+    /// split (intra-host edges ride shared memory and are nearly free).
+    ///
+    /// Each of the `hosts - 1` host-block boundaries starts at its even
+    /// split position and slides within a +/- window to the position
+    /// crossed by the fewest edges of `edges` (the graph's full edge
+    /// set; for a contiguous partition an edge `(u, v)` crosses
+    /// boundary `b` iff `min < b <= max`, counted for all `b` in one
+    /// O(n + |edges|) prefix-sum pass).  Boundaries are chosen left to
+    /// right and clamped so every host keeps at least
+    /// `shards_per_host` nodes — every shard stays nonempty.  Within a
+    /// host block, shards split evenly exactly like [`ShardMap::new`].
+    ///
+    /// The result is just another contiguous `ShardMap`, so every
+    /// bit-identity guarantee of the flat cluster carries over
+    /// unchanged; only the message *routing* improves.
+    ///
+    /// Panics if `n < layout.shards()` (a tiered partition needs at
+    /// least one node per shard).
+    pub fn partition_tiered(n: usize, layout: &TierLayout, edges: &[(u32, u32)]) -> ShardMap {
+        let (hosts, spp) = (layout.hosts, layout.shards_per_host);
+        assert!(
+            n >= hosts * spp,
+            "partition_tiered: {n} nodes cannot fill {hosts} x {spp} shards"
+        );
+        // crossings[b] = edges cut by a boundary at node index b
+        let mut diff = vec![0i64; n + 1];
+        for &(u, v) in edges {
+            let (lo, hi) = if u <= v { (u, v) } else { (v, u) };
+            diff[lo as usize + 1] += 1;
+            if (hi as usize) < n {
+                diff[hi as usize + 1] -= 1;
+            }
+        }
+        let mut crossings = vec![0i64; n + 1];
+        let mut acc = 0i64;
+        for b in 1..=n {
+            acc += diff[b];
+            crossings[b] = acc;
+        }
+        // host boundaries: even split +/- a quarter-block window
+        let window = (n / hosts / 4).max(1);
+        let mut host_bounds = Vec::with_capacity(hosts + 1);
+        host_bounds.push(0usize);
+        for h in 1..hosts {
+            let target = h * n / hosts;
+            let lo_lim = host_bounds[h - 1] + spp;
+            let hi_lim = n - spp * (hosts - h);
+            let lo = target.saturating_sub(window).max(lo_lim);
+            let hi = (target + window).min(hi_lim);
+            let best = (lo..=hi)
+                .min_by_key(|&b| (crossings[b], b.abs_diff(target)))
+                .unwrap_or(target.clamp(lo_lim, hi_lim));
+            host_bounds.push(best);
+        }
+        host_bounds.push(n);
+        // within each host block, the even split of ShardMap::new
+        let mut starts = Vec::with_capacity(hosts * spp + 1);
+        starts.push(0usize);
+        for h in 0..hosts {
+            let (blk_lo, blk_hi) = (host_bounds[h], host_bounds[h + 1]);
+            let len = blk_hi - blk_lo;
+            let base = len / spp;
+            let extra = len % spp;
+            let mut at = blk_lo;
+            for s in 0..spp {
+                at += base + usize::from(s < extra);
+                starts.push(at);
+            }
+        }
+        ShardMap { starts }
+    }
+}
+
+impl RoundPlan {
+    /// Classify this plan's cross-shard edges by tier:
+    /// `(intra_host, inter_host)` counts under `layout`.  Intra-host
+    /// cross edges exchange their `Offer`/`Settle` over shared-memory
+    /// channels and never touch the codec; only the inter-host count
+    /// pays wire bytes.  A method rather than a stored field because
+    /// `RoundPlan` crosses the wire (the tier split is leader-side
+    /// bookkeeping, not protocol state).
+    pub fn cut_by_tier(&self, layout: &TierLayout) -> (usize, usize) {
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for (s, plan) in self.per_shard.iter().enumerate() {
+            for &(_, _, _, sv) in &plan.master {
+                if layout.is_inter_host(s, sv) {
+                    inter += 1;
+                } else {
+                    intra += 1;
+                }
+            }
+        }
+        (intra, inter)
+    }
+}
+
 /// Resolve a shard-count knob: `0` = one shard per available core.
 pub fn resolve_shards(shards: usize) -> usize {
     if shards == 0 {
@@ -275,6 +434,103 @@ mod tests {
         assert!(plan.per_shard[1].local.is_empty() && plan.per_shard[1].master.is_empty());
         assert!(plan.per_shard[0].slave.is_empty() && plan.per_shard[1].slave.is_empty());
         assert_eq!(plan.edges, 3);
+    }
+
+    #[test]
+    fn tier_layout_maps_shards_host_major() {
+        let l = TierLayout::new(3, 2);
+        assert_eq!(l.shards(), 6);
+        assert_eq!(l.host_of(0), 0);
+        assert_eq!(l.host_of(1), 0);
+        assert_eq!(l.host_of(2), 1);
+        assert_eq!(l.host_of(5), 2);
+        assert_eq!(l.host_range(1), 2..4);
+        assert!(l.is_inter_host(1, 2));
+        assert!(!l.is_inter_host(2, 3));
+    }
+
+    #[test]
+    fn tiered_partition_is_contiguous_and_nonempty() {
+        let g = Graph::ring(24);
+        let layout = TierLayout::new(2, 3);
+        let m = ShardMap::partition_tiered(24, &layout, g.edges());
+        assert_eq!(m.shards(), 6);
+        assert_eq!(m.n(), 24);
+        for s in 0..6 {
+            assert!(!m.range(s).is_empty(), "shard {s} empty");
+        }
+        for v in 0..24 {
+            assert!(m.range(m.shard_of(v)).contains(&v));
+        }
+        // host blocks are contiguous super-ranges: the shards of one
+        // host tile that host's node block with no gaps
+        for h in 0..2 {
+            let r = layout.host_range(h);
+            let block_lo = m.range(r.start).start;
+            let block_hi = m.range(r.end - 1).end;
+            let mut at = block_lo;
+            for s in r {
+                assert_eq!(m.range(s).start, at);
+                at = m.range(s).end;
+            }
+            assert_eq!(at, block_hi);
+        }
+    }
+
+    #[test]
+    fn tiered_partition_moves_host_boundary_off_a_dense_seam() {
+        // 16 nodes in two 8-node cliques joined by one bridge edge
+        // (7, 8).  The even split at node 8 happens to be optimal; bias
+        // the scenario instead: cliques of 6 and 10 with the bridge at
+        // (5, 6), so the even host boundary (8) would cut through the
+        // second clique — 5 of its internal edges span index 8 — while
+        // the seam at 6 cuts only the bridge.  The optimizer must find
+        // the seam within its window.
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for u in 0..6u32 {
+            for v in (u + 1)..6 {
+                edges.push((u, v));
+            }
+        }
+        for u in 6..16u32 {
+            for v in (u + 1)..16 {
+                edges.push((u, v));
+            }
+        }
+        edges.push((5, 6));
+        let layout = TierLayout::new(2, 2);
+        let m = ShardMap::partition_tiered(16, &layout, &edges);
+        // host boundary = start of the second host's first shard
+        assert_eq!(m.range(2).start, 6, "host boundary missed the seam");
+        // the inter-host cut under the full edge set is the bridge alone
+        let plan = RoundPlan::build(&edges, &m);
+        let (_, inter) = plan.cut_by_tier(&layout);
+        assert_eq!(inter, 1, "inter-host cut should be the single bridge");
+        // an even (untiered) split of the same shard count cuts more
+        let even = ShardMap::new(16, 4);
+        let even_plan = RoundPlan::build(&edges, &even);
+        let (_, even_inter) = even_plan.cut_by_tier(&layout);
+        assert!(even_inter > inter, "optimizer no better than even split");
+    }
+
+    #[test]
+    fn cut_by_tier_splits_the_cross_count() {
+        let g = Graph::ring(16);
+        let layout = TierLayout::new(2, 2);
+        let map = ShardMap::partition_tiered(16, &layout, g.edges());
+        let schedule = Schedule::from_graph(&g);
+        for c in 0..schedule.period() {
+            let plan = RoundPlan::build(schedule.matching(c), &map);
+            let (intra, inter) = plan.cut_by_tier(&layout);
+            assert_eq!(intra + inter, plan.cross_edges);
+        }
+        // whole-graph totals on a ring with 4 contiguous shards over 2
+        // hosts: 4 boundaries cut, 2 of them host boundaries (the
+        // interior host seam + the wrap edge)
+        let plan = RoundPlan::build(g.edges(), &map);
+        let (intra, inter) = plan.cut_by_tier(&layout);
+        assert_eq!(intra + inter, 4);
+        assert_eq!(inter, 2);
     }
 
     #[test]

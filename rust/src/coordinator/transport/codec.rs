@@ -45,7 +45,10 @@ pub const FRAME_MAGIC: u32 = 0x574D_4342;
 /// the new frames and fields only ever travel between endpoints that
 /// both already speak them.  The churn frame (`ApplyChurn`, kind 18)
 /// follows the same rule: only a leader driving a dynamic workload
-/// emits it.
+/// emits it.  So does the two-tier extension (`Mux`, kind 19, and
+/// `HostInit`, kind 20): those frames travel only on super-shard links
+/// between a tiered leader and `cluster-worker --local-shards`
+/// processes — endpoints that both already speak them.
 pub const WIRE_VERSION: u16 = 2;
 
 /// Frame header size in bytes (magic + version + kind + reserved +
@@ -76,6 +79,8 @@ mod kind {
     pub const CTL_ABORT_JOB: u8 = 16;
     pub const CTL_REMESH: u8 = 17;
     pub const CTL_APPLY_CHURN: u8 = 18;
+    pub const MUX: u8 = 19;
+    pub const HOST_INIT: u8 = 20;
 }
 
 /// Per-op tag bytes inside a [`kind::CTL_APPLY_CHURN`] payload.
@@ -117,6 +122,29 @@ pub enum WireMsg {
         /// The dialing worker's shard index.
         shard: usize,
     },
+    /// A shard-tagged envelope on a two-tier super-shard link: one host
+    /// process multiplexes the control, report, and peer traffic of all
+    /// of its in-process shard workers onto a single connection, so
+    /// every frame names the global shard it belongs to.  On a
+    /// leader -> host link `shard` is the destination worker; on a
+    /// host -> leader link it is the reporting worker; on a
+    /// host -> host link it is the destination of the peer message
+    /// (whose `(job, round, edge)` tags travel inside the inner
+    /// `ShardMsg` unchanged).  The inner message is encoded with its
+    /// own kind byte but no nested header or checksum — the envelope's
+    /// frame already covers both.  Nesting is one level deep by
+    /// construction: a `Mux` (or `HostInit`) inside a `Mux` is rejected
+    /// at decode as malformed.
+    Mux {
+        /// Global shard index the inner message is routed by.
+        shard: usize,
+        /// The enveloped protocol message.
+        inner: Box<WireMsg>,
+    },
+    /// Leader -> host, the reply to [`WireMsg::Hello`] on a two-tier
+    /// super-shard link: everything one `cluster-worker --local-shards`
+    /// process needs to run its block of in-process shard workers.
+    HostInit(HostInit),
 }
 
 /// The payload of [`WireMsg::Init`]: everything a worker process needs
@@ -149,6 +177,34 @@ pub struct Init {
     pub resume_round: usize,
     /// Leader-issued identity token for this shard; a future `Hello`
     /// carrying it as `rejoin: Some(token)` reclaims the shard.
+    pub token: u64,
+}
+
+/// The payload of [`WireMsg::HostInit`]: a host's identity and the
+/// initial state of every in-process shard worker it runs.  The
+/// two-tier analogue of [`Init`] — one frame per *host* instead of one
+/// per shard, with the peer table listing host-mesh listeners instead
+/// of per-shard ones (global shard `s` lives on host
+/// `s / shards_per_host`, so the mesh needs no per-shard addressing).
+#[derive(Debug, PartialEq)]
+pub struct HostInit {
+    /// The host index assigned to this process (its shards are
+    /// `host * shards_per_host ..` the next block).
+    pub host: usize,
+    /// Total number of host processes.
+    pub hosts: usize,
+    /// In-process shard workers per host.
+    pub shards_per_host: usize,
+    /// The pair algorithm to run, as its canonical
+    /// `PairAlgorithm::name()` spelling.
+    pub algo: String,
+    /// Per local shard, in global-shard order within the host's block:
+    /// the shard's first node id and its initial per-node load lists.
+    pub shards: Vec<(usize, Vec<Vec<Load>>)>,
+    /// Host-mesh listener address of every host, indexed by host
+    /// (entry `host` is this process's own address).
+    pub host_peers: Vec<String>,
+    /// Leader-issued identity token for this host.
     pub token: u64,
 }
 
@@ -500,6 +556,39 @@ fn encode_payload(msg: &WireMsg) -> (u8, Vec<u8>) {
         WireMsg::PeerHello { shard } => {
             put_usize(&mut b, *shard);
             kind::PEER_HELLO
+        }
+        WireMsg::Mux { shard, inner } => {
+            let (ik, ip) = encode_payload(inner);
+            // the envelope carries protocol messages, never another
+            // envelope: one level of nesting, enforced on both ends
+            assert!(
+                ik != kind::MUX && ik != kind::HOST_INIT,
+                "Mux frames carry protocol messages, never nested Mux/HostInit"
+            );
+            put_usize(&mut b, *shard);
+            put_u8(&mut b, ik);
+            b.extend_from_slice(&ip);
+            kind::MUX
+        }
+        WireMsg::HostInit(hi) => {
+            put_usize(&mut b, hi.host);
+            put_usize(&mut b, hi.hosts);
+            put_usize(&mut b, hi.shards_per_host);
+            put_str(&mut b, &hi.algo);
+            put_usize(&mut b, hi.shards.len());
+            for (lo, nodes) in &hi.shards {
+                put_usize(&mut b, *lo);
+                put_usize(&mut b, nodes.len());
+                for node in nodes {
+                    put_loads(&mut b, node);
+                }
+            }
+            put_usize(&mut b, hi.host_peers.len());
+            for p in &hi.host_peers {
+                put_str(&mut b, p);
+            }
+            put_u64(&mut b, hi.token);
+            kind::HOST_INIT
         }
     };
     (kind, b)
@@ -862,6 +951,53 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<WireMsg, CodecError> {
             })
         }
         kind::PEER_HELLO => WireMsg::PeerHello { shard: c.usize()? },
+        kind::MUX => {
+            let shard = c.usize()?;
+            let ik = c.u8()?;
+            // reject envelope-in-envelope before recursing, so a crafted
+            // frame cannot drive the decoder arbitrarily deep
+            if ik == kind::MUX || ik == kind::HOST_INIT {
+                return Err(CodecError::Malformed("nested mux frame"));
+            }
+            let rest = c.take(c.remaining())?;
+            WireMsg::Mux {
+                shard,
+                inner: Box::new(decode_payload(ik, rest)?),
+            }
+        }
+        kind::HOST_INIT => {
+            let host = c.usize()?;
+            let hosts = c.usize()?;
+            let shards_per_host = c.usize()?;
+            let algo = c.str()?;
+            // each shard entry needs at least lo(8) + node count(8)
+            let ns = c.vec_len(16)?;
+            let mut shards = Vec::with_capacity(ns);
+            for _ in 0..ns {
+                let lo = c.usize()?;
+                let nn = c.vec_len(8)?;
+                let mut nodes = Vec::with_capacity(nn);
+                for _ in 0..nn {
+                    nodes.push(c.loads()?);
+                }
+                shards.push((lo, nodes));
+            }
+            let np = c.vec_len(8)?;
+            let mut host_peers = Vec::with_capacity(np);
+            for _ in 0..np {
+                host_peers.push(c.str()?);
+            }
+            let token = c.u64()?;
+            WireMsg::HostInit(HostInit {
+                host,
+                hosts,
+                shards_per_host,
+                algo,
+                shards,
+                host_peers,
+                token,
+            })
+        }
         other => return Err(CodecError::BadKind(other)),
     };
     if c.remaining() != 0 {
@@ -1025,6 +1161,110 @@ mod tests {
             round: None,
             message: String::new(),
         }));
+    }
+
+    #[test]
+    fn mux_envelope_roundtrips_every_protocol_kind() {
+        // the envelope must be transparent: whatever protocol message
+        // goes in comes back out byte-identical, for ctl, peer, and
+        // report traffic alike
+        roundtrip(WireMsg::Mux {
+            shard: 5,
+            inner: Box::new(WireMsg::Ctl(Ctl::PollWeights { job: 3 })),
+        });
+        roundtrip(WireMsg::Mux {
+            shard: 0,
+            inner: Box::new(WireMsg::Peer(ShardMsg::Offer {
+                job: 1,
+                round: 17,
+                edge: 4,
+                loads: vec![Load::new(9, 2.25), Load::pinned(10, 0.5)],
+                pinned: 1.75,
+            })),
+        });
+        roundtrip(WireMsg::Mux {
+            shard: 7,
+            inner: Box::new(WireMsg::Peer(ShardMsg::Settle {
+                job: 1,
+                round: 17,
+                edge: 4,
+                loads: vec![],
+            })),
+        });
+        roundtrip(WireMsg::Mux {
+            shard: 2,
+            inner: Box::new(WireMsg::Report(Report::Error {
+                job: None,
+                shard: 2,
+                round: None,
+                message: "worker connection lost: reset".into(),
+            })),
+        });
+    }
+
+    #[test]
+    fn host_init_roundtrips() {
+        roundtrip(WireMsg::HostInit(HostInit {
+            host: 1,
+            hosts: 2,
+            shards_per_host: 2,
+            algo: "sorted:quick".into(),
+            shards: vec![
+                (8, vec![vec![Load::new(1, 2.5)], vec![]]),
+                (10, vec![vec![Load::pinned(2, 0.25)]]),
+            ],
+            host_peers: vec!["127.0.0.1:4610".into(), "127.0.0.1:4611".into()],
+            token: 0xFEED_F00D_u64,
+        }));
+        roundtrip(WireMsg::HostInit(HostInit {
+            host: 0,
+            hosts: 1,
+            shards_per_host: 1,
+            algo: String::new(),
+            shards: vec![],
+            host_peers: vec![],
+            token: 0,
+        }));
+    }
+
+    #[test]
+    fn nested_mux_is_rejected() {
+        // hand-build a Mux whose inner kind byte claims another Mux: the
+        // decoder must refuse before recursing (bounded nesting depth)
+        let mut payload = Vec::new();
+        put_usize(&mut payload, 3); // shard
+        put_u8(&mut payload, kind::MUX); // inner kind: another envelope
+        put_usize(&mut payload, 4); // would-be inner shard
+        put_u8(&mut payload, kind::CTL_SHUTDOWN);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, FRAME_MAGIC);
+        put_u16(&mut frame, WIRE_VERSION);
+        put_u8(&mut frame, kind::MUX);
+        put_u8(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(
+            decode_frame(&frame).unwrap_err(),
+            CodecError::Malformed("nested mux frame")
+        );
+
+        // a HostInit inner is handshake traffic, equally refused
+        let mut payload = Vec::new();
+        put_usize(&mut payload, 3); // shard
+        put_u8(&mut payload, kind::HOST_INIT);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, FRAME_MAGIC);
+        put_u16(&mut frame, WIRE_VERSION);
+        put_u8(&mut frame, kind::MUX);
+        put_u8(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(
+            decode_frame(&frame).unwrap_err(),
+            CodecError::Malformed("nested mux frame")
+        );
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //!   ([`codec`]) over `std::net::TcpStream`, so the leader and the shard
 //!   workers can run as separate OS processes (`bcm-dlb cluster-worker`)
 //!   and still produce traces **bit-identical** to `bcm::Sequential`.
+//! * [`tiered`] — the two-tier composition of the other two: each
+//!   `cluster-worker` process hosts several in-process shard workers
+//!   (mpsc channels inside, one egress pump multiplexing Mux-wrapped
+//!   frames onto the TCP host mesh outside), so cross-host wire traffic
+//!   scales with the *inter-host* cut instead of the global cut.
 //!
 //! The protocol (DESIGN.md §6) needs exactly two guarantees from a
 //! transport, and both backends provide them:
@@ -39,6 +44,7 @@ pub mod codec;
 pub mod local;
 pub mod poll;
 pub mod tcp;
+pub mod tiered;
 
 use super::messages::{Ctl, Report, ShardMsg};
 use std::fmt;

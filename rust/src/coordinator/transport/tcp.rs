@@ -74,7 +74,7 @@ use std::time::{Duration, Instant};
 
 /// How long handshake reads (Hello/Init/PeerHello) and mesh accepts may
 /// take before connection setup is declared failed.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+pub(crate) const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Delay between worker connect retries (`--retry` attempts).
 const CONNECT_RETRY_DELAY: Duration = Duration::from_millis(250);
@@ -117,7 +117,7 @@ pub(crate) fn connect_with_retry(addr: &str, retries: usize) -> io::Result<TcpSt
 
 /// Accept one connection with a deadline (std's blocking `accept` has
 /// no timeout, so poll in non-blocking mode).
-fn accept_with_deadline(
+pub(crate) fn accept_with_deadline(
     listener: &TcpListener,
     deadline: Duration,
     what: &str,
@@ -145,7 +145,7 @@ fn accept_with_deadline(
 
 /// Read one frame with a bounded wait (used only during handshakes;
 /// steady-state reads run nonblocking under the poller).
-fn read_frame_timed(stream: &mut TcpStream, what: &str) -> Result<WireMsg> {
+pub(crate) fn read_frame_timed(stream: &mut TcpStream, what: &str) -> Result<WireMsg> {
     stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
     let msg = read_frame(stream).with_context(|| format!("reading {what}"))?;
     stream.set_read_timeout(None)?;
@@ -155,7 +155,7 @@ fn read_frame_timed(stream: &mut TcpStream, what: &str) -> Result<WireMsg> {
 /// Mint a leader-issued worker identity token (`Init::token`).  Not a
 /// secret — just an identifier distinct per (process, issue order) so a
 /// stale replacement claiming an already-refilled shard is refused.
-fn fresh_token(shard: usize) -> u64 {
+pub(crate) fn fresh_token(shard: usize) -> u64 {
     use std::sync::atomic::{AtomicU64, Ordering};
     static ISSUED: AtomicU64 = AtomicU64::new(0);
     let seq = ISSUED.fetch_add(1, Ordering::Relaxed);
@@ -186,6 +186,12 @@ impl LeaderListener {
     /// The bound address (resolves the ephemeral port).
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// Surrender the raw socket (the tiered leader accepts host
+    /// processes on it instead of shard workers).
+    pub(crate) fn into_inner(self) -> TcpListener {
+        self.listener
     }
 }
 
@@ -774,33 +780,20 @@ pub struct WorkerSeed {
     pub resume_round: usize,
 }
 
-/// Complete a worker's side of the handshake over an established leader
-/// connection: bind the peer listener, send `Hello`, await `Init`,
-/// build the mesh, and register every socket with the worker's poller.
+/// Complete a worker's side of the handshake after the leader's `Init`
+/// arrived (`Hello` already sent, peer listener already bound — see
+/// [`serve`]): build the mesh and register every socket with the
+/// worker's poller.
 ///
 /// A rejoin `Init` inverts the mesh bootstrap: the survivors are told to
 /// dial the rejoiner (`Ctl::Remesh`), so the rejoiner dials nobody and
 /// accepts one connection per *live* peer (the `Init` peer table marks
 /// reassigned-away shards with an empty address).
-fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
-    leader.set_nodelay(true).ok();
-    // the peer listener lives on whatever interface reaches the leader
-    let ip = leader.local_addr()?.ip();
-    let peer_listener =
-        TcpListener::bind((ip, 0)).context("binding the worker's peer-mesh listener")?;
-    let my_addr = peer_listener.local_addr()?.to_string();
-    write_frame(
-        &mut leader,
-        &WireMsg::Hello {
-            peer_addr: my_addr,
-            rejoin: None,
-        },
-    )
-    .context("sending Hello to the leader")?;
-    let init = match read_frame_timed(&mut leader, "Init from the leader")? {
-        WireMsg::Init(init) => init,
-        other => return Err(anyhow!("handshake: expected Init, got {other:?}")),
-    };
+fn worker_handshake(
+    leader: TcpStream,
+    peer_listener: TcpListener,
+    init: Init,
+) -> Result<(TcpWorker, WorkerSeed)> {
     let (me, k) = (init.shard, init.shards);
     if me >= k || init.peers.len() != k {
         return Err(anyhow!(
@@ -910,25 +903,58 @@ fn worker_handshake(mut leader: TcpStream) -> Result<(TcpWorker, WorkerSeed)> {
 /// `addr` (the `bcm-dlb cluster-worker --connect` entry point).
 /// Returns after the cluster shuts down.  `fault_exit` is the hidden
 /// `--fault-exit` recovery-test hook: hard-exit the process at the
-/// start of that global round.
-pub fn serve_connect(addr: &str, retries: usize, fault_exit: Option<usize>) -> Result<()> {
+/// start of that global round.  `pin` requests best-effort core pinning
+/// of in-process shard workers (two-tier clusters only; a flat shard
+/// worker ignores it).
+pub fn serve_connect(
+    addr: &str,
+    retries: usize,
+    fault_exit: Option<usize>,
+    pin: bool,
+) -> Result<()> {
     let leader = connect_with_retry(addr, retries)
         .with_context(|| format!("connecting to cluster leader {addr}"))?;
-    serve(leader, fault_exit)
+    serve(leader, fault_exit, pin)
 }
 
 /// Serve one cluster run as a worker process, listening on `addr` for
 /// the leader's dial-in (the `bcm-dlb cluster-worker --listen` entry
 /// point, paired with the leader's `peers` list).
-pub fn serve_listen(addr: &str, fault_exit: Option<usize>) -> Result<()> {
+pub fn serve_listen(addr: &str, fault_exit: Option<usize>, pin: bool) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding worker socket {addr}"))?;
     let leader = accept_with_deadline(&listener, HANDSHAKE_TIMEOUT, "the cluster leader")?;
-    serve(leader, fault_exit)
+    serve(leader, fault_exit, pin)
 }
 
-fn serve(leader: TcpStream, fault_exit: Option<usize>) -> Result<()> {
-    let (transport, seed) = worker_handshake(leader)?;
+/// The worker process's role is decided by the leader, not a flag: bind
+/// the mesh listener, send `Hello`, and let the init frame's kind pick
+/// the path — a flat `Init` makes this process one shard worker, a
+/// `HostInit` makes it a whole two-tier host (the listener then serves
+/// as the *host*-mesh accept socket).
+fn serve(mut leader: TcpStream, fault_exit: Option<usize>, pin: bool) -> Result<()> {
+    leader.set_nodelay(true).ok();
+    // the mesh listener lives on whatever interface reaches the leader
+    let ip = leader.local_addr()?.ip();
+    let peer_listener =
+        TcpListener::bind((ip, 0)).context("binding the worker's peer-mesh listener")?;
+    let my_addr = peer_listener.local_addr()?.to_string();
+    write_frame(
+        &mut leader,
+        &WireMsg::Hello {
+            peer_addr: my_addr,
+            rejoin: None,
+        },
+    )
+    .context("sending Hello to the leader")?;
+    let init = match read_frame_timed(&mut leader, "an init frame from the leader")? {
+        WireMsg::Init(init) => init,
+        WireMsg::HostInit(hi) => {
+            return super::tiered::serve_host(leader, peer_listener, hi, fault_exit, pin)
+        }
+        other => return Err(anyhow!("handshake: expected Init, got {other:?}")),
+    };
+    let (transport, seed) = worker_handshake(leader, peer_listener, init)?;
     let algo = PairAlgorithm::parse(&seed.algo)
         .with_context(|| format!("leader sent unknown algorithm '{}'", seed.algo))?;
     if seed.rejoin {

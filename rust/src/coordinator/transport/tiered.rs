@@ -1,0 +1,1016 @@
+//! The two-tier hierarchical transport: in-process shard workers under
+//! a TCP super-shard mesh.
+//!
+//! # Why a second tier
+//!
+//! The flat [`tcp`](super::tcp) mesh pays one socket frame for *every*
+//! cross-shard edge, even when both shards live in the same process —
+//! wire traffic scales with the **global** cut.  Here one
+//! `bcm-dlb cluster-worker` process per host runs
+//! `shards_per_host` shard workers as threads wired by `std::sync::mpsc`
+//! channels (the [`local`](super::local) discipline), and a single
+//! per-process **egress pump** multiplexes all of the host's cross-host
+//! `Offer`/`Settle` traffic onto one TCP connection per peer host.
+//! Cross-host traffic then scales with the **inter-host** cut, which
+//! [`ShardMap::partition_tiered`] minimizes — the tiered-bandwidth
+//! regime of the divisible-load scheduling literature.
+//!
+//! # Topology
+//!
+//! * leader <-> host: one duplex connection per host process.  Control
+//!   and report frames ride it wrapped in a [`WireMsg::Mux`] envelope
+//!   tagging the global shard index ([the inner `Ctl`/`ShardMsg` already
+//!   carries `(job, round)`], so every super-shard frame is
+//!   `(shard, job, round)`-addressed).
+//! * host <-> host: one duplex connection per unordered host pair (host
+//!   `h` dials every host `< h`, accepts every host `> h` — the same
+//!   bootstrap as the flat shard mesh, one tier up).  Cross-host
+//!   `Offer`/`Settle` frames travel Mux-wrapped with their *destination*
+//!   shard.
+//! * intra-host: same-host cross-shard edges never touch the codec —
+//!   workers hand `ShardMsg`s to their siblings over mpsc channels
+//!   directly, bypassing the pump entirely.
+//!
+//! # Determinism
+//!
+//! The envelope is pure routing: no payload is reordered, rewritten, or
+//! re-randomized, every `f64` still crosses the wire as its exact bit
+//! pattern, and per-link FIFO holds on every leg (mpsc channels and TCP
+//! streams are both ordered, and the pump forwards in arrival order).
+//! A tiered run is therefore **bit-identical** to `bcm::Sequential` for
+//! every (hosts x shards-per-host x batch) combination — the tiered
+//! partition is just another contiguous [`ShardMap`], and the
+//! determinism contract never depended on which transport carries a
+//! message (asserted by `tests/tiered_cluster.rs`).
+//!
+//! # Failure mapping
+//!
+//! A lost host connection surfaces on the leader as one synthesized
+//! `Report::Error { job: None, shard }` **per shard of that host** —
+//! a whole-host death is indistinguishable from that many simultaneous
+//! worker deaths, which is exactly the multi-casualty input the
+//! recovery drain in `Cluster::recover` already classifies.  Recovery
+//! then reassigns the lost shards onto the surviving hosts (tiered
+//! clusters do not rejoin a replacement host mid-run; the reassign arm
+//! of the recovery contract covers them).
+//!
+//! [`ShardMap`]: crate::coordinator::shard::ShardMap
+//! [`ShardMap::partition_tiered`]: crate::coordinator::shard::ShardMap::partition_tiered
+
+use super::codec::{encode_frame, write_frame, HostInit, WireMsg};
+use super::local::LocalWorker;
+use super::poll::{Event, Poller};
+use super::tcp::{
+    accept_with_deadline, connect_with_retry, fresh_token, read_frame_timed, LeaderListener,
+    DEFAULT_CONNECT_RETRIES, HANDSHAKE_TIMEOUT,
+};
+use super::{LeaderTransport, TransportError, WorkerTransport};
+use crate::anyhow;
+use crate::balancer::PairAlgorithm;
+use crate::coordinator::messages::{Ctl, Report, ShardMsg};
+use crate::coordinator::shard::{RoundPlan, ShardPlan, TierLayout};
+use crate::coordinator::worker::ShardWorker;
+use crate::load::Load;
+use crate::util::affinity;
+use crate::util::error::{Context, Result};
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How long the pump sleeps in a poll pass when the previous pass moved
+/// nothing — short enough that a cross-host Offer/Settle round trip
+/// costs at most a few wakeups, long enough that an idle host does not
+/// spin.
+const PUMP_IDLE_WAIT: Duration = Duration::from_millis(1);
+
+/// How long the pump keeps retrying buffered socket writes after its
+/// last worker exited before abandoning them.
+const PUMP_FLUSH_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ------------------------------------------------------ traffic census
+
+/// Shared counters of the slow tier, kept by the counting tiered-local
+/// transport ([`CountingTieredWorker`]) so benches and tests can assert
+/// the tentpole claim — cross-host traffic scales with the *inter-host*
+/// cut — without real sockets (`benches/cluster_sharded.rs` E15).
+#[derive(Debug, Default)]
+pub struct TierTraffic {
+    /// Bytes the inter-host `ShardMsg`s would occupy on the wire (the
+    /// exact encoded `Mux` frame length, header included).
+    pub inter_host_bytes: AtomicU64,
+    /// Inter-host `ShardMsg`s sent.
+    pub inter_host_msgs: AtomicU64,
+    /// Same-host cross-shard `ShardMsg`s sent (these never touch the
+    /// codec in a real deployment).
+    pub intra_host_msgs: AtomicU64,
+}
+
+impl TierTraffic {
+    /// Snapshot `(inter_host_bytes, inter_host_msgs, intra_host_msgs)`.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.inter_host_bytes.load(Ordering::Relaxed),
+            self.inter_host_msgs.load(Ordering::Relaxed),
+            self.intra_host_msgs.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A [`LocalWorker`] that classifies every peer send against a
+/// [`TierLayout`] and records what the slow tier *would* carry: the
+/// in-process twin of the real two-tier deployment, with identical
+/// routing decisions and bit-identical results.
+pub struct CountingTieredWorker {
+    inner: LocalWorker,
+    layout: TierLayout,
+    traffic: Arc<TierTraffic>,
+}
+
+impl CountingTieredWorker {
+    /// Wrap `inner`, charging inter-host sends to `traffic`.
+    pub fn new(
+        inner: LocalWorker,
+        layout: TierLayout,
+        traffic: Arc<TierTraffic>,
+    ) -> CountingTieredWorker {
+        CountingTieredWorker {
+            inner,
+            layout,
+            traffic,
+        }
+    }
+}
+
+impl WorkerTransport for CountingTieredWorker {
+    fn shard(&self) -> usize {
+        self.inner.shard()
+    }
+
+    fn shards(&self) -> usize {
+        WorkerTransport::shards(&self.inner)
+    }
+
+    fn recv_ctl(&mut self) -> Result<Ctl, TransportError> {
+        self.inner.recv_ctl()
+    }
+
+    fn send_report(&mut self, msg: Report) -> Result<(), TransportError> {
+        self.inner.send_report(msg)
+    }
+
+    fn send_peer(&mut self, peer: usize, msg: ShardMsg) -> Result<(), TransportError> {
+        let msg = if self.layout.is_inter_host(self.inner.shard(), peer) {
+            // measure the exact frame the egress pump would emit: a Mux
+            // envelope addressed to the destination shard (ShardMsg is
+            // deliberately not Clone, so wrap, measure, and unwrap)
+            let wm = WireMsg::Mux {
+                shard: peer,
+                inner: Box::new(WireMsg::Peer(msg)),
+            };
+            let len = encode_frame(&wm).len() as u64;
+            self.traffic.inter_host_bytes.fetch_add(len, Ordering::Relaxed);
+            self.traffic.inter_host_msgs.fetch_add(1, Ordering::Relaxed);
+            let WireMsg::Mux { inner, .. } = wm else {
+                unreachable!("just built");
+            };
+            let WireMsg::Peer(msg) = *inner else {
+                unreachable!("just built");
+            };
+            msg
+        } else {
+            self.traffic.intra_host_msgs.fetch_add(1, Ordering::Relaxed);
+            msg
+        };
+        self.inner.send_peer(peer, msg)
+    }
+
+    fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError> {
+        self.inner.recv_peer(wait)
+    }
+}
+
+// ---------------------------------------------------------------- leader
+
+/// Initial state shipped to one host in its [`HostInit`] frame: per
+/// local shard, the shard's first node id and its carved load slice.
+pub struct HostSeed {
+    /// In global-shard order within the host's block.
+    pub shards: Vec<(usize, Vec<Vec<Load>>)>,
+}
+
+/// The leader's two-tier endpoint: one connected socket per *host*,
+/// each carrying the Mux-wrapped control/report traffic of all of that
+/// host's shards.
+pub struct TieredLeader {
+    layout: TierLayout,
+    poller: Poller,
+    /// Poller token per host.
+    tokens: Vec<usize>,
+    /// Shard sent its terminal report (possibly synthesized from a lost
+    /// host connection); ignore anything further.
+    done: Vec<bool>,
+    queue: VecDeque<Report>,
+    events: VecDeque<Event>,
+}
+
+impl TieredLeader {
+    /// Accept `layout.hosts` host processes on `listener`, then complete
+    /// the handshake: collect `Hello`s (each carrying the host's mesh
+    /// listener address), assign host indices in connection order, and
+    /// ship every host its [`HostInit`].
+    pub fn accept(
+        listener: LeaderListener,
+        layout: TierLayout,
+        algo: &str,
+        seeds: Vec<HostSeed>,
+    ) -> Result<TieredLeader> {
+        assert_eq!(seeds.len(), layout.hosts, "one seed per host");
+        let listener = listener.into_inner();
+        let mut conns = Vec::with_capacity(layout.hosts);
+        for h in 0..layout.hosts {
+            let stream = accept_with_deadline(
+                &listener,
+                HANDSHAKE_TIMEOUT,
+                &format!("cluster host {} of {}", h + 1, layout.hosts),
+            )?;
+            conns.push(stream);
+        }
+        Self::handshake(conns, layout, algo, seeds)
+    }
+
+    /// Dial one listening host process per address (each started with
+    /// `bcm-dlb cluster-worker --listen`), then complete the handshake.
+    /// Host `i` of `addrs` becomes host index `i`.
+    pub fn connect(
+        addrs: &[String],
+        layout: TierLayout,
+        algo: &str,
+        seeds: Vec<HostSeed>,
+    ) -> Result<TieredLeader> {
+        assert_eq!(addrs.len(), layout.hosts, "one address per host");
+        assert_eq!(seeds.len(), layout.hosts, "one seed per host");
+        let mut conns = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
+                .with_context(|| format!("dialing cluster host {addr}"))?;
+            conns.push(stream);
+        }
+        Self::handshake(conns, layout, algo, seeds)
+    }
+
+    fn handshake(
+        mut conns: Vec<TcpStream>,
+        layout: TierLayout,
+        algo: &str,
+        seeds: Vec<HostSeed>,
+    ) -> Result<TieredLeader> {
+        let mut host_peers = Vec::with_capacity(conns.len());
+        for (h, stream) in conns.iter_mut().enumerate() {
+            match read_frame_timed(stream, &format!("Hello from host {h}"))? {
+                WireMsg::Hello { peer_addr, rejoin: _ } => host_peers.push(peer_addr),
+                other => {
+                    return Err(anyhow!("host {h} handshake: expected Hello, got {other:?}"))
+                }
+            }
+        }
+        for (h, (stream, seed)) in conns.iter_mut().zip(seeds).enumerate() {
+            let msg = WireMsg::HostInit(HostInit {
+                host: h,
+                hosts: layout.hosts,
+                shards_per_host: layout.shards_per_host,
+                algo: algo.to_string(),
+                shards: seed.shards,
+                host_peers: host_peers.clone(),
+                token: fresh_token(h),
+            });
+            write_frame(stream, &msg).with_context(|| format!("sending HostInit to host {h}"))?;
+        }
+        let mut poller = Poller::new();
+        let mut tokens = Vec::with_capacity(conns.len());
+        for stream in conns {
+            tokens.push(
+                poller
+                    .add_frame_conn(stream)
+                    .context("registering a host socket")?,
+            );
+        }
+        Ok(TieredLeader {
+            done: vec![false; layout.shards()],
+            layout,
+            poller,
+            tokens,
+            queue: VecDeque::new(),
+            events: VecDeque::new(),
+        })
+    }
+
+    fn host_of_token(&self, token: usize) -> Option<usize> {
+        self.tokens.iter().position(|&t| t == token)
+    }
+
+    /// Declare every not-yet-terminal shard of `host` dead, queueing one
+    /// synthesized error per casualty — the whole-host analogue of the
+    /// flat leader's connection-loss synthesis, shaped so the recovery
+    /// drain classifies each shard individually.
+    fn host_lost(&mut self, host: usize, reason: &str) {
+        for s in self.layout.host_range(host) {
+            if self.done[s] {
+                continue;
+            }
+            self.done[s] = true;
+            self.queue.push_back(Report::Error {
+                job: None,
+                shard: s,
+                round: None,
+                message: format!("host connection lost: {reason}"),
+            });
+        }
+        self.poller.set_done(self.tokens[host]);
+    }
+
+    fn absorb(&mut self, ev: Event) {
+        match ev {
+            Event::Frame { token, msg } => {
+                let Some(host) = self.host_of_token(token) else {
+                    return;
+                };
+                match msg {
+                    WireMsg::Mux { shard, inner } => {
+                        if shard >= self.done.len() || self.layout.host_of(shard) != host {
+                            self.host_lost(host, &format!("report for foreign shard {shard}"));
+                            return;
+                        }
+                        if self.done[shard] {
+                            return;
+                        }
+                        match *inner {
+                            WireMsg::Report(report) => {
+                                let terminal = match &report {
+                                    Report::Final { .. } => true,
+                                    Report::Error { job, .. } => job.is_none(),
+                                    _ => false,
+                                };
+                                if terminal {
+                                    self.done[shard] = true;
+                                    if self.layout.host_range(host).all(|s| self.done[s]) {
+                                        self.poller.set_done(token);
+                                    }
+                                }
+                                self.queue.push_back(report);
+                            }
+                            other => self.host_lost(
+                                host,
+                                &format!("protocol violation: unexpected frame {other:?}"),
+                            ),
+                        }
+                    }
+                    other => self.host_lost(
+                        host,
+                        &format!("protocol violation: unwrapped frame {other:?}"),
+                    ),
+                }
+            }
+            Event::Closed { token, reason } => {
+                if let Some(host) = self.host_of_token(token) {
+                    self.host_lost(host, &reason);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+impl LeaderTransport for TieredLeader {
+    fn shards(&self) -> usize {
+        self.layout.shards()
+    }
+
+    fn send_ctl(&mut self, shard: usize, msg: Ctl) -> Result<(), TransportError> {
+        // same egress economy as the flat TCP leader: a worker only
+        // reads its own slice of each plan, so blank the other shards'
+        // entries before serializing
+        let msg = match msg {
+            Ctl::RunBatch {
+                job,
+                start_round,
+                rounds,
+                seed,
+                plans,
+                checkpoint,
+            } => {
+                let sliced: Vec<Arc<RoundPlan>> = plans
+                    .iter()
+                    .map(|p| {
+                        let mut per_shard = vec![ShardPlan::default(); p.per_shard.len()];
+                        per_shard[shard] = p.per_shard[shard].clone();
+                        Arc::new(RoundPlan {
+                            per_shard,
+                            cross_edges: p.cross_edges,
+                            edges: p.edges,
+                        })
+                    })
+                    .collect();
+                Ctl::RunBatch {
+                    job,
+                    start_round,
+                    rounds,
+                    seed,
+                    plans: Arc::new(sliced),
+                    checkpoint,
+                }
+            }
+            other => other,
+        };
+        let host = self.layout.host_of(shard);
+        let token = self.tokens[host];
+        if self.poller.is_closed(token) {
+            return Err(TransportError::Closed(format!(
+                "host {host} connection closed (shard {shard} unreachable)"
+            )));
+        }
+        self.poller
+            .send(
+                token,
+                &WireMsg::Mux {
+                    shard,
+                    inner: Box::new(WireMsg::Ctl(msg)),
+                },
+            )
+            .map_err(|e| TransportError::Closed(format!("host {host} connection closed: {e}")))
+    }
+
+    fn recv_report(&mut self, wait: Duration) -> Result<Report, TransportError> {
+        let deadline = Instant::now() + wait;
+        loop {
+            if let Some(r) = self.queue.pop_front() {
+                return Ok(r);
+            }
+            if self.done.iter().all(|&d| d) {
+                return Err(TransportError::Closed(
+                    "all cluster host connections closed".to_string(),
+                ));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            self.poller.poll(deadline - now, &mut self.events);
+            while let Some(ev) = self.events.pop_front() {
+                self.absorb(ev);
+            }
+        }
+    }
+
+    // await_rejoin: the trait default (`Ok(None)`) is deliberate — a
+    // tiered cluster recovers a lost host by reassigning its shards
+    // onto the survivors, never by re-admitting a replacement host.
+}
+
+// ------------------------------------------------------- host process
+
+/// Leader-bound traffic a local shard worker hands to the pump.
+enum Up {
+    Report { shard: usize, msg: Report },
+    Remote { to: usize, msg: ShardMsg },
+}
+
+/// Control-plane traffic the pump hands to a local shard worker.
+enum Down {
+    Ctl(Box<Ctl>),
+    Gone(String),
+}
+
+/// Data-plane traffic entering a local shard worker: a sibling's direct
+/// send, a remote shard's Mux'd frame, or a host-link loss marker.
+enum PeerIn {
+    Msg(ShardMsg),
+    Gone { host: usize, reason: String },
+}
+
+/// A shard worker's endpoint inside a two-tier host process: mpsc to
+/// the pump for everything that leaves the host, mpsc straight to the
+/// sibling for everything that does not.
+struct TieredWorkerTransport {
+    shard: usize,
+    layout: TierLayout,
+    down_rx: Receiver<Down>,
+    up_tx: Sender<Up>,
+    peer_rx: Receiver<PeerIn>,
+    /// Direct channels to the host's workers, by local index (the
+    /// worker's own entry included, by symmetry with `local::pair`).
+    sibling_tx: Vec<Sender<PeerIn>>,
+    /// Peer events pulled off `peer_rx` by a remesh purge, replayed
+    /// ahead of the channel.
+    replay: VecDeque<PeerIn>,
+}
+
+impl TieredWorkerTransport {
+    fn peer_event(&mut self, got: PeerIn) -> Result<ShardMsg, TransportError> {
+        match got {
+            PeerIn::Msg(m) => Ok(m),
+            PeerIn::Gone { host, reason } => Err(TransportError::Closed(format!(
+                "host {host} disconnected: {reason}"
+            ))),
+        }
+    }
+}
+
+impl WorkerTransport for TieredWorkerTransport {
+    fn shard(&self) -> usize {
+        self.shard
+    }
+
+    fn shards(&self) -> usize {
+        self.layout.shards()
+    }
+
+    fn recv_ctl(&mut self) -> Result<Ctl, TransportError> {
+        match self.down_rx.recv() {
+            Ok(Down::Ctl(c)) => Ok(*c),
+            Ok(Down::Gone(reason)) => Err(TransportError::Closed(reason)),
+            Err(_) => Err(TransportError::Closed(
+                "host pump terminated".to_string(),
+            )),
+        }
+    }
+
+    fn send_report(&mut self, msg: Report) -> Result<(), TransportError> {
+        self.up_tx
+            .send(Up::Report {
+                shard: self.shard,
+                msg,
+            })
+            .map_err(|_| TransportError::Closed("host pump terminated".to_string()))
+    }
+
+    fn send_peer(&mut self, peer: usize, msg: ShardMsg) -> Result<(), TransportError> {
+        if self.layout.is_inter_host(self.shard, peer) {
+            self.up_tx
+                .send(Up::Remote { to: peer, msg })
+                .map_err(|_| TransportError::Closed("host pump terminated".to_string()))
+        } else {
+            let local = peer - self.layout.host_range(self.layout.host_of(peer)).start;
+            self.sibling_tx[local]
+                .send(PeerIn::Msg(msg))
+                .map_err(|_| TransportError::Closed(format!("sibling shard {peer} exited")))
+        }
+    }
+
+    fn recv_peer(&mut self, wait: Duration) -> Result<ShardMsg, TransportError> {
+        if let Some(got) = self.replay.pop_front() {
+            return self.peer_event(got);
+        }
+        match self.peer_rx.recv_timeout(wait) {
+            Ok(got) => self.peer_event(got),
+            Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Closed(
+                "host pump terminated".to_string(),
+            )),
+        }
+    }
+
+    fn remesh_peer(&mut self, shard: usize, _addr: &str) -> Result<(), TransportError> {
+        // a reassigned-away shard's host link may have queued loss
+        // markers; purge them so an idle survivor does not trip over a
+        // stale `Gone` in its next epoch (tiered recovery is
+        // reassign-only, so the address is always empty)
+        let lost = self.layout.host_of(shard);
+        self.replay
+            .retain(|e| !matches!(e, PeerIn::Gone { host, .. } if *host == lost));
+        while let Ok(got) = self.peer_rx.try_recv() {
+            if matches!(&got, PeerIn::Gone { host, .. } if *host == lost) {
+                continue;
+            }
+            self.replay.push_back(got);
+        }
+        Ok(())
+    }
+}
+
+/// Serve one two-tier host process: build the host mesh, spawn the
+/// in-process shard workers (each pinned to its own core when `pin`),
+/// and pump frames between the sockets and the workers until the
+/// cluster shuts down.  Entered from `tcp::serve` when the leader's
+/// init frame turns out to be a [`HostInit`].
+pub(crate) fn serve_host(
+    leader: TcpStream,
+    mesh_listener: TcpListener,
+    hi: HostInit,
+    fault_exit: Option<usize>,
+    pin: bool,
+) -> Result<()> {
+    let HostInit {
+        host,
+        hosts,
+        shards_per_host,
+        algo,
+        shards,
+        host_peers,
+        token: _,
+    } = hi;
+    if hosts == 0
+        || shards_per_host == 0
+        || host >= hosts
+        || host_peers.len() != hosts
+        || shards.len() != shards_per_host
+    {
+        return Err(anyhow!(
+            "handshake: inconsistent HostInit (host {host} of {hosts}, \
+             {shards_per_host} shards per host, {} slices, {} peers)",
+            shards.len(),
+            host_peers.len()
+        ));
+    }
+    let layout = TierLayout::new(hosts, shards_per_host);
+    let algo = PairAlgorithm::parse(&algo)
+        .with_context(|| format!("leader sent unknown algorithm '{algo}'"))?;
+    // host mesh: dial every lower host, accept every higher one, so
+    // each unordered host pair shares exactly one socket (`PeerHello`
+    // carries the host index on this tier)
+    let mut mesh: Vec<Option<TcpStream>> = (0..hosts).map(|_| None).collect();
+    for (h, addr) in host_peers.iter().enumerate().take(host) {
+        let mut stream = connect_with_retry(addr, DEFAULT_CONNECT_RETRIES)
+            .with_context(|| format!("dialing peer host {h} at {addr}"))?;
+        write_frame(&mut stream, &WireMsg::PeerHello { shard: host })
+            .with_context(|| format!("greeting peer host {h}"))?;
+        mesh[h] = Some(stream);
+    }
+    for _ in host + 1..hosts {
+        let mut stream =
+            accept_with_deadline(&mesh_listener, HANDSHAKE_TIMEOUT, "a host-mesh connection")?;
+        match read_frame_timed(&mut stream, "PeerHello")? {
+            WireMsg::PeerHello { shard: h } if h < hosts && h > host && mesh[h].is_none() => {
+                mesh[h] = Some(stream);
+            }
+            WireMsg::PeerHello { shard: h } => {
+                return Err(anyhow!("host mesh: unexpected PeerHello from host {h}"))
+            }
+            other => return Err(anyhow!("host mesh: expected PeerHello, got {other:?}")),
+        }
+    }
+    // channel fabric: per worker one control lane (pump -> worker), one
+    // peer lane (pump or sibling -> worker); one shared up lane
+    // (workers -> pump)
+    let (up_tx, up_rx) = channel::<Up>();
+    let mut down_tx = Vec::with_capacity(shards_per_host);
+    let mut down_rx = Vec::with_capacity(shards_per_host);
+    let mut peer_tx = Vec::with_capacity(shards_per_host);
+    let mut peer_rx = Vec::with_capacity(shards_per_host);
+    for _ in 0..shards_per_host {
+        let (dt, dr) = channel::<Down>();
+        down_tx.push(dt);
+        down_rx.push(dr);
+        let (pt, pr) = channel::<PeerIn>();
+        peer_tx.push(pt);
+        peer_rx.push(pr);
+    }
+    let base = layout.host_range(host).start;
+    eprintln!(
+        "cluster-worker: host {host}/{hosts} serving shards {base}..{} \
+         ({shards_per_host} in-process)",
+        base + shards_per_host
+    );
+    let mut handles = Vec::with_capacity(shards_per_host);
+    for (i, ((lo, nodes), (dr, pr))) in shards
+        .into_iter()
+        .zip(down_rx.into_iter().zip(peer_rx))
+        .enumerate()
+    {
+        let transport = TieredWorkerTransport {
+            shard: base + i,
+            layout,
+            down_rx: dr,
+            up_tx: up_tx.clone(),
+            peer_rx: pr,
+            sibling_tx: peer_tx.clone(),
+            replay: VecDeque::new(),
+        };
+        let mut worker = ShardWorker::new(Box::new(transport));
+        worker.install_job(0, lo, nodes, algo);
+        if let Some(round) = fault_exit {
+            worker.set_fault_exit(round);
+        }
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("shard-{}", base + i))
+                .spawn(move || {
+                    if pin && !affinity::pin_current_thread(i) {
+                        eprintln!(
+                            "cluster-worker: could not pin shard {} to cpu {i}, running unpinned",
+                            base + i
+                        );
+                    }
+                    worker.run()
+                })
+                .context("spawning a shard worker thread")?,
+        );
+    }
+    // the pump must observe worker exits as channel disconnects, so it
+    // keeps no spare sender
+    drop(up_tx);
+    pump(
+        leader, mesh, layout, host, up_rx, &down_tx, &peer_tx,
+    )?;
+    drop(down_tx);
+    drop(peer_tx);
+    let mut first_err = None;
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                first_err.get_or_insert(format!("shard {} terminated abnormally: {e}", base + i));
+            }
+            Err(p) => {
+                let msg = crate::coordinator::worker::panic_message(p.as_ref());
+                first_err.get_or_insert(format!("shard {} panicked: {msg}", base + i));
+            }
+        }
+    }
+    match first_err {
+        None => Ok(()),
+        Some(msg) => Err(anyhow!("cluster-worker host {host}: {msg}")),
+    }
+}
+
+/// The host's egress/ingress pump: one poller over the leader link and
+/// the host mesh, one drain of the workers' shared up-channel per pass.
+/// Returns once every worker has exited (their senders disconnect) and
+/// all buffered socket writes are flushed or abandoned.
+fn pump(
+    leader: TcpStream,
+    mesh: Vec<Option<TcpStream>>,
+    layout: TierLayout,
+    host: usize,
+    up_rx: Receiver<Up>,
+    down_tx: &[Sender<Down>],
+    peer_tx: &[Sender<PeerIn>],
+) -> Result<()> {
+    let base = layout.host_range(host).start;
+    let mut poller = Poller::new();
+    let leader_tok = poller
+        .add_frame_conn(leader)
+        .context("registering the leader socket")?;
+    let mut host_toks: Vec<Option<usize>> = vec![None; mesh.len()];
+    for (h, slot) in mesh.into_iter().enumerate() {
+        if let Some(stream) = slot {
+            host_toks[h] = Some(
+                poller
+                    .add_frame_conn(stream)
+                    .context("registering a host-mesh socket")?,
+            );
+        }
+    }
+    let mut events: VecDeque<Event> = VecDeque::new();
+    let mut workers_done = false;
+    while !workers_done {
+        // outbound: everything the workers queued since the last pass
+        let mut moved = false;
+        loop {
+            match up_rx.try_recv() {
+                Ok(Up::Report { shard, msg }) => {
+                    moved = true;
+                    let _ = poller.send(
+                        leader_tok,
+                        &WireMsg::Mux {
+                            shard,
+                            inner: Box::new(WireMsg::Report(msg)),
+                        },
+                    );
+                }
+                Ok(Up::Remote { to, msg }) => {
+                    moved = true;
+                    debug_assert_ne!(layout.host_of(to), host, "remote send to own host");
+                    // a send toward a dead host is dropped: the loss
+                    // marker already en route to the worker ends its
+                    // round with the proper error
+                    if let Some(tok) = host_toks[layout.host_of(to)] {
+                        let _ = poller.send(
+                            tok,
+                            &WireMsg::Mux {
+                                shard: to,
+                                inner: Box::new(WireMsg::Peer(msg)),
+                            },
+                        );
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    workers_done = true;
+                    break;
+                }
+            }
+        }
+        if workers_done {
+            break;
+        }
+        // inbound: drain the sockets (zero wait when the outbound pass
+        // moved traffic, so a ready reply never waits out the idle nap)
+        let wait = if moved { Duration::ZERO } else { PUMP_IDLE_WAIT };
+        poller.poll(wait, &mut events);
+        while let Some(ev) = events.pop_front() {
+            route_event(
+                ev, leader_tok, &host_toks, layout, base, down_tx, peer_tx,
+            );
+        }
+    }
+    // the workers' last reports (their `Final`s) may still sit in the
+    // poller's write buffers: retry until flushed or plainly undeliverable
+    let deadline = Instant::now() + PUMP_FLUSH_TIMEOUT;
+    while Instant::now() < deadline {
+        let pending = poller.pending_tx(leader_tok)
+            + host_toks
+                .iter()
+                .flatten()
+                .map(|&t| poller.pending_tx(t))
+                .sum::<usize>();
+        if pending == 0 || poller.is_closed(leader_tok) {
+            break;
+        }
+        poller.poll(Duration::from_millis(5), &mut events);
+        events.clear();
+    }
+    Ok(())
+}
+
+/// Route one poller event into the worker channels.  Send failures are
+/// ignored: a worker that already exited has no further use for them.
+fn route_event(
+    ev: Event,
+    leader_tok: usize,
+    host_toks: &[Option<usize>],
+    layout: TierLayout,
+    base: usize,
+    down_tx: &[Sender<Down>],
+    peer_tx: &[Sender<PeerIn>],
+) {
+    let host_of_token =
+        |token: usize| host_toks.iter().position(|&t| t == Some(token));
+    match ev {
+        Event::Frame { token, msg } if token == leader_tok => match msg {
+            WireMsg::Mux { shard, inner } => {
+                let Some(local) = shard.checked_sub(base).filter(|&l| l < down_tx.len())
+                else {
+                    return;
+                };
+                match *inner {
+                    WireMsg::Ctl(ctl) => {
+                        let _ = down_tx[local].send(Down::Ctl(Box::new(ctl)));
+                    }
+                    other => {
+                        let reason =
+                            format!("protocol violation: unexpected frame from leader {other:?}");
+                        for tx in down_tx {
+                            let _ = tx.send(Down::Gone(reason.clone()));
+                        }
+                    }
+                }
+            }
+            other => {
+                let reason = format!("protocol violation: unwrapped frame from leader {other:?}");
+                for tx in down_tx {
+                    let _ = tx.send(Down::Gone(reason.clone()));
+                }
+            }
+        },
+        Event::Frame { token, msg } => {
+            let Some(h) = host_of_token(token) else {
+                return;
+            };
+            match msg {
+                WireMsg::Mux { shard, inner } => {
+                    let Some(local) = shard.checked_sub(base).filter(|&l| l < peer_tx.len())
+                    else {
+                        return;
+                    };
+                    match *inner {
+                        WireMsg::Peer(m) => {
+                            let _ = peer_tx[local].send(PeerIn::Msg(m));
+                        }
+                        other => {
+                            let reason =
+                                format!("protocol violation: unexpected frame {other:?}");
+                            for tx in peer_tx {
+                                let _ = tx.send(PeerIn::Gone {
+                                    host: h,
+                                    reason: reason.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+                other => {
+                    let reason = format!("protocol violation: unwrapped frame {other:?}");
+                    for tx in peer_tx {
+                        let _ = tx.send(PeerIn::Gone {
+                            host: h,
+                            reason: reason.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        Event::Closed { token, reason } => {
+            if token == leader_tok {
+                let reason = format!("leader connection lost: {reason}");
+                for tx in down_tx {
+                    let _ = tx.send(Down::Gone(reason.clone()));
+                }
+            } else if let Some(h) = host_of_token(token) {
+                for tx in peer_tx {
+                    let _ = tx.send(PeerIn::Gone {
+                        host: h,
+                        reason: reason.clone(),
+                    });
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::local;
+
+    #[test]
+    fn counting_wrapper_charges_only_the_slow_tier() {
+        // layout 2x2: shards {0,1} on host 0, {2,3} on host 1
+        let layout = TierLayout::new(2, 2);
+        let traffic = Arc::new(TierTraffic::default());
+        let (_leader, mut workers) = local::pair(4);
+        let w3 = workers.pop().unwrap();
+        let w2 = workers.pop().unwrap();
+        let mut w0 = CountingTieredWorker::new(
+            workers.remove(0),
+            layout,
+            traffic.clone(),
+        );
+        let settle = |edge| ShardMsg::Settle {
+            job: 0,
+            round: 0,
+            edge,
+            loads: vec![],
+        };
+        // same host: no wire bytes
+        w0.send_peer(1, settle(0)).unwrap();
+        assert_eq!(traffic.snapshot(), (0, 0, 1));
+        // cross host: exactly one Mux frame's bytes
+        w0.send_peer(2, settle(1)).unwrap();
+        let (bytes, inter, intra) = traffic.snapshot();
+        assert_eq!((inter, intra), (1, 1));
+        let expect = encode_frame(&WireMsg::Mux {
+            shard: 2,
+            inner: Box::new(WireMsg::Peer(settle(1))),
+        })
+        .len() as u64;
+        assert_eq!(bytes, expect);
+        // the payload itself still arrives untouched
+        let mut w2 = w2;
+        match w2.recv_peer(Duration::from_secs(1)).unwrap() {
+            ShardMsg::Settle { edge: 1, .. } => {}
+            other => panic!("wrong message routed: {other:?}"),
+        }
+        drop(w3);
+    }
+
+    #[test]
+    fn tiered_worker_transport_purges_stale_host_loss_on_remesh() {
+        let layout = TierLayout::new(2, 1);
+        let (up_tx, _up_rx) = channel::<Up>();
+        let (_down_tx, down_rx) = channel::<Down>();
+        let (ptx, prx) = channel::<PeerIn>();
+        let mut t = TieredWorkerTransport {
+            shard: 0,
+            layout,
+            down_rx,
+            up_tx,
+            peer_rx: prx,
+            sibling_tx: vec![ptx.clone()],
+            replay: VecDeque::new(),
+        };
+        // host 1 died while this worker idled between epochs...
+        ptx.send(PeerIn::Gone {
+            host: 1,
+            reason: "reset".into(),
+        })
+        .unwrap();
+        // ...and a live message is queued behind the stale marker
+        ptx.send(PeerIn::Msg(ShardMsg::Settle {
+            job: 0,
+            round: 7,
+            edge: 3,
+            loads: vec![],
+        }))
+        .unwrap();
+        // the demesh order for shard 1 (host 1) purges the marker only
+        t.remesh_peer(1, "").unwrap();
+        match t.recv_peer(Duration::from_millis(50)).unwrap() {
+            ShardMsg::Settle { round: 7, .. } => {}
+            other => panic!("expected the queued settle, got {other:?}"),
+        }
+    }
+}

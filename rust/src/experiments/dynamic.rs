@@ -22,16 +22,23 @@
 
 use crate::balancer::{PairAlgorithm, SortAlgo};
 use crate::bcm::{Diffusion, RunTrace, Schedule, Sequential};
-use crate::graph::Topology;
+use crate::graph::{round_matrix, spectral, Topology};
 use crate::load::{LoadState, Mobility, WeightDistribution};
+use crate::theory;
 use crate::util::rng::Pcg64;
 use crate::util::table::{f, Table};
 use crate::workload::service_traffic::{
-    apply_ops, ops_for_round, run_dynamic_engine, sustained_stats, SustainedStats, TrafficConfig,
+    apply_ops, ops_for_round, run_dynamic_engine, sustained_stats, ChurnOp, SustainedStats,
+    TrafficConfig,
 };
 
 /// Default CSV landing spot for the E14 table.
 pub const E14_CSV: &str = "results/e14_service_traffic.csv";
+
+/// The predicted-bound column caps its spectral computation at this
+/// many nodes: round-matrix assembly is O(n³·d), so larger runs report
+/// no prediction (`predicted_bound = None`, rendered as `-`).
+const PREDICTED_BOUND_MAX_N: usize = 256;
 
 /// One protocol's outcome under the churn stream.
 pub struct DynamicCell {
@@ -41,6 +48,36 @@ pub struct DynamicCell {
     pub trace: RunTrace,
     /// Sustained metrics over the trailing window.
     pub sustained: SustainedStats,
+    /// The Berenbrink-style plateau prediction
+    /// ([`theory::sustained_discrepancy_bound`]): worst per-sweep
+    /// injected imbalance of the measured churn stream divided by the
+    /// round matrix's spectral slack, plus the §3 discrete floor.
+    /// `None` when `n > 256` (the spectral factor is too expensive).
+    pub predicted_bound: Option<f64>,
+}
+
+/// Worst per-sweep imbalance injected by the churn stream, bounded
+/// purely from the generated ops: an arrival shifts one node total by
+/// its weight, a departure by at most `l_max`, a drift by at most
+/// `|factor − 1| · l_max`.
+fn churn_per_sweep(cfg: &TrafficConfig, seed: u64, rounds: usize, n: usize, d: usize, l_max: f64) -> f64 {
+    let d = d.max(1);
+    let mut worst = 0.0f64;
+    let mut acc = 0.0f64;
+    for round in 0..rounds {
+        for op in ops_for_round(cfg, seed, round, n) {
+            acc += match op {
+                ChurnOp::Arrive { weight, .. } => weight,
+                ChurnOp::Depart { .. } => l_max,
+                ChurnOp::Drift { factor, .. } => (factor - 1.0).abs() * l_max,
+            };
+        }
+        if (round + 1) % d == 0 {
+            worst = worst.max(acc);
+            acc = 0.0;
+        }
+    }
+    worst.max(acc)
 }
 
 /// The E14 report: one [`DynamicCell`] per protocol plus the rendered
@@ -77,6 +114,24 @@ pub fn run_dynamic_experiment(
         &mut rng,
     );
 
+    // spectral slack of one schedule sweep (shared by every protocol
+    // row: the round matrix is a property of the schedule, not of the
+    // pairwise algorithm); skipped above the O(n^3 d) affordability cap
+    let lambda = (n <= PREDICTED_BOUND_MAX_N).then(|| {
+        let m = round_matrix(n, schedule.matchings());
+        spectral::contraction_factor(&m, 500, seed).min(0.999_999)
+    });
+    // the predicted plateau per protocol: measured churn per sweep over
+    // the spectral slack plus the discrete floor, with l_max estimated
+    // from the states the run actually saw (initial and final)
+    let predict = |final_state: &LoadState| {
+        lambda.map(|lam| {
+            let l_max = state0.max_load_weight().max(final_state.max_load_weight());
+            let per_sweep = churn_per_sweep(cfg, seed, rounds, n, schedule.period(), l_max);
+            theory::sustained_discrepancy_bound(per_sweep, lam, n, l_max)
+        })
+    };
+
     let mut cells = Vec::new();
     for (name, algo) in [
         ("bcm/sorted-greedy", PairAlgorithm::SortedGreedy(SortAlgo::Quick)),
@@ -88,6 +143,7 @@ pub fn run_dynamic_experiment(
         cells.push(DynamicCell {
             name,
             sustained: sustained_stats(&trace, window),
+            predicted_bound: predict(&state),
             trace,
         });
     }
@@ -114,6 +170,7 @@ pub fn run_dynamic_experiment(
         cells.push(DynamicCell {
             name: "diffusion/fos",
             sustained: sustained_stats(&trace, window),
+            predicted_bound: predict(&state),
             trace,
         });
     }
@@ -130,6 +187,7 @@ pub fn run_dynamic_experiment(
             "sustained_mean",
             "sustained_p99",
             "sustained_max",
+            "predicted_bound",
             "movements",
             "migration_bytes",
         ],
@@ -140,6 +198,7 @@ pub fn run_dynamic_experiment(
             f(c.sustained.mean, 4),
             f(c.sustained.p99, 4),
             f(c.sustained.max, 4),
+            c.predicted_bound.map_or_else(|| "-".to_string(), |b| f(b, 2)),
             c.sustained.movements.to_string(),
             c.sustained.migration_bytes.to_string(),
         ]);
@@ -170,6 +229,7 @@ mod tests {
         assert_eq!(r.table.rows.len(), 3);
         let names: Vec<_> = r.cells.iter().map(|c| c.name).collect();
         assert_eq!(names, ["bcm/sorted-greedy", "bcm/greedy", "diffusion/fos"]);
+        assert_eq!(r.table.headers.len(), 7, "predicted_bound column missing");
         for c in &r.cells {
             assert_eq!(c.trace.rounds.len(), 24);
             assert_eq!(c.sustained.window, 8);
@@ -180,6 +240,10 @@ mod tests {
                 c.sustained.migration_bytes,
                 c.sustained.movements as u64 * 17
             );
+            // n=16 is far below the spectral cap, so every row carries a
+            // finite positive plateau prediction
+            let b = c.predicted_bound.expect("predicted bound computed");
+            assert!(b.is_finite() && b > 0.0, "{}: bad bound {b}", c.name);
         }
         // the arrival stream keeps injecting imbalance, so every
         // protocol must actually move loads to hold its plateau

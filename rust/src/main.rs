@@ -9,7 +9,7 @@ use bcm_dlb::cli::{Args, USAGE};
 use bcm_dlb::config::ExperimentConfig;
 use bcm_dlb::coordinator::transport::tcp::{self, LeaderListener, DEFAULT_CONNECT_RETRIES};
 use bcm_dlb::coordinator::transport::TransportKind;
-use bcm_dlb::coordinator::Cluster;
+use bcm_dlb::coordinator::{resolve_shards, Cluster, TierLayout};
 use bcm_dlb::experiments::{figures, run_dynamic_experiment, scaling, validate, SweepParams, E14_CSV};
 use bcm_dlb::graph::{round_matrix, spectral, Topology};
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
@@ -22,8 +22,8 @@ use bcm_dlb::util::rng::Pcg64;
 use bcm_dlb::util::stats::Welford;
 use bcm_dlb::util::table::{f, Table};
 use bcm_dlb::workload::{
-    run_driver, run_dynamic_cluster, run_dynamic_engine, sustained_stats, DlbPolicy, ParticleSim,
-    TrafficConfig,
+    run_driver, run_dynamic_cluster, run_dynamic_cluster_tiered, run_dynamic_engine,
+    sustained_stats, DlbPolicy, ParticleSim, TrafficConfig,
 };
 use std::path::Path;
 
@@ -54,6 +54,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "run" => cmd_run(args),
         "cluster-worker" => cmd_cluster_worker(args),
+        "launch" => cmd_launch(args),
         "serve" => cmd_serve(args),
         "submit" => cmd_submit(args),
         "scale" => cmd_scale(args),
@@ -100,6 +101,10 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.shards = args.get_usize("shards", cfg.shards).map_err(|e| anyhow!(e))?;
     cfg.batch_rounds = args
         .get_usize("batch-rounds", cfg.batch_rounds)
+        .map_err(|e| anyhow!(e))?;
+    cfg.hosts = args.get_usize("hosts", cfg.hosts).map_err(|e| anyhow!(e))?;
+    cfg.shards_per_host = args
+        .get_usize("shards-per-host", cfg.shards_per_host)
         .map_err(|e| anyhow!(e))?;
     if let Some(t) = args.get("transport") {
         cfg.transport =
@@ -181,9 +186,12 @@ fn cmd_submit(args: &Args) -> Result<()> {
     } else {
         let cfg = config_from_args(args)?;
         let mut spec = cfg.to_json();
-        if args.has("verify") {
-            if let Json::Obj(o) = &mut spec {
+        if let Json::Obj(o) = &mut spec {
+            if args.has("verify") {
                 o.insert("verify".to_string(), Json::Bool(true));
+            }
+            if args.has("stats") {
+                o.insert("stats".to_string(), Json::Bool(true));
             }
         }
         spec.to_string()
@@ -209,13 +217,58 @@ fn cmd_cluster_worker(args: &Args) -> Result<()> {
         None => None,
         Some(_) => Some(args.get_usize("fault-exit", 0).map_err(|e| anyhow!(e))?),
     };
+    // --no-pin: skip the best-effort per-shard core pinning a two-tier
+    // host worker applies by default (flat workers never pin).
+    let pin = !args.has("no-pin");
     match (args.get("connect"), args.get("listen")) {
-        (Some(addr), None) => tcp::serve_connect(addr, retries, fault_exit),
-        (None, Some(addr)) => tcp::serve_listen(addr, fault_exit),
+        (Some(addr), None) => tcp::serve_connect(addr, retries, fault_exit, pin),
+        (None, Some(addr)) => tcp::serve_listen(addr, fault_exit, pin),
         _ => Err(anyhow!(
             "cluster-worker needs exactly one of --connect or --listen\n\n{USAGE}"
         )),
     }
+}
+
+/// `bcm-dlb launch`: emit the per-host command lines of a two-tier
+/// cluster — one `cluster-worker` process per host address plus the
+/// leader's `run` invocation dialing them all.  Pure text generation:
+/// paste each line on its machine (or feed them to ssh/pdsh).
+fn cmd_launch(args: &Args) -> Result<()> {
+    let hosts: Vec<String> = args
+        .get("hosts")
+        .ok_or_else(|| anyhow!("launch needs --hosts A,B,C (host addresses)\n\n{USAGE}"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if hosts.is_empty() {
+        return Err(anyhow!("--hosts list is empty"));
+    }
+    let spp = args.get_usize("shards-per-host", 1).map_err(|e| anyhow!(e))?;
+    if spp == 0 {
+        return Err(anyhow!("--shards-per-host must be >= 1 on launch (0 = per-core \
+                            only makes sense on the worker's own machine)"));
+    }
+    let port = args.get_usize("port", 7411).map_err(|e| anyhow!(e))?;
+    let no_pin = if args.has("no-pin") { " --no-pin" } else { "" };
+    println!(
+        "# two-tier cluster: {} hosts x {} shards/host = {} shard workers",
+        hosts.len(),
+        spp,
+        hosts.len() * spp
+    );
+    for (h, host) in hosts.iter().enumerate() {
+        println!("# host {h} — run on {host}:");
+        println!("bcm-dlb cluster-worker --listen {host}:{port}{no_pin}");
+    }
+    let peers: Vec<String> = hosts.iter().map(|h| format!("{h}:{port}")).collect();
+    println!("# leader — run on any machine that reaches the workers:");
+    println!(
+        "bcm-dlb run --cluster --transport tcp --hosts {} --shards-per-host {spp} --peers {}",
+        hosts.len(),
+        peers.join(",")
+    );
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -282,14 +335,42 @@ fn cmd_run(args: &Args) -> Result<()> {
             } else {
                 None
             };
-            let mut cluster = match cfg.transport {
-                TransportKind::Local => {
+            // --hosts H > 0 selects the two-tier hierarchical
+            // coordinator: H hosts x --shards-per-host in-process shard
+            // workers, shards placed cut-aware against the topology.
+            let tier = (cfg.hosts > 0)
+                .then(|| TierLayout::new(cfg.hosts, resolve_shards(cfg.shards_per_host)));
+            if tier.is_some() && cfg.shards != 0 {
+                eprintln!(
+                    "warning: --shards {} is ignored with --hosts (the tier layout \
+                     fixes the shard count)",
+                    cfg.shards
+                );
+            }
+            let mut tier_traffic = None;
+            let mut cluster = match (tier, cfg.transport) {
+                (None, TransportKind::Local) => {
                     Cluster::spawn_with_algorithm(state, cfg.algorithm, cfg.shards)
                 }
-                TransportKind::Tcp if !cfg.peers.is_empty() => {
+                (Some(layout), TransportKind::Local) => {
+                    let (c, traffic) =
+                        Cluster::spawn_tiered(state, cfg.algorithm, layout, g.edges());
+                    tier_traffic = Some(traffic);
+                    c
+                }
+                (None, TransportKind::Tcp) if !cfg.peers.is_empty() => {
                     Cluster::spawn_tcp_connect(state, cfg.algorithm, &cfg.peers)?
                 }
-                TransportKind::Tcp => {
+                (Some(layout), TransportKind::Tcp) if !cfg.peers.is_empty() => {
+                    Cluster::spawn_tcp_connect_tiered(
+                        state,
+                        cfg.algorithm,
+                        layout,
+                        g.edges(),
+                        &cfg.peers,
+                    )?
+                }
+                (None, TransportKind::Tcp) => {
                     let listener = LeaderListener::bind(&cfg.listen)?;
                     println!(
                         "tcp leader listening on {} for {} cluster-worker processes",
@@ -298,6 +379,17 @@ fn cmd_run(args: &Args) -> Result<()> {
                     );
                     Cluster::spawn_tcp(state, cfg.algorithm, cfg.shards, listener)?
                 }
+                (Some(layout), TransportKind::Tcp) => {
+                    let listener = LeaderListener::bind(&cfg.listen)?;
+                    println!(
+                        "tcp leader listening on {} for {} cluster-worker host processes \
+                         ({} shards each)",
+                        listener.local_addr()?,
+                        layout.hosts,
+                        layout.shards_per_host
+                    );
+                    Cluster::spawn_tcp_tiered(state, cfg.algorithm, layout, g.edges(), listener)?
+                }
             };
             cluster.set_batch_rounds(cfg.batch_rounds);
             cluster.set_checkpoint_every(cfg.checkpoint_every);
@@ -305,6 +397,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             let seed = cfg.seed.wrapping_add(rep as u64);
             let t = cluster.run_seeded(&schedule, cfg.sweeps, seed)?;
             let final_state = cluster.shutdown()?;
+            if let Some(traffic) = tier_traffic.take() {
+                let (bytes, msgs, intra) = traffic.snapshot();
+                println!(
+                    "tier traffic: {bytes} inter-host bytes in {msgs} messages, \
+                     {intra} intra-host messages (never framed)"
+                );
+            }
             if let Some(initial) = verify_src {
                 let mut seq_state = initial;
                 let seq_trace = Sequential.run(
@@ -441,7 +540,27 @@ fn cmd_run_dynamic(args: &Args, cfg: &ExperimentConfig, tcfg: &TrafficConfig) ->
         if rep == 0 {
             e14_shape = (rounds, window);
         }
-        let (trace, final_state) = if use_cluster {
+        let (trace, final_state) = if use_cluster && cfg.hosts > 0 {
+            let layout = TierLayout::new(cfg.hosts, resolve_shards(cfg.shards_per_host));
+            let (trace, fin, traffic) = run_dynamic_cluster_tiered(
+                state0.clone(),
+                &schedule,
+                cfg.algorithm,
+                tcfg,
+                rounds,
+                seed,
+                layout,
+                g.edges(),
+            )?;
+            if rep == 0 {
+                let (bytes, msgs, intra) = traffic.snapshot();
+                println!(
+                    "tier traffic: {bytes} inter-host bytes in {msgs} messages, \
+                     {intra} intra-host messages"
+                );
+            }
+            (trace, fin)
+        } else if use_cluster {
             run_dynamic_cluster(
                 state0.clone(),
                 &schedule,

@@ -24,6 +24,7 @@
 //! | `{"event":"start","job":J,"initial_discrepancy":D}`         | scheduled on the pool |
 //! | `{"event":"round","job":J,"round":R,"color":C,...}`         | one per round, streamed per batch |
 //! | `{"event":"recover","job":J,"round":R}`                      | worker lost; job replays from round `R` (`checkpoint_every > 0` specs only) |
+//! | `{"event":"stats","jobs_active":J,"rounds_per_s":R}`        | service-side throughput snapshot, just before `done` (`"stats": true` specs only) |
 //! | `{"event":"done","job":J,"rounds":R,...,"verified":B}`      | terminal: run complete |
 //! | `{"event":"error","message":M}`                             | terminal: job or spec failed |
 //! | `{"event":"shutdown"}`                                      | terminal: drain acknowledged |
@@ -99,6 +100,9 @@ struct VerifySrc {
 struct QueuedJob {
     spec: JobSpec,
     verify: Option<VerifySrc>,
+    /// `"stats": true` in the spec (`bcm-dlb submit --stats`): stream a
+    /// service-side throughput snapshot before the terminal `done`.
+    stats: bool,
 }
 
 /// Per-connection lifecycle.
@@ -134,6 +138,9 @@ pub struct Server {
     by_job: BTreeMap<u32, Option<usize>>,
     /// Verification sources for running `--verify` jobs.
     verify: BTreeMap<u32, VerifySrc>,
+    /// Start instants of running `--stats` jobs, for the `rounds_per_s`
+    /// figure of their terminal stats event.
+    stats: BTreeMap<u32, std::time::Instant>,
     emitter: LineEmitter<Vec<u8>>,
     shutting_down: bool,
 }
@@ -157,6 +164,7 @@ impl Server {
             pending: VecDeque::new(),
             by_job: BTreeMap::new(),
             verify: BTreeMap::new(),
+            stats: BTreeMap::new(),
             emitter: LineEmitter::new(Vec::new()),
             shutting_down: false,
         })
@@ -293,7 +301,7 @@ impl Server {
             else {
                 continue;
             };
-            let QueuedJob { spec, verify } = *queued;
+            let QueuedJob { spec, verify, stats } = *queued;
             match self.pool.open_job(spec) {
                 Ok(job) => {
                     if let Some(conn) = self.conns.get_mut(&token) {
@@ -302,6 +310,9 @@ impl Server {
                     self.by_job.insert(job, Some(token));
                     if let Some(v) = verify {
                         self.verify.insert(job, v);
+                    }
+                    if stats {
+                        self.stats.insert(job, std::time::Instant::now());
                     }
                 }
                 Err(e) => {
@@ -350,6 +361,27 @@ impl Server {
             }
             JobEvent::Finished { job, trace, state } => {
                 let token = self.by_job.remove(&job).flatten();
+                // --stats snapshot first, so the terminal `done` stays
+                // the last line: jobs still sharing the pool right now,
+                // and this job's end-to-end round throughput.
+                if let Some(started) = self.stats.remove(&job) {
+                    let secs = started.elapsed().as_secs_f64();
+                    let rps = if secs > 0.0 {
+                        trace.rounds.len() as f64 / secs
+                    } else {
+                        0.0
+                    };
+                    if let Some(token) = token {
+                        self.send_event(
+                            token,
+                            &Json::obj(vec![
+                                ("event", "stats".into()),
+                                ("jobs_active", self.by_job.len().into()),
+                                ("rounds_per_s", rps.into()),
+                            ]),
+                        );
+                    }
+                }
                 let verified = match self.verify.remove(&job) {
                     None => false,
                     Some(src) => {
@@ -401,6 +433,7 @@ impl Server {
             }
             JobEvent::Failed { job, error } => {
                 self.verify.remove(&job);
+                self.stats.remove(&job);
                 if let Some(Some(token)) = self.by_job.remove(&job) {
                     self.fail_conn(token, &error);
                 }
@@ -532,6 +565,7 @@ fn build_job(line: &str, parsed: &Json) -> Result<QueuedJob> {
             churn: cfg.traffic(),
         },
         verify,
+        stats: parsed.get("stats").as_bool().unwrap_or(false),
     })
 }
 
@@ -579,7 +613,13 @@ mod tests {
 
         let line = r#"{"n":8}"#;
         let parsed = Json::parse(line).unwrap();
-        assert!(build_job(line, &parsed).unwrap().verify.is_none());
+        let q = build_job(line, &parsed).unwrap();
+        assert!(q.verify.is_none());
+        assert!(!q.stats);
+
+        let line = r#"{"n":8,"stats":true}"#;
+        let parsed = Json::parse(line).unwrap();
+        assert!(build_job(line, &parsed).unwrap().stats);
 
         let parsed = Json::parse("{}").unwrap();
         assert!(build_job(r#"{"n":1}"#, &parsed).is_err());

@@ -57,6 +57,28 @@ pub fn sorted_greedy_last_step_bound(m: usize) -> f64 {
     1.0 / m as f64
 }
 
+/// Sustained-discrepancy plateau under churn, after Berenbrink et al.
+/// (arXiv 2302.12201): an averaging protocol whose schedule sweep
+/// contracts the continuous discrepancy by `lambda < 1` while the
+/// workload injects at most `churn_per_sweep` total imbalance per sweep
+/// settles at the fixed point of `D <= lambda · D + C`, i.e.
+/// `D_inf <= churn_per_sweep / (1 − lambda)`.  Indivisibility adds the
+/// static discrete floor on top, so the predicted plateau is
+///
+/// `churn_per_sweep / (1 − lambda) + discrete_discrepancy_bound(n, l_max)`.
+///
+/// With zero churn this degenerates to the static discrete bound — the
+/// dynamic regime strictly generalizes §3.
+pub fn sustained_discrepancy_bound(
+    churn_per_sweep: f64,
+    lambda: f64,
+    n: usize,
+    l_max: f64,
+) -> f64 {
+    assert!(churn_per_sweep >= 0.0 && (0.0..1.0).contains(&lambda));
+    churn_per_sweep / (1.0 - lambda) + discrete_discrepancy_bound(n, l_max)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +135,21 @@ mod tests {
     #[test]
     fn last_step_bound() {
         assert_eq!(sorted_greedy_last_step_bound(100), 0.01);
+    }
+
+    #[test]
+    fn sustained_bound_behaviour() {
+        // zero churn degenerates to the static discrete floor
+        assert_eq!(
+            sustained_discrepancy_bound(0.0, 0.5, 128, 1.0),
+            discrete_discrepancy_bound(128, 1.0)
+        );
+        // monotone in injected churn and in lambda -> 1
+        let base = sustained_discrepancy_bound(10.0, 0.5, 128, 1.0);
+        assert!(sustained_discrepancy_bound(20.0, 0.5, 128, 1.0) > base);
+        assert!(sustained_discrepancy_bound(10.0, 0.9, 128, 1.0) > base);
+        // a slack sweep (lambda -> 0) still pays one sweep of churn
+        let tight = sustained_discrepancy_bound(10.0, 0.0, 128, 1.0);
+        assert!((tight - 10.0 - discrete_discrepancy_bound(128, 1.0)).abs() < 1e-12);
     }
 }

@@ -1,0 +1,102 @@
+//! Best-effort CPU pinning for intra-host shard workers.
+//!
+//! The two-tier coordinator runs several shard workers as threads of one
+//! `cluster-worker` process; pinning each to its own core keeps the
+//! per-worker caches (edge scratch, arena segments) hot and stops the
+//! scheduler from stacking workers on one core while others idle.  The
+//! crate is dependency-free and links no libc, so the Linux
+//! implementation issues the raw `sched_setaffinity` syscall via inline
+//! assembly (x86_64 and aarch64); every other platform is a documented
+//! no-op.
+//!
+//! Pinning is purely a performance hint: results are bit-identical
+//! pinned or not (the determinism contract keys randomness on values,
+//! never thread placement), so every failure path — out-of-range CPU,
+//! cgroup cpuset refusal, unsupported platform — returns `false` and the
+//! caller simply proceeds unpinned.
+
+/// Largest CPU index the fixed-size syscall mask can express.
+const MASK_WORDS: usize = 16; // 16 x 64 = 1024 CPUs
+
+/// Pin the calling thread to `cpu` (best effort).
+///
+/// Returns `true` if the kernel accepted the single-CPU mask, `false`
+/// on any failure or on platforms without an implementation.  Never
+/// panics and never blocks.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    if cpu >= MASK_WORDS * 64 {
+        return false;
+    }
+    pin_impl(cpu)
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn pin_impl(cpu: usize) -> bool {
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    let ret: isize;
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: sched_setaffinity(0, len, mask) reads `len` bytes from
+    // `mask`, which outlives the call; pid 0 targets only the calling
+    // thread, and the syscall clobbers exactly rcx/r11 as declared.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,                 // pid 0 = calling thread
+            in("rsi") MASK_WORDS * 8,         // mask length in bytes
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: as above; the aarch64 svc convention clobbers only the
+    // declared registers.
+    unsafe {
+        std::arch::asm!(
+            "svc #0",
+            in("x8") 122isize,                // __NR_sched_setaffinity
+            inlateout("x0") 0isize => ret,    // pid 0 = calling thread
+            in("x1") MASK_WORDS * 8,          // mask length in bytes
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_range_cpu_is_refused_not_ub() {
+        assert!(!pin_current_thread(usize::MAX));
+        assert!(!pin_current_thread(MASK_WORDS * 64));
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[test]
+    fn some_low_cpu_accepts_a_pin() {
+        // scan the low indices on a scratch thread (a cgroup cpuset may
+        // exclude cpu 0, so any accepted pin in 0..64 counts) and leave
+        // the test runner's own affinity untouched
+        let ok = std::thread::spawn(|| (0..64).any(pin_current_thread))
+            .join()
+            .unwrap();
+        assert!(ok, "no CPU in 0..64 accepted a pin");
+    }
+
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    #[test]
+    fn unsupported_platform_is_a_clean_noop() {
+        assert!(!pin_current_thread(0));
+    }
+}

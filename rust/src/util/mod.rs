@@ -1,5 +1,7 @@
-//! Dependency-free support code: errors, RNG, JSON, statistics, tables.
+//! Dependency-free support code: errors, RNG, JSON, statistics, tables,
+//! and best-effort CPU affinity.
 
+pub mod affinity;
 pub mod error;
 pub mod json;
 pub mod rng;

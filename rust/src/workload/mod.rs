@@ -6,5 +6,6 @@ pub mod service_traffic;
 pub use particle_mesh::{run_driver, DlbPolicy, DriverResult, ParticleSim};
 pub use service_traffic::{
     apply_ops, apply_ops_nodes, id_high_water, ops_for_round, run_dynamic_cluster,
-    run_dynamic_engine, sustained_stats, ChurnOp, SustainedStats, TrafficConfig,
+    run_dynamic_cluster_tiered, run_dynamic_engine, sustained_stats, ChurnOp, SustainedStats,
+    TrafficConfig,
 };

@@ -42,10 +42,11 @@
 
 use crate::balancer::PairAlgorithm;
 use crate::bcm::{Engine, RunTrace, Schedule};
-use crate::coordinator::Cluster;
+use crate::coordinator::{Cluster, TierLayout, TierTraffic};
 use crate::load::{Load, LoadState};
 use crate::util::error::Result;
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
 /// Substream tag separating traffic draws from every other consumer of
 /// the run seed (the per-edge balancing streams use `Pcg64::for_edge`).
@@ -435,6 +436,41 @@ pub fn run_dynamic_cluster(
     let mut fin = cluster.shutdown()?;
     fin.reserve_ids(hw);
     Ok((trace, fin))
+}
+
+/// [`run_dynamic_cluster`] on the two-tier in-process twin
+/// ([`Cluster::spawn_tiered`]): the state is partitioned cut-aware
+/// against `edges`, every peer send is classified against `layout`, and
+/// the returned [`TierTraffic`] reports what the slow tier carried
+/// while the churn stream ran.  Trace and final state stay
+/// bit-identical to [`run_dynamic_engine`] with `bcm::Sequential` —
+/// the tiered partition is just another contiguous `ShardMap`.
+pub fn run_dynamic_cluster_tiered(
+    state: LoadState,
+    schedule: &Schedule,
+    algo: PairAlgorithm,
+    cfg: &TrafficConfig,
+    rounds: usize,
+    seed: u64,
+    layout: TierLayout,
+    edges: &[(u32, u32)],
+) -> Result<(RunTrace, LoadState, Arc<TierTraffic>)> {
+    let n = state.n();
+    let mut hw = state.next_id();
+    let (mut cluster, traffic) = Cluster::spawn_tiered(state, algo, layout, edges);
+    let mut trace = RunTrace {
+        initial_discrepancy: cluster.poll_discrepancy()?,
+        rounds: Vec::with_capacity(rounds),
+    };
+    for round in 0..rounds {
+        let ops = ops_for_round(cfg, seed, round, n);
+        hw = hw.max(id_high_water(&ops));
+        cluster.apply_churn(&ops)?;
+        trace.rounds.push(cluster.run_round_seeded(schedule, round, seed)?);
+    }
+    let mut fin = cluster.shutdown()?;
+    fin.reserve_ids(hw);
+    Ok((trace, fin, traffic))
 }
 
 /// Sustained-discrepancy summary of a churning run (the E14 metrics):

@@ -14,6 +14,7 @@ use bcm_dlb::coordinator::{Cluster, JobEvent, JobSpec, ShardPool};
 use bcm_dlb::graph::{Graph, Topology};
 use bcm_dlb::load::{LoadState, Mobility, WeightDistribution};
 use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::workload::{run_dynamic_engine, TrafficConfig};
 use std::collections::BTreeMap;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
@@ -206,6 +207,64 @@ fn drive(pool: &mut ShardPool, ids: &[u32]) -> BTreeMap<u32, Outcome> {
         }
     }
     out
+}
+
+#[test]
+fn pool_recovers_a_churning_tenant_bit_identically() {
+    // The elasticity drill under live churn: a worker dies *while* the
+    // service-traffic stream is mutating the load set every round.  The
+    // replay must regenerate the identical churn ops (they are a pure
+    // function of (config, seed, round, node)) on the reassigned
+    // membership and land bit-identical to the solo Sequential dynamic
+    // run — including the next_id high-water mark of departed arrivals.
+    let cfg = TrafficConfig::default();
+    let topo = Topology::parse("torus2d").expect("test topology");
+    let (n, sweeps, seed) = (16usize, 3usize, 27u64);
+    let mut rng = Pcg64::new(seed);
+    let g = topo.build(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let state = LoadState::init_uniform_counts(
+        n,
+        8,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let mut seq_state = state.clone();
+    let rounds = sweeps * schedule.period();
+    let seq_trace =
+        run_dynamic_engine(&Sequential, &mut seq_state, &schedule, ALGO, &cfg, rounds, seed);
+    assert!(rounds > 3, "scenario too short to crash at round 2");
+
+    // the injected panic hits shard 0 of wire job 1 at round 2 — after
+    // the churn ops of rounds 0..=2 have already mutated shard lists
+    let mut pool =
+        ShardPool::spawn_tuned(2, Some((0, 1, 2)), Some(Duration::from_millis(250)));
+    let id = pool
+        .open_job(JobSpec {
+            state,
+            schedule,
+            algo: ALGO,
+            sweeps,
+            seed,
+            batch: 1,
+            checkpoint_every: 1,
+            churn: Some(cfg),
+        })
+        .expect("churning job opens");
+    let out = drive(&mut pool, &[id]);
+
+    let o = &out[&id];
+    assert_eq!(o.failed, None, "churning tenant failed: {:?}", o.failed);
+    assert!(
+        !o.recoveries.is_empty(),
+        "the mid-churn crash should surface as a Recovering event"
+    );
+    let (trace, fin) = o.finished.as_ref().expect("churning tenant finishes");
+    assert_eq!(trace, &seq_trace, "mid-churn replay diverged from Sequential");
+    assert_eq!(fin, &seq_state, "final state diverged after mid-churn recovery");
+    assert_eq!(o.rounds, trace.rounds, "replay duplicated Rounds events");
+    pool.shutdown().expect("clean shutdown");
 }
 
 #[test]

@@ -323,3 +323,53 @@ fn serve_loopback_streams_verified_jobs_concurrently() {
     assert!(String::from_utf8(out).unwrap().contains("\"event\":\"shutdown\""));
     server.join().unwrap().expect("server exits cleanly");
 }
+
+#[test]
+fn serve_loopback_streams_stats_before_done() {
+    let mut server = Server::bind(ServeOptions {
+        listen: "127.0.0.1:0".to_string(),
+        max_jobs: 2,
+        shards: 2,
+        max_conns: 8,
+    })
+    .expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    let server = std::thread::spawn(move || server.run());
+
+    // "stats": true (bcm-dlb submit --stats) buys exactly one extra
+    // event line, immediately before the terminal done
+    let line = r#"{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":4,"stats":true}"#;
+    let mut out = Vec::new();
+    let ok = submit(&addr, line, &mut out).expect("submit transport ok");
+    let log = String::from_utf8(out).unwrap();
+    assert!(ok, "job errored:\n{log}");
+    let events: Vec<Json> = log.lines().map(|l| Json::parse(l).expect("valid json")).collect();
+    let stats: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("event").as_str() == Some("stats"))
+        .collect();
+    assert_eq!(stats.len(), 1, "expected exactly one stats line:\n{log}");
+    let s = stats[0];
+    // this job was alone on the pool, so zero *other* jobs were active
+    // when it finished, and its throughput is positive and finite
+    assert_eq!(s.get("jobs_active").as_usize(), Some(0));
+    let rps = s.get("rounds_per_s").as_f64().expect("rounds_per_s present");
+    assert!(rps > 0.0 && rps.is_finite(), "bad rounds_per_s: {rps}");
+    // stats is the penultimate line; done stays terminal
+    assert_eq!(
+        events[events.len() - 2].get("event").as_str(),
+        Some("stats")
+    );
+    assert_eq!(events.last().unwrap().get("event").as_str(), Some("done"));
+
+    // a spec without the flag gets no stats line
+    let line = r#"{"topology":"ring","n":16,"loads_per_node":8,"sweeps":2,"seed":4}"#;
+    let mut out = Vec::new();
+    assert!(submit(&addr, line, &mut out).expect("submit transport ok"));
+    let log = String::from_utf8(out).unwrap();
+    assert!(!log.contains("\"event\":\"stats\""), "unexpected stats line:\n{log}");
+
+    let mut out = Vec::new();
+    assert!(submit(&addr, r#"{"cmd":"shutdown"}"#, &mut out).expect("shutdown submit"));
+    server.join().unwrap().expect("server exits cleanly");
+}

@@ -142,6 +142,47 @@ fn tau_cont_predicts_continuous_convergence() {
 }
 
 #[test]
+fn sustained_plateau_stays_under_the_berenbrink_bound() {
+    // The dynamic regime (Berenbrink et al., arXiv 2302.12201): under
+    // the default service-traffic churn, each BCM protocol's *measured*
+    // sustained discrepancy must sit below the predicted plateau
+    // churn_per_sweep / (1 - lambda) + discrete floor — the E14
+    // predicted_bound column.
+    use bcm_dlb::experiments::run_dynamic_experiment;
+    use bcm_dlb::workload::TrafficConfig;
+    let r = run_dynamic_experiment(
+        &Topology::RandomConnected,
+        16,
+        20,
+        48,
+        16,
+        2013,
+        &TrafficConfig::default(),
+    );
+    for c in &r.cells {
+        let bound = c.predicted_bound.expect("n=16 is under the spectral cap");
+        assert!(bound.is_finite() && bound > 0.0, "{}: bad bound {bound}", c.name);
+        if c.name.starts_with("bcm/") {
+            assert!(
+                c.sustained.max <= bound,
+                "{}: sustained max {} exceeds predicted plateau {bound}",
+                c.name,
+                c.sustained.max
+            );
+        }
+    }
+    // the bound is a *plateau* prediction, not a vacuous infinity: it
+    // must sit within a few orders of magnitude of the measurement
+    let sorted = &r.cells[0];
+    let bound = sorted.predicted_bound.unwrap();
+    assert!(
+        bound < sorted.sustained.max * 1e6,
+        "bound {bound} is vacuously loose vs measured {}",
+        sorted.sustained.max
+    );
+}
+
+#[test]
 fn discrete_floor_scales_with_lmax() {
     // Indivisibility floor: scaling all weights by c scales the final
     // discrepancy by ~c (the protocol is scale-equivariant).

@@ -1,0 +1,293 @@
+//! Two-tier cluster acceptance: bit-identity across every (hosts ×
+//! shards-per-host × batch) layout, inter-host traffic scaling with the
+//! inter-host cut rather than the global cut, real host *processes* on
+//! loopback TCP, and whole-host failure recovery.
+
+use bcm_dlb::balancer::{PairAlgorithm, SortAlgo};
+use bcm_dlb::bcm::{Engine, Schedule, Sequential, StopRule};
+use bcm_dlb::coordinator::transport::tcp::LeaderListener;
+use bcm_dlb::coordinator::{resolve_shards, Cluster, RoundPlan, ShardMap, TierLayout};
+use bcm_dlb::graph::Graph;
+use bcm_dlb::load::{Load, LoadState, Mobility, WeightDistribution};
+use bcm_dlb::util::rng::Pcg64;
+use bcm_dlb::workload::{run_dynamic_cluster_tiered, run_dynamic_engine, TrafficConfig};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+const ALGO: PairAlgorithm = PairAlgorithm::SortedGreedy(SortAlgo::Quick);
+
+fn init_scenario(n: usize, per_node: usize, seed: u64) -> (Graph, LoadState, Schedule) {
+    let mut rng = Pcg64::new(seed);
+    let g = Graph::random_connected(n, &mut rng);
+    let schedule = Schedule::from_graph(&g);
+    let mut state = LoadState::init_uniform_counts(
+        n,
+        per_node,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    // pinned loads must survive the tiered paths too
+    state.push(0, Load::pinned(90_000, 17.5));
+    state.push(n / 2, Load::pinned(90_001, 3.25));
+    (g, state, schedule)
+}
+
+fn sequential_reference(
+    state0: &LoadState,
+    schedule: &Schedule,
+    sweeps: usize,
+    seed: u64,
+) -> (bcm_dlb::bcm::RunTrace, LoadState) {
+    let mut state = state0.clone();
+    let trace = Sequential.run(&mut state, schedule, ALGO, StopRule::sweeps(sweeps), seed);
+    (trace, state)
+}
+
+#[test]
+fn tiered_layouts_bit_identical_to_sequential() {
+    // The acceptance sweep: hosts {1,2} x shards-per-host {1,2,cores} x
+    // batch {lock-step, auto}.  A tiered partition is just another
+    // contiguous ShardMap, so every cell must reproduce the Sequential
+    // engine bit for bit — trace AND final state.
+    let n = 24;
+    let (g, state0, schedule) = init_scenario(n, 10, 41);
+    let sweeps = 4;
+    let seed = 77u64;
+    let (seq_trace, seq_state) = sequential_reference(&state0, &schedule, sweeps, seed);
+    // cap the per-core option so hosts * spp never exceeds n
+    let cores = resolve_shards(0).clamp(1, n / 2);
+    for hosts in [1usize, 2] {
+        for spp in [1usize, 2, cores] {
+            for batch in [1usize, 0] {
+                let layout = TierLayout::new(hosts, spp);
+                let (mut cluster, traffic) =
+                    Cluster::spawn_tiered(state0.clone(), ALGO, layout, g.edges());
+                assert_eq!(cluster.shards(), hosts * spp);
+                cluster.set_batch_rounds(batch);
+                let trace = cluster
+                    .run_seeded(&schedule, sweeps, seed)
+                    .expect("tiered run");
+                let fin = cluster.shutdown().expect("tiered shutdown");
+                assert_eq!(
+                    trace, seq_trace,
+                    "trace diverged at {hosts}x{spp} batch {batch}"
+                );
+                assert_eq!(
+                    fin, seq_state,
+                    "state diverged at {hosts}x{spp} batch {batch}"
+                );
+                assert!(fin.node(0).iter().any(|l| l.id == 90_000 && !l.mobile));
+                let (bytes, inter, _intra) = traffic.snapshot();
+                if hosts == 1 {
+                    // a single host has no slow tier: nothing may be framed
+                    assert_eq!(
+                        (bytes, inter),
+                        (0, 0),
+                        "single-host layout leaked onto the wire"
+                    );
+                } else {
+                    // a connected graph split across hosts always pays
+                    // some inter-host traffic
+                    assert!(inter > 0, "{hosts}x{spp}: no inter-host messages counted");
+                    assert!(bytes > 0, "{hosts}x{spp}: inter-host messages cost no bytes");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_churning_job_bit_identical_to_sequential() {
+    // The dynamic acceptance case: the churn stream is applied between
+    // rounds through the tiered cluster and must still reproduce the
+    // Sequential dynamic engine exactly.
+    let n = 16;
+    let (g, state0, schedule) = init_scenario(n, 8, 53);
+    let cfg = TrafficConfig::default();
+    let rounds = 12;
+    let seed = 29u64;
+    let mut seq_state = state0.clone();
+    let seq_trace = run_dynamic_engine(
+        &Sequential,
+        &mut seq_state,
+        &schedule,
+        ALGO,
+        &cfg,
+        rounds,
+        seed,
+    );
+    let layout = TierLayout::new(2, 2);
+    let (trace, fin, traffic) = run_dynamic_cluster_tiered(
+        state0, &schedule, ALGO, &cfg, rounds, seed, layout, g.edges(),
+    )
+    .expect("tiered churning run");
+    assert_eq!(trace, seq_trace, "churning tiered trace diverged");
+    assert_eq!(fin, seq_state, "churning tiered state diverged");
+    assert!(traffic.snapshot().1 > 0, "no inter-host traffic during churn run");
+}
+
+#[test]
+fn inter_host_bytes_scale_with_inter_host_cut_not_global_cut() {
+    // E15's core claim, asserted exactly: on a torus3d the egress pump
+    // frames ONLY edges whose endpoints live on different hosts.  The
+    // wire message count equals 2x the summed inter-host cut of the
+    // executed round plans (one Offer + one Settle per cut edge), while
+    // intra-host cross-shard edges — the rest of the global cut — ride
+    // shared-memory channels and never touch the codec.
+    let g = Graph::torus3d(2, 3, 4);
+    let n = 24;
+    let schedule = Schedule::from_graph(&g);
+    let mut rng = Pcg64::new(7);
+    let state0 = LoadState::init_uniform_counts(
+        n,
+        10,
+        &WeightDistribution::paper_section6(),
+        Mobility::Full,
+        &mut rng,
+    );
+    let layout = TierLayout::new(2, 2);
+    let map = ShardMap::partition_tiered(n, &layout, g.edges());
+    let sweeps = 3;
+    // predicted cut, summed over every executed round
+    let (mut intra_cut, mut inter_cut) = (0usize, 0usize);
+    for round in 0..sweeps * schedule.period() {
+        let plan = RoundPlan::build(&schedule.matchings()[round % schedule.period()], &map);
+        let (ra, re) = plan.cut_by_tier(&layout);
+        intra_cut += ra;
+        inter_cut += re;
+    }
+    assert!(inter_cut > 0, "torus3d split across hosts must cut something");
+    assert!(
+        intra_cut > 0,
+        "cut-aware partition left no intra-host cross edges to save"
+    );
+    let (mut cluster, traffic) = Cluster::spawn_tiered(state0, ALGO, layout, g.edges());
+    cluster.set_batch_rounds(1);
+    cluster.run_seeded(&schedule, sweeps, 3).expect("tiered run");
+    cluster.shutdown().expect("tiered shutdown");
+    let (bytes, inter_msgs, intra_msgs) = traffic.snapshot();
+    assert_eq!(
+        inter_msgs as usize,
+        2 * inter_cut,
+        "wire messages are not 2x the inter-host cut"
+    );
+    assert_eq!(
+        intra_msgs as usize,
+        2 * intra_cut,
+        "shared-memory messages are not 2x the intra-host cut"
+    );
+    assert!(bytes > 0, "inter-host messages carried no bytes");
+    // the global cut is what a flat one-shard-per-host-pair deployment
+    // would pay: a 4x1 layout makes EVERY cross-shard edge inter-host.
+    let flat = TierLayout::new(4, 1);
+    let flat_map = ShardMap::partition_tiered(n, &flat, g.edges());
+    let (mut flat_inter, mut flat_intra) = (0usize, 0usize);
+    for round in 0..sweeps * schedule.period() {
+        let plan =
+            RoundPlan::build(&schedule.matchings()[round % schedule.period()], &flat_map);
+        let (ra, re) = plan.cut_by_tier(&flat);
+        flat_intra += ra;
+        flat_inter += re;
+    }
+    assert_eq!(flat_intra, 0, "a 4x1 layout has no intra-host cross edges");
+    assert!(
+        inter_cut < flat_inter,
+        "two-tier inter-host cut {inter_cut} did not beat the global cut {flat_inter}"
+    );
+}
+
+/// Spawn `k` host worker processes dialing the leader at `addr`; each
+/// auto-detects its two-tier role from the leader's init frame.
+fn spawn_host_workers(addr: &str, k: usize) -> Vec<Child> {
+    (0..k)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_bcm-dlb"))
+                .args(["cluster-worker", "--connect", addr, "--retry", "40"])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawning a cluster-worker host process")
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_tiered_host_processes_bit_identical_to_sequential() {
+    // The real deployment shape: 2 host OS processes on loopback, each
+    // running 2 in-process shard workers behind one egress pump, and the
+    // result must still be bit-identical to bcm::Sequential.
+    let (g, state0, schedule) = init_scenario(24, 10, 41);
+    let sweeps = 4;
+    let seed = 77u64;
+    let (seq_trace, seq_state) = sequential_reference(&state0, &schedule, sweeps, seed);
+    let layout = TierLayout::new(2, 2);
+    for batch in [1usize, 0] {
+        let listener = LeaderListener::bind("127.0.0.1:0").expect("bind leader");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let mut workers = spawn_host_workers(&addr, layout.hosts);
+        let mut cluster =
+            Cluster::spawn_tcp_tiered(state0.clone(), ALGO, layout, g.edges(), listener)
+                .expect("tcp tiered spawn");
+        assert_eq!(cluster.shards(), 4, "2x2 layout must expose 4 shards");
+        cluster.set_batch_rounds(batch);
+        let trace = cluster
+            .run_seeded(&schedule, sweeps, seed)
+            .expect("tcp tiered run");
+        let fin = cluster.shutdown().expect("tcp tiered shutdown");
+        assert_eq!(trace, seq_trace, "TCP tiered trace diverged at batch {batch}");
+        assert_eq!(fin, seq_state, "TCP tiered state diverged at batch {batch}");
+        assert!(fin.node(0).iter().any(|l| l.id == 90_000 && !l.mobile));
+        for w in &mut workers {
+            let status = w.wait().expect("waiting for host worker");
+            assert!(status.success(), "host worker exited nonzero at batch {batch}");
+        }
+    }
+}
+
+#[test]
+fn whole_host_failure_recovers_bit_identically() {
+    // A host process dying takes ALL its shard workers down at once.
+    // With checkpointing on, the leader must abort the epoch, reassign
+    // every dead shard of the lost host to the survivors, replay from
+    // the newest checkpoint, and still land bit-identical to Sequential
+    // — multi-casualty recovery, not the single-shard drill.
+    let (g, state0, schedule) = init_scenario(16, 12, 13);
+    let seed = 99u64;
+    let sweeps = 3;
+    let (seq_trace, seq_state) = sequential_reference(&state0, &schedule, sweeps, seed);
+    let fail_round = 5;
+    assert!(
+        sweeps * schedule.period() > fail_round,
+        "fault round never reached"
+    );
+    let layout = TierLayout::new(2, 2);
+    let (mut cluster, _traffic) =
+        Cluster::spawn_tiered_with_fault(state0, ALGO, layout, g.edges(), (1, fail_round));
+    cluster.set_batch_rounds(1);
+    cluster.set_checkpoint_every(2);
+    cluster.set_rejoin_wait(Duration::ZERO);
+    let trace = cluster
+        .run_seeded(&schedule, sweeps, seed)
+        .expect("checkpointed run must survive losing a whole host");
+    let fin = cluster.shutdown().expect("shutdown after recovery");
+    assert_eq!(trace, seq_trace, "post-recovery trace diverged");
+    assert_eq!(fin, seq_state, "post-recovery state diverged");
+}
+
+#[test]
+fn whole_host_failure_without_checkpointing_fail_stops() {
+    // checkpoint_every = 0 keeps the classic contract even when the
+    // casualty is an entire host: the run fails naming the round, and
+    // the cluster poisons.
+    let (g, state0, schedule) = init_scenario(16, 12, 13);
+    let layout = TierLayout::new(2, 2);
+    let (mut cluster, _traffic) =
+        Cluster::spawn_tiered_with_fault(state0, ALGO, layout, g.edges(), (1, 5));
+    let err = cluster
+        .run_seeded(&schedule, 3, 99)
+        .expect_err("fail-stop contract broken for a host loss")
+        .to_string();
+    assert!(err.contains("round 5"), "error does not name the round: {err}");
+    assert!(cluster.shutdown().is_err());
+}
